@@ -1,0 +1,63 @@
+//! Architecture selection (§4 "Extending MCAL to selecting the cheapest
+//! DNN architecture"): probe cnn18 / res18 / res50 until their C* estimates
+//! stabilize, commit to the cheapest, and charge the losers' probe training
+//! as exploration tax.
+//!
+//! ```bash
+//! cargo run --release --offline --example arch_selection
+//! ```
+
+use std::sync::Arc;
+
+use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
+use mcal::coordinator::{run_with_arch_selection, RunParams};
+use mcal::dataset::preset;
+use mcal::report::Table;
+use mcal::runtime::{Engine, Manifest};
+
+fn main() -> mcal::Result<()> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    let p = preset("cifar10-syn", 5)?;
+    let mut ds = p.spec.scaled(0.1).generate()?;
+    ds.name = "cifar10-syn".into();
+
+    let ledger = Arc::new(Ledger::new());
+    let service = SimService::new(
+        SimServiceConfig { service: Service::Amazon, ..Default::default() },
+        ledger.clone(),
+    );
+
+    let (report, probes) = run_with_arch_selection(
+        &engine,
+        &manifest,
+        &ds,
+        &service,
+        ledger,
+        &p.candidate_archs,
+        p.classes_tag,
+        RunParams { seed: 5, ..Default::default() },
+        8,
+    )?;
+
+    let mut t = Table::new(
+        "Architecture probe phase (cifar10-syn @ 10%, Amazon)",
+        &["arch", "C* estimate", "stable", "B probed", "probe training $"],
+    );
+    for pr in &probes {
+        t.push_row([
+            pr.arch.to_string(),
+            pr.c_star.map(|c| format!("${c:.2}")).unwrap_or_else(|| "-".into()),
+            pr.stable.to_string(),
+            pr.b_probed.to_string(),
+            format!("{:.2}", pr.training_spend),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!("winner: {} | {}", report.arch, report.summary());
+    println!(
+        "exploration tax charged for dropped candidates: ${:.2}",
+        report.cost.exploration
+    );
+    Ok(())
+}

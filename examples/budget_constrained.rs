@@ -1,0 +1,63 @@
+//! Budget-constrained labeling (§4 "Accommodating a budget constraint"):
+//! instead of an error bound, give MCAL a fixed dollar budget and let it
+//! minimize labeling error. Demonstrates the error/cost trade at three
+//! budget levels.
+//!
+//! ```bash
+//! cargo run --release --offline --example budget_constrained
+//! ```
+
+use std::sync::Arc;
+
+use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
+use mcal::coordinator::{run_budget, RunParams};
+use mcal::dataset::preset;
+use mcal::model::ArchKind;
+use mcal::report::Table;
+use mcal::runtime::{Engine, Manifest};
+
+fn main() -> mcal::Result<()> {
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    let p = preset("fashion-syn", 7)?;
+    let mut ds = p.spec.scaled(0.1).generate()?;
+    ds.name = "fashion-syn".into();
+    let human_only = ds.len() as f64 * Service::Amazon.price_per_label();
+    println!("dataset: {} samples | human-only cost ${human_only:.2}", ds.len());
+
+    let mut t = Table::new(
+        "Budget-constrained MCAL (fashion-syn @ 10%, Amazon)",
+        &["budget", "spent", "machine_frac", "b_frac", "overall_error", "stop"],
+    );
+    for frac in [0.25, 0.5, 0.9] {
+        let budget = human_only * frac;
+        let ledger = Arc::new(Ledger::new());
+        let service = SimService::new(
+            SimServiceConfig { service: Service::Amazon, ..Default::default() },
+            ledger.clone(),
+        );
+        let report = run_budget(
+            &engine,
+            &manifest,
+            &ds,
+            &service,
+            ledger.clone(),
+            ArchKind::Res18,
+            p.classes_tag,
+            RunParams { seed: 7, ..Default::default() },
+            budget,
+        )?;
+        t.push_row([
+            format!("${budget:.2}"),
+            format!("${:.2}", ledger.total()),
+            format!("{:.1}%", report.machine_frac() * 100.0),
+            format!("{:.1}%", report.b_frac() * 100.0),
+            format!("{:.2}%", report.overall_error * 100.0),
+            format!("{:?}", report.stop_reason),
+        ]);
+    }
+    println!("\n{}", t.to_markdown());
+    println!("Tighter budgets force more machine labeling (and more error);");
+    println!("looser budgets buy error down with human labels.");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! End-to-end validation driver (DESIGN.md §End-to-end): run the complete
+//! MCAL pipeline — synthetic Fashion-MNIST workload at full 70k scale,
+//! automatic architecture selection across {cnn18, res18, res50}, Amazon
+//! pricing — and report the paper's headline metric (total labeling cost
+//! vs human-only, Table 1 row 1). Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! cargo run --release --offline --example label_fashion_e2e
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
+use mcal::coordinator::{run_with_arch_selection, RunParams};
+use mcal::dataset::preset;
+use mcal::report::Table;
+use mcal::runtime::{Engine, Manifest};
+
+fn main() -> mcal::Result<()> {
+    let t0 = Instant::now();
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+
+    let p = preset("fashion-syn", 42)?;
+    let ds = p.spec.generate()?; // full 70,000 samples
+    println!(
+        "workload: {} ({} samples, {} classes) | candidates: {:?} | service: Amazon ($0.04/label)",
+        ds.name,
+        ds.len(),
+        ds.num_classes,
+        p.candidate_archs
+    );
+
+    let ledger = Arc::new(Ledger::new());
+    let service = SimService::new(
+        SimServiceConfig { service: Service::Amazon, ..Default::default() },
+        ledger.clone(),
+    );
+
+    let (report, probes) = run_with_arch_selection(
+        &engine,
+        &manifest,
+        &ds,
+        &service,
+        ledger,
+        &p.candidate_archs,
+        p.classes_tag,
+        RunParams { seed: 42, ..Default::default() },
+        8,
+    )?;
+
+    println!("\n== architecture probe phase ==");
+    for pr in &probes {
+        println!(
+            "  {}: C*={} stable={} probe-training=${:.2}",
+            pr.arch,
+            pr.c_star.map(|c| format!("${c:.2}")).unwrap_or_else(|| "-".into()),
+            pr.stable,
+            pr.training_spend
+        );
+    }
+
+    println!("\n== final labeling run ==");
+    println!("{}", report.summary());
+    for it in &report.iterations {
+        println!(
+            "  iter {:>2}: |B|={:>6} δ={:>5} retrain=${:<7.2} C*={} B_opt={} θ*={} stable={}",
+            it.iter,
+            it.b_size,
+            it.delta,
+            it.retrain_dollars,
+            it.c_star.map(|c| format!("${c:.0}")).unwrap_or_else(|| "-".into()),
+            it.b_opt.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            it.theta_star.map(|t| format!("{t:.2}")).unwrap_or_else(|| "-".into()),
+            it.stable,
+        );
+    }
+
+    // Headline metric table (paper Table 1, Fashion/Amazon row).
+    let mut t = Table::new(
+        "E2E headline — fashion-syn / Amazon (paper: 86% savings, |B|=6.1%, |S|=85%, err 4.0%)",
+        &["metric", "paper", "measured"],
+    );
+    t.push_row(["human-only cost".into(), "$2800".into(), format!("${:.2}", report.human_only_cost)]);
+    t.push_row(["MCAL cost".into(), "$400".into(), format!("${:.2}", report.cost.total())]);
+    t.push_row(["savings".into(), "86%".into(), format!("{:.1}%", report.savings() * 100.0)]);
+    t.push_row(["|B|/|X|".into(), "6.1%".into(), format!("{:.1}%", report.b_frac() * 100.0)]);
+    t.push_row(["|S|/|X|".into(), "85.0%".into(), format!("{:.1}%", report.machine_frac() * 100.0)]);
+    t.push_row(["label error".into(), "4.0%".into(), format!("{:.2}%", report.overall_error * 100.0)]);
+    t.push_row(["DNN selected".into(), "res18".into(), report.arch.clone()]);
+    println!("\n{}", t.to_markdown());
+    let path = t.write_csv("results", "e2e_fashion")?;
+    println!("wrote {} | wall {:.1}s", path.display(), t0.elapsed().as_secs_f64());
+
+    assert!(report.savings() > 0.5, "E2E regression: savings collapsed");
+    assert!(report.overall_error < report.epsilon + 0.01, "E2E regression: error bound violated");
+    println!("E2E OK");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: label a small synthetic dataset with MCAL in ~10 seconds.
+//!
+//! ```bash
+//! make artifacts          # once: AOT-compile the JAX/Pallas models
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
+use mcal::coordinator::{run_mcal, RunParams};
+use mcal::dataset::preset;
+use mcal::model::ArchKind;
+use mcal::runtime::{Engine, Manifest};
+
+fn main() -> mcal::Result<()> {
+    // 1. Runtime: PJRT CPU engine + the AOT artifact manifest.
+    let engine = Engine::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+
+    // 2. A dataset to label: 10% subsample of the Fashion-MNIST analog.
+    let p = preset("fashion-syn", 42)?;
+    let mut ds = p.spec.scaled(0.1).generate()?;
+    ds.name = "fashion-syn".into();
+    println!("dataset: {} samples, {} classes", ds.len(), ds.num_classes);
+
+    // 3. A labeling service (Amazon pricing: $0.04/label) and a ledger.
+    let ledger = Arc::new(Ledger::new());
+    let service = SimService::new(
+        SimServiceConfig { service: Service::Amazon, ..Default::default() },
+        ledger.clone(),
+    );
+
+    // 4. Run MCAL: ε = 5% error budget, margin-based acquisition.
+    let report = run_mcal(
+        &engine,
+        &manifest,
+        &ds,
+        &service,
+        ledger,
+        ArchKind::Res18,
+        p.classes_tag,
+        RunParams { seed: 42, ..Default::default() },
+    )?;
+
+    // 5. The labeled dataset is complete; look at the bill.
+    println!("\n{}", report.summary());
+    println!(
+        "\n  human labels bought : {}  (${:.2})",
+        report.cost.labels_purchased, report.cost.human_labeling
+    );
+    println!("  machine labels      : {}", report.s_size);
+    println!("  retrains            : {}  (${:.2})", report.cost.retrains, report.cost.training);
+    println!(
+        "  vs human-only       : ${:.2}  ->  {:.0}% saved",
+        report.human_only_cost,
+        report.savings() * 100.0
+    );
+    println!(
+        "  overall label error : {:.2}%  (budget {:.0}%)",
+        report.overall_error * 100.0,
+        report.epsilon * 100.0
+    );
+    Ok(())
+}

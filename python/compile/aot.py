@@ -1,0 +1,182 @@
+"""AOT: lower every L2 entry point to HLO *text* + write the manifest.
+
+Run once at build time (``make artifacts``); the Rust L3 runtime loads the
+text artifacts through ``HloModuleProto::from_text_file`` and never imports
+Python again.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts per model set (arch × classes). ``state`` packs (params, velocity)
+into one 2P vector so the hot feedback loop (train_chunk) has a SINGLE array
+output — this PJRT build returns multi-output executables as one tuple
+buffer that cannot be fed back as an input, so anything device-resident must
+ride a single-output executable (see rust/src/runtime/):
+
+  init_{model}.hlo.txt     (key u32[2])                       -> state[2P]
+  train_{model}.hlo.txt    (state, xs[K,256,64], ys[K,256]i32, lrs[K]) -> state'
+  predict_{model}.hlo.txt  (state, x[512,64]) -> (logits, margin, entropy, maxprob, pred)
+  feats_{model}.hlo.txt    (state, x[512,64])                 -> feats[512,H]
+  loss_{model}.hlo.txt     (state, x[512,64], y[512]i32)      -> loss[]
+
+plus one k-center kernel per distinct feature width:
+
+  kcenter_h{H}.hlo.txt     (feats[512,H], center[H], dists[512]) -> dists'
+
+The manifest (artifacts/manifest.txt) is a line-oriented key/value format so
+the Rust side needs no JSON/serde dependency.
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import kcenter
+
+# (model_name, arch, classes) — every combination an experiment needs.
+# C=10  : fashion-syn + cifar10-syn      (paper: Fashion-MNIST / CIFAR-10)
+# C=100 : cifar100-syn                   (paper: CIFAR-100)
+# C=300 : imagenet-syn                   (paper: ImageNet, scaled — DESIGN.md)
+MODEL_SETS = [
+    ("cnn18_c10", "cnn18", 10),
+    ("res18_c10", "res18", 10),
+    ("res50_c10", "res50", 10),
+    ("cnn18_c100", "cnn18", 100),
+    ("res18_c100", "res18", 100),
+    ("res50_c100", "res50", 100),
+    ("effb0_c300", "effb0", 300),
+]
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, example_args, path: str, *, return_tuple: bool) -> int:
+    """return_tuple=False single-array-output artifacts are the ones whose
+    outputs the Rust runtime feeds back device-side via execute_b."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered, return_tuple)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_model_set(out_dir: str, name: str, arch_name: str, classes: int):
+    arch = model.ARCHS[arch_name]
+    p = arch.param_count(classes)
+    fd, tbs, ebs = model.FEAT_DIM, model.TRAIN_BS, model.EVAL_BS
+
+    k = model.CHUNK_STEPS
+    t0 = time.time()
+    lower_and_write(
+        lambda key: model.init_state(arch, classes, key),
+        (spec((2,), jnp.uint32),),
+        os.path.join(out_dir, f"init_{name}.hlo.txt"),
+        return_tuple=False,
+    )
+    lower_and_write(
+        lambda st, xs, ys, lrs: model.train_chunk(arch, classes, st, xs, ys, lrs),
+        (spec((2 * p,)), spec((k, tbs, fd)), spec((k, tbs), jnp.int32), spec((k,))),
+        os.path.join(out_dir, f"train_{name}.hlo.txt"),
+        return_tuple=False,
+    )
+    lower_and_write(
+        lambda st, x: model.predict_score_s(arch, classes, st, x),
+        (spec((2 * p,)), spec((ebs, fd))),
+        os.path.join(out_dir, f"predict_{name}.hlo.txt"),
+        return_tuple=True,
+    )
+    lower_and_write(
+        lambda st, x: model.features_s(arch, classes, st, x),
+        (spec((2 * p,)), spec((ebs, fd))),
+        os.path.join(out_dir, f"feats_{name}.hlo.txt"),
+        return_tuple=False,
+    )
+    lower_and_write(
+        lambda st, x, y: model.mean_loss_s(arch, classes, st, x, y),
+        (spec((2 * p,)), spec((ebs, fd)), spec((ebs,), jnp.int32)),
+        os.path.join(out_dir, f"loss_{name}.hlo.txt"),
+        return_tuple=False,
+    )
+    dt = time.time() - t0
+    print(f"  {name}: params={p} flops/sample={arch.flops_per_sample(classes)} ({dt:.1f}s)")
+    return {
+        "name": name,
+        "arch": arch_name,
+        "classes": classes,
+        "hidden": arch.hidden,
+        "depth": arch.depth,
+        "residual": int(arch.residual),
+        "params": p,
+        "flops_per_sample": arch.flops_per_sample(classes),
+    }
+
+
+def build_kcenter(out_dir: str, hidden: int):
+    lower_and_write(
+        lambda f, c, d: kcenter.kcenter_update(f, c, d),
+        (spec((model.EVAL_BS, hidden)), spec((hidden,)), spec((model.EVAL_BS,))),
+        os.path.join(out_dir, f"kcenter_h{hidden}.hlo.txt"),
+        return_tuple=False,
+    )
+    print(f"  kcenter_h{hidden}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated model-set names (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    sets = [s for s in MODEL_SETS if only is None or s[0] in only]
+
+    print(f"lowering {len(sets)} model sets -> {args.out}")
+    rows = []
+    for name, arch_name, classes in sets:
+        rows.append(build_model_set(args.out, name, arch_name, classes))
+
+    for hidden in sorted({model.ARCHS[a].hidden for _, a, _ in sets}):
+        build_kcenter(args.out, hidden)
+
+    manifest = os.path.join(args.out, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("version 1\n")
+        f.write(f"feat_dim {model.FEAT_DIM}\n")
+        f.write(f"train_bs {model.TRAIN_BS}\n")
+        f.write(f"eval_bs {model.EVAL_BS}\n")
+        f.write(f"momentum {model.MOMENTUM}\n")
+        f.write(f"weight_decay {model.WEIGHT_DECAY}\n")
+        f.write(f"chunk_steps {model.CHUNK_STEPS}\n")
+        for r in rows:
+            f.write(
+                "model {name} arch {arch} classes {classes} hidden {hidden} "
+                "depth {depth} residual {residual} params {params} "
+                "flops_per_sample {flops_per_sample}\n".format(**r)
+            )
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

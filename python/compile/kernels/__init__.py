@@ -1,0 +1,19 @@
+"""L1 Pallas kernels for MCAL.
+
+Every compute hot-spot of the MCAL pipeline is implemented as a Pallas
+kernel so that the L2 jax entry points lower them into the same HLO module:
+
+- :mod:`.matmul` — tiled dense layer (matmul + bias + optional ReLU) with a
+  custom VJP whose backward pass reuses the same tiled kernel for the
+  dgrad / wgrad matmuls. This is the training/inference hot loop.
+- :mod:`.uncertainty` — per-row top-2 / entropy / max-prob scoring of logits;
+  this is the `M(.)` / `L(.)` metric kernel of the paper (§3.3).
+- :mod:`.kcenter` — blocked min-distance update for k-center (core-set)
+  sample selection (Sener & Savarese baseline in Fig. 5/6/11).
+
+All kernels run with ``interpret=True`` (see DESIGN.md §Hardware-adaptation):
+they lower to plain HLO executable on the CPU PJRT plugin; real-TPU tiling
+is expressed through the BlockSpecs and documented VMEM/MXU estimates.
+"""
+
+from . import matmul, uncertainty, kcenter, ref  # noqa: F401

@@ -1,0 +1,60 @@
+"""k-center (core-set) min-distance update Pallas kernel.
+
+The k-center-greedy selection of Sener & Savarese (the core-set M(.) variant
+MCAL evaluates in Fig. 5/6/11) maintains, for every pool sample, the squared
+L2 distance to its nearest already-chosen center in feature space. Each
+round picks the farthest sample and relaxes all distances against the new
+center:
+
+    dists[i] = min(dists[i], ||feats[i] - center||^2)
+
+That relaxation over the whole pool is the hot loop (|pool| × h per chosen
+center) and is the kernel below. Grid over row-tiles of the feature matrix;
+the feature width h (96–384) stays resident in lanes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 256
+
+
+def _pick_rows(m: int, preferred: int = ROW_BLOCK) -> int:
+    if m <= preferred:
+        return m
+    for cand in range(preferred, 0, -1):
+        if m % cand == 0:
+            return cand
+    return m
+
+
+def _kcenter_kernel(feats_ref, center_ref, dists_ref, out_ref):
+    f = feats_ref[...]              # (bm, h)
+    c = center_ref[...][None, :]    # (1, h)
+    diff = f - c
+    d2 = jnp.sum(diff * diff, axis=-1)
+    out_ref[...] = jnp.minimum(dists_ref[...], d2)
+
+
+@jax.jit
+def kcenter_update(feats, center, dists):
+    """Relax min-squared-distances against a new center.
+
+    feats: (M, h), center: (h,), dists: (M,) -> (M,) updated dists.
+    """
+    m, h = feats.shape
+    bm = _pick_rows(m)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _kcenter_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(feats, center, dists)

@@ -1,0 +1,132 @@
+"""Tiled dense-layer Pallas kernel with a Pallas backward pass.
+
+``dense(x, w, b, activation)`` computes ``act(x @ w + b)`` through a blocked
+Pallas matmul kernel and exposes a ``jax.custom_vjp`` so the L2 training graph
+(autodiff through ``train_step``) also runs on the same kernel:
+
+  forward :   y  = act(x @ w + b)          (one kernel launch)
+  backward:   g  = dy * act'(y)            (elementwise, fused in kernel)
+              dx = g @ w^T                 (same tiled kernel)
+              dw = x^T @ g                 (same tiled kernel)
+              db = sum_rows(g)
+
+TPU mapping (DESIGN.md §Hardware-adaptation): the grid is (M/bm, N/bn); each
+grid step keeps an (bm, K) x-tile, a (K, bn) w-tile, and an (bm, bn) output
+tile resident in VMEM and issues bm×bn×K MACs to the MXU. K (feature /
+hidden width, ≤ 512 in our architectures) is kept whole so no K-loop /
+accumulator revisit is needed; for K beyond VMEM one would add a third grid
+axis with an accumulator in scratch. ``interpret=True`` lowers all of this to
+plain HLO for the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes. 128 matches the MXU systolic edge; the N tile is
+# shrunk automatically for narrow layers (e.g. the C=10 logit layer).
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ preferred (falls back to dim)."""
+    if dim <= preferred:
+        return dim
+    for cand in range(preferred, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: whole-K contraction on the MXU."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x, w, *, bm: int = BLOCK_M, bn: int = BLOCK_N):
+    """Blocked ``x @ w`` via Pallas. x: (M, K), w: (K, N) -> (M, N) f32."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _dense_fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _dense_raw(x, w, b, relu: bool):
+    m, k = x.shape
+    _, n = w.shape
+    bm = _pick_block(m, BLOCK_M)
+    bn = _pick_block(n, BLOCK_N)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_dense_fwd_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, relu: bool = True):
+    """act(x @ w + b) with act = ReLU (relu=True) or identity."""
+    return _dense_raw(x, w, b, relu)
+
+
+def _dense_fwd(x, w, b, relu):
+    y = _dense_raw(x, w, b, relu)
+    # Save y rather than the pre-activation: the ReLU mask is y > 0.
+    return y, (x, w, y)
+
+
+def _dense_bwd(relu, res, dy):
+    x, w, y = res
+    if relu:
+        dy = jnp.where(y > 0.0, dy, 0.0)
+    # Both gradient matmuls ride the same tiled Pallas kernel.
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+def vmem_bytes(m: int, k: int, n: int, bm: int = BLOCK_M, bn: int = BLOCK_N,
+               bytes_per_el: int = 4) -> int:
+    """Per-grid-step VMEM footprint estimate for the fwd kernel (DESIGN §Perf)."""
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    return bytes_per_el * (bm * k + k * bn + bn + bm * bn)

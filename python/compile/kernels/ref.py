@@ -1,0 +1,42 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+pytest (python/tests/) sweeps shapes/dtypes with hypothesis and asserts
+``assert_allclose(kernel(...), ref(...))`` — the core L1 correctness signal.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.matmul(x, w).astype(jnp.float32)
+
+
+def dense_ref(x, w, b, relu: bool = True):
+    y = jnp.matmul(x, w) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(jnp.float32)
+
+
+def softmax_ref(logits):
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    ez = jnp.exp(z)
+    return ez / jnp.sum(ez, axis=-1, keepdims=True)
+
+
+def score_logits_ref(logits):
+    """(margin, entropy, maxprob, pred) — oracle for uncertainty.score_logits."""
+    p = softmax_ref(logits)
+    order = jnp.sort(p, axis=-1)
+    p1 = order[:, -1]
+    p2 = order[:, -2]
+    pred = jnp.argmax(p, axis=-1).astype(jnp.int32)
+    plogp = jnp.where(p > 0.0, p * jnp.log(p), 0.0)
+    entropy = -jnp.sum(plogp, axis=-1)
+    return p1 - p2, entropy, p1, pred
+
+
+def kcenter_update_ref(feats, center, dists):
+    diff = feats - center[None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.minimum(dists, d2)

@@ -1,0 +1,80 @@
+"""Uncertainty-scoring Pallas kernel — the M(.) / L(.) metric hot-spot (§3.3).
+
+Given a tile of logits (rows = samples, cols = classes) the kernel emits, per
+row, every uncertainty statistic MCAL's sample-selection functions consume:
+
+- ``margin``     : p(top1) − p(top2)   (Scheffer et al.; used for L(.) and
+                   the default M(.))
+- ``entropy``    : −Σ p log p          (max-entropy M(.), Dagan & Engelson)
+- ``maxprob``    : p(top1)             (least-confidence M(.) = 1 − maxprob,
+                   Culotta & McCallum)
+- ``pred``       : argmax class        (the machine label itself)
+
+TPU mapping: grid over row-tiles; the class dimension (10–1000) lives whole
+in the lane dimension so the top-2 reduction is a pair of in-register
+max/masked-max passes — the same trick a CUDA warp reduction would do, but
+expressed as VPU reductions over the lane axis. Softmax is computed in a
+numerically-stable shifted form.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 128
+
+
+def _pick_rows(m: int, preferred: int = ROW_BLOCK) -> int:
+    if m <= preferred:
+        return m
+    for cand in range(preferred, 0, -1):
+        if m % cand == 0:
+            return cand
+    return m
+
+
+def _score_kernel(logits_ref, margin_ref, entropy_ref, maxprob_ref, pred_ref):
+    z = logits_ref[...]  # (bm, C)
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    ez = jnp.exp(z - zmax)
+    denom = jnp.sum(ez, axis=-1, keepdims=True)
+    p = ez / denom
+
+    p1 = jnp.max(p, axis=-1)
+    pred = jnp.argmax(p, axis=-1).astype(jnp.int32)
+    # Masked second max: knock out the argmax column, take max again.
+    cols = jax.lax.broadcasted_iota(jnp.int32, z.shape, dimension=1)
+    masked = jnp.where(cols == pred[:, None], -jnp.inf, p)
+    p2 = jnp.max(masked, axis=-1)
+    # Entropy in a 0*log(0)-safe form.
+    plogp = jnp.where(p > 0.0, p * jnp.log(p), 0.0)
+
+    margin_ref[...] = p1 - p2
+    entropy_ref[...] = -jnp.sum(plogp, axis=-1)
+    maxprob_ref[...] = p1
+    pred_ref[...] = pred
+
+
+@jax.jit
+def score_logits(logits):
+    """Per-row uncertainty stats. logits: (M, C) -> (margin, entropy, maxprob, pred)."""
+    m, c = logits.shape
+    bm = _pick_rows(m)
+    grid = (m // bm,)
+    out_shapes = (
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+        jax.ShapeDtypeStruct((m,), jnp.int32),
+    )
+    row_spec = pl.BlockSpec((bm,), lambda i: (i,))
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, c), lambda i: (i, 0))],
+        out_specs=(row_spec, row_spec, row_spec, row_spec),
+        out_shape=out_shapes,
+        interpret=True,
+    )(logits)

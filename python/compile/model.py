@@ -1,0 +1,235 @@
+"""L2: MCAL classifier models in JAX, built on the L1 Pallas kernels.
+
+The paper trains CNN18 / ResNet18 / ResNet50 (and EfficientNet-B0 for
+ImageNet) on image pixels. Our substrate operates on 64-d feature vectors
+(see DESIGN.md §Substitutions) and uses MLP *analogs* that preserve the two
+orderings MCAL's optimizer actually consumes: achievable accuracy
+(res50 > res18 > cnn18) and training cost per sample (res50 > res18 > cnn18).
+
+Every entry point works on a **flat f32 parameter vector** so the Rust L3
+runtime can hold model state as a single device buffer per model:
+
+- ``init(seed)``                      -> flat params
+- ``train_step(p, v, x, y, lr)``      -> (p', v', loss)     SGD + momentum + wd
+- ``predict_score(p, x)``             -> (logits, margin, entropy, maxprob, pred)
+- ``features(p, x)``                  -> penultimate activations (for k-center)
+
+All dense layers go through :func:`kernels.matmul.dense` (Pallas, custom
+VJP), and scoring goes through :func:`kernels.uncertainty.score_logits`, so
+the lowered HLO contains the L1 kernels on both the forward and backward hot
+paths.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul, uncertainty
+
+FEAT_DIM = 64
+TRAIN_BS = 256
+EVAL_BS = 512
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 5e-4
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """MLP analog of one of the paper's CNN architectures."""
+
+    name: str
+    hidden: int
+    depth: int          # number of hidden->hidden blocks (beyond the stem)
+    residual: bool
+
+    def layer_shapes(self, classes: int) -> List[Tuple[str, Tuple[int, ...]]]:
+        shapes: List[Tuple[str, Tuple[int, ...]]] = []
+        shapes.append(("stem_w", (FEAT_DIM, self.hidden)))
+        shapes.append(("stem_b", (self.hidden,)))
+        for i in range(self.depth):
+            shapes.append((f"blk{i}_w", (self.hidden, self.hidden)))
+            shapes.append((f"blk{i}_b", (self.hidden,)))
+        shapes.append(("head_w", (self.hidden, classes)))
+        shapes.append(("head_b", (classes,)))
+        return shapes
+
+    def param_count(self, classes: int) -> int:
+        total = 0
+        for _, shp in self.layer_shapes(classes):
+            n = 1
+            for d in shp:
+                n *= d
+            total += n
+        return total
+
+    def flops_per_sample(self, classes: int) -> int:
+        """Forward MACs×2; the rig cost model multiplies by 3 for fwd+bwd."""
+        fl = 2 * FEAT_DIM * self.hidden
+        fl += self.depth * 2 * self.hidden * self.hidden
+        fl += 2 * self.hidden * classes
+        return fl
+
+
+# The paper's architecture menu (§5): analogs keyed by paper name.
+ARCHS: Dict[str, ArchConfig] = {
+    "cnn18": ArchConfig("cnn18", hidden=48, depth=2, residual=False),
+    "res18": ArchConfig("res18", hidden=192, depth=4, residual=True),
+    "res50": ArchConfig("res50", hidden=384, depth=8, residual=True),
+    "effb0": ArchConfig("effb0", hidden=256, depth=6, residual=True),
+}
+
+
+def _offsets(arch: ArchConfig, classes: int):
+    offs = []
+    pos = 0
+    for name, shp in arch.layer_shapes(classes):
+        n = 1
+        for d in shp:
+            n *= d
+        offs.append((name, shp, pos, n))
+        pos += n
+    return offs, pos
+
+
+def unflatten(arch: ArchConfig, classes: int, flat):
+    offs, total = _offsets(arch, classes)
+    assert flat.shape == (total,), (flat.shape, total)
+    params = {}
+    for name, shp, pos, n in offs:
+        params[name] = jax.lax.dynamic_slice(flat, (pos,), (n,)).reshape(shp)
+    return params
+
+
+def flatten_tree(arch: ArchConfig, classes: int, params) -> jnp.ndarray:
+    offs, _ = _offsets(arch, classes)
+    return jnp.concatenate([params[name].reshape(-1) for name, _, _, _ in offs])
+
+
+def init(arch: ArchConfig, classes: int, key_data):
+    """He-normal init from a uint32[2] key; returns the flat parameter vector."""
+    key = jax.random.wrap_key_data(key_data.astype(jnp.uint32))
+    offs, total = _offsets(arch, classes)
+    parts = []
+    for name, shp, _, n in offs:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            parts.append(jnp.zeros((n,), jnp.float32))
+        else:
+            fan_in = shp[0]
+            scale = jnp.sqrt(2.0 / fan_in)
+            w = jax.random.normal(sub, shp, jnp.float32) * scale
+            # Residual branches get a damped init for stability at depth.
+            if name.startswith("blk") and arch.residual:
+                w = w * 0.7
+            parts.append(w.reshape(-1))
+    flat = jnp.concatenate(parts)
+    assert flat.shape == (total,)
+    return flat
+
+
+def apply(arch: ArchConfig, classes: int, flat, x, *, return_features=False):
+    """Forward pass over the Pallas dense kernel. x: (B, FEAT_DIM)."""
+    p = unflatten(arch, classes, flat)
+    h = matmul.dense(x, p["stem_w"], p["stem_b"], True)
+    for i in range(arch.depth):
+        out = matmul.dense(h, p[f"blk{i}_w"], p[f"blk{i}_b"], True)
+        h = h + out if arch.residual else out
+    if return_features:
+        return h
+    logits = matmul.dense(h, p["head_w"], p["head_b"], False)
+    return logits
+
+
+def loss_fn(arch: ArchConfig, classes: int, flat, x, y):
+    logits = apply(arch, classes, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(arch: ArchConfig, classes: int, flat, vel, x, y, lr):
+    """One SGD+momentum step on a fixed-size minibatch.
+
+    Weight decay is applied to the whole flat vector (biases are a negligible
+    fraction and this keeps the update a pure vector op).
+    """
+    loss, grad = jax.value_and_grad(
+        lambda f: loss_fn(arch, classes, f, x, y)
+    )(flat)
+    grad = grad + WEIGHT_DECAY * flat
+    vel = MOMENTUM * vel + grad
+    flat = flat - lr * vel
+    return flat, vel, loss
+
+
+def predict_score(arch: ArchConfig, classes: int, flat, x):
+    """Logits + the full uncertainty panel from the L1 scoring kernel."""
+    logits = apply(arch, classes, flat, x)
+    margin, entropy, maxprob, pred = uncertainty.score_logits(logits)
+    return logits, margin, entropy, maxprob, pred
+
+
+def features(arch: ArchConfig, classes: int, flat, x):
+    return apply(arch, classes, flat, x, return_features=True)
+
+
+# --------------------------------------------------------------------------
+# State-vector entry points (what actually gets AOT-lowered).
+#
+# The PJRT build the `xla` crate binds returns multi-output executables as a
+# single *tuple buffer* which cannot be fed back as an array input, so any
+# value the Rust runtime must keep device-resident has to ride a
+# single-array-output executable. We therefore pack (params, velocity) into
+# one flat ``state`` vector of length 2P: ``train_chunk`` maps state->state'
+# (single output, lax.scan over K minibatches), and all read-only entry
+# points slice the params half out of state.
+# --------------------------------------------------------------------------
+
+# Minibatches per train_chunk call. One host->device transfer of
+# (K, TRAIN_BS, FEAT_DIM) covers K optimizer steps.
+CHUNK_STEPS = 8
+
+
+def init_state(arch: ArchConfig, classes: int, key_data):
+    """state[2P] = [he-init params | zero velocity]."""
+    flat = init(arch, classes, key_data)
+    return jnp.concatenate([flat, jnp.zeros_like(flat)])
+
+
+def split_state(arch: ArchConfig, classes: int, state):
+    p = arch.param_count(classes)
+    return state[:p], state[p:]
+
+
+def train_chunk(arch: ArchConfig, classes: int, state, xs, ys, lrs):
+    """Run CHUNK_STEPS SGD steps; xs: (K, TRAIN_BS, FEAT_DIM), ys: (K, TRAIN_BS),
+    lrs: (K,). Returns the updated state (single array output)."""
+    flat, vel = split_state(arch, classes, state)
+
+    def body(carry, batch):
+        f, v = carry
+        x, y, lr = batch
+        f, v, _ = train_step(arch, classes, f, v, x, y, lr)
+        return (f, v), ()
+
+    (flat, vel), _ = jax.lax.scan(body, (flat, vel), (xs, ys, lrs))
+    return jnp.concatenate([flat, vel])
+
+
+def predict_score_s(arch: ArchConfig, classes: int, state, x):
+    flat, _ = split_state(arch, classes, state)
+    return predict_score(arch, classes, flat, x)
+
+
+def features_s(arch: ArchConfig, classes: int, state, x):
+    flat, _ = split_state(arch, classes, state)
+    return features(arch, classes, flat, x)
+
+
+def mean_loss_s(arch: ArchConfig, classes: int, state, x, y):
+    """Mean CE over a fixed eval batch (single output; monitoring/tests)."""
+    flat, _ = split_state(arch, classes, state)
+    return loss_fn(arch, classes, flat, x, y)

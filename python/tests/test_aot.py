@@ -1,0 +1,87 @@
+"""AOT artifact tests: manifest consistency + HLO text sanity.
+
+These run against the artifacts/ directory if it exists (built by
+``make artifacts``); they are skipped on a clean tree so `pytest` stays
+runnable before the first build.
+"""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def read_manifest():
+    out = {"models": {}}
+    with open(os.path.join(ART, "manifest.txt")) as f:
+        for line in f:
+            parts = line.split()
+            if not parts:
+                continue
+            if parts[0] == "model":
+                kv = dict(zip(parts[2::2], parts[3::2]))
+                out["models"][parts[1]] = kv
+            else:
+                out[parts[0]] = parts[1]
+    return out
+
+
+def test_manifest_globals():
+    m = read_manifest()
+    assert int(m["feat_dim"]) == model.FEAT_DIM
+    assert int(m["train_bs"]) == model.TRAIN_BS
+    assert int(m["eval_bs"]) == model.EVAL_BS
+
+
+def test_manifest_covers_all_model_sets():
+    m = read_manifest()
+    for name, arch_name, classes in aot.MODEL_SETS:
+        assert name in m["models"], name
+        kv = m["models"][name]
+        arch = model.ARCHS[arch_name]
+        assert int(kv["classes"]) == classes
+        assert int(kv["params"]) == arch.param_count(classes)
+        assert int(kv["hidden"]) == arch.hidden
+        assert int(kv["flops_per_sample"]) == arch.flops_per_sample(classes)
+
+
+def test_all_artifact_files_exist_and_are_hlo_text():
+    m = read_manifest()
+    kinds = ["init", "train", "predict", "feats", "loss"]
+    for name in m["models"]:
+        for kind in kinds:
+            path = os.path.join(ART, f"{kind}_{name}.hlo.txt")
+            assert os.path.exists(path), path
+            head = open(path).read(200)
+            assert "HloModule" in head, path
+    hiddens = {int(kv["hidden"]) for kv in m["models"].values()}
+    for h in hiddens:
+        path = os.path.join(ART, f"kcenter_h{h}.hlo.txt")
+        assert os.path.exists(path), path
+
+
+def test_train_artifact_mentions_expected_shapes():
+    m = read_manifest()
+    name, kv = next(iter(m["models"].items()))
+    p = int(kv["params"])
+    k = model.CHUNK_STEPS
+    text = open(os.path.join(ART, f"train_{name}.hlo.txt")).read()
+    assert f"f32[{2 * p}]" in text                                   # state
+    assert f"f32[{k},{model.TRAIN_BS},{model.FEAT_DIM}]" in text     # xs
+    assert f"s32[{k},{model.TRAIN_BS}]" in text                      # ys
+    # Single-array output: the entry root must be state-shaped, not a tuple.
+    root_lines = [l for l in text.splitlines() if "ROOT" in l and "ENTRY" not in l]
+    assert any(f"f32[{2 * p}]" in l for l in root_lines)
+
+
+def test_manifest_chunk_steps():
+    m = read_manifest()
+    assert int(m["chunk_steps"]) == model.CHUNK_STEPS

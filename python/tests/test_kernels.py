@@ -1,0 +1,190 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+hypothesis sweeps shapes and value distributions; assert_allclose against
+ref.py is the core L1 correctness signal (the same kernels lower into every
+AOT artifact the Rust runtime executes).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, uncertainty, kcenter, ref
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+@SET
+@given(
+    m=st.sampled_from([1, 7, 32, 128, 256, 512]),
+    k=st.sampled_from([3, 16, 64, 192]),
+    n=st.sampled_from([5, 10, 96, 100, 384]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(
+        matmul.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@SET
+@given(
+    m=st.sampled_from([8, 64, 256]),
+    k=st.sampled_from([16, 64]),
+    n=st.sampled_from([10, 96, 100]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    np.testing.assert_allclose(
+        matmul.dense(x, w, b, relu), ref.dense_ref(x, w, b, relu),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@SET
+@given(
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_custom_vjp_matches_autodiff_of_ref(relu, seed):
+    """Gradient through the Pallas kernel == gradient through the jnp oracle."""
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, 64, 32), rand(rng, 32, 48), rand(rng, 48)
+
+    def lk(w, b, x):
+        return jnp.sum(jnp.tanh(matmul.dense(x, w, b, relu)))
+
+    def lr(w, b, x):
+        return jnp.sum(jnp.tanh(ref.dense_ref(x, w, b, relu)))
+
+    gk = jax.grad(lk, argnums=(0, 1, 2))(w, b, x)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(w, b, x)
+    for a, e in zip(gk, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-3, atol=1e-3)
+
+
+def test_dense_relu_mask_boundary():
+    """Exactly-zero pre-activations must gate gradient like the oracle (0)."""
+    x = jnp.ones((4, 4), jnp.float32)
+    w = jnp.zeros((4, 4), jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+    g = jax.grad(lambda w: jnp.sum(matmul.dense(x, w, b, True)))(w)
+    np.testing.assert_allclose(g, jnp.zeros_like(g))
+
+
+@SET
+@given(m=st.sampled_from([17, 100, 250]), seed=st.integers(0, 2**31 - 1))
+def test_matmul_non_divisible_rows(m, seed):
+    """Block picker must handle row counts with awkward factorizations."""
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, 64), rand(rng, 64, 96)
+    np.testing.assert_allclose(
+        matmul.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_vmem_estimate_within_budget():
+    """All production layer shapes stay under a 16 MiB VMEM budget."""
+    from compile import model
+    for arch in model.ARCHS.values():
+        for classes in (10, 100, 300):
+            for _, shp in arch.layer_shapes(classes):
+                if len(shp) != 2:
+                    continue
+                k, n = shp
+                vb = matmul.vmem_bytes(model.TRAIN_BS, k, n)
+                assert vb <= 16 * 1024 * 1024, (arch.name, shp, vb)
+
+
+# ---------------------------------------------------------- uncertainty
+
+@SET
+@given(
+    m=st.sampled_from([1, 13, 128, 512]),
+    c=st.sampled_from([2, 10, 100, 300]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_score_logits_matches_ref(m, c, scale, seed):
+    rng = np.random.default_rng(seed)
+    logits = rand(rng, m, c, scale=scale)
+    got = uncertainty.score_logits(logits)
+    want = ref.score_logits_ref(logits)
+    for g, w_ in zip(got[:3], want[:3]):
+        np.testing.assert_allclose(g, w_, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(got[3], want[3])
+
+
+def test_score_logits_extreme_values_stable():
+    """Huge logits must not produce NaN/inf (stable shifted softmax)."""
+    logits = jnp.asarray(
+        [[1e4, -1e4, 0.0], [500.0, 499.0, -500.0], [0.0, 0.0, 0.0]], jnp.float32
+    )
+    margin, entropy, maxprob, pred = uncertainty.score_logits(logits)
+    for v in (margin, entropy, maxprob):
+        assert np.all(np.isfinite(np.asarray(v)))
+    assert float(margin[0]) == pytest.approx(1.0, abs=1e-6)
+    assert float(maxprob[2]) == pytest.approx(1.0 / 3.0, abs=1e-6)
+
+
+def test_score_logits_margin_properties():
+    rng = np.random.default_rng(7)
+    logits = rand(rng, 256, 10, scale=3.0)
+    margin, entropy, maxprob, pred = uncertainty.score_logits(logits)
+    m_np = np.asarray(margin)
+    assert np.all(m_np >= -1e-6) and np.all(m_np <= 1.0 + 1e-6)
+    assert np.all(np.asarray(maxprob) >= 1.0 / 10 - 1e-6)
+    assert np.all(np.asarray(entropy) <= np.log(10) + 1e-5)
+    assert np.array_equal(np.asarray(pred), np.argmax(np.asarray(logits), axis=1))
+
+
+# ------------------------------------------------------------- kcenter
+
+@SET
+@given(
+    m=st.sampled_from([1, 64, 500, 512]),
+    h=st.sampled_from([8, 96, 192, 384]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kcenter_update_matches_ref(m, h, seed):
+    rng = np.random.default_rng(seed)
+    f = rand(rng, m, h)
+    c = rand(rng, h)
+    d = jnp.abs(rand(rng, m, scale=50.0))
+    np.testing.assert_allclose(
+        kcenter.kcenter_update(f, c, d),
+        ref.kcenter_update_ref(f, c, d),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_kcenter_update_monotone_nonincreasing():
+    rng = np.random.default_rng(3)
+    f = rand(rng, 128, 96)
+    d = jnp.full((128,), 1e9, jnp.float32)
+    for i in range(5):
+        c = rand(rng, 96)
+        d2 = kcenter.kcenter_update(f, c, d)
+        assert np.all(np.asarray(d2) <= np.asarray(d) + 1e-6)
+        d = d2
+
+
+def test_kcenter_zero_distance_to_own_center():
+    rng = np.random.default_rng(4)
+    f = rand(rng, 32, 16)
+    d = jnp.full((32,), 1e9, jnp.float32)
+    d = kcenter.kcenter_update(f, f[7], d)
+    assert float(d[7]) == pytest.approx(0.0, abs=1e-5)

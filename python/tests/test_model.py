@@ -1,0 +1,173 @@
+"""L2 model tests: shapes, flat-param layout round-trip, training dynamics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+ARCH_CASES = [("cnn18", 10), ("res18", 10), ("res50", 100), ("effb0", 300)]
+
+
+@pytest.mark.parametrize("arch_name,classes", ARCH_CASES)
+def test_param_count_matches_layout(arch_name, classes):
+    arch = model.ARCHS[arch_name]
+    total = sum(int(np.prod(s)) for _, s in arch.layer_shapes(classes))
+    assert arch.param_count(classes) == total
+
+
+@pytest.mark.parametrize("arch_name,classes", ARCH_CASES)
+def test_init_shape_and_determinism(arch_name, classes):
+    arch = model.ARCHS[arch_name]
+    key = jnp.asarray([1, 2], jnp.uint32)
+    p1 = model.init(arch, classes, key)
+    p2 = model.init(arch, classes, key)
+    assert p1.shape == (arch.param_count(classes),)
+    np.testing.assert_array_equal(p1, p2)
+    p3 = model.init(arch, classes, jnp.asarray([3, 4], jnp.uint32))
+    assert not np.array_equal(np.asarray(p1), np.asarray(p3))
+
+
+def test_flatten_unflatten_roundtrip():
+    arch = model.ARCHS["res18"]
+    key = jnp.asarray([5, 6], jnp.uint32)
+    flat = model.init(arch, 10, key)
+    tree = model.unflatten(arch, 10, flat)
+    flat2 = model.flatten_tree(arch, 10, tree)
+    np.testing.assert_array_equal(flat, flat2)
+
+
+@pytest.mark.parametrize("arch_name,classes", [("cnn18", 10), ("res18", 100)])
+def test_apply_shapes(arch_name, classes, rng):
+    arch = model.ARCHS[arch_name]
+    flat = model.init(arch, classes, jnp.asarray([0, 1], jnp.uint32))
+    x = jnp.asarray(rng.normal(size=(model.EVAL_BS, model.FEAT_DIM)), jnp.float32)
+    logits = model.apply(arch, classes, flat, x)
+    assert logits.shape == (model.EVAL_BS, classes)
+    feats = model.features(arch, classes, flat, x)
+    assert feats.shape == (model.EVAL_BS, arch.hidden)
+
+
+def test_predict_score_shapes(rng):
+    arch = model.ARCHS["cnn18"]
+    flat = model.init(arch, 10, jnp.asarray([0, 1], jnp.uint32))
+    x = jnp.asarray(rng.normal(size=(model.EVAL_BS, model.FEAT_DIM)), jnp.float32)
+    logits, margin, entropy, maxprob, pred = model.predict_score(arch, 10, flat, x)
+    assert logits.shape == (model.EVAL_BS, 10)
+    for v in (margin, entropy, maxprob):
+        assert v.shape == (model.EVAL_BS,)
+        assert np.all(np.isfinite(np.asarray(v)))
+    assert pred.dtype == jnp.int32
+
+
+def test_train_step_reduces_loss_on_separable_data(rng):
+    """A few steps on linearly separable blobs must cut the loss."""
+    arch = model.ARCHS["cnn18"]
+    classes = 10
+    flat = model.init(arch, classes, jnp.asarray([7, 8], jnp.uint32))
+    vel = jnp.zeros_like(flat)
+
+    centers = rng.normal(size=(classes, model.FEAT_DIM)) * 4.0
+    y = rng.integers(0, classes, size=model.TRAIN_BS)
+    x = centers[y] + rng.normal(size=(model.TRAIN_BS, model.FEAT_DIM)) * 0.3
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.int32)
+    lr = jnp.asarray(0.01, jnp.float32)
+
+    step = jax.jit(lambda f, v: model.train_step(arch, classes, f, v, x, y, lr))
+    _, _, loss0 = step(flat, vel)
+    for _ in range(30):
+        flat, vel, loss = step(flat, vel)
+    assert float(loss) < 0.5 * float(loss0), (float(loss0), float(loss))
+
+
+def test_train_step_loss_matches_manual_ce(rng):
+    arch = model.ARCHS["cnn18"]
+    flat = model.init(arch, 10, jnp.asarray([1, 1], jnp.uint32))
+    x = jnp.asarray(rng.normal(size=(model.TRAIN_BS, model.FEAT_DIM)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, model.TRAIN_BS), jnp.int32)
+    loss = model.loss_fn(arch, 10, flat, x, y)
+    logits = np.asarray(model.apply(arch, 10, flat, x))
+    z = logits - logits.max(axis=1, keepdims=True)
+    logp = z - np.log(np.exp(z).sum(axis=1, keepdims=True))
+    want = -logp[np.arange(len(y)), np.asarray(y)].mean()
+    assert float(loss) == pytest.approx(want, rel=1e-5)
+
+
+def test_residual_vs_plain_forward_differ(rng):
+    """Sanity: the residual flag changes the computation."""
+    a_res = model.ArchConfig("t", hidden=32, depth=2, residual=True)
+    a_pln = model.ArchConfig("t", hidden=32, depth=2, residual=False)
+    flat = jnp.asarray(rng.normal(size=(a_res.param_count(10),)), jnp.float32) * 0.1
+    x = jnp.asarray(rng.normal(size=(8, model.FEAT_DIM)), jnp.float32)
+    lr_ = model.apply(a_res, 10, flat, x)
+    lp = model.apply(a_pln, 10, flat, x)
+    assert not np.allclose(np.asarray(lr_), np.asarray(lp))
+
+
+def test_init_state_layout():
+    arch = model.ARCHS["cnn18"]
+    st = model.init_state(arch, 10, jnp.asarray([2, 3], jnp.uint32))
+    p = arch.param_count(10)
+    assert st.shape == (2 * p,)
+    np.testing.assert_array_equal(np.asarray(st[p:]), np.zeros(p, np.float32))
+    flat, vel = model.split_state(arch, 10, st)
+    np.testing.assert_array_equal(flat, st[:p])
+    np.testing.assert_array_equal(vel, st[p:])
+
+
+def test_train_chunk_equals_unrolled_steps(rng):
+    """scan-based train_chunk must match CHUNK_STEPS manual train_step calls."""
+    arch = model.ARCHS["cnn18"]
+    classes = 10
+    st = model.init_state(arch, classes, jnp.asarray([9, 9], jnp.uint32))
+    k, bs = model.CHUNK_STEPS, model.TRAIN_BS
+    xs = jnp.asarray(rng.normal(size=(k, bs, model.FEAT_DIM)), jnp.float32)
+    ys = jnp.asarray(rng.integers(0, classes, (k, bs)), jnp.int32)
+    lrs = jnp.asarray(rng.uniform(0.001, 0.01, k), jnp.float32)
+
+    got = model.train_chunk(arch, classes, st, xs, ys, lrs)
+
+    flat, vel = model.split_state(arch, classes, st)
+    for i in range(k):
+        flat, vel, _ = model.train_step(arch, classes, flat, vel, xs[i], ys[i], lrs[i])
+    want = jnp.concatenate([flat, vel])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_train_chunk_reduces_eval_loss(rng):
+    arch = model.ARCHS["cnn18"]
+    classes = 10
+    st = model.init_state(arch, classes, jnp.asarray([7, 8], jnp.uint32))
+    centers = rng.normal(size=(classes, model.FEAT_DIM)) * 3.0
+    k, bs = model.CHUNK_STEPS, model.TRAIN_BS
+    y = rng.integers(0, classes, size=(k, bs))
+    xs = jnp.asarray(centers[y] + rng.normal(size=(k, bs, model.FEAT_DIM)) * 0.3, jnp.float32)
+    ys = jnp.asarray(y, jnp.int32)
+    lrs = jnp.full((k,), 0.01, jnp.float32)
+    step = jax.jit(lambda s: model.train_chunk(arch, classes, s, xs, ys, lrs))
+
+    ye = rng.integers(0, classes, size=model.EVAL_BS)
+    xe = jnp.asarray(
+        centers[ye] + rng.normal(size=(model.EVAL_BS, model.FEAT_DIM)) * 0.3, jnp.float32
+    )
+    ye = jnp.asarray(ye, jnp.int32)
+    l0 = float(model.mean_loss_s(arch, classes, st, xe, ye))
+    for _ in range(6):
+        st = step(st)
+    l1 = float(model.mean_loss_s(arch, classes, st, xe, ye))
+    assert l1 < 0.5 * l0, (l0, l1)
+
+
+def test_flops_ordering_matches_paper():
+    """Cost ordering res50 > effb0-ish > res18 > cnn18 (DESIGN §Substitutions)."""
+    f = {n: a.flops_per_sample(10) for n, a in model.ARCHS.items()}
+    assert f["res50"] > f["res18"] > f["cnn18"]
+    assert f["effb0"] > f["res18"]

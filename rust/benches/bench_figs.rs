@@ -1,0 +1,42 @@
+//! End-to-end benches for the paper's figures: runs every figure driver at
+//! bench scale and reports wall time. Regenerated series are written to
+//! results/smoke/ as CSVs.
+//!
+//! Run: `cargo bench --offline --bench bench_figs`
+
+use std::time::Instant;
+
+use mcal::experiments::common::{Ctx, Scale};
+use mcal::experiments::{figs_fit, figs_sampling, figs_scale};
+
+fn bench<T>(name: &str, f: impl FnOnce() -> mcal::Result<T>) {
+    let t0 = Instant::now();
+    match f() {
+        Ok(_) => println!("{name:<28} {:>8.1}s", t0.elapsed().as_secs_f64()),
+        Err(e) => println!("{name:<28} FAILED: {e}"),
+    }
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let ctx = Ctx::new("artifacts", "results/smoke", Scale::Smoke, 42).unwrap();
+
+    bench("fig2_fig3 (fit quality)", || figs_fit::fig2_fig3(&ctx));
+    bench("fig4 (delta sensitivity)", || {
+        figs_sampling::fig4(&ctx, "cifar10-syn", 0.4)
+    });
+    bench("fig5_fig6 (L ranking)", || {
+        figs_sampling::fig5_fig6(&ctx, "cifar10-syn", 0.15)
+    });
+    bench("fig11 (metric ablation)", || {
+        figs_sampling::fig11(&ctx, "cifar10-syn")
+    });
+    bench("fig13 (subset sweep)", || figs_scale::fig13(&ctx));
+    bench("fig14_15 (AL gains)", || {
+        figs_scale::fig14_15(&ctx, &["fashion-syn", "cifar10-syn"])
+    });
+    bench("fig22_27 (fit grid)", || figs_fit::fig22_27(&ctx));
+}

@@ -1,0 +1,160 @@
+//! Hot-path microbenchmarks (hand-rolled harness — criterion is not in the
+//! offline vendor set). This is the §Perf instrument: it measures each
+//! layer of the stack in isolation so the optimization log in
+//! EXPERIMENTS.md §Perf has stable numbers.
+//!
+//! Run: `cargo bench --offline` (or `--bench bench_hotpath`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
+use mcal::dataset::SynthSpec;
+use mcal::model::TrainSchedule;
+use mcal::powerlaw::fit_auto;
+use mcal::prng::Pcg32;
+use mcal::runtime::{Engine, Manifest, ModelSession, Scores};
+use mcal::sampling::{rank_for_machine_labeling, select_for_training, Metric};
+
+fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<46} {:>12.3} ms/iter", per * 1e3);
+    per
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let ds = SynthSpec {
+        name: "bench".into(),
+        num_classes: 10,
+        per_class: 2000,
+        feat_dim: 64,
+        subclusters: 4,
+        center_scale: 0.6,
+        spread: 0.8,
+        noise: 1.2,
+        seed: 1,
+    }
+    .generate()
+    .unwrap();
+
+    println!("== L3/runtime hot paths (CPU PJRT, {} samples) ==", ds.len());
+
+    // --- train_chunk step rate (device-resident state) -------------------
+    for arch in ["cnn18_c10", "res18_c10", "res50_c10"] {
+        let mut s = ModelSession::open(&engine, &manifest, arch, 1).unwrap();
+        let idx: Vec<usize> = (0..4096).collect();
+        let labels: Vec<u32> = idx.iter().map(|&i| ds.groundtruth(i)).collect();
+        let sched = TrainSchedule::default();
+        let t0 = Instant::now();
+        let steps = s.train_epochs(&ds, &idx, &labels, 4, 0.01, &sched).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "train[{arch:<10}] {steps:>5} steps in {dt:>6.2}s = {:>8.0} steps/s ({:>9.0} samples/s)",
+            steps as f64 / dt,
+            steps as f64 * manifest.train_bs as f64 / dt
+        );
+    }
+
+    // --- pool scoring throughput -----------------------------------------
+    for arch in ["res18_c10", "res50_c10"] {
+        let mut s = ModelSession::open(&engine, &manifest, arch, 1).unwrap();
+        let idx: Vec<usize> = (0..ds.len()).collect();
+        let t0 = Instant::now();
+        let scores = s.predict(&ds, &idx).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(scores.len(), ds.len());
+        println!(
+            "predict[{arch:<9}] {} samples in {dt:>6.2}s = {:>9.0} samples/s",
+            ds.len(),
+            ds.len() as f64 / dt
+        );
+    }
+
+    // --- selection / ranking ----------------------------------------------
+    let n = 200_000;
+    let mut rng = Pcg32::new(2, 2);
+    let scores = Scores {
+        margin: (0..n).map(|_| rng.next_f32()).collect(),
+        entropy: (0..n).map(|_| rng.next_f32() * 2.3).collect(),
+        maxprob: (0..n).map(|_| rng.next_f32()).collect(),
+        pred: (0..n).map(|_| rng.below(10)).collect(),
+    };
+    time("select_for_training(margin, k=2000, n=200k)", 20, || {
+        let mut r = Pcg32::new(3, 3);
+        let sel = select_for_training(Metric::Margin, &scores, 2000, &mut r);
+        assert_eq!(sel.len(), 2000);
+    });
+    time("rank_for_machine_labeling(n=200k)", 10, || {
+        let r = rank_for_machine_labeling(&scores);
+        assert_eq!(r.len(), n);
+    });
+
+    // --- power-law fitting --------------------------------------------------
+    let pts: Vec<(f64, f64)> = (1..=40)
+        .map(|i| {
+            let b = 200.0 * 1.2f64.powi(i);
+            (b, (2.0 * b.powf(-0.4) * (-b / 30_000.0).exp()).max(1e-6))
+        })
+        .collect();
+    time("powerlaw fit_auto (40 pts) x 20 thetas", 50, || {
+        for _ in 0..20 {
+            let _ = fit_auto(&pts, None).unwrap();
+        }
+    });
+
+    // --- joint (B, theta) search -------------------------------------------
+    let grid = mcal::cost::theta_grid();
+    let law = mcal::powerlaw::PowerLaw { ln_alpha: 0.5f64.ln(), gamma: 0.4, inv_k: 1.0 / 30_000.0 };
+    let fits: Vec<Option<mcal::powerlaw::PowerLaw>> = grid.iter().map(|_| Some(law)).collect();
+    let cm = mcal::cost::FittedCostModel { a: 0.001, b: 0.5 };
+    time("search_min_cost (60 B x 20 theta grid)", 200, || {
+        let r = mcal::cost::search_min_cost(&mcal::cost::SearchInputs {
+            x_total: 60_000,
+            test_size: 3_000,
+            b_cur: 2_000,
+            delta: 600,
+            price_per_label: 0.04,
+            spent: 100.0,
+            epsilon: 0.05,
+            theta_grid: &grid,
+            fits: &fits,
+            cost_model: &cm,
+        });
+        assert!(r.c_star.is_finite());
+    });
+
+    // --- annotation service round trip ---------------------------------------
+    let ledger = Arc::new(Ledger::new());
+    let svc = SimService::new(
+        SimServiceConfig { service: Service::Amazon, workers: 4, ..Default::default() },
+        ledger,
+    );
+    let idx: Vec<usize> = (0..10_000).collect();
+    time("annotation label_batch (10k labels, 4 workers)", 10, || {
+        use mcal::annotation::AnnotationService;
+        let l = svc.label_batch(&ds, &idx).unwrap();
+        assert_eq!(l.len(), 10_000);
+    });
+
+    let st = engine.stats();
+    println!(
+        "\nengine: {} executes, {:.2}s exec, {} compiles, {:.2}s compile, {:.1} MB h2d",
+        st.executes,
+        st.execute_secs,
+        st.compiles,
+        st.compile_secs,
+        st.h2d_bytes as f64 / 1e6
+    );
+}

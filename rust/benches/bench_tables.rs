@@ -1,0 +1,47 @@
+//! End-to-end benches for the paper's tables: runs the Table 1/2/3 drivers
+//! at bench scale (10% datasets, reduced δ grid) and reports wall time per
+//! driver. The regenerated rows are printed so a bench run doubles as a
+//! shape check against the paper.
+//!
+//! Run: `cargo bench --offline --bench bench_tables`
+
+use std::time::Instant;
+
+use mcal::annotation::Service;
+use mcal::experiments::common::{Ctx, Scale};
+use mcal::experiments::{table1, table2, table3};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let ctx = Ctx::new("artifacts", "results/smoke", Scale::Smoke, 42).unwrap();
+    let both = [Service::Amazon, Service::Satyam];
+
+    let t0 = Instant::now();
+    let t1 = table1::run(&ctx, &both, 6).unwrap();
+    let d1 = t0.elapsed().as_secs_f64();
+    println!("{}", t1.to_markdown());
+    println!("bench_table1: {d1:.1}s\n");
+
+    let t0 = Instant::now();
+    let out = table2::run(&ctx, &["fashion-syn", "cifar10-syn", "cifar100-syn"], 0.05).unwrap();
+    let d2 = t0.elapsed().as_secs_f64();
+    println!("{}", out.table2.to_markdown());
+    println!(
+        "bench_table2: {d2:.1}s ({} trajectories)\n",
+        out.trajectories.len()
+    );
+
+    let t0 = Instant::now();
+    let t3 = table3::run(&ctx, 0.10, 6).unwrap();
+    let d3 = t0.elapsed().as_secs_f64();
+    println!("{}", t3.to_markdown());
+    println!("bench_table3: {d3:.1}s\n");
+
+    println!(
+        "TOTAL bench_tables: {:.1}s (table1 {d1:.1}s, table2 {d2:.1}s, table3 {d3:.1}s)",
+        d1 + d2 + d3
+    );
+}

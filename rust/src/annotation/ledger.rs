@@ -1,0 +1,114 @@
+//! Thread-safe dollar ledger: the single source of truth for total cost.
+//!
+//! Everything MCAL optimizes ultimately lands here: human-label purchases,
+//! simulated-rig training charges, and the "exploration tax" (training
+//! spend on candidate architectures that were later dropped, §5.1 fn. 5).
+
+use std::sync::Mutex;
+
+/// Snapshot of ledger totals.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostBreakdown {
+    pub human_labeling: f64,
+    pub training: f64,
+    /// Training spend charged to dropped candidate architectures.
+    pub exploration: f64,
+    pub labels_purchased: u64,
+    pub retrains: u64,
+}
+
+impl CostBreakdown {
+    pub fn total(&self) -> f64 {
+        self.human_labeling + self.training + self.exploration
+    }
+}
+
+/// Append-only cost accumulator shared across worker threads.
+#[derive(Default)]
+pub struct Ledger {
+    inner: Mutex<CostBreakdown>,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Ledger::default()
+    }
+
+    pub fn charge_labels(&self, count: u64, price_per_label: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.human_labeling += count as f64 * price_per_label;
+        g.labels_purchased += count;
+    }
+
+    pub fn charge_training(&self, dollars: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.training += dollars;
+        g.retrains += 1;
+    }
+
+    /// Move `dollars` of training spend into the exploration column (used
+    /// when a candidate architecture is dropped during selection).
+    pub fn reclassify_as_exploration(&self, dollars: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.training -= dollars;
+        g.exploration += dollars;
+    }
+
+    pub fn snapshot(&self) -> CostBreakdown {
+        *self.inner.lock().unwrap()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.snapshot().total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn accumulates() {
+        let l = Ledger::new();
+        l.charge_labels(100, 0.04);
+        l.charge_training(2.5);
+        let s = l.snapshot();
+        assert!((s.human_labeling - 4.0).abs() < 1e-12);
+        assert!((s.training - 2.5).abs() < 1e-12);
+        assert_eq!(s.labels_purchased, 100);
+        assert_eq!(s.retrains, 1);
+        assert!((s.total() - 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exploration_reclassification_preserves_total() {
+        let l = Ledger::new();
+        l.charge_training(10.0);
+        let before = l.total();
+        l.reclassify_as_exploration(4.0);
+        let s = l.snapshot();
+        assert!((s.training - 6.0).abs() < 1e-12);
+        assert!((s.exploration - 4.0).abs() < 1e-12);
+        assert!((l.total() - before).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_charges_are_not_lost() {
+        let l = Arc::new(Ledger::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let l = l.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    l.charge_labels(1, 0.01);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(l.snapshot().labels_purchased, 8000);
+        assert!((l.snapshot().human_labeling - 80.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,87 @@
+//! Human-annotation-service substrate.
+//!
+//! The paper buys labels from commercial services (Amazon SageMaker GT at
+//! \$0.04/image, Satyam at \$0.003/image). This module simulates such a
+//! service: a bounded-queue worker pool that resolves labeling requests
+//! from dataset groundtruth (the paper's evaluation assumes perfect human
+//! labels, §2 fn. 2 — an error-rate knob exists for robustness studies),
+//! and a thread-safe dollar [`Ledger`] that every cost in the system flows
+//! through (human labels, simulated GPU training, exploration tax).
+
+pub mod ledger;
+pub mod sim;
+
+pub use ledger::{CostBreakdown, Ledger};
+pub use sim::{SimService, SimServiceConfig};
+
+use crate::dataset::Dataset;
+use crate::Result;
+
+/// Pricing presets from the paper (§5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Service {
+    /// Amazon SageMaker GT: $0.04 / image.
+    Amazon,
+    /// Satyam: $0.003 / image.
+    Satyam,
+    /// Custom price per label.
+    Custom(f64),
+}
+
+impl Service {
+    pub fn price_per_label(&self) -> f64 {
+        match self {
+            Service::Amazon => 0.04,
+            Service::Satyam => 0.003,
+            Service::Custom(p) => *p,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Service::Amazon => "amazon".into(),
+            Service::Satyam => "satyam".into(),
+            Service::Custom(p) => format!("custom({p})"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Service> {
+        match s {
+            "amazon" => Some(Service::Amazon),
+            "satyam" => Some(Service::Satyam),
+            other => other.parse::<f64>().ok().map(Service::Custom),
+        }
+    }
+}
+
+/// Anything that can produce human labels for dataset samples.
+pub trait AnnotationService: Send + Sync {
+    /// Dollar price for a single label.
+    fn price_per_label(&self) -> f64;
+
+    /// Obtain human labels for `indices`, charging the ledger. Output is
+    /// aligned with `indices`.
+    fn label_batch(&self, ds: &Dataset, indices: &[usize]) -> Result<Vec<u32>>;
+
+    /// Number of labels purchased so far.
+    fn labels_purchased(&self) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_prices() {
+        assert_eq!(Service::Amazon.price_per_label(), 0.04);
+        assert_eq!(Service::Satyam.price_per_label(), 0.003);
+    }
+
+    #[test]
+    fn parse_services() {
+        assert_eq!(Service::parse("amazon"), Some(Service::Amazon));
+        assert_eq!(Service::parse("satyam"), Some(Service::Satyam));
+        assert_eq!(Service::parse("0.01"), Some(Service::Custom(0.01)));
+        assert_eq!(Service::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,308 @@
+//! Labeling-service simulator: bounded-queue worker pool over groundtruth.
+//!
+//! Real annotation services are asynchronous pipelines — requests are
+//! batched, fanned out to a worker fleet, and results stream back. The
+//! simulator reproduces that data path (so the L3 orchestrator exercises
+//! real queueing/backpressure) while resolving each request instantly from
+//! dataset groundtruth:
+//!
+//! - `workers` threads pull from a bounded request queue (`sync_channel`,
+//!   capacity `queue_cap`) — a full queue blocks the submitter, which is
+//!   exactly the backpressure a metered external service applies;
+//! - optional per-label `latency` models annotator turnaround;
+//! - optional `error_rate` flips labels uniformly (the paper assumes
+//!   perfect human labels; the knob exists for robustness studies);
+//! - every completed label charges the shared [`Ledger`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::ledger::Ledger;
+use super::{AnnotationService, Service};
+use crate::dataset::Dataset;
+use crate::prng::Pcg32;
+use crate::{Error, Result};
+
+/// Simulator tuning.
+#[derive(Clone, Debug)]
+pub struct SimServiceConfig {
+    pub service: Service,
+    pub workers: usize,
+    pub queue_cap: usize,
+    /// Simulated annotator turnaround per label (0 = instant).
+    pub latency: Duration,
+    /// Probability a human label is wrong (paper: 0).
+    pub error_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for SimServiceConfig {
+    fn default() -> Self {
+        SimServiceConfig {
+            service: Service::Amazon,
+            workers: 4,
+            queue_cap: 1024,
+            latency: Duration::ZERO,
+            error_rate: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+enum Job {
+    // (slot in the output vec, groundtruth label, num_classes)
+    Label(usize, u32, u32),
+    Stop,
+}
+
+struct Pool {
+    tx: SyncSender<Job>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// The simulated annotation service.
+pub struct SimService {
+    cfg: SimServiceConfig,
+    ledger: Arc<Ledger>,
+    pool: Mutex<Option<Pool>>,
+    results: Arc<Mutex<Vec<(usize, u32)>>>,
+    purchased: AtomicU64,
+}
+
+impl SimService {
+    pub fn new(cfg: SimServiceConfig, ledger: Arc<Ledger>) -> Self {
+        SimService {
+            cfg,
+            ledger,
+            pool: Mutex::new(None),
+            results: Arc::new(Mutex::new(Vec::new())),
+            purchased: AtomicU64::new(0),
+        }
+    }
+
+    pub fn ledger(&self) -> &Arc<Ledger> {
+        &self.ledger
+    }
+
+    fn spawn_pool(&self) -> Pool {
+        let (tx, rx) = sync_channel::<Job>(self.cfg.queue_cap);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::new();
+        for w in 0..self.cfg.workers.max(1) {
+            let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
+            let results = self.results.clone();
+            let latency = self.cfg.latency;
+            let error_rate = self.cfg.error_rate;
+            let mut rng = Pcg32::new(self.cfg.seed, 0xA770 + w as u64);
+            handles.push(std::thread::spawn(move || loop {
+                let job = { rx.lock().unwrap().recv() };
+                match job {
+                    Ok(Job::Label(slot, truth, classes)) => {
+                        if !latency.is_zero() {
+                            std::thread::sleep(latency);
+                        }
+                        let label = if error_rate > 0.0
+                            && (rng.next_f64() < error_rate)
+                            && classes > 1
+                        {
+                            // Uniform wrong label.
+                            let mut l = rng.below(classes);
+                            if l == truth {
+                                l = (l + 1) % classes;
+                            }
+                            l
+                        } else {
+                            truth
+                        };
+                        results.lock().unwrap().push((slot, label));
+                    }
+                    Ok(Job::Stop) | Err(_) => break,
+                }
+            }));
+        }
+        Pool { tx, handles }
+    }
+}
+
+impl AnnotationService for SimService {
+    fn price_per_label(&self) -> f64 {
+        self.cfg.service.price_per_label()
+    }
+
+    fn label_batch(&self, ds: &Dataset, indices: &[usize]) -> Result<Vec<u32>> {
+        if indices.is_empty() {
+            return Ok(Vec::new());
+        }
+        if let Some(&bad) = indices.iter().find(|&&i| i >= ds.len()) {
+            return Err(Error::Annotation(format!(
+                "index {bad} out of range (dataset len {})",
+                ds.len()
+            )));
+        }
+
+        // Bring up the worker pool lazily, drain results synchronously.
+        let mut guard = self.pool.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(self.spawn_pool());
+        }
+        let pool = guard.as_ref().unwrap();
+        self.results.lock().unwrap().clear();
+
+        for (slot, &i) in indices.iter().enumerate() {
+            pool.tx
+                .send(Job::Label(slot, ds.groundtruth(i), ds.num_classes as u32))
+                .map_err(|_| Error::Annotation("worker pool hung up".into()))?;
+        }
+        // Wait for all results (the submitter blocks on the bounded queue
+        // above when workers fall behind — that's the backpressure path).
+        let mut out = vec![u32::MAX; indices.len()];
+        let mut done = 0usize;
+        while done < indices.len() {
+            let drained: Vec<(usize, u32)> =
+                { self.results.lock().unwrap().drain(..).collect() };
+            if drained.is_empty() {
+                std::thread::yield_now();
+                continue;
+            }
+            for (slot, label) in drained {
+                out[slot] = label;
+                done += 1;
+            }
+        }
+
+        self.purchased
+            .fetch_add(indices.len() as u64, Ordering::Relaxed);
+        self.ledger
+            .charge_labels(indices.len() as u64, self.price_per_label());
+        Ok(out)
+    }
+
+    fn labels_purchased(&self) -> u64 {
+        self.purchased.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for SimService {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.lock().unwrap().take() {
+            for _ in &pool.handles {
+                let _ = pool.tx.send(Job::Stop);
+            }
+            for h in pool.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::SynthSpec;
+
+    fn ds() -> Dataset {
+        SynthSpec {
+            name: "t".into(),
+            num_classes: 5,
+            per_class: 40,
+            feat_dim: 4,
+            subclusters: 1,
+            center_scale: 1.0,
+            spread: 0.1,
+            noise: 0.1,
+            seed: 3,
+        }
+        .generate()
+        .unwrap()
+    }
+
+    #[test]
+    fn perfect_labels_match_groundtruth() {
+        let ds = ds();
+        let svc = SimService::new(SimServiceConfig::default(), Arc::new(Ledger::new()));
+        let idx: Vec<usize> = (0..50).collect();
+        let labels = svc.label_batch(&ds, &idx).unwrap();
+        for (&i, &l) in idx.iter().zip(labels.iter()) {
+            assert_eq!(l, ds.groundtruth(i));
+        }
+        assert_eq!(svc.labels_purchased(), 50);
+    }
+
+    #[test]
+    fn charges_ledger_at_service_price() {
+        let ds = ds();
+        let ledger = Arc::new(Ledger::new());
+        let svc = SimService::new(
+            SimServiceConfig {
+                service: Service::Satyam,
+                ..Default::default()
+            },
+            ledger.clone(),
+        );
+        svc.label_batch(&ds, &(0..100).collect::<Vec<_>>()).unwrap();
+        assert!((ledger.snapshot().human_labeling - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_rate_injects_wrong_labels() {
+        let ds = ds();
+        let svc = SimService::new(
+            SimServiceConfig {
+                error_rate: 0.5,
+                seed: 9,
+                ..Default::default()
+            },
+            Arc::new(Ledger::new()),
+        );
+        let idx: Vec<usize> = (0..200).collect();
+        let labels = svc.label_batch(&ds, &idx).unwrap();
+        let wrong = idx
+            .iter()
+            .zip(labels.iter())
+            .filter(|(&i, &l)| l != ds.groundtruth(i))
+            .count();
+        assert!((60..140).contains(&wrong), "wrong={wrong}");
+        // Injected labels must still be valid classes.
+        assert!(labels.iter().all(|&l| l < 5));
+    }
+
+    #[test]
+    fn out_of_range_index_is_error() {
+        let ds = ds();
+        let svc = SimService::new(SimServiceConfig::default(), Arc::new(Ledger::new()));
+        assert!(svc.label_batch(&ds, &[ds.len()]).is_err());
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let ds = ds();
+        let ledger = Arc::new(Ledger::new());
+        let svc = SimService::new(SimServiceConfig::default(), ledger.clone());
+        assert!(svc.label_batch(&ds, &[]).unwrap().is_empty());
+        assert_eq!(ledger.snapshot().labels_purchased, 0);
+    }
+
+    #[test]
+    fn many_batches_across_pool_reuse() {
+        let ds = ds();
+        let svc = SimService::new(
+            SimServiceConfig {
+                workers: 3,
+                queue_cap: 8, // force backpressure
+                ..Default::default()
+            },
+            Arc::new(Ledger::new()),
+        );
+        for start in (0..200).step_by(40) {
+            let idx: Vec<usize> = (start..start + 40).collect();
+            let labels = svc.label_batch(&ds, &idx).unwrap();
+            for (&i, &l) in idx.iter().zip(labels.iter()) {
+                assert_eq!(l, ds.groundtruth(i));
+            }
+        }
+        assert_eq!(svc.labels_purchased(), 200);
+    }
+}

@@ -1,0 +1,135 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline vendor set).
+//!
+//! Grammar: `mcal <subcommand> [positionals] [--key value | --flag]*`.
+
+use std::collections::HashMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positionals: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Option values are greedy: `--key value`; a `--key`
+    /// followed by another `--...` or nothing is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare '--' not allowed".into()));
+                }
+                // --key=value form.
+                if let Some(eq) = name.find('=') {
+                    out.options
+                        .insert(name[..eq].to_string(), name[eq + 1..].to_string());
+                    continue;
+                }
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.options.insert(name.to_string(), v);
+                    }
+                    _ => out.flags.push(name.to_string()),
+                }
+            } else if out.subcommand.is_empty() {
+                out.subcommand = tok;
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: expected float, got '{v}'"))),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run fashion-syn --service amazon --epsilon 0.05 --verbose");
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.positionals, vec!["fashion-syn"]);
+        assert_eq!(a.opt("service"), Some("amazon"));
+        assert_eq!(a.f64_or("epsilon", 0.1).unwrap(), 0.05);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("exp table1 --scale=0.1");
+        assert_eq!(a.opt("scale"), Some("0.1"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("x --dry-run --seed 7");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // A value starting with '-' (not '--') is still a value.
+        let a = parse("x --offset -3");
+        assert_eq!(a.opt("offset"), Some("-3"));
+    }
+
+    #[test]
+    fn bad_numeric_errors() {
+        let a = parse("x --epsilon huh");
+        assert!(a.f64_or("epsilon", 0.0).is_err());
+    }
+}

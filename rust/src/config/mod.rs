@@ -1,0 +1,170 @@
+//! Minimal key/value configuration (the offline vendor set has no serde).
+//!
+//! Format: `key = value` lines, `[section]` headers prefix subsequent keys
+//! as `section.key`, `#` comments. Typed getters with defaults.
+//!
+//! ```text
+//! [run]
+//! dataset = cifar10-syn
+//! epsilon = 0.05
+//!
+//! [service]
+//! name = amazon
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// Parsed configuration map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config::default()
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Config(format!(
+                        "line {}: unterminated section header",
+                        lineno + 1
+                    )));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(Error::Config(format!(
+                    "line {}: expected 'key = value'",
+                    lineno + 1
+                )));
+            };
+            let key = line[..eq].trim();
+            let value = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, value.to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("{key}: expected float, got '{v}'"))),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(Error::Config(format!("{key}: expected bool, got '{v}'"))),
+        }
+    }
+
+    /// Keys in deterministic order (testing / diagnostics).
+    pub fn keys(&self) -> Vec<&str> {
+        let mut ks: Vec<&str> = self.values.keys().map(|s| s.as_str()).collect();
+        ks.sort_unstable();
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(
+            "# top\nglobal = 1\n[run]\ndataset = cifar10-syn # inline\nepsilon = 0.05\n[svc]\nname = amazon\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("global"), Some("1"));
+        assert_eq!(c.get("run.dataset"), Some("cifar10-syn"));
+        assert_eq!(c.f64_or("run.epsilon", 0.1).unwrap(), 0.05);
+        assert_eq!(c.get("svc.name"), Some("amazon"));
+    }
+
+    #[test]
+    fn typed_getters_defaults_and_errors() {
+        let c = Config::parse("a = nope\nb = true\n").unwrap();
+        assert_eq!(c.f64_or("missing", 2.5).unwrap(), 2.5);
+        assert!(c.f64_or("a", 0.0).is_err());
+        assert!(c.bool_or("b", false).unwrap());
+        assert!(c.bool_or("a", false).is_err());
+        assert_eq!(c.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Config::parse("[bad\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("= 3\n").is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::parse("x = 1\n").unwrap();
+        c.set("x", 2);
+        assert_eq!(c.usize_or("x", 0).unwrap(), 2);
+    }
+}

@@ -1,0 +1,190 @@
+//! Multi-architecture selection (§4 "Extending MCAL to selecting the
+//! cheapest DNN architecture").
+//!
+//! Each candidate runs a short probing phase of the MCAL loop on a *shadow*
+//! ledger until its C* estimate stabilizes (or the probe budget runs out).
+//! The candidate with the lowest stabilized C* wins and runs the full MCAL
+//! loop on the real ledger; the losers' probe *training* spend is charged
+//! to the real ledger as exploration tax. Probe-phase human labels are not
+//! double-charged: with a shared acquisition stream the winning run re-buys
+//! the same labels (see DESIGN.md §Algorithm-notes).
+
+use std::sync::Arc;
+
+use crate::annotation::{AnnotationService, Ledger, SimService, SimServiceConfig, Service};
+use crate::cost::{search_min_cost, SearchInputs};
+use crate::dataset::Dataset;
+use crate::model::ArchKind;
+use crate::runtime::{Engine, Manifest};
+use crate::Result;
+
+use super::env::{LabelingEnv, RunParams};
+use super::events::RunReport;
+use super::mcal::run_mcal;
+
+/// Result of one candidate's probe phase.
+#[derive(Clone, Debug)]
+pub struct ProbeResult {
+    pub arch: ArchKind,
+    /// Stabilized C* estimate (None if no viable plan emerged).
+    pub c_star: Option<f64>,
+    pub b_probed: usize,
+    pub training_spend: f64,
+    pub stable: bool,
+}
+
+/// Probe a single candidate: run the MCAL inner loop on a shadow ledger for
+/// at most `probe_iters` acquisitions, returning the stabilized C*.
+fn probe(
+    engine: &Engine,
+    manifest: &Manifest,
+    ds: &Dataset,
+    price: f64,
+    arch: ArchKind,
+    classes_tag: &str,
+    params: &RunParams,
+    probe_iters: usize,
+) -> Result<ProbeResult> {
+    let shadow_ledger = Arc::new(Ledger::new());
+    let shadow_service = SimService::new(
+        SimServiceConfig {
+            service: Service::Custom(price),
+            seed: params.seed,
+            ..Default::default()
+        },
+        shadow_ledger.clone(),
+    );
+    let theta_grid = crate::cost::theta_grid();
+    let mut env = LabelingEnv::new(
+        engine,
+        manifest,
+        ds,
+        &shadow_service,
+        shadow_ledger,
+        arch,
+        classes_tag,
+        params.clone(),
+        theta_grid,
+    )?;
+
+    let delta = ((params.init_frac * ds.len() as f64).round() as usize).max(1);
+    let mut c_old: Option<f64> = None;
+    let mut last: Option<(f64, bool)> = None;
+    env.measure()?;
+    let tax_budget = env.params.exploration_tax * env.human_only_cost();
+    for _ in 0..probe_iters {
+        // A probe must not itself burn the exploration budget (EfficientNet
+        // on imagenet-syn costs hundreds of simulated dollars per retrain).
+        if env.training_spend > 0.5 * tax_budget {
+            break;
+        }
+        if env.acquire(delta)? == 0 {
+            break;
+        }
+        env.retrain()?;
+        env.measure()?;
+        let fits = env.fits();
+        if let Some(cm) = env.cost_model() {
+            let s = search_min_cost(&SearchInputs {
+                x_total: env.x_total(),
+                test_size: env.test_idx.len(),
+                b_cur: env.b_idx.len(),
+                delta,
+                price_per_label: price,
+                spent: env.ledger.total(),
+                epsilon: env.params.epsilon,
+                theta_grid: &env.theta_grid,
+                fits: &fits,
+                cost_model: &cm,
+            });
+            let stable = match c_old {
+                Some(old) => {
+                    (s.c_star - old).abs() / s.c_star.max(1e-9)
+                        <= env.params.stability_delta
+                }
+                None => false,
+            };
+            c_old = Some(s.c_star);
+            last = Some((s.c_star, stable && s.machine_labeling_viable));
+            if stable {
+                break;
+            }
+        }
+    }
+    Ok(ProbeResult {
+        arch,
+        c_star: last.map(|(c, _)| c),
+        b_probed: env.b_idx.len(),
+        training_spend: env.training_spend,
+        stable: last.map(|(_, s)| s).unwrap_or(false),
+    })
+}
+
+/// Run MCAL with architecture selection: probe every candidate, commit to
+/// the cheapest, charge losers' probe training as exploration.
+pub fn run_with_arch_selection(
+    engine: &Engine,
+    manifest: &Manifest,
+    ds: &Dataset,
+    service: &dyn AnnotationService,
+    ledger: Arc<Ledger>,
+    candidates: &[ArchKind],
+    classes_tag: &str,
+    params: RunParams,
+    probe_iters: usize,
+) -> Result<(RunReport, Vec<ProbeResult>)> {
+    assert!(!candidates.is_empty());
+    if candidates.len() == 1 {
+        // Nothing to select — skip the probe phase entirely.
+        let report = run_mcal(
+            engine, manifest, ds, service, ledger, candidates[0], classes_tag, params,
+        )?;
+        return Ok((report, Vec::new()));
+    }
+    let price = service.price_per_label();
+    let mut probes = Vec::new();
+    for &arch in candidates {
+        let mut p = params.clone();
+        // Decorrelate probe subsets across candidates.
+        p.seed = params.seed.wrapping_add(arch as u64 + 1);
+        probes.push(probe(
+            engine, manifest, ds, price, arch, classes_tag, &p, probe_iters,
+        )?);
+    }
+
+    // Winner: lowest *stabilized* C* (unstable estimates only compete when
+    // no candidate stabilized); fall back to the cheapest-to-train arch
+    // when no candidate produced a viable estimate at all.
+    let pick = |pool: Vec<&ProbeResult>| -> Option<ArchKind> {
+        pool.into_iter()
+            .filter(|p| p.c_star.is_some())
+            .min_by(|a, b| a.c_star.unwrap().partial_cmp(&b.c_star.unwrap()).unwrap())
+            .map(|p| p.arch)
+    };
+    let winner = pick(probes.iter().filter(|p| p.stable).collect())
+        .or_else(|| pick(probes.iter().collect()))
+        .unwrap_or_else(|| {
+            *candidates
+                .iter()
+                .max_by(|a, b| {
+                    a.rig_throughput().partial_cmp(&b.rig_throughput()).unwrap()
+                })
+                .unwrap()
+        });
+
+    // Losers' probe training is sunk exploration cost on the real ledger.
+    let exploration: f64 = probes
+        .iter()
+        .filter(|p| p.arch != winner)
+        .map(|p| p.training_spend)
+        .sum();
+    if exploration > 0.0 {
+        ledger.charge_training(exploration);
+        ledger.reclassify_as_exploration(exploration);
+    }
+
+    let report = run_mcal(
+        engine, manifest, ds, service, ledger, winner, classes_tag, params,
+    )?;
+    Ok((report, probes))
+}

@@ -1,0 +1,334 @@
+//! Shared labeling-run environment: dataset splits, label acquisition,
+//! retraining, and measurement primitives used by both the MCAL optimizer
+//! ([`super::mcal`]) and the naive-AL baselines ([`super::albaseline`]).
+
+use std::sync::Arc;
+
+use crate::annotation::{AnnotationService, Ledger};
+use crate::cost::RigModel;
+use crate::dataset::Dataset;
+use crate::metrics;
+use crate::model::{ArchKind, TrainSchedule};
+use crate::prng::Pcg32;
+use crate::runtime::{Engine, Manifest, ModelSession};
+use crate::sampling::{self, Metric};
+use crate::{Error, Result};
+
+/// Knobs shared by every run type (paper defaults in `Default`).
+#[derive(Clone, Debug)]
+pub struct RunParams {
+    /// ε — overall labeling error bound (paper: 5%).
+    pub epsilon: f64,
+    /// |T| as a fraction of |X| (paper: 5%).
+    pub test_frac: f64,
+    /// δ₀ as a fraction of |X| (paper: 1%).
+    pub init_frac: f64,
+    /// Δ — C* stability threshold (paper: 5%).
+    pub stability_delta: f64,
+    /// β — δ-adaptation cost tolerance (paper implementation: 10%).
+    pub beta: f64,
+    /// x — exploration-tax fraction of the all-human cost (paper: 10%).
+    pub exploration_tax: f64,
+    /// M(.) — acquisition metric (paper default: margin).
+    pub metric: Metric,
+    pub seed: u64,
+    pub schedule: TrainSchedule,
+    pub rig: RigModel,
+    /// Safety cap on iterations.
+    pub max_iters: usize,
+    /// Never grow B beyond this fraction of the non-test pool.
+    pub b_cap_frac: f64,
+    /// §Perf: score at most this many (randomly chosen) pool samples per
+    /// acquisition instead of the whole pool. Uncertainty sampling only
+    /// needs the *top-δ* of a large random subset — with δ ≪ cap the
+    /// selected batch is statistically indistinguishable from full-pool
+    /// scoring, and per-iteration scoring cost drops from O(|pool|) to
+    /// O(cap). `None` = score everything (used by ablations).
+    pub pool_score_cap: Option<usize>,
+}
+
+impl Default for RunParams {
+    fn default() -> Self {
+        RunParams {
+            epsilon: 0.05,
+            test_frac: 0.05,
+            init_frac: 0.01,
+            stability_delta: 0.05,
+            beta: 0.10,
+            exploration_tax: 0.10,
+            metric: Metric::Margin,
+            seed: 0,
+            schedule: TrainSchedule::default(),
+            rig: RigModel::default(),
+            max_iters: 80,
+            b_cap_frac: 0.85,
+            pool_score_cap: Some(20_000),
+        }
+    }
+}
+
+/// Live state of one labeling run for a single architecture.
+pub struct LabelingEnv<'e> {
+    pub ds: &'e Dataset,
+    pub service: &'e dyn AnnotationService,
+    pub ledger: Arc<Ledger>,
+    pub params: RunParams,
+    pub arch: ArchKind,
+    pub session: ModelSession<'e>,
+    engine: &'e Engine,
+    manifest: &'e Manifest,
+
+    pub rng: Pcg32,
+    pub theta_grid: Vec<f64>,
+
+    /// Human-labeled test set T (indices into ds) and its labels.
+    pub test_idx: Vec<usize>,
+    pub test_labels: Vec<u32>,
+    /// Human-labeled training set B and its labels.
+    pub b_idx: Vec<usize>,
+    pub b_labels: Vec<u32>,
+    /// Unlabeled pool X \ T \ B.
+    pub pool: Vec<usize>,
+
+    /// Observed (|B|, retrain dollars) pairs → fitted cost model.
+    pub cost_obs: Vec<(f64, f64)>,
+    /// Per-θ observed (|B|, ε_T(S^θ)) pairs → per-θ power-law fits.
+    pub profile_obs: Vec<Vec<(f64, f64)>>,
+    /// Cumulative simulated training dollars (this run only).
+    pub training_spend: f64,
+    retrain_counter: u64,
+}
+
+impl<'e> LabelingEnv<'e> {
+    /// Set up a run: sample + human-label T and B₀, train, measure once.
+    pub fn new(
+        engine: &'e Engine,
+        manifest: &'e Manifest,
+        ds: &'e Dataset,
+        service: &'e dyn AnnotationService,
+        ledger: Arc<Ledger>,
+        arch: ArchKind,
+        classes_tag: &str,
+        params: RunParams,
+        theta_grid: Vec<f64>,
+    ) -> Result<Self> {
+        let model_name = arch.model_set(classes_tag);
+        let session = ModelSession::open(engine, manifest, &model_name, params.seed)?;
+        if session.meta.classes != ds.num_classes {
+            return Err(Error::Coordinator(format!(
+                "model {model_name} has {} classes but dataset {} has {}",
+                session.meta.classes, ds.name, ds.num_classes
+            )));
+        }
+        let mut rng = Pcg32::new(params.seed, 0xE417);
+
+        let n = ds.len();
+        let test_n = ((params.test_frac * n as f64).round() as usize).clamp(1, n - 2);
+        let init_n = ((params.init_frac * n as f64).round() as usize).max(ds.num_classes.min(n / 4)).max(2);
+
+        // Sample T then B0 from the remainder.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let test_idx: Vec<usize> = order[..test_n].to_vec();
+        let b_idx: Vec<usize> = order[test_n..test_n + init_n].to_vec();
+        let pool: Vec<usize> = order[test_n + init_n..].to_vec();
+
+        let test_labels = service.label_batch(ds, &test_idx)?;
+        let b_labels = service.label_batch(ds, &b_idx)?;
+
+        let profile_obs = vec![Vec::new(); theta_grid.len()];
+        let mut env = LabelingEnv {
+            ds,
+            service,
+            ledger,
+            params,
+            arch,
+            session,
+            engine,
+            manifest,
+            rng,
+            theta_grid,
+            test_idx,
+            test_labels,
+            b_idx,
+            b_labels,
+            pool,
+            cost_obs: Vec::new(),
+            profile_obs: Vec::new(),
+            training_spend: 0.0,
+            retrain_counter: 0,
+        };
+        env.profile_obs = profile_obs;
+        env.retrain()?;
+        Ok(env)
+    }
+
+    pub fn x_total(&self) -> usize {
+        self.ds.len()
+    }
+
+    /// Max B allowed (pool cap).
+    pub fn b_cap(&self) -> usize {
+        let non_test = self.ds.len() - self.test_idx.len();
+        (self.params.b_cap_frac * non_test as f64) as usize
+    }
+
+    /// All-human reference cost: |X| · C_h.
+    pub fn human_only_cost(&self) -> f64 {
+        self.ds.len() as f64 * self.service.price_per_label()
+    }
+
+    /// Acquire `k` pool samples by `M(.)`, human-label them, add to B.
+    pub fn acquire(&mut self, k: usize) -> Result<usize> {
+        let k = k.min(self.pool.len());
+        if k == 0 {
+            return Ok(0);
+        }
+        // §Perf: optionally restrict scoring to a random subset of the pool
+        // (see RunParams::pool_score_cap). `view[i]` maps subset position →
+        // pool position.
+        let view: Vec<usize> = match self.params.pool_score_cap {
+            Some(cap) if self.pool.len() > cap.max(k) => {
+                self.rng.sample_indices(self.pool.len(), cap.max(k))
+            }
+            _ => (0..self.pool.len()).collect(),
+        };
+        let view_idx: Vec<usize> = view.iter().map(|&p| self.pool[p]).collect();
+
+        let positions: Vec<usize> = match self.params.metric {
+            Metric::KCenter => {
+                let pool_feats = self.session.features(self.ds, &view_idx)?;
+                let labeled_feats = self.session.features(self.ds, &self.b_idx)?;
+                let exe = self
+                    .engine
+                    .load(self.manifest.kcenter_artifact(self.session.meta.hidden))?;
+                let picks = sampling::kcenter::select(
+                    self.engine,
+                    &exe,
+                    self.manifest.eval_bs,
+                    self.session.meta.hidden,
+                    &pool_feats,
+                    &labeled_feats,
+                    k,
+                )?;
+                picks.into_iter().map(|p| view[p]).collect()
+            }
+            Metric::Random => {
+                let n = self.pool.len();
+                self.rng.sample_indices(n, k)
+            }
+            _ => {
+                let scores = self.session.predict(self.ds, &view_idx)?;
+                let picks =
+                    sampling::select_for_training(self.params.metric, &scores, k, &mut self.rng);
+                picks.into_iter().map(|p| view[p]).collect()
+            }
+        };
+        // Map positions → dataset indices; remove from pool (descending
+        // positions so swap_remove stays valid).
+        let mut positions = positions;
+        positions.sort_unstable_by(|a, b| b.cmp(a));
+        let mut new_idx = Vec::with_capacity(k);
+        for p in positions {
+            new_idx.push(self.pool.swap_remove(p));
+        }
+        let new_labels = self.service.label_batch(self.ds, &new_idx)?;
+        self.b_idx.extend_from_slice(&new_idx);
+        self.b_labels.extend_from_slice(&new_labels);
+        Ok(k)
+    }
+
+    /// Retrain from scratch on the current B; charges the simulated rig
+    /// cost to the ledger and records the cost observation. Returns the
+    /// dollars charged.
+    pub fn retrain(&mut self) -> Result<f64> {
+        self.retrain_counter += 1;
+        let seed = self
+            .params
+            .seed
+            .wrapping_add(self.retrain_counter.wrapping_mul(0x9E37_79B9));
+        self.session.reinit(seed)?;
+        self.session.train_epochs(
+            self.ds,
+            &self.b_idx,
+            &self.b_labels,
+            self.params.schedule.real_epochs * self.arch.real_epoch_factor(),
+            self.arch.base_lr(),
+            &self.params.schedule,
+        )?;
+        let dollars = self
+            .params
+            .rig
+            .retrain_dollars(self.arch, self.b_idx.len());
+        self.ledger.charge_training(dollars);
+        self.training_spend += dollars;
+        self.cost_obs.push((self.b_idx.len() as f64, dollars));
+        Ok(dollars)
+    }
+
+    /// Measure ε_T(S^θ) over the θ grid with the current model and record
+    /// the observations for the power-law fits. Returns the profile.
+    pub fn measure(&mut self) -> Result<Vec<f64>> {
+        let scores = self.session.predict(self.ds, &self.test_idx)?;
+        let correct: Vec<bool> = scores
+            .pred
+            .iter()
+            .zip(self.test_labels.iter())
+            .map(|(&p, &t)| p == t)
+            .collect();
+        let profile = metrics::error_profile(&scores, &correct, &self.theta_grid);
+        let b = self.b_idx.len() as f64;
+        for (ti, &eps) in profile.iter().enumerate() {
+            self.profile_obs[ti].push((b, eps));
+        }
+        Ok(profile)
+    }
+
+    /// Per-θ power-law fits (None until ≥3 observations or fit failure).
+    ///
+    /// Observations are weighted ∝ |B|²: the fit must track the *recent*
+    /// slope of the learning curve, not the small-B plateau where the model
+    /// is still effectively random — extrapolation toward B_opt happens
+    /// from the right end of the data (cf. Fig. 3: prediction quality is
+    /// driven by the later estimates).
+    pub fn fits(&self) -> Vec<Option<crate::powerlaw::PowerLaw>> {
+        self.profile_obs
+            .iter()
+            .map(|obs| {
+                if obs.len() < 3 {
+                    None
+                } else {
+                    let w: Vec<f64> = obs.iter().map(|&(b, _)| b * b).collect();
+                    crate::powerlaw::fit_auto(obs, Some(&w)).ok()
+                }
+            })
+            .collect()
+    }
+
+    /// Fitted training-cost model (None until the first retrain).
+    pub fn cost_model(&self) -> Option<crate::cost::FittedCostModel> {
+        crate::cost::FittedCostModel::fit(&self.cost_obs).ok()
+    }
+
+    /// "Stop now" option from a measured profile: the largest θ whose
+    /// measured machine-label plan satisfies the ε constraint, with its
+    /// cost and machine fraction. Returns (θ, cost, machine_frac).
+    pub fn stop_now(&self, profile: &[f64]) -> (f64, f64, f64) {
+        let pool_n = self.pool.len();
+        let x = self.ds.len() as f64;
+        let c_h = self.service.price_per_label();
+        let spent = self.ledger.total();
+        let mut best = (0.0, spent + pool_n as f64 * c_h, 0.0);
+        for (ti, &theta) in self.theta_grid.iter().enumerate() {
+            let s = (theta * pool_n as f64).floor();
+            let overall = s * profile[ti] / x;
+            if overall < self.params.epsilon {
+                let cost = spent + (pool_n as f64 - s) * c_h;
+                if cost < best.1 {
+                    best = (theta, cost, s / x);
+                }
+            }
+        }
+        best
+    }
+}

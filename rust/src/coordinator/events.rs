@@ -1,0 +1,158 @@
+//! Run telemetry: per-iteration records and the final run report.
+//!
+//! Every driver in [`crate::experiments`] consumes these records to
+//! regenerate the paper's tables and figures, so they carry everything the
+//! evaluation needs: sizes, dollar breakdowns, predicted optima, measured
+//! errors.
+
+use crate::annotation::CostBreakdown;
+
+/// One MCAL / active-learning iteration.
+#[derive(Clone, Debug)]
+pub struct IterationRecord {
+    pub iter: usize,
+    /// |B| after this iteration's acquisition.
+    pub b_size: usize,
+    /// δ used for this acquisition.
+    pub delta: usize,
+    /// Dollars charged for this retrain (simulated rig).
+    pub retrain_dollars: f64,
+    /// Ledger total after this iteration.
+    pub ledger_total: f64,
+    /// Test-set error profile ε_T(S^θ) over the θ grid.
+    pub eps_profile: Vec<f64>,
+    /// Predicted optimum from the joint search (None before fits exist).
+    pub c_star: Option<f64>,
+    pub b_opt: Option<usize>,
+    pub theta_star: Option<f64>,
+    /// Whether the C* estimate was considered stable this iteration.
+    pub stable: bool,
+    /// "Stop now" cost: ledger + residual human labels under the best
+    /// *measured* feasible θ (what naive AL optimizes).
+    pub stop_now_cost: f64,
+    /// Machine-labelable fraction of |X| under the best measured feasible θ.
+    pub stop_now_machine_frac: f64,
+}
+
+/// Why the main loop ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Predicted cost of continuing exceeds the current optimum.
+    CostRising,
+    /// Reached the planned B_opt with stable models.
+    ReachedBOpt,
+    /// Spent > x% of the all-human cost on training with no feasible
+    /// machine-labeling plan (the ImageNet path, §5.1 fn. 5).
+    ExplorationTax,
+    /// Pool exhausted.
+    PoolExhausted,
+    /// Safety iteration cap.
+    MaxIters,
+    /// Budget (budget-constrained variant) nearly exhausted.
+    BudgetExhausted,
+}
+
+/// Final outcome of one labeling run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub dataset: String,
+    pub arch: String,
+    pub service: String,
+    pub epsilon: f64,
+    /// |X| (the whole dataset, test set included).
+    pub x_total: usize,
+    /// |T|.
+    pub test_size: usize,
+    /// Final |B| (human-labeled training set).
+    pub b_size: usize,
+    /// |S| machine-labeled.
+    pub s_size: usize,
+    /// Residual human-labeled (pool minus S).
+    pub residual_human: usize,
+    /// Measured overall label error vs groundtruth (evaluation only).
+    pub overall_error: f64,
+    /// Measured machine-label error on S.
+    pub machine_error: f64,
+    pub cost: CostBreakdown,
+    /// Cost of human-labeling everything (|X| · C_h).
+    pub human_only_cost: f64,
+    pub stop_reason: StopReason,
+    pub iterations: Vec<IterationRecord>,
+    /// Wall-clock seconds of the whole run (simulation time, not rig time).
+    pub wall_secs: f64,
+}
+
+impl RunReport {
+    /// Paper headline: savings vs human-labeling everything.
+    pub fn savings(&self) -> f64 {
+        1.0 - self.cost.total() / self.human_only_cost
+    }
+
+    pub fn machine_frac(&self) -> f64 {
+        self.s_size as f64 / self.x_total as f64
+    }
+
+    pub fn b_frac(&self) -> f64 {
+        self.b_size as f64 / self.x_total as f64
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} {} {}: total=${:.2} (human-only ${:.2}, savings {:.1}%) |B|={} ({:.1}%) |S|={} ({:.1}%) err={:.2}% stop={:?}",
+            self.dataset,
+            self.arch,
+            self.service,
+            self.cost.total(),
+            self.human_only_cost,
+            self.savings() * 100.0,
+            self.b_size,
+            self.b_frac() * 100.0,
+            self.s_size,
+            self.machine_frac() * 100.0,
+            self.overall_error * 100.0,
+            self.stop_reason,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> RunReport {
+        RunReport {
+            dataset: "d".into(),
+            arch: "res18".into(),
+            service: "amazon".into(),
+            epsilon: 0.05,
+            x_total: 1000,
+            test_size: 50,
+            b_size: 100,
+            s_size: 600,
+            residual_human: 250,
+            overall_error: 0.03,
+            machine_error: 0.05,
+            cost: CostBreakdown {
+                human_labeling: 16.0,
+                training: 4.0,
+                exploration: 0.0,
+                labels_purchased: 400,
+                retrains: 10,
+            },
+            human_only_cost: 40.0,
+            stop_reason: StopReason::ReachedBOpt,
+            iterations: vec![],
+            wall_secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn savings_and_fracs() {
+        let r = report();
+        assert!((r.savings() - 0.5).abs() < 1e-12);
+        assert!((r.machine_frac() - 0.6).abs() < 1e-12);
+        assert!((r.b_frac() - 0.1).abs() < 1e-12);
+        assert!(r.summary().contains("savings 50.0%"));
+    }
+}

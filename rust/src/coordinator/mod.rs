@@ -1,0 +1,25 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! - [`mcal`]: Alg. 1 — the joint (B, θ, δ) minimum-cost optimizer.
+//! - [`albaseline`]: naive fixed-δ active learning + oracle-δ pricing
+//!   (the paper's comparison baselines, Figs. 8-10, Tbl. 2).
+//! - [`archselect`]: multi-candidate architecture selection (§4).
+//! - [`budget`]: the budget-constrained variant (§4).
+//! - [`env`]: shared run state (splits, acquisition, retraining,
+//!   measurement) used by all of the above.
+//! - [`events`]: per-iteration records and run reports consumed by the
+//!   experiment drivers.
+
+pub mod albaseline;
+pub mod archselect;
+pub mod budget;
+pub mod env;
+pub mod events;
+pub mod mcal;
+
+pub use albaseline::{run_al_trajectory, PricedStop, Trajectory};
+pub use archselect::{run_with_arch_selection, ProbeResult};
+pub use budget::run_budget;
+pub use env::{LabelingEnv, RunParams};
+pub use events::{IterationRecord, RunReport, StopReason};
+pub use mcal::run_mcal;

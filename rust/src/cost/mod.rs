@@ -1,0 +1,506 @@
+//! Cost models + the joint (B, θ) minimum-cost search (§3.2, Alg. 1 l.18-20).
+//!
+//! Three pieces:
+//!
+//! - [`RigModel`] — simulated 4×K80 rig: converts a retrain of size |B|
+//!   (priced at the paper's nominal 200 epochs) into dollars. This is what
+//!   actually charges the ledger when the coordinator retrains.
+//! - [`FittedCostModel`] — what MCAL *learns*: per-retrain cost ≈ a·|B| + b,
+//!   fitted online from the ledger's observed (|B|, $) pairs (the paper fits
+//!   its training-cost model the same way; Eqn. 4 is the closed-form total
+//!   under fixed δ).
+//! - [`search_min_cost`] / [`adapt_delta`] — the optimizer: grid over future
+//!   training sizes B′ × machine-label fractions θ, predicting error with
+//!   the per-θ truncated power laws, subject to `(|S|/|X|)·ε(S) < ε`.
+
+use crate::model::ArchKind;
+use crate::powerlaw::{lstsq, PowerLaw};
+use crate::{Error, Result};
+
+/// The θ grid of the paper (§4): {0.05, 0.10, …, 1.0}.
+pub fn theta_grid() -> Vec<f64> {
+    (1..=20).map(|i| i as f64 * 0.05).collect()
+}
+
+/// Simulated training rig (paper: 4×K80 VM at \$3.6/hr, 200 epochs/iter).
+#[derive(Clone, Copy, Debug)]
+pub struct RigModel {
+    pub dollars_per_hour: f64,
+    pub nominal_epochs: u32,
+}
+
+impl Default for RigModel {
+    fn default() -> Self {
+        RigModel { dollars_per_hour: 3.6, nominal_epochs: 200 }
+    }
+}
+
+impl RigModel {
+    /// Dollar cost of one retrain-from-scratch on `b` samples.
+    pub fn retrain_dollars(&self, arch: ArchKind, b: usize) -> f64 {
+        let sample_passes = b as f64 * self.nominal_epochs as f64;
+        let secs = sample_passes / arch.rig_throughput();
+        secs / 3600.0 * self.dollars_per_hour
+    }
+}
+
+/// Learned per-retrain cost model: `$ ≈ a·|B| + b`.
+#[derive(Clone, Copy, Debug)]
+pub struct FittedCostModel {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl FittedCostModel {
+    /// Fit from observed (training size, dollars) pairs. With a single
+    /// observation, assumes cost ∝ size (b = 0).
+    pub fn fit(points: &[(f64, f64)]) -> Result<FittedCostModel> {
+        match points.len() {
+            0 => Err(Error::Fit("no cost observations".into())),
+            1 => {
+                let (s, c) = points[0];
+                if s <= 0.0 {
+                    return Err(Error::Fit("non-positive training size".into()));
+                }
+                Ok(FittedCostModel { a: c / s, b: 0.0 })
+            }
+            m => {
+                let mut feats = Vec::with_capacity(m * 2);
+                let mut y = Vec::with_capacity(m);
+                for &(s, c) in points {
+                    feats.push(s);
+                    feats.push(1.0);
+                    y.push(c);
+                }
+                let x = lstsq(&feats, &y, None, m, 2)?;
+                Ok(FittedCostModel { a: x[0].max(0.0), b: x[1].max(0.0) })
+            }
+        }
+    }
+
+    /// Predicted cost of one retrain at size `b`.
+    pub fn retrain(&self, b: f64) -> f64 {
+        self.a * b + self.b
+    }
+
+    /// Predicted total cost of growing B from `b_cur` to `b_target` with
+    /// acquisition batch `delta`, retraining after each batch (Eqn. 4's
+    /// generalization to a fitted per-iteration model).
+    pub fn future_training(&self, b_cur: usize, b_target: usize, delta: usize) -> f64 {
+        if b_target <= b_cur {
+            return 0.0;
+        }
+        let delta = delta.max(1);
+        let mut total = 0.0;
+        let mut b = b_cur;
+        while b < b_target {
+            b = (b + delta).min(b_target);
+            total += self.retrain(b as f64);
+        }
+        total
+    }
+}
+
+/// Inputs to the joint search.
+pub struct SearchInputs<'a> {
+    /// |X| — full dataset size (test set included; its human labels count).
+    pub x_total: usize,
+    /// |T| — human-labeled test set size.
+    pub test_size: usize,
+    /// |B_i| — current training-set size.
+    pub b_cur: usize,
+    /// Current acquisition batch size δ (samples).
+    pub delta: usize,
+    /// C_h — dollars per human label.
+    pub price_per_label: f64,
+    /// Dollars already committed (ledger total).
+    pub spent: f64,
+    /// ε — overall error bound.
+    pub epsilon: f64,
+    pub theta_grid: &'a [f64],
+    /// Per-θ accuracy models (None until ≥3 observations).
+    pub fits: &'a [Option<PowerLaw>],
+    pub cost_model: &'a FittedCostModel,
+}
+
+/// Output of the joint search.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchResult {
+    /// Predicted minimum total cost C*.
+    pub c_star: f64,
+    /// Optimal final training-set size B_opt.
+    pub b_opt: usize,
+    /// Optimal machine-label fraction θ* (0 = human-label everything left).
+    pub theta_star: f64,
+    /// Predicted |S*| at the optimum.
+    pub s_size: usize,
+    /// Predicted machine-labeling error at the optimum.
+    pub eps_machine: f64,
+    /// False iff the optimum is the all-human fallback.
+    pub machine_labeling_viable: bool,
+}
+
+/// Geometric grid of candidate future training sizes.
+fn b_grid(b_cur: usize, b_max: usize, points: usize) -> Vec<usize> {
+    let mut grid = vec![b_cur.max(1)];
+    if b_max <= b_cur {
+        return grid;
+    }
+    let lo = (b_cur.max(1)) as f64;
+    let hi = b_max as f64;
+    let ratio = (hi / lo).powf(1.0 / points as f64);
+    let mut v = lo;
+    for _ in 0..points {
+        v *= ratio;
+        let b = (v.round() as usize).clamp(b_cur.max(1), b_max);
+        if *grid.last().unwrap() != b {
+            grid.push(b);
+        }
+    }
+    grid
+}
+
+/// The paper's joint optimization (Eqn. 2): minimize predicted total cost
+/// over (B′, θ) subject to the overall-error constraint. Always includes
+/// the "stop now, human-label the rest" fallback so a result exists even
+/// when no machine-labeling plan is feasible (the CIFAR-100/ImageNet path).
+pub fn search_min_cost(inp: &SearchInputs) -> SearchResult {
+    let pool_max = inp.x_total.saturating_sub(inp.test_size);
+    let human_now = inp.spent
+        + (pool_max.saturating_sub(inp.b_cur)) as f64 * inp.price_per_label;
+    let mut best = SearchResult {
+        c_star: human_now,
+        b_opt: inp.b_cur,
+        theta_star: 0.0,
+        s_size: 0,
+        eps_machine: 0.0,
+        machine_labeling_viable: false,
+    };
+
+    for &bp in &b_grid(inp.b_cur, pool_max, 60) {
+        let extra_train_labels = (bp - inp.b_cur) as f64 * inp.price_per_label;
+        let future_train = inp.cost_model.future_training(inp.b_cur, bp, inp.delta);
+        let pool_after = pool_max - bp;
+        for (ti, &theta) in inp.theta_grid.iter().enumerate() {
+            let Some(fit) = inp.fits.get(ti).and_then(|f| f.as_ref()) else {
+                continue;
+            };
+            let eps_hat = fit.predict(bp as f64);
+            let s_size = (theta * pool_after as f64).floor() as usize;
+            let overall_err = s_size as f64 * eps_hat / inp.x_total as f64;
+            if overall_err >= inp.epsilon {
+                continue;
+            }
+            let residual_human = (pool_after - s_size) as f64 * inp.price_per_label;
+            let cost = inp.spent + extra_train_labels + future_train + residual_human;
+            if cost < best.c_star {
+                best = SearchResult {
+                    c_star: cost,
+                    b_opt: bp,
+                    theta_star: theta,
+                    s_size,
+                    eps_machine: eps_hat,
+                    machine_labeling_viable: true,
+                };
+            }
+        }
+    }
+    best
+}
+
+/// Alg. 1 line 20: once the models are stable, pick the largest iteration
+/// count N (smallest δ) whose predicted total stays within `(1+beta)·C*`,
+/// then return `δ_opt = ceil((B_opt − B_i)/N)`. More iterations refine the
+/// power-law fit; the β-tolerance caps what that refinement may cost.
+pub fn adapt_delta(
+    cost_model: &FittedCostModel,
+    b_cur: usize,
+    b_opt: usize,
+    fixed_cost: f64,
+    c_star: f64,
+    beta: f64,
+    max_iters: usize,
+) -> usize {
+    let remaining = b_opt.saturating_sub(b_cur);
+    if remaining == 0 {
+        return 1;
+    }
+    let budget = c_star * (1.0 + beta);
+    let mut best_n = 1usize;
+    for n in 1..=max_iters {
+        let delta = remaining.div_ceil(n);
+        let future = cost_model.future_training(b_cur, b_opt, delta);
+        if fixed_cost + future <= budget {
+            best_n = n;
+        } else if n > best_n + 4 {
+            break; // monotone in n; small slack for rounding effects
+        }
+    }
+    remaining.div_ceil(best_n)
+}
+
+/// Budget-constrained variant (§4 "Accommodating a budget constraint"):
+/// minimize predicted overall error subject to total cost ≤ `budget`.
+pub fn search_min_error(inp: &SearchInputs, budget: f64) -> Option<SearchResult> {
+    let pool_max = inp.x_total.saturating_sub(inp.test_size);
+    let mut best: Option<SearchResult> = None;
+
+    for &bp in &b_grid(inp.b_cur, pool_max, 60) {
+        let extra_train_labels = (bp - inp.b_cur) as f64 * inp.price_per_label;
+        let future_train = inp.cost_model.future_training(inp.b_cur, bp, inp.delta);
+        let pool_after = pool_max - bp;
+        for (ti, &theta) in inp.theta_grid.iter().enumerate() {
+            let Some(fit) = inp.fits.get(ti).and_then(|f| f.as_ref()) else {
+                continue;
+            };
+            let eps_hat = fit.predict(bp as f64);
+            let s_size = (theta * pool_after as f64).floor() as usize;
+            let overall_err = s_size as f64 * eps_hat / inp.x_total as f64;
+            let residual_human = (pool_after - s_size) as f64 * inp.price_per_label;
+            let cost = inp.spent + extra_train_labels + future_train + residual_human;
+            if cost > budget {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    overall_err < b.eps_machine * b.s_size as f64 / inp.x_total as f64
+                        || (overall_err
+                            == b.eps_machine * b.s_size as f64 / inp.x_total as f64
+                            && cost < b.c_star)
+                }
+            };
+            if better {
+                best = Some(SearchResult {
+                    c_star: cost,
+                    b_opt: bp,
+                    theta_star: theta,
+                    s_size,
+                    eps_machine: eps_hat,
+                    machine_labeling_viable: s_size > 0,
+                });
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fits_for(law: PowerLaw, grid: &[f64]) -> Vec<Option<PowerLaw>> {
+        // Error grows with θ: scale alpha by (0.3 + θ).
+        grid.iter()
+            .map(|&t| {
+                Some(PowerLaw {
+                    ln_alpha: law.ln_alpha + (0.3 + t).ln(),
+                    gamma: law.gamma,
+                    inv_k: law.inv_k,
+                })
+            })
+            .collect()
+    }
+
+    fn base_inputs<'a>(
+        grid: &'a [f64],
+        fits: &'a [Option<PowerLaw>],
+        cm: &'a FittedCostModel,
+    ) -> SearchInputs<'a> {
+        SearchInputs {
+            x_total: 60_000,
+            test_size: 3_000,
+            b_cur: 1_000,
+            delta: 1_000,
+            price_per_label: 0.04,
+            spent: 160.0,
+            epsilon: 0.05,
+            theta_grid: grid,
+            fits,
+            cost_model: cm,
+        }
+    }
+
+    #[test]
+    fn rig_pricing_magnitudes() {
+        let rig = RigModel::default();
+        // res18, |B| = 10k, 200 epochs at 250 img/s = 8000s ≈ 2.22h ≈ $8.
+        let c = rig.retrain_dollars(ArchKind::Res18, 10_000);
+        assert!((c - 8.0).abs() < 0.01, "{c}");
+        assert!(rig.retrain_dollars(ArchKind::Res50, 10_000) > c);
+        assert!(rig.retrain_dollars(ArchKind::Cnn18, 10_000) < c);
+    }
+
+    #[test]
+    fn cost_model_fit_recovers_line() {
+        let pts: Vec<(f64, f64)> = (1..=6).map(|i| (i as f64 * 1000.0, 0.002 * i as f64 * 1000.0 + 1.5)).collect();
+        let cm = FittedCostModel::fit(&pts).unwrap();
+        assert!((cm.a - 0.002).abs() < 1e-9);
+        assert!((cm.b - 1.5).abs() < 1e-6);
+        assert!((cm.retrain(5000.0) - 11.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cost_model_single_point() {
+        let cm = FittedCostModel::fit(&[(2000.0, 4.0)]).unwrap();
+        assert!((cm.retrain(4000.0) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn future_training_matches_eqn4_shape() {
+        // With b=0 and pure a·B: sum over batches of size δ from 0 to B is
+        // a·δ·(1+2+…+m) = a·B(B/δ+1)/2 — the paper's Eqn. 4.
+        let cm = FittedCostModel { a: 0.01, b: 0.0 };
+        let b_target = 10_000usize;
+        let delta = 1_000usize;
+        let got = cm.future_training(0, b_target, delta);
+        let m = b_target / delta;
+        let want = 0.01 * (delta as f64) * (m * (m + 1) / 2) as f64;
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        // Smaller δ ⇒ strictly more total training cost.
+        assert!(cm.future_training(0, b_target, 500) > got);
+        assert!(cm.future_training(0, b_target, 2_000) < got);
+    }
+
+    #[test]
+    fn future_training_noop_cases() {
+        let cm = FittedCostModel { a: 1.0, b: 1.0 };
+        assert_eq!(cm.future_training(5_000, 5_000, 100), 0.0);
+        assert_eq!(cm.future_training(5_000, 4_000, 100), 0.0);
+    }
+
+    #[test]
+    fn search_prefers_machine_labeling_on_easy_data() {
+        let grid = theta_grid();
+        // Strong learner: error at B=5k ≈ 0.3·5000^-0.5 ≈ 0.004 (θ-scaled).
+        let law = PowerLaw { ln_alpha: 0.3f64.ln(), gamma: 0.5, inv_k: 0.0 };
+        let fits = fits_for(law, &grid);
+        let cm = FittedCostModel { a: 0.0002, b: 0.5 };
+        let inp = base_inputs(&grid, &fits, &cm);
+        let r = search_min_cost(&inp);
+        assert!(r.machine_labeling_viable);
+        assert!(r.theta_star >= 0.5, "{r:?}");
+        // Must be far below all-human cost (~0.04·56k + 160 ≈ $2400).
+        assert!(r.c_star < 1500.0, "{r:?}");
+        // Constraint respected.
+        assert!(r.s_size as f64 * r.eps_machine / 60_000.0 < 0.05);
+    }
+
+    #[test]
+    fn search_declines_training_on_hard_data() {
+        // Hopeless learner: error stuck near 60% regardless of B. The
+        // constraint (|S|/|X|)·ε(S) < ε still admits a *tiny* confident
+        // slice (exactly the CIFAR-100 regime: the paper machine-labels
+        // only 10%), but the optimizer must not invest in more training,
+        // and the savings must be marginal.
+        let grid = theta_grid();
+        let law = PowerLaw { ln_alpha: 0.6f64.ln(), gamma: 0.0, inv_k: 0.0 };
+        let fits = fits_for(law, &grid);
+        let cm = FittedCostModel { a: 0.01, b: 5.0 };
+        let inp = base_inputs(&grid, &fits, &cm);
+        let r = search_min_cost(&inp);
+        assert_eq!(r.b_opt, inp.b_cur, "{r:?}");
+        assert!(r.theta_star <= 0.3, "{r:?}");
+        let human_now = inp.spent + (57_000 - 1_000) as f64 * 0.04;
+        assert!(r.c_star <= human_now);
+        // Savings bounded by the tiny machine-labelable slice.
+        assert!(human_now - r.c_star <= 0.3 * 56_000.0 * 0.04 + 1e-9);
+    }
+
+    #[test]
+    fn search_respects_missing_fits() {
+        let grid = theta_grid();
+        let fits: Vec<Option<PowerLaw>> = vec![None; grid.len()];
+        let cm = FittedCostModel { a: 0.001, b: 0.0 };
+        let inp = base_inputs(&grid, &fits, &cm);
+        let r = search_min_cost(&inp);
+        assert!(!r.machine_labeling_viable);
+    }
+
+    #[test]
+    fn expensive_training_shifts_optimum_to_less_training() {
+        let grid = theta_grid();
+        let law = PowerLaw { ln_alpha: 0.4f64.ln(), gamma: 0.45, inv_k: 0.0 };
+        let fits = fits_for(law, &grid);
+        let cheap = FittedCostModel { a: 0.0001, b: 0.1 };
+        let costly = FittedCostModel { a: 0.05, b: 20.0 };
+        let r_cheap = search_min_cost(&base_inputs(&grid, &fits, &cheap));
+        let r_costly = search_min_cost(&base_inputs(&grid, &fits, &costly));
+        assert!(r_costly.b_opt <= r_cheap.b_opt, "{r_costly:?} vs {r_cheap:?}");
+    }
+
+    #[test]
+    fn cheaper_labels_shift_optimum_to_more_training() {
+        // §5.3: with 10× cheaper labels (Satyam), MCAL trains on more data.
+        let grid = theta_grid();
+        let law = PowerLaw { ln_alpha: 0.8f64.ln(), gamma: 0.35, inv_k: 0.0 };
+        let fits = fits_for(law, &grid);
+        let cm = FittedCostModel { a: 0.0005, b: 0.5 };
+        let mut amazon = base_inputs(&grid, &fits, &cm);
+        amazon.price_per_label = 0.04;
+        let mut satyam = base_inputs(&grid, &fits, &cm);
+        satyam.price_per_label = 0.003;
+        let ra = search_min_cost(&amazon);
+        let rs = search_min_cost(&satyam);
+        if ra.machine_labeling_viable && rs.machine_labeling_viable {
+            // Relative to the all-human cost, training is pricier under
+            // Satyam, yet the *fraction* of budget worth spending on
+            // training grows; B_opt in absolute samples should not shrink.
+            assert!(rs.b_opt >= ra.b_opt / 2, "{rs:?} vs {ra:?}");
+        }
+    }
+
+    #[test]
+    fn adapt_delta_tightens_with_budget() {
+        let cm = FittedCostModel { a: 0.001, b: 2.0 };
+        // fixed cost 100, c* 110: per-retrain fixed b=2 means each extra
+        // iteration costs ≥ $2; β=10% of 110 = $11 slack.
+        let d_small_slack =
+            adapt_delta(&cm, 1_000, 11_000, 100.0, 110.0, 0.01, 50);
+        let d_big_slack =
+            adapt_delta(&cm, 1_000, 11_000, 100.0, 110.0, 0.5, 50);
+        assert!(d_big_slack <= d_small_slack);
+        assert!(d_small_slack >= 1);
+    }
+
+    #[test]
+    fn adapt_delta_zero_remaining() {
+        let cm = FittedCostModel { a: 0.001, b: 2.0 };
+        assert_eq!(adapt_delta(&cm, 5_000, 5_000, 0.0, 10.0, 0.1, 50), 1);
+    }
+
+    #[test]
+    fn budget_search_spends_up_to_budget_for_accuracy() {
+        let grid = theta_grid();
+        let law = PowerLaw { ln_alpha: 0.5f64.ln(), gamma: 0.4, inv_k: 0.0 };
+        let fits = fits_for(law, &grid);
+        let cm = FittedCostModel { a: 0.0005, b: 0.5 };
+        let inp = base_inputs(&grid, &fits, &cm);
+        let tight = search_min_error(&inp, 500.0);
+        let loose = search_min_error(&inp, 2_000.0);
+        let (tight, loose) = (tight.unwrap(), loose.unwrap());
+        assert!(tight.c_star <= 500.0);
+        assert!(loose.c_star <= 2_000.0);
+        // More budget ⇒ overall predicted error no worse.
+        let err = |r: &SearchResult| r.s_size as f64 * r.eps_machine / 60_000.0;
+        assert!(err(&loose) <= err(&tight) + 1e-12);
+    }
+
+    #[test]
+    fn budget_below_floor_returns_none_or_stop() {
+        let grid = theta_grid();
+        let fits: Vec<Option<PowerLaw>> = vec![None; grid.len()];
+        let cm = FittedCostModel { a: 0.001, b: 0.0 };
+        let inp = base_inputs(&grid, &fits, &cm);
+        // No fits and budget below the human-complete cost: nothing feasible.
+        assert!(search_min_error(&inp, 10.0).is_none());
+    }
+
+    #[test]
+    fn theta_grid_is_paper_grid() {
+        let g = theta_grid();
+        assert_eq!(g.len(), 20);
+        assert!((g[0] - 0.05).abs() < 1e-12);
+        assert!((g[19] - 1.0).abs() < 1e-12);
+    }
+}

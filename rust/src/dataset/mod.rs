@@ -1,0 +1,199 @@
+//! Dataset substrate: synthetic analogs of the paper's benchmark datasets.
+//!
+//! The paper evaluates on Fashion-MNIST, CIFAR-10, CIFAR-100 and ImageNet.
+//! MCAL itself never looks at pixels — it consumes only (a) the learning
+//! curve ε(|B|) of the classifier and (b) the confidence ranking of pool
+//! samples. The synthetic Gaussian-mixture generator in [`synth`]
+//! reproduces both with controllable difficulty (see DESIGN.md
+//! §Substitutions): class centers in 64-d feature space, multiple
+//! sub-clusters per class (slows the learning curve the way intra-class
+//! visual diversity does), and tunable within-cluster noise (sets the
+//! achievable error floor).
+
+pub mod registry;
+pub mod synth;
+
+pub use registry::{preset, preset_names, DatasetPreset};
+pub use synth::SynthSpec;
+
+use crate::{Error, Result};
+
+/// An unlabeled dataset plus its (hidden) groundtruth.
+///
+/// Groundtruth labels are visible only to the annotation-service simulator
+/// (humans "know" the truth) and to the final evaluation in
+/// [`crate::metrics`]; the coordinator must never read them directly.
+#[derive(Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    /// Row-major `n x feat_dim` feature matrix.
+    features: Vec<f32>,
+    /// Groundtruth class per sample.
+    groundtruth: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn new(
+        name: impl Into<String>,
+        feat_dim: usize,
+        num_classes: usize,
+        features: Vec<f32>,
+        groundtruth: Vec<u32>,
+    ) -> Result<Self> {
+        if feat_dim == 0 || features.len() % feat_dim != 0 {
+            return Err(Error::Dataset(format!(
+                "feature buffer {} not divisible by feat_dim {feat_dim}",
+                features.len()
+            )));
+        }
+        if features.len() / feat_dim != groundtruth.len() {
+            return Err(Error::Dataset(format!(
+                "{} rows vs {} labels",
+                features.len() / feat_dim,
+                groundtruth.len()
+            )));
+        }
+        if let Some(&bad) = groundtruth.iter().find(|&&y| y as usize >= num_classes) {
+            return Err(Error::Dataset(format!(
+                "label {bad} out of range (classes={num_classes})"
+            )));
+        }
+        Ok(Dataset {
+            name: name.into(),
+            feat_dim,
+            num_classes,
+            features,
+            groundtruth,
+        })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.groundtruth.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.groundtruth.is_empty()
+    }
+
+    /// Feature row for sample `i`.
+    #[inline]
+    pub fn feature(&self, i: usize) -> &[f32] {
+        &self.features[i * self.feat_dim..(i + 1) * self.feat_dim]
+    }
+
+    /// Gather feature rows for `indices` into `out` (row-major), padding the
+    /// tail with zeros up to `batch` rows. Returns number of real rows.
+    pub fn gather_padded(&self, indices: &[usize], batch: usize, out: &mut [f32]) -> usize {
+        assert!(indices.len() <= batch);
+        assert_eq!(out.len(), batch * self.feat_dim);
+        for (row, &i) in indices.iter().enumerate() {
+            out[row * self.feat_dim..(row + 1) * self.feat_dim]
+                .copy_from_slice(self.feature(i));
+        }
+        for row in indices.len()..batch {
+            out[row * self.feat_dim..(row + 1) * self.feat_dim].fill(0.0);
+        }
+        indices.len()
+    }
+
+    /// Groundtruth access — restricted to the annotation simulator and final
+    /// evaluation (see module docs).
+    #[inline]
+    pub fn groundtruth(&self, i: usize) -> u32 {
+        self.groundtruth[i]
+    }
+
+    pub fn groundtruth_slice(&self) -> &[u32] {
+        &self.groundtruth
+    }
+
+    /// Per-class sample counts (sanity/statistics).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.num_classes];
+        for &y in &self.groundtruth {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+
+    /// Restrict to the first `per_class` samples of each class (Fig. 13's
+    /// subset-size experiment). Keeps the original ordering otherwise.
+    pub fn subset_per_class(&self, per_class: usize) -> Result<Dataset> {
+        let mut taken = vec![0usize; self.num_classes];
+        let mut feats = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..self.len() {
+            let y = self.groundtruth[i] as usize;
+            if taken[y] < per_class {
+                taken[y] += 1;
+                feats.extend_from_slice(self.feature(i));
+                labels.push(self.groundtruth[i]);
+            }
+        }
+        Dataset::new(
+            format!("{}-pc{per_class}", self.name),
+            self.feat_dim,
+            self.num_classes,
+            feats,
+            labels,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            "t",
+            2,
+            3,
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            vec![0, 1, 2, 1],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn feature_rows() {
+        let d = tiny();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.feature(1), &[2.0, 3.0]);
+        assert_eq!(d.feature(3), &[6.0, 7.0]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(Dataset::new("t", 3, 2, vec![0.0; 7], vec![0, 1]).is_err());
+        assert!(Dataset::new("t", 2, 2, vec![0.0; 4], vec![0, 1, 0]).is_err());
+        assert!(Dataset::new("t", 2, 2, vec![0.0; 4], vec![0, 5]).is_err());
+    }
+
+    #[test]
+    fn gather_pads_with_zeros() {
+        let d = tiny();
+        let mut out = vec![9.0f32; 3 * 2];
+        let n = d.gather_padded(&[3, 0], 3, &mut out);
+        assert_eq!(n, 2);
+        assert_eq!(out, vec![6.0, 7.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn class_counts_sum() {
+        let d = tiny();
+        assert_eq!(d.class_counts(), vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn subset_per_class_balanced() {
+        let d = tiny();
+        let s = d.subset_per_class(1).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.class_counts(), vec![1, 1, 1]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Preset registry: the paper's four benchmark datasets as synthetic analogs.
+//!
+//! Difficulty constants were calibrated (see EXPERIMENTS.md §Calibration) so
+//! the learned classifiers land in the paper's operating regimes:
+//!
+//! | preset        | paper dataset | target behaviour                                  |
+//! |---------------|---------------|---------------------------------------------------|
+//! | fashion-syn   | Fashion-MNIST | res18 error ≈ 3-5% with |B| ≈ 5% of X             |
+//! | cifar10-syn   | CIFAR-10      | res18 error ≈ 8-10% at |B| ≈ 20% of X, floor ~6%  |
+//! | cifar100-syn  | CIFAR-100     | slow curve, error ≥ 20% until |B| ≈ 30-50% of X   |
+//! | imagenet-syn  | ImageNet      | training cost prohibitive → MCAL declines to ML   |
+
+use super::synth::SynthSpec;
+use crate::model::ArchKind;
+use crate::{Error, Result};
+
+/// A named dataset preset plus the paper's evaluation defaults for it.
+#[derive(Clone, Debug)]
+pub struct DatasetPreset {
+    pub spec: SynthSpec,
+    /// Architectures the paper evaluates on this dataset.
+    pub candidate_archs: Vec<ArchKind>,
+    /// Which model-set names (manifest keys) serve this dataset.
+    pub classes_tag: &'static str,
+}
+
+pub fn preset_names() -> &'static [&'static str] {
+    &["fashion-syn", "cifar10-syn", "cifar100-syn", "imagenet-syn"]
+}
+
+/// Look up a preset by name. `seed` perturbs generation (not difficulty).
+pub fn preset(name: &str, seed: u64) -> Result<DatasetPreset> {
+    let std3 = vec![ArchKind::Cnn18, ArchKind::Res18, ArchKind::Res50];
+    match name {
+        // Fashion-MNIST: 70k images, 10 classes, "easy". Few modes per
+        // class and moderate overlap: fast learning curve, ~2-4% floor.
+        "fashion-syn" => Ok(DatasetPreset {
+            spec: SynthSpec {
+                name: name.into(),
+                num_classes: 10,
+                per_class: 7000,
+                feat_dim: 64,
+                subclusters: 10,
+                center_scale: 0.6,
+                spread: 0.8,
+                noise: 1.2,
+                seed,
+            },
+            candidate_archs: std3.clone(),
+            classes_tag: "c10",
+        }),
+        // CIFAR-10: 60k images, 10 classes, moderate. Many sub-modes per
+        // class slow the learning curve (intra-class visual diversity):
+        // the model must *see* samples near each mode before it can label
+        // that region confidently.
+        "cifar10-syn" => Ok(DatasetPreset {
+            spec: SynthSpec {
+                name: name.into(),
+                num_classes: 10,
+                per_class: 6000,
+                feat_dim: 64,
+                subclusters: 150,
+                center_scale: 0.45,
+                spread: 0.9,
+                noise: 1.15,
+                seed,
+            },
+            candidate_archs: std3.clone(),
+            classes_tag: "c10",
+        }),
+        // CIFAR-100: 60k images, 100 classes, 600/class, hard: only ~75
+        // samples per mode, strong overlap.
+        "cifar100-syn" => Ok(DatasetPreset {
+            spec: SynthSpec {
+                name: name.into(),
+                num_classes: 100,
+                per_class: 600,
+                feat_dim: 64,
+                subclusters: 16,
+                center_scale: 0.4,
+                spread: 0.9,
+                noise: 1.1,
+                seed,
+            },
+            candidate_archs: std3,
+            classes_tag: "c100",
+        }),
+        // ImageNet: 1.28M images / 1000 classes in the paper; scaled to
+        // 200k / 300 classes (DESIGN.md §Substitutions) — still "hardest by
+        // far", which is all MCAL's decision consumes (it declines to
+        // machine-label and pays the exploration tax).
+        "imagenet-syn" => Ok(DatasetPreset {
+            spec: SynthSpec {
+                name: name.into(),
+                num_classes: 300,
+                per_class: 667,
+                feat_dim: 64,
+                subclusters: 6,
+                center_scale: 0.35,
+                spread: 0.9,
+                noise: 2.0,
+                seed,
+            },
+            candidate_archs: vec![ArchKind::EffB0],
+            classes_tag: "c300",
+        }),
+        other => Err(Error::Dataset(format!(
+            "unknown preset '{other}' (known: {:?})",
+            preset_names()
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve() {
+        for name in preset_names() {
+            let p = preset(name, 0).unwrap();
+            assert_eq!(p.spec.name, *name);
+            assert!(!p.candidate_archs.is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        assert!(preset("mnist", 0).is_err());
+    }
+
+    #[test]
+    fn paper_sizes() {
+        assert_eq!(preset("fashion-syn", 0).unwrap().spec.total(), 70_000);
+        assert_eq!(preset("cifar10-syn", 0).unwrap().spec.total(), 60_000);
+        assert_eq!(preset("cifar100-syn", 0).unwrap().spec.total(), 60_000);
+        assert_eq!(preset("imagenet-syn", 0).unwrap().spec.total(), 200_100);
+    }
+
+    #[test]
+    fn difficulty_ordering() {
+        // Difficulty is driven by the noise-to-class-separation ratio (and
+        // by mode count / samples-per-mode); the ratio must be monotone
+        // across the paper's difficulty ordering.
+        let ratio = |name: &str| {
+            let s = preset(name, 0).unwrap().spec;
+            s.noise / s.center_scale
+        };
+        let f = ratio("fashion-syn");
+        let c10 = ratio("cifar10-syn");
+        let c100 = ratio("cifar100-syn");
+        let inet = ratio("imagenet-syn");
+        assert!(f < c10 && c10 < c100 && c100 < inet, "{f} {c10} {c100} {inet}");
+    }
+}

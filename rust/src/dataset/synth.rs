@@ -1,0 +1,254 @@
+//! Gaussian-mixture synthetic dataset generator.
+//!
+//! Each class is a mixture of `subclusters` Gaussians in `feat_dim`-d space:
+//!
+//! - class centers    ~ N(0, center_scale^2 I)
+//! - subcluster means = class center + N(0, spread^2 I)        (absolute)
+//! - samples          = subcluster mean + N(0, noise^2 I)
+//! - finally, features are globally rescaled to ~unit per-dim variance.
+//!
+//! Difficulty knobs and what they reproduce (DESIGN.md §Substitutions):
+//!
+//! - `noise` vs the typical inter-mode distance `√(2·d·(center²+spread²))`
+//!   sets the local Bayes error at confusable mode boundaries → the
+//!   truncated-power-law falloff level of Eqn. 3. With `spread ≳
+//!   center_scale`, modes of different classes interleave, so class
+//!   identity is a fine-grained property of *which mode* a sample sits in.
+//! - `subclusters` — intra-class multi-modality → slows the learning curve
+//!   (a classifier must *see* every mode), stretching the power-law region.
+//! - `per_class` — samples per class, the second complexity dimension the
+//!   paper studies (CIFAR-100 = 600/class vs CIFAR-10 = 6000/class, Fig. 13).
+
+use super::Dataset;
+use crate::prng::Pcg32;
+use crate::Result;
+
+/// Generation parameters for one synthetic dataset.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub name: String,
+    pub num_classes: usize,
+    pub per_class: usize,
+    pub feat_dim: usize,
+    pub subclusters: usize,
+    pub center_scale: f32,
+    /// Sub-cluster spread around the class center (absolute).
+    pub spread: f32,
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    pub fn total(&self) -> usize {
+        self.num_classes * self.per_class
+    }
+
+    /// Shrink `per_class` by `factor` (used by `--scale bench` runs).
+    pub fn scaled(&self, factor: f64) -> SynthSpec {
+        let mut s = self.clone();
+        s.per_class = ((self.per_class as f64 * factor).round() as usize).max(8);
+        s.name = format!("{}-x{:.2}", self.name, factor);
+        s
+    }
+
+    /// Generate the dataset. Deterministic in `seed`; samples are shuffled
+    /// so pool order carries no class signal.
+    pub fn generate(&self) -> Result<Dataset> {
+        let d = self.feat_dim;
+        let mut rng = Pcg32::new(self.seed, 0xDA7A);
+
+        // Class + subcluster means.
+        let mut means = vec![0.0f32; self.num_classes * self.subclusters * d];
+        for c in 0..self.num_classes {
+            let mut center = vec![0.0f32; d];
+            rng.fill_normal(&mut center, 0.0, self.center_scale);
+            for s in 0..self.subclusters {
+                let row = &mut means[(c * self.subclusters + s) * d..][..d];
+                rng.fill_normal(row, 0.0, self.spread);
+                for (m, &ce) in row.iter_mut().zip(center.iter()) {
+                    *m += ce;
+                }
+            }
+        }
+
+        let n = self.total();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+
+        let mut feats = vec![0.0f32; n * d];
+        let mut labels = vec![0u32; n];
+        for raw in 0..n {
+            let class = raw / self.per_class;
+            let sub = rng.below(self.subclusters as u32) as usize;
+            let mean = &means[(class * self.subclusters + sub) * d..][..d];
+            let slot = order[raw];
+            let row = &mut feats[slot * d..(slot + 1) * d];
+            for (r, &m) in row.iter_mut().zip(mean.iter()) {
+                *r = m + self.noise * rng.normal();
+            }
+            labels[slot] = class as u32;
+        }
+
+        // Global rescale to ~unit per-dim variance (keeps the L2 training
+        // hyperparameters in one regime across presets).
+        let c2 = self.center_scale * self.center_scale;
+        let s2 = self.spread * self.spread;
+        let n2 = self.noise * self.noise;
+        let scale = 1.0 / (c2 + s2 + n2).sqrt();
+        for f in feats.iter_mut() {
+            *f *= scale;
+        }
+
+        Dataset::new(self.name.clone(), d, self.num_classes, feats, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SynthSpec {
+        SynthSpec {
+            name: "test".into(),
+            num_classes: 4,
+            per_class: 50,
+            feat_dim: 8,
+            subclusters: 2,
+            center_scale: 1.0,
+            spread: 0.3,
+            noise: 0.2,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn generates_expected_shape() {
+        let ds = spec().generate().unwrap();
+        assert_eq!(ds.len(), 200);
+        assert_eq!(ds.feat_dim, 8);
+        assert_eq!(ds.class_counts(), vec![50; 4]);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = spec().generate().unwrap();
+        let b = spec().generate().unwrap();
+        assert_eq!(a.feature(17), b.feature(17));
+        assert_eq!(a.groundtruth(17), b.groundtruth(17));
+        let mut s2 = spec();
+        s2.seed = 2;
+        let c = s2.generate().unwrap();
+        assert_ne!(a.feature(17), c.feature(17));
+    }
+
+    #[test]
+    fn shuffled_pool_order() {
+        // First 50 samples must NOT all be class 0.
+        let ds = spec().generate().unwrap();
+        let first: Vec<u32> = (0..50).map(|i| ds.groundtruth(i)).collect();
+        assert!(first.iter().any(|&y| y != first[0]));
+    }
+
+    #[test]
+    fn nearest_class_center_is_usually_own_class() {
+        // With low noise the generator must produce learnable structure:
+        // nearest-class-mean classification should beat 90%.
+        let s = spec();
+        let ds = s.generate().unwrap();
+        // Recover class means empirically from groundtruth.
+        let d = ds.feat_dim;
+        let mut means = vec![0.0f64; s.num_classes * d];
+        let mut counts = vec![0usize; s.num_classes];
+        for i in 0..ds.len() {
+            let y = ds.groundtruth(i) as usize;
+            counts[y] += 1;
+            for (j, &v) in ds.feature(i).iter().enumerate() {
+                means[y * d + j] += v as f64;
+            }
+        }
+        for y in 0..s.num_classes {
+            for j in 0..d {
+                means[y * d + j] /= counts[y] as f64;
+            }
+        }
+        let mut correct = 0usize;
+        for i in 0..ds.len() {
+            let f = ds.feature(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for y in 0..s.num_classes {
+                let dist: f64 = f
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &v)| {
+                        let dd = v as f64 - means[y * d + j];
+                        dd * dd
+                    })
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, y);
+                }
+            }
+            if best.1 == ds.groundtruth(i) as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.len() as f64;
+        assert!(acc > 0.9, "nearest-mean acc {acc}");
+    }
+
+    #[test]
+    fn higher_noise_is_harder() {
+        let easy = spec().generate().unwrap();
+        let mut hs = spec();
+        hs.noise = 1.5;
+        let hard = hs.generate().unwrap();
+        // Proxy for difficulty: average distance to own class mean relative
+        // to distance to nearest other class mean.
+        fn sep(ds: &Dataset, classes: usize) -> f64 {
+            let d = ds.feat_dim;
+            let mut means = vec![0.0f64; classes * d];
+            let mut counts = vec![0usize; classes];
+            for i in 0..ds.len() {
+                let y = ds.groundtruth(i) as usize;
+                counts[y] += 1;
+                for (j, &v) in ds.feature(i).iter().enumerate() {
+                    means[y * d + j] += v as f64;
+                }
+            }
+            for y in 0..classes {
+                for j in 0..d {
+                    means[y * d + j] /= counts[y] as f64;
+                }
+            }
+            let mut ratio = 0.0f64;
+            for i in 0..ds.len() {
+                let f = ds.feature(i);
+                let y = ds.groundtruth(i) as usize;
+                let dist = |c: usize| -> f64 {
+                    f.iter()
+                        .enumerate()
+                        .map(|(j, &v)| {
+                            let dd = v as f64 - means[c * d + j];
+                            dd * dd
+                        })
+                        .sum()
+                };
+                let own = dist(y);
+                let other = (0..classes)
+                    .filter(|&c| c != y)
+                    .map(dist)
+                    .fold(f64::INFINITY, f64::min);
+                ratio += own / other;
+            }
+            ratio / ds.len() as f64
+        }
+        assert!(sep(&easy, 4) < sep(&hard, 4));
+    }
+
+    #[test]
+    fn scaled_shrinks() {
+        let s = spec().scaled(0.1);
+        assert_eq!(s.per_class, 8);
+        assert!(s.generate().unwrap().len() == 32);
+    }
+}

@@ -1,0 +1,46 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for all MCAL subsystems.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// PJRT / XLA runtime failures (artifact load, compile, execute).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Artifact manifest problems (missing file, bad schema).
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    /// Configuration file / CLI problems.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Dataset construction / indexing problems.
+    #[error("dataset: {0}")]
+    Dataset(String),
+
+    /// Annotation-service simulator failures (queue closed, over budget).
+    #[error("annotation: {0}")]
+    Annotation(String),
+
+    /// Model-fitting failures (degenerate systems, too few points).
+    #[error("fit: {0}")]
+    Fit(String),
+
+    /// Coordinator invariant violations.
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

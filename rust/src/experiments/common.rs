@@ -1,0 +1,83 @@
+//! Shared experiment scaffolding: scaled presets, engine/manifest setup,
+//! output locations.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::annotation::{Ledger, Service, SimService, SimServiceConfig};
+use crate::dataset::{preset, Dataset, DatasetPreset};
+use crate::runtime::{Engine, Manifest};
+use crate::Result;
+
+/// Run scale: `Full` reproduces the paper sizes; `Bench` shrinks datasets
+/// ~10× (and drivers shrink their sweeps) for CI / `cargo bench`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Full,
+    Bench,
+    /// Tiny smoke scale for integration tests.
+    Smoke,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "full" => Some(Scale::Full),
+            "bench" => Some(Scale::Bench),
+            "smoke" => Some(Scale::Smoke),
+            _ => None,
+        }
+    }
+
+    pub fn dataset_factor(&self) -> f64 {
+        match self {
+            Scale::Full => 1.0,
+            Scale::Bench => 0.1,
+            Scale::Smoke => 0.02,
+        }
+    }
+}
+
+/// Everything a driver needs to run experiments.
+pub struct Ctx {
+    pub engine: Engine,
+    pub manifest: Manifest,
+    pub results_dir: PathBuf,
+    pub scale: Scale,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn new(artifacts_dir: &str, results_dir: &str, scale: Scale, seed: u64) -> Result<Ctx> {
+        Ok(Ctx {
+            engine: Engine::cpu()?,
+            manifest: Manifest::load(artifacts_dir)?,
+            results_dir: PathBuf::from(results_dir),
+            scale,
+            seed,
+        })
+    }
+
+    /// Generate a preset dataset at the context scale.
+    pub fn dataset(&self, name: &str) -> Result<(Dataset, DatasetPreset)> {
+        let p = preset(name, self.seed)?;
+        let spec = if self.scale == Scale::Full {
+            p.spec.clone()
+        } else {
+            p.spec.scaled(self.scale.dataset_factor())
+        };
+        let mut ds = spec.generate()?;
+        ds.name = name.to_string(); // keep the preset name for reports
+        Ok((ds, p))
+    }
+
+    /// Fresh (ledger, service) pair for one run.
+    pub fn service(&self, svc: Service) -> (Arc<Ledger>, SimService) {
+        let ledger = Arc::new(Ledger::new());
+        let service = SimService::new(
+            SimServiceConfig { service: svc, seed: self.seed, ..Default::default() },
+            ledger.clone(),
+        );
+        (ledger, service)
+    }
+}

@@ -1,0 +1,140 @@
+//! Figures 2, 3 and 22-27: power-law vs truncated-power-law fit quality.
+//!
+//! - Fig. 2: observed ε(S^θ) vs |B| for several θ, with both fits overlaid
+//!   (CIFAR-10, res18).
+//! - Fig. 3: prediction error of the final observation from fits on
+//!   growing prefixes (more estimates → better prediction).
+//! - Figs. 22-27: the same fit comparison for every dataset × architecture
+//!   at θ = 50%.
+
+use crate::annotation::Service;
+use crate::coordinator::{run_al_trajectory, RunParams, Trajectory};
+use crate::model::ArchKind;
+use crate::powerlaw::{fit_plain, fit_truncated};
+use crate::report::Table;
+use crate::Result;
+
+use super::common::Ctx;
+
+/// Record one AL trajectory to use as the (B, ε_θ) observation source.
+fn observe(ctx: &Ctx, ds_name: &str, arch: ArchKind, delta_frac: f64) -> Result<Trajectory> {
+    let (ds, preset) = ctx.dataset(ds_name)?;
+    let (ledger, service) = ctx.service(Service::Amazon);
+    let params = RunParams { seed: ctx.seed, ..Default::default() };
+    let delta = ((delta_frac * ds.len() as f64).round() as usize).max(1);
+    run_al_trajectory(
+        &ctx.engine,
+        &ctx.manifest,
+        &ds,
+        &service,
+        ledger,
+        arch,
+        preset.classes_tag,
+        params,
+        delta,
+        0.7,
+    )
+}
+
+fn theta_index(traj: &Trajectory, theta: f64) -> usize {
+    traj.theta_grid
+        .iter()
+        .position(|&t| (t - theta).abs() < 1e-9)
+        .expect("theta on grid")
+}
+
+/// Points (B, ε_θ) from a trajectory for one θ (skipping the initial point
+/// where B is the seed batch).
+fn points_for(traj: &Trajectory, theta: f64) -> Vec<(f64, f64)> {
+    let ti = theta_index(traj, theta);
+    traj.points
+        .iter()
+        .map(|p| (p.b_size as f64, p.eps_profile[ti].max(1e-6)))
+        .collect()
+}
+
+pub fn fig2_fig3(ctx: &Ctx) -> Result<(Table, Table)> {
+    let traj = observe(ctx, "cifar10-syn", ArchKind::Res18, 0.02)?;
+
+    let mut fig2 = Table::new(
+        "Figure 2 — power law vs truncated power law (cifar10-syn, res18)",
+        &["theta", "b", "observed", "powerlaw_fit", "truncated_fit"],
+    );
+    for &theta in &[0.3, 0.5, 0.7, 0.9] {
+        let pts = points_for(&traj, theta);
+        if pts.len() < 4 {
+            continue;
+        }
+        let plain = fit_plain(&pts, None)?;
+        let trunc = fit_truncated(&pts, None).unwrap_or(plain);
+        for &(b, e) in &pts {
+            fig2.push_row([
+                format!("{theta:.2}"),
+                format!("{b:.0}"),
+                format!("{e:.5}"),
+                format!("{:.5}", plain.predict(b)),
+                format!("{:.5}", trunc.predict(b)),
+            ]);
+        }
+    }
+    fig2.write_csv(&ctx.results_dir, "fig2_fit_comparison")?;
+
+    // Fig. 3: predict the LAST observation from growing prefixes.
+    let mut fig3 = Table::new(
+        "Figure 3 — prediction improves with more estimates (theta=0.5)",
+        &["prefix_points", "target_b", "observed", "plain_pred", "trunc_pred",
+          "plain_logerr", "trunc_logerr"],
+    );
+    let pts = points_for(&traj, 0.5);
+    if pts.len() >= 5 {
+        let (tb, te) = *pts.last().unwrap();
+        for n in 3..pts.len() {
+            let prefix = &pts[..n];
+            let plain = fit_plain(prefix, None)?;
+            let trunc = fit_truncated(prefix, None).unwrap_or(plain);
+            fig3.push_row([
+                n.to_string(),
+                format!("{tb:.0}"),
+                format!("{te:.5}"),
+                format!("{:.5}", plain.predict(tb)),
+                format!("{:.5}", trunc.predict(tb)),
+                format!("{:.4}", (plain.predict(tb).ln() - te.ln()).abs()),
+                format!("{:.4}", (trunc.predict(tb).ln() - te.ln()).abs()),
+            ]);
+        }
+    }
+    fig3.write_csv(&ctx.results_dir, "fig3_fit_convergence")?;
+    Ok((fig2, fig3))
+}
+
+/// Figures 22-27: fit grid over dataset × architecture at θ = 0.5.
+pub fn fig22_27(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "Figures 22-27 — fit grid (theta = 0.5)",
+        &["dataset", "arch", "b", "observed", "powerlaw_fit", "truncated_fit"],
+    );
+    for ds_name in ["cifar10-syn", "cifar100-syn"] {
+        for arch in [ArchKind::Cnn18, ArchKind::Res18, ArchKind::Res50] {
+            let traj = observe(ctx, ds_name, arch, 0.033)?;
+            let pts = points_for(&traj, 0.5);
+            if pts.len() < 4 {
+                continue;
+            }
+            let plain = fit_plain(&pts, None)?;
+            let trunc = fit_truncated(&pts, None).unwrap_or(plain);
+            for &(b, e) in &pts {
+                table.push_row([
+                    ds_name.to_string(),
+                    arch.as_str().to_string(),
+                    format!("{b:.0}"),
+                    format!("{e:.5}"),
+                    format!("{:.5}", plain.predict(b)),
+                    format!("{:.5}", trunc.predict(b)),
+                ]);
+            }
+            log::info!("fig22_27: {ds_name} {arch} done ({} pts)", pts.len());
+        }
+    }
+    table.write_csv(&ctx.results_dir, "fig22_27_fit_grid")?;
+    Ok(table)
+}

@@ -1,0 +1,224 @@
+//! Figures 4, 5, 6 and 11: sample-selection behaviour.
+//!
+//! - Fig. 4: ε(S^θ) dependence on the acquisition batch δ is small at a
+//!   fixed training size.
+//! - Fig. 5: machine-labeling accuracy of pool samples ranked by L(.)
+//!   (margin / least-confidence vs k-center distance).
+//! - Fig. 6: rank correlation between the M(.) metrics.
+//! - Fig. 11: MCAL total cost and machine-labeled fraction per M(.).
+
+use std::sync::Arc;
+
+use crate::annotation::Service;
+use crate::coordinator::{run_al_trajectory, run_mcal, LabelingEnv, RunParams};
+use crate::model::ArchKind;
+use crate::report::{dollars, pct, Table};
+use crate::sampling::{self, Metric};
+use crate::Result;
+
+use super::common::Ctx;
+
+/// Fig. 4: train to (roughly) the same |B| with different δ and compare the
+/// resulting error profiles.
+pub fn fig4(ctx: &Ctx, ds_name: &str, b_target_frac: f64) -> Result<Table> {
+    let mut table = Table::new(
+        "Figure 4 — eps(S^theta) dependence on delta",
+        &["delta_frac", "b_reached", "theta", "eps"],
+    );
+    for &dfrac in &[0.01, 0.02, 0.05, 0.10] {
+        let (ds, preset) = ctx.dataset(ds_name)?;
+        let (ledger, service) = ctx.service(Service::Amazon);
+        let params = RunParams { seed: ctx.seed, ..Default::default() };
+        let delta = ((dfrac * ds.len() as f64).round() as usize).max(1);
+        let traj = run_al_trajectory(
+            &ctx.engine,
+            &ctx.manifest,
+            &ds,
+            &service,
+            ledger,
+            ArchKind::Res18,
+            preset.classes_tag,
+            params,
+            delta,
+            b_target_frac,
+        )?;
+        // Use the point closest to the target |B|.
+        let b_target = (b_target_frac * ds.len() as f64 * 0.9) as usize;
+        let point = traj
+            .points
+            .iter()
+            .min_by_key(|p| p.b_size.abs_diff(b_target))
+            .expect("nonempty trajectory");
+        for (ti, &theta) in traj.theta_grid.iter().enumerate() {
+            if [0.25, 0.5, 0.75, 1.0].iter().any(|t| (t - theta).abs() < 1e-9) {
+                table.push_row([
+                    format!("{dfrac:.3}"),
+                    point.b_size.to_string(),
+                    format!("{theta:.2}"),
+                    format!("{:.4}", point.eps_profile[ti]),
+                ]);
+            }
+        }
+    }
+    table.write_csv(&ctx.results_dir, "fig4_delta_sensitivity")?;
+    Ok(table)
+}
+
+/// Fig. 5 + Fig. 6: rank pool samples by each L(.) candidate and report
+/// machine-label accuracy per rank decile, plus rank-correlations between
+/// metrics.
+pub fn fig5_fig6(ctx: &Ctx, ds_name: &str, b_frac: f64) -> Result<(Table, Table)> {
+    let (ds, preset) = ctx.dataset(ds_name)?;
+    let (ledger, service) = ctx.service(Service::Amazon);
+    let params = RunParams { seed: ctx.seed, ..Default::default() };
+    let theta_grid = crate::cost::theta_grid();
+    let mut env = LabelingEnv::new(
+        &ctx.engine,
+        &ctx.manifest,
+        &ds,
+        &service,
+        ledger,
+        ArchKind::Res18,
+        preset.classes_tag,
+        params,
+        theta_grid,
+    )?;
+    // Train once on a random b_frac subset (paper: res18 over 8K CIFAR-10).
+    let b_target = (b_frac * ds.len() as f64) as usize;
+    env.acquire(b_target.saturating_sub(env.b_idx.len()))?;
+    env.retrain()?;
+
+    // Score the pool; compute per-decile accuracy under three rankings.
+    let scores = env.session.predict(&ds, &env.pool)?;
+    let correct: Vec<bool> = env
+        .pool
+        .iter()
+        .zip(scores.pred.iter())
+        .map(|(&i, &p)| ds.groundtruth(i) == p)
+        .collect();
+
+    let margin_rank = sampling::rank_for_machine_labeling(&scores);
+    let mut conf_rank: Vec<usize> = (0..scores.len()).collect();
+    conf_rank.sort_by(|&a, &b| {
+        scores.maxprob[b]
+            .partial_cmp(&scores.maxprob[a])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    // k-center distance ranking: distance to nearest labeled feature,
+    // *ascending* (closest to the labeled set first — the "most covered").
+    let pool_feats = env.session.features(&ds, &env.pool)?;
+    let lab_feats = env.session.features(&ds, &env.b_idx)?;
+    let h = env.session.meta.hidden;
+    let mut min_d = vec![f32::MAX; env.pool.len()];
+    let stride = (env.b_idx.len() / 256).max(1);
+    for li in (0..env.b_idx.len()).step_by(stride) {
+        let c = &lab_feats[li * h..(li + 1) * h];
+        for (p, d) in min_d.iter_mut().enumerate() {
+            let f = &pool_feats[p * h..(p + 1) * h];
+            let dist: f32 = f.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
+            *d = d.min(dist);
+        }
+    }
+    let mut kc_rank: Vec<usize> = (0..env.pool.len()).collect();
+    kc_rank.sort_by(|&a, &b| min_d[a].partial_cmp(&min_d[b]).unwrap().then(a.cmp(&b)));
+
+    let mut fig5 = Table::new(
+        "Figure 5 — machine-label accuracy of ranked pool samples",
+        &["ranking", "decile", "accuracy"],
+    );
+    let deciles = 10;
+    for (name, rank) in [
+        ("margin", &margin_rank),
+        ("least_confidence", &conf_rank),
+        ("kcenter_dist", &kc_rank),
+    ] {
+        let n = rank.len();
+        for d in 0..deciles {
+            let lo = d * n / deciles;
+            let hi = ((d + 1) * n / deciles).max(lo + 1).min(n);
+            let acc = rank[lo..hi].iter().filter(|&&p| correct[p]).count() as f64
+                / (hi - lo) as f64;
+            fig5.push_row([name.to_string(), (d + 1).to_string(), format!("{acc:.4}")]);
+        }
+    }
+    fig5.write_csv(&ctx.results_dir, "fig5_l_ranking")?;
+
+    // Fig. 6: Spearman-ish rank correlation between metrics.
+    let mut fig6 = Table::new(
+        "Figure 6 — M(.) metric rank correlations",
+        &["pair", "rank_correlation"],
+    );
+    let rank_pos = |rank: &[usize]| {
+        let mut pos = vec![0usize; rank.len()];
+        for (r, &p) in rank.iter().enumerate() {
+            pos[p] = r;
+        }
+        pos
+    };
+    let corr = |a: &[usize], b: &[usize]| -> f64 {
+        let n = a.len() as f64;
+        let mean = (n - 1.0) / 2.0;
+        let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+        for i in 0..a.len() {
+            let x = a[i] as f64 - mean;
+            let y = b[i] as f64 - mean;
+            num += x * y;
+            da += x * x;
+            db += y * y;
+        }
+        num / (da.sqrt() * db.sqrt()).max(1e-12)
+    };
+    let pm = rank_pos(&margin_rank);
+    let pc = rank_pos(&conf_rank);
+    let pk = rank_pos(&kc_rank);
+    fig6.push_row(["margin-vs-leastconf".into(), format!("{:.4}", corr(&pm, &pc))]);
+    fig6.push_row(["margin-vs-kcenter".into(), format!("{:.4}", corr(&pm, &pk))]);
+    fig6.push_row(["leastconf-vs-kcenter".into(), format!("{:.4}", corr(&pc, &pk))]);
+    fig6.write_csv(&ctx.results_dir, "fig6_metric_correlation")?;
+    Ok((fig5, fig6))
+}
+
+/// Fig. 11: MCAL end-to-end per acquisition metric.
+pub fn fig11(ctx: &Ctx, ds_name: &str) -> Result<Table> {
+    let mut table = Table::new(
+        "Figure 11 — MCAL cost by sampling metric (res18)",
+        &["metric", "total_cost", "savings", "machine_frac", "b_frac", "error"],
+    );
+    for metric in [
+        Metric::Margin,
+        Metric::Entropy,
+        Metric::LeastConfidence,
+        Metric::KCenter,
+        Metric::Random,
+    ] {
+        let (ds, preset) = ctx.dataset(ds_name)?;
+        let (ledger, service) = ctx.service(Service::Amazon);
+        let params = RunParams {
+            seed: ctx.seed,
+            metric,
+            ..Default::default()
+        };
+        let report = run_mcal(
+            &ctx.engine,
+            &ctx.manifest,
+            &ds,
+            &service,
+            Arc::clone(&ledger),
+            ArchKind::Res18,
+            preset.classes_tag,
+            params,
+        )?;
+        log::info!("fig11 {}: {}", metric.as_str(), report.summary());
+        table.push_row([
+            metric.as_str().to_string(),
+            dollars(report.cost.total()),
+            pct(report.savings()),
+            pct(report.machine_frac()),
+            pct(report.b_frac()),
+            pct(report.overall_error),
+        ]);
+    }
+    table.write_csv(&ctx.results_dir, "fig11_sampling_ablation")?;
+    Ok(table)
+}

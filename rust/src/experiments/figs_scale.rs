@@ -1,0 +1,150 @@
+//! Figures 13, 14/15 and the ImageNet narrative (§5.1).
+//!
+//! - Fig. 13: MCAL on CIFAR-10 subsets with 1000-5000 samples per class.
+//! - Figs. 14/15: cost with and without active learning (margin vs random
+//!   M(.)) under both services.
+//! - ImageNet: MCAL on imagenet-syn declines machine labeling and pays the
+//!   exploration tax.
+
+use crate::annotation::Service;
+use crate::coordinator::{run_mcal, run_with_arch_selection, RunParams, StopReason};
+use crate::model::ArchKind;
+use crate::report::{dollars, pct, Table};
+use crate::sampling::Metric;
+use crate::Result;
+
+use super::common::{Ctx, Scale};
+
+/// Fig. 13: subsets of CIFAR-10 with varying samples/class.
+pub fn fig13(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "Figure 13 — MCAL on CIFAR-10 subsets (res18)",
+        &["per_class", "total_cost", "human_cost", "savings", "machine_frac", "b_frac"],
+    );
+    let per_class_grid: &[usize] = match ctx.scale {
+        Scale::Full => &[1000, 2000, 3000, 4000, 5000],
+        _ => &[100, 300, 500],
+    };
+    for &pc in per_class_grid {
+        let (full, preset) = ctx.dataset("cifar10-syn")?;
+        let ds = full.subset_per_class(pc.min(full.len() / full.num_classes))?;
+        let (ledger, service) = ctx.service(Service::Amazon);
+        let params = RunParams { seed: ctx.seed, ..Default::default() };
+        let report = run_mcal(
+            &ctx.engine,
+            &ctx.manifest,
+            &ds,
+            &service,
+            ledger,
+            ArchKind::Res18,
+            preset.classes_tag,
+            params,
+        )?;
+        log::info!("fig13 pc={pc}: {}", report.summary());
+        table.push_row([
+            pc.to_string(),
+            dollars(report.cost.total()),
+            dollars(report.human_only_cost),
+            pct(report.savings()),
+            pct(report.machine_frac()),
+            pct(report.b_frac()),
+        ]);
+    }
+    table.write_csv(&ctx.results_dir, "fig13_subset_sweep")?;
+    Ok(table)
+}
+
+/// Figs. 14/15: AL gains — MCAL with margin M(.) vs random M(.) (the
+/// "without AL" strawman), for both services.
+pub fn fig14_15(ctx: &Ctx, datasets: &[&str]) -> Result<Table> {
+    let mut table = Table::new(
+        "Figures 14/15 — gains from active learning",
+        &["dataset", "service", "with_al_cost", "without_al_cost", "al_gain"],
+    );
+    for &ds_name in datasets {
+        for svc in [Service::Amazon, Service::Satyam] {
+            let mut costs = Vec::new();
+            for metric in [Metric::Margin, Metric::Random] {
+                let (ds, preset) = ctx.dataset(ds_name)?;
+                let (ledger, service) = ctx.service(svc);
+                let params = RunParams {
+                    seed: ctx.seed,
+                    metric,
+                    ..Default::default()
+                };
+                let report = run_mcal(
+                    &ctx.engine,
+                    &ctx.manifest,
+                    &ds,
+                    &service,
+                    ledger,
+                    ArchKind::Res18,
+                    preset.classes_tag,
+                    params,
+                )?;
+                costs.push(report.cost.total());
+            }
+            let gain = 1.0 - costs[0] / costs[1];
+            log::info!(
+                "fig14_15 {ds_name} {}: AL ${:.2} vs no-AL ${:.2} ({:.1}%)",
+                svc.name(),
+                costs[0],
+                costs[1],
+                gain * 100.0
+            );
+            table.push_row([
+                ds_name.to_string(),
+                svc.name(),
+                dollars(costs[0]),
+                dollars(costs[1]),
+                pct(gain),
+            ]);
+        }
+    }
+    table.write_csv(&ctx.results_dir, "fig14_15_al_gains")?;
+    Ok(table)
+}
+
+/// The ImageNet decision (§5.1 "MCAL on Imagenet").
+pub fn imagenet(ctx: &Ctx) -> Result<Table> {
+    let mut table = Table::new(
+        "ImageNet — MCAL declines machine labeling",
+        &[
+            "dataset", "arch", "b_frac", "machine_frac", "total_cost",
+            "human_cost", "exploration_tax_frac", "stop",
+        ],
+    );
+    let (ds, preset) = ctx.dataset("imagenet-syn")?;
+    let (ledger, service) = ctx.service(Service::Amazon);
+    let params = RunParams { seed: ctx.seed, ..Default::default() };
+    let (report, _) = run_with_arch_selection(
+        &ctx.engine,
+        &ctx.manifest,
+        &ds,
+        &service,
+        ledger,
+        &preset.candidate_archs,
+        preset.classes_tag,
+        params,
+        6,
+    )?;
+    log::info!("imagenet: {}", report.summary());
+    let tax = (report.cost.total() - report.human_only_cost).max(0.0) / report.human_only_cost;
+    table.push_row([
+        "imagenet-syn".into(),
+        report.arch.clone(),
+        pct(report.b_frac()),
+        pct(report.machine_frac()),
+        dollars(report.cost.total()),
+        dollars(report.human_only_cost),
+        pct(tax),
+        format!("{:?}", report.stop_reason),
+    ]);
+    // The paper's qualitative claim: for this dataset MCAL should decline
+    // (ExplorationTax) or machine-label almost nothing.
+    if report.stop_reason != StopReason::ExplorationTax && report.machine_frac() > 0.2 {
+        log::warn!("imagenet-syn unexpectedly machine-labeled {:.1}%", report.machine_frac() * 100.0);
+    }
+    table.write_csv(&ctx.results_dir, "imagenet_decline")?;
+    Ok(table)
+}

@@ -1,0 +1,100 @@
+//! Experiment drivers: one per paper table/figure (see DESIGN.md §4).
+//!
+//! `mcal exp <id> [--scale full|bench|smoke] [--seed N]` runs a driver,
+//! prints the resulting table(s) as markdown, and writes CSVs under
+//! `results/`. `mcal exp all` runs the full suite in order.
+
+pub mod common;
+pub mod figs_fit;
+pub mod figs_sampling;
+pub mod figs_scale;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use crate::annotation::Service;
+use crate::cli::Args;
+use crate::report::Table;
+use crate::{Error, Result};
+use common::{Ctx, Scale};
+
+fn print(t: &Table) {
+    println!("{}", t.to_markdown());
+}
+
+pub fn experiment_ids() -> &'static [&'static str] {
+    &[
+        "table1", "table2", "table3", "fig2", "fig4", "fig5", "fig11",
+        "fig13", "fig14_15", "fig22_27", "imagenet", "all",
+    ]
+}
+
+/// Dispatch `mcal exp <id>`.
+pub fn dispatch(args: &Args) -> Result<()> {
+    let id = args
+        .positionals
+        .first()
+        .ok_or_else(|| Error::Config(format!("exp: missing id (known: {:?})", experiment_ids())))?
+        .clone();
+    let scale = Scale::parse(args.opt_or("scale", "bench"))
+        .ok_or_else(|| Error::Config("bad --scale".into()))?;
+    let ctx = Ctx::new(
+        args.opt_or("artifacts", "artifacts"),
+        args.opt_or("results", "results"),
+        scale,
+        args.u64_or("seed", 42)?,
+    )?;
+    run_experiment(&ctx, &id, args)
+}
+
+pub fn run_experiment(ctx: &Ctx, id: &str, args: &Args) -> Result<()> {
+    let both = [Service::Amazon, Service::Satyam];
+    let probe_iters = 8;
+    match id {
+        "table1" => print(&table1::run(ctx, &both, probe_iters)?),
+        "table2" => {
+            let datasets: Vec<&str> = table1::DATASETS.to_vec();
+            let out = table2::run(ctx, &datasets, args.f64_or("epsilon", 0.05)?)?;
+            print(&out.table2);
+        }
+        "table3" => print(&table3::run(ctx, args.f64_or("epsilon", 0.10)?, probe_iters)?),
+        "fig2" | "fig3" => {
+            let (f2, f3) = figs_fit::fig2_fig3(ctx)?;
+            print(&f2);
+            print(&f3);
+        }
+        "fig4" => print(&figs_sampling::fig4(ctx, "cifar10-syn", 0.4)?),
+        "fig5" | "fig6" => {
+            let (f5, f6) = figs_sampling::fig5_fig6(ctx, "cifar10-syn", 0.15)?;
+            print(&f5);
+            print(&f6);
+        }
+        "fig11" => print(&figs_sampling::fig11(ctx, args.opt_or("dataset", "cifar10-syn"))?),
+        "fig13" => print(&figs_scale::fig13(ctx)?),
+        "fig14_15" => {
+            let datasets: Vec<&str> = match args.opt("datasets") {
+                Some(list) => list.split(',').collect(),
+                None => table1::DATASETS.to_vec(),
+            };
+            print(&figs_scale::fig14_15(ctx, &datasets)?)
+        }
+        "fig22_27" => print(&figs_fit::fig22_27(ctx)?),
+        "imagenet" => print(&figs_scale::imagenet(ctx)?),
+        "all" => {
+            for sub in [
+                "table1", "table2", "table3", "fig2", "fig4", "fig5", "fig11",
+                "fig13", "fig14_15", "fig22_27", "imagenet",
+            ] {
+                println!("==> {sub}");
+                run_experiment(ctx, sub, args)?;
+            }
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown experiment '{other}' (known: {:?})",
+                experiment_ids()
+            )))
+        }
+    }
+    Ok(())
+}

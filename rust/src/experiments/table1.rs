@@ -1,0 +1,65 @@
+//! Table 1 + Figure 7: MCAL vs human-only labeling cost, per dataset ×
+//! labeling service, with automatic architecture selection.
+//!
+//! Paper row shape: dataset, service, |B|/|X|, |S|/|X|, DNN selected,
+//! error, human cost, MCAL cost, savings.
+
+use crate::annotation::Service;
+use crate::coordinator::{run_with_arch_selection, RunParams};
+use crate::report::{dollars, pct, Table};
+use crate::Result;
+
+use super::common::Ctx;
+
+pub const DATASETS: [&str; 3] = ["fashion-syn", "cifar10-syn", "cifar100-syn"];
+
+pub fn run(ctx: &Ctx, services: &[Service], probe_iters: usize) -> Result<Table> {
+    let mut table = Table::new(
+        "Table 1 / Figure 7 — Summary of results (MCAL, auto-arch)",
+        &[
+            "dataset", "service", "B/X", "S/X", "dnn", "error", "human_cost",
+            "mcal_cost", "savings", "train_cost", "explore_cost", "stop",
+        ],
+    );
+    for ds_name in DATASETS {
+        let (ds, preset) = ctx.dataset(ds_name)?;
+        for &svc in services {
+            let (ledger, service) = ctx.service(svc);
+            let params = RunParams { seed: ctx.seed, ..Default::default() };
+            let (report, probes) = run_with_arch_selection(
+                &ctx.engine,
+                &ctx.manifest,
+                &ds,
+                &service,
+                ledger,
+                &preset.candidate_archs,
+                preset.classes_tag,
+                params,
+                probe_iters,
+            )?;
+            log::info!("table1: {}", report.summary());
+            for p in &probes {
+                log::debug!(
+                    "  probe {}: C*={:?} stable={} train=${:.2}",
+                    p.arch, p.c_star, p.stable, p.training_spend
+                );
+            }
+            table.push_row([
+                ds_name.to_string(),
+                svc.name(),
+                pct(report.b_frac()),
+                pct(report.machine_frac()),
+                report.arch.clone(),
+                pct(report.overall_error),
+                dollars(report.human_only_cost),
+                dollars(report.cost.total()),
+                pct(report.savings()),
+                dollars(report.cost.training),
+                dollars(report.cost.exploration),
+                format!("{:?}", report.stop_reason),
+            ]);
+        }
+    }
+    table.write_csv(&ctx.results_dir, "table1")?;
+    Ok(table)
+}

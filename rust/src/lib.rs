@@ -1,0 +1,49 @@
+//! # MCAL — Minimum Cost Human-Machine Active Labeling
+//!
+//! Rust + JAX + Pallas reproduction of *MCAL: Minimum Cost Human-Machine
+//! Active Labeling* (Qiu, Chintalapudi, Govindan — ICLR 2023).
+//!
+//! MCAL labels a dataset `X` at minimum total dollar cost subject to an
+//! error bound `ε`: humans label a training subset `B` (chosen by an
+//! active-learning metric `M(.)`), a classifier `D(B)` machine-labels the
+//! confidence-ranked subset `S*` (chosen by `L(.)`), humans label the rest.
+//! The coordinator jointly optimizes `(B, S*, δ)` online using a truncated
+//! power-law accuracy model and a fitted training-cost model.
+//!
+//! ## Layers
+//!
+//! - **L3 (this crate)** — the coordinator: [`coordinator`] (Alg. 1,
+//!   architecture selection, budget mode, naive-AL baselines), plus every
+//!   substrate: [`dataset`] (synthetic Gaussian-mixture analogs of
+//!   Fashion-MNIST / CIFAR-10 / CIFAR-100 / ImageNet), [`annotation`]
+//!   (human-labeling-service simulator with bounded-queue workers and a
+//!   dollar ledger), [`powerlaw`] / [`cost`] (the predictive models),
+//!   [`sampling`] (`M(.)` and `L(.)`), [`runtime`] (PJRT execution of the
+//!   AOT artifacts), [`experiments`] (drivers for every paper table/figure).
+//! - **L2** — `python/compile/model.py`: JAX classifier fwd/bwd lowered once
+//!   to HLO text (`make artifacts`).
+//! - **L1** — `python/compile/kernels/`: Pallas kernels (tiled dense matmul
+//!   with Pallas backward, uncertainty scorer, k-center update) called from
+//!   L2 so they land in the same HLO.
+//!
+//! Python never runs at request time: the binary is self-contained once
+//! `artifacts/` exists.
+
+pub mod annotation;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod dataset;
+pub mod error;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod powerlaw;
+pub mod prng;
+pub mod report;
+pub mod runtime;
+pub mod sampling;
+pub mod testutil;
+
+pub use error::{Error, Result};

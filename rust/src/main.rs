@@ -1,0 +1,224 @@
+//! `mcal` — CLI launcher for the MCAL labeling pipeline and the paper's
+//! experiment drivers.
+
+use std::process::ExitCode;
+
+use mcal::annotation::Service;
+use mcal::cli::Args;
+use mcal::coordinator::{run_mcal, run_with_arch_selection, RunParams};
+use mcal::experiments::common::{Ctx, Scale};
+use mcal::model::ArchKind;
+use mcal::sampling::Metric;
+
+const USAGE: &str = "\
+mcal — Minimum Cost Human-Machine Active Labeling (ICLR'23 reproduction)
+
+USAGE:
+    mcal run <dataset> [--arch res18|cnn18|res50|effb0|auto] [--service amazon|satyam|<price>]
+             [--epsilon 0.05] [--metric margin|entropy|leastconf|kcenter|random]
+             [--scale full|bench|smoke] [--seed N] [--artifacts DIR] [--results DIR]
+    mcal exp <id> [--scale full|bench|smoke] [...]       run a paper experiment driver
+    mcal info [--artifacts DIR]                          show manifest / engine info
+    mcal help
+
+Datasets: fashion-syn cifar10-syn cifar100-syn imagenet-syn
+Experiments: table1 table2 table3 fig2 fig3 fig4 fig5 fig6 fig8_10 fig11
+             fig13 fig14_15 fig22_27 imagenet (see DESIGN.md §4)
+";
+
+fn main() -> ExitCode {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(args: &Args) -> mcal::Result<()> {
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "info" => cmd_info(args),
+        "run" => cmd_run(args),
+        "calib" => cmd_calib(args),
+        "exp" => mcal::experiments::dispatch(args),
+        other => Err(mcal::Error::Config(format!(
+            "unknown subcommand '{other}' (try `mcal help`)"
+        ))),
+    }
+}
+
+fn ctx_from(args: &Args) -> mcal::Result<Ctx> {
+    let scale = Scale::parse(args.opt_or("scale", "full"))
+        .ok_or_else(|| mcal::Error::Config("bad --scale".into()))?;
+    Ctx::new(
+        args.opt_or("artifacts", "artifacts"),
+        args.opt_or("results", "results"),
+        scale,
+        args.u64_or("seed", 42)?,
+    )
+}
+
+fn cmd_info(args: &Args) -> mcal::Result<()> {
+    let ctx = ctx_from(args)?;
+    println!("platform: {}", ctx.engine.platform());
+    println!(
+        "manifest: feat_dim={} train_bs={} eval_bs={} chunk_steps={}",
+        ctx.manifest.feat_dim, ctx.manifest.train_bs, ctx.manifest.eval_bs, ctx.manifest.chunk_steps
+    );
+    let mut names: Vec<&String> = ctx.manifest.models.keys().collect();
+    names.sort();
+    for n in names {
+        let m = &ctx.manifest.models[n];
+        println!(
+            "  model {n}: arch={} classes={} hidden={} depth={} params={}",
+            m.arch, m.classes, m.hidden, m.depth, m.params
+        );
+    }
+    Ok(())
+}
+
+/// Calibration helper: learning-curve probe for dataset difficulty tuning
+/// (EXPERIMENTS.md §Calibration). Trains on random subsets of the given
+/// sizes and prints the test error profile at θ ∈ {0.5, 0.9, 1.0}.
+fn cmd_calib(args: &Args) -> mcal::Result<()> {
+    use mcal::annotation::AnnotationService;
+    let dataset_name = args
+        .positionals
+        .first()
+        .ok_or_else(|| mcal::Error::Config("calib: missing <dataset>".into()))?
+        .clone();
+    let ctx = ctx_from(args)?;
+    let (ds, preset) = ctx.dataset(&dataset_name)?;
+    let arch = ArchKind::parse(args.opt_or("arch", "res18"))
+        .ok_or_else(|| mcal::Error::Config("bad --arch".into()))?;
+    let sizes: Vec<usize> = args
+        .opt_or("sizes", "1000,4000,16000")
+        .split(',')
+        .map(|s| s.parse().map_err(|_| mcal::Error::Config("bad --sizes".into())))
+        .collect::<mcal::Result<_>>()?;
+
+    let (ledger, service) = ctx.service(Service::Custom(0.0));
+    let params = RunParams {
+        seed: ctx.seed,
+        metric: Metric::Random,
+        ..Default::default()
+    };
+    let theta_grid = mcal::cost::theta_grid();
+    let mut env = mcal::coordinator::LabelingEnv::new(
+        &ctx.engine,
+        &ctx.manifest,
+        &ds,
+        &service as &dyn AnnotationService,
+        ledger,
+        arch,
+        preset.classes_tag,
+        params,
+        theta_grid.clone(),
+    )?;
+    println!("dataset={} |X|={} arch={arch}", ds.name, ds.len());
+    for &target in &sizes {
+        if target > env.b_idx.len() {
+            let need = target - env.b_idx.len();
+            env.acquire(need)?;
+            env.retrain()?;
+        }
+        let profile = env.measure()?;
+        let at = |t: f64| {
+            let i = theta_grid.iter().position(|&g| (g - t).abs() < 1e-9).unwrap();
+            profile[i]
+        };
+        println!(
+            "  |B|={:6}  err@θ0.5={:.4}  err@θ0.9={:.4}  err@θ1.0={:.4}",
+            env.b_idx.len(),
+            at(0.5),
+            at(0.9),
+            at(1.0)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> mcal::Result<()> {
+    let dataset_name = args
+        .positionals
+        .first()
+        .ok_or_else(|| mcal::Error::Config("run: missing <dataset>".into()))?
+        .clone();
+    let ctx = ctx_from(args)?;
+    let (ds, preset) = ctx.dataset(&dataset_name)?;
+
+    let svc = Service::parse(args.opt_or("service", "amazon"))
+        .ok_or_else(|| mcal::Error::Config("bad --service".into()))?;
+    let metric = Metric::parse(args.opt_or("metric", "margin"))
+        .ok_or_else(|| mcal::Error::Config("bad --metric".into()))?;
+
+    let mut params = RunParams {
+        epsilon: args.f64_or("epsilon", 0.05)?,
+        metric,
+        seed: ctx.seed,
+        ..Default::default()
+    };
+    params.schedule.real_epochs = args.usize_or("real-epochs", params.schedule.real_epochs as usize)? as u32;
+    // §Perf ablation: --score-cap 0 disables the pool-scoring subsample.
+    match args.usize_or("score-cap", 20_000)? {
+        0 => params.pool_score_cap = None,
+        cap => params.pool_score_cap = Some(cap),
+    }
+
+    let (ledger, service) = ctx.service(svc);
+
+    let arch_opt = args.opt_or("arch", "auto");
+    let report = if arch_opt == "auto" {
+        let (report, probes) = run_with_arch_selection(
+            &ctx.engine,
+            &ctx.manifest,
+            &ds,
+            &service,
+            ledger,
+            &preset.candidate_archs,
+            preset.classes_tag,
+            params,
+            8,
+        )?;
+        for p in &probes {
+            println!(
+                "probe {}: C*={:?} |B|={} training=${:.2} stable={}",
+                p.arch, p.c_star, p.b_probed, p.training_spend, p.stable
+            );
+        }
+        report
+    } else {
+        let arch = ArchKind::parse(arch_opt)
+            .ok_or_else(|| mcal::Error::Config(format!("bad --arch '{arch_opt}'")))?;
+        run_mcal(
+            &ctx.engine,
+            &ctx.manifest,
+            &ds,
+            &service,
+            ledger,
+            arch,
+            preset.classes_tag,
+            params,
+        )?
+    };
+
+    println!("{}", report.summary());
+    let c = &report.cost;
+    println!(
+        "breakdown: human=${:.2} training=${:.2} exploration=${:.2} retrains={} wall={:.1}s",
+        c.human_labeling, c.training, c.exploration, c.retrains, report.wall_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Label-quality metrics: the quantities the paper's tables report.
+//!
+//! The final product of an MCAL run is a fully-labeled dataset where some
+//! labels came from humans (assumed correct) and some from the classifier.
+//! [`overall_label_error`] computes the paper's headline error
+//! `(#wrong machine labels)/|X|`; [`error_on_top_fraction`] computes the
+//! test-set estimate ε_T(S^θ) that feeds the power-law fits (Alg. 1 l. 15).
+
+use crate::dataset::Dataset;
+use crate::runtime::Scores;
+
+/// Fraction of `preds` that disagree with groundtruth (machine-label error
+/// on a specific index set). `indices` and `preds` are parallel.
+pub fn machine_error(ds: &Dataset, indices: &[usize], preds: &[u32]) -> f64 {
+    assert_eq!(indices.len(), preds.len());
+    if indices.is_empty() {
+        return 0.0;
+    }
+    let wrong = indices
+        .iter()
+        .zip(preds)
+        .filter(|(&i, &p)| ds.groundtruth(i) != p)
+        .count();
+    wrong as f64 / indices.len() as f64
+}
+
+/// The paper's overall dataset label error: human labels are correct, so
+/// the only errors are wrong machine labels, normalized by |X|.
+pub fn overall_label_error(
+    ds: &Dataset,
+    machine_indices: &[usize],
+    machine_preds: &[u32],
+) -> f64 {
+    assert_eq!(machine_indices.len(), machine_preds.len());
+    let wrong = machine_indices
+        .iter()
+        .zip(machine_preds)
+        .filter(|(&i, &p)| ds.groundtruth(i) != p)
+        .count();
+    wrong as f64 / ds.len() as f64
+}
+
+/// ε_T(S^θ): error among the top-θ most confident scored samples.
+///
+/// `correct[i]` says whether prediction `i` matches groundtruth; `scores`
+/// supplies the L(.) confidence ranking (margin descending). Returns the
+/// error over the first `ceil(θ·n)` ranked samples (0 when that set is
+/// empty).
+pub fn error_on_top_fraction(scores: &Scores, correct: &[bool], theta: f64) -> f64 {
+    assert_eq!(scores.len(), correct.len());
+    let n = correct.len();
+    let take = ((theta * n as f64).ceil() as usize).min(n);
+    if take == 0 {
+        return 0.0;
+    }
+    let ranked = crate::sampling::rank_for_machine_labeling(scores);
+    let wrong = ranked[..take].iter().filter(|&&p| !correct[p]).count();
+    wrong as f64 / take as f64
+}
+
+/// Per-θ error profile over a grid (one Alg.-1 measurement pass).
+pub fn error_profile(scores: &Scores, correct: &[bool], thetas: &[f64]) -> Vec<f64> {
+    let n = correct.len();
+    if n == 0 {
+        return vec![0.0; thetas.len()];
+    }
+    let ranked = crate::sampling::rank_for_machine_labeling(scores);
+    // Prefix sums of wrongness over the ranked order → O(n + |grid|).
+    let mut wrong_prefix = Vec::with_capacity(n + 1);
+    wrong_prefix.push(0usize);
+    for &p in &ranked {
+        wrong_prefix.push(wrong_prefix.last().unwrap() + usize::from(!correct[p]));
+    }
+    thetas
+        .iter()
+        .map(|&t| {
+            let take = ((t * n as f64).ceil() as usize).min(n);
+            if take == 0 {
+                0.0
+            } else {
+                wrong_prefix[take] as f64 / take as f64
+            }
+        })
+        .collect()
+}
+
+/// Plain accuracy of predictions vs groundtruth on `indices`.
+pub fn accuracy(ds: &Dataset, indices: &[usize], preds: &[u32]) -> f64 {
+    1.0 - machine_error(ds, indices, preds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::SynthSpec;
+
+    fn ds() -> Dataset {
+        SynthSpec {
+            name: "m".into(),
+            num_classes: 3,
+            per_class: 10,
+            feat_dim: 2,
+            subclusters: 1,
+            center_scale: 1.0,
+            spread: 0.1,
+            noise: 0.05,
+            seed: 4,
+        }
+        .generate()
+        .unwrap()
+    }
+
+    #[test]
+    fn machine_error_counts_wrong() {
+        let ds = ds();
+        let idx = vec![0, 1, 2, 3];
+        let mut preds: Vec<u32> = idx.iter().map(|&i| ds.groundtruth(i)).collect();
+        assert_eq!(machine_error(&ds, &idx, &preds), 0.0);
+        preds[0] = (preds[0] + 1) % 3;
+        preds[2] = (preds[2] + 1) % 3;
+        assert!((machine_error(&ds, &idx, &preds) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overall_error_normalizes_by_dataset() {
+        let ds = ds(); // 30 samples
+        let idx = vec![5, 6, 7];
+        let mut preds: Vec<u32> = idx.iter().map(|&i| ds.groundtruth(i)).collect();
+        preds[1] = (preds[1] + 1) % 3;
+        assert!((overall_label_error(&ds, &idx, &preds) - 1.0 / 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top_fraction_error_prefers_confident() {
+        // Confidence correlates with correctness here: top half perfect.
+        let scores = Scores {
+            margin: vec![0.9, 0.8, 0.2, 0.1],
+            entropy: vec![0.0; 4],
+            maxprob: vec![0.0; 4],
+            pred: vec![0; 4],
+        };
+        let correct = vec![true, true, false, false];
+        assert_eq!(error_on_top_fraction(&scores, &correct, 0.5), 0.0);
+        assert!((error_on_top_fraction(&scores, &correct, 1.0) - 0.5).abs() < 1e-12);
+        assert_eq!(error_on_top_fraction(&scores, &correct, 0.0), 0.0);
+    }
+
+    #[test]
+    fn profile_matches_pointwise() {
+        let scores = Scores {
+            margin: vec![0.9, 0.8, 0.7, 0.2, 0.1],
+            entropy: vec![0.0; 5],
+            maxprob: vec![0.0; 5],
+            pred: vec![0; 5],
+        };
+        let correct = vec![true, false, true, false, false];
+        let grid = [0.2, 0.4, 0.6, 0.8, 1.0];
+        let prof = error_profile(&scores, &correct, &grid);
+        for (i, &t) in grid.iter().enumerate() {
+            let want = error_on_top_fraction(&scores, &correct, t);
+            assert!((prof[i] - want).abs() < 1e-12, "theta={t}");
+        }
+        // Last entry covers everything: 3/5 wrong.
+        assert!((prof.last().unwrap() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_sets() {
+        let ds = ds();
+        assert_eq!(machine_error(&ds, &[], &[]), 0.0);
+        assert_eq!(overall_label_error(&ds, &[], &[]), 0.0);
+    }
+}

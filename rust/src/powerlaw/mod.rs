@@ -1,0 +1,333 @@
+//! Accuracy model: power-law and upper-truncated power-law fits (§3.1).
+//!
+//! The paper models machine-labeling error vs training-set size as an
+//! upper-truncated power law (Eqn. 3):
+//!
+//! ```text
+//! ε(S^θ(D(B))) = α · |B|^(−γ) · exp(−|B|/k)
+//! ```
+//!
+//! In log space this is **linear** in (ln α, γ, 1/k):
+//!
+//! ```text
+//! ln ε = ln α − γ·ln|B| − |B|/k
+//! ```
+//!
+//! so both fits reduce to small linear least squares problems (regressors
+//! `[1, −ln B]` for the plain law, `[1, −ln B, −B]` for the truncated law)
+//! solved by ridge-damped normal equations. [`fit_auto`] fits the truncated
+//! law and falls back to the plain law when the truncation term comes out
+//! non-physical (k ≤ 0), mirroring how Fig. 2 compares the two forms.
+
+use crate::{Error, Result};
+
+/// Floor applied to error observations before taking logs.
+const EPS_FLOOR: f64 = 1e-6;
+/// Ridge damping for the normal equations.
+const RIDGE: f64 = 1e-9;
+
+/// A fitted (possibly truncated) power law `ε(B) = α B^(−γ) e^(−B/k)`.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerLaw {
+    pub ln_alpha: f64,
+    pub gamma: f64,
+    /// `1/k`; 0 means no truncation (plain power law).
+    pub inv_k: f64,
+}
+
+impl PowerLaw {
+    /// Predicted error at training size `b` (clamped to [EPS_FLOOR, 1]).
+    pub fn predict(&self, b: f64) -> f64 {
+        if b < 1.0 {
+            return 1.0;
+        }
+        let ln_eps = self.ln_alpha - self.gamma * b.ln() - self.inv_k * b;
+        ln_eps.exp().clamp(EPS_FLOOR, 1.0)
+    }
+
+    pub fn truncated(&self) -> bool {
+        self.inv_k > 0.0
+    }
+
+    /// RMSE in log-error space over `points` (fit-quality metric, Fig. 2/3).
+    pub fn rmse_log(&self, points: &[(f64, f64)]) -> f64 {
+        if points.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = 0.0;
+        for &(b, e) in points {
+            let d = self.predict(b).ln() - e.max(EPS_FLOOR).ln();
+            s += d * d;
+        }
+        (s / points.len() as f64).sqrt()
+    }
+}
+
+/// Solve the `n×n` system `A x = b` by Gaussian elimination with partial
+/// pivoting. `a` is row-major.
+pub fn solve_linear(a: &mut [f64], b: &mut [f64], n: usize) -> Result<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for row in col + 1..n {
+            if a[row * n + col].abs() > a[piv * n + col].abs() {
+                piv = row;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-300 {
+            return Err(Error::Fit("singular system".into()));
+        }
+        if piv != col {
+            for j in 0..n {
+                a.swap(col * n + j, piv * n + j);
+            }
+            b.swap(col, piv);
+        }
+        // Eliminate below.
+        for row in col + 1..n {
+            let f = a[row * n + col] / a[col * n + col];
+            for j in col..n {
+                a[row * n + j] -= f * a[col * n + j];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for j in col + 1..n {
+            acc -= a[col * n + j] * x[j];
+        }
+        x[col] = acc / a[col * n + col];
+    }
+    Ok(x)
+}
+
+/// Weighted linear least squares: minimize Σ w_i (x·f_i − y_i)² with ridge.
+/// `features` is row-major `m×n`.
+pub fn lstsq(features: &[f64], y: &[f64], w: Option<&[f64]>, m: usize, n: usize) -> Result<Vec<f64>> {
+    let mut ata = vec![0.0; n * n];
+    let mut aty = vec![0.0; n];
+    for i in 0..m {
+        let wi = w.map_or(1.0, |w| w[i]);
+        let fi = &features[i * n..(i + 1) * n];
+        for r in 0..n {
+            aty[r] += wi * fi[r] * y[i];
+            for c in 0..n {
+                ata[r * n + c] += wi * fi[r] * fi[c];
+            }
+        }
+    }
+    for r in 0..n {
+        ata[r * n + r] += RIDGE;
+    }
+    solve_linear(&mut ata, &mut aty, n)
+}
+
+fn check_points(points: &[(f64, f64)], min_points: usize) -> Result<()> {
+    if points.len() < min_points {
+        return Err(Error::Fit(format!(
+            "need ≥{min_points} points, have {}",
+            points.len()
+        )));
+    }
+    if points.iter().any(|&(b, _)| b < 1.0) {
+        return Err(Error::Fit("training sizes must be ≥ 1".into()));
+    }
+    Ok(())
+}
+
+/// Fit the plain power law `ε = α B^(−γ)`.
+pub fn fit_plain(points: &[(f64, f64)], weights: Option<&[f64]>) -> Result<PowerLaw> {
+    check_points(points, 2)?;
+    let m = points.len();
+    let mut feats = Vec::with_capacity(m * 2);
+    let mut y = Vec::with_capacity(m);
+    for &(b, e) in points {
+        feats.push(1.0);
+        feats.push(-b.ln());
+        y.push(e.max(EPS_FLOOR).ln());
+    }
+    let x = lstsq(&feats, &y, weights, m, 2)?;
+    Ok(PowerLaw {
+        ln_alpha: x[0],
+        gamma: x[1].max(0.0),
+        inv_k: 0.0,
+    })
+}
+
+/// Fit the upper-truncated power law `ε = α B^(−γ) e^(−B/k)`.
+///
+/// Returns an error if the fitted truncation is non-physical (k ≤ 0);
+/// prefer [`fit_auto`] which falls back to the plain law in that case.
+pub fn fit_truncated(points: &[(f64, f64)], weights: Option<&[f64]>) -> Result<PowerLaw> {
+    check_points(points, 3)?;
+    let m = points.len();
+    let mut feats = Vec::with_capacity(m * 3);
+    let mut y = Vec::with_capacity(m);
+    // Scale B to keep the normal equations well-conditioned.
+    let bmax = points.iter().map(|&(b, _)| b).fold(0.0, f64::max);
+    for &(b, e) in points {
+        feats.push(1.0);
+        feats.push(-b.ln());
+        feats.push(-b / bmax);
+        y.push(e.max(EPS_FLOOR).ln());
+    }
+    let x = lstsq(&feats, &y, weights, m, 3)?;
+    let inv_k = x[2] / bmax;
+    if inv_k <= 0.0 || x[1] < 0.0 {
+        return Err(Error::Fit(format!(
+            "non-physical truncated fit (gamma={}, inv_k={inv_k})",
+            x[1]
+        )));
+    }
+    Ok(PowerLaw {
+        ln_alpha: x[0],
+        gamma: x[1],
+        inv_k,
+    })
+}
+
+/// Truncated fit with plain-power-law fallback (the production path).
+pub fn fit_auto(points: &[(f64, f64)], weights: Option<&[f64]>) -> Result<PowerLaw> {
+    match fit_truncated(points, weights) {
+        Ok(f) => Ok(f),
+        Err(_) => fit_plain(points, weights),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(alpha: f64, gamma: f64, k: f64, bs: &[f64]) -> Vec<(f64, f64)> {
+        bs.iter()
+            .map(|&b| (b, alpha * b.powf(-gamma) * (-b / k).exp()))
+            .collect()
+    }
+
+    #[test]
+    fn solve_linear_3x3() {
+        let mut a = vec![2.0, 1.0, -1.0, -3.0, -1.0, 2.0, -2.0, 1.0, 2.0];
+        let mut b = vec![8.0, -11.0, -3.0];
+        let x = solve_linear(&mut a, &mut b, 3).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-9);
+        assert!((x[1] - 3.0).abs() < 1e-9);
+        assert!((x[2] + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn solve_linear_singular_errors() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve_linear(&mut a, &mut b, 2).is_err());
+    }
+
+    #[test]
+    fn recovers_plain_power_law() {
+        let pts = synth(2.0, 0.5, f64::INFINITY, &[100.0, 300.0, 1000.0, 3000.0, 10000.0]);
+        let f = fit_plain(&pts, None).unwrap();
+        assert!((f.ln_alpha - 2.0f64.ln()).abs() < 1e-6, "{f:?}");
+        assert!((f.gamma - 0.5).abs() < 1e-6);
+        for &(b, e) in &pts {
+            assert!((f.predict(b) - e).abs() / e < 1e-5);
+        }
+    }
+
+    #[test]
+    fn recovers_truncated_power_law() {
+        let pts = synth(1.5, 0.4, 20_000.0, &[500.0, 1000.0, 2000.0, 5000.0, 10000.0, 20000.0]);
+        let f = fit_truncated(&pts, None).unwrap();
+        assert!((f.gamma - 0.4).abs() < 1e-3, "{f:?}");
+        assert!((1.0 / f.inv_k - 20_000.0).abs() / 20_000.0 < 1e-2, "{f:?}");
+        // Extrapolation beyond the data must track the falloff.
+        let b: f64 = 40_000.0;
+        let truth = 1.5 * b.powf(-0.4) * (-b / 20_000.0f64).exp();
+        assert!((f.predict(b) - truth).abs() / truth < 0.05);
+    }
+
+    #[test]
+    fn truncated_beats_plain_on_falloff_data() {
+        // Like Fig. 2: with a real falloff, the truncated fit should have
+        // lower log-RMSE than the plain fit.
+        let pts = synth(1.0, 0.3, 8_000.0, &[250.0, 500.0, 1000.0, 2000.0, 4000.0, 8000.0, 16000.0]);
+        let ft = fit_truncated(&pts, None).unwrap();
+        let fp = fit_plain(&pts, None).unwrap();
+        assert!(ft.rmse_log(&pts) < fp.rmse_log(&pts) * 0.5);
+    }
+
+    #[test]
+    fn fit_auto_falls_back_on_pure_power_data() {
+        // Concave-up data (no falloff) can push inv_k negative → fallback.
+        let pts = synth(2.0, 0.5, f64::INFINITY, &[100.0, 1000.0, 10000.0]);
+        let f = fit_auto(&pts, None).unwrap();
+        assert!(f.predict(5000.0) > 0.0);
+    }
+
+    #[test]
+    fn noisy_fit_still_close() {
+        let mut pts = synth(1.2, 0.45, 15_000.0, &[400.0, 800.0, 1600.0, 3200.0, 6400.0, 12800.0]);
+        // Deterministic ±5% "noise".
+        for (i, p) in pts.iter_mut().enumerate() {
+            p.1 *= 1.0 + if i % 2 == 0 { 0.05 } else { -0.05 };
+        }
+        let f = fit_auto(&pts, None).unwrap();
+        for &(b, e) in &pts {
+            let rel = (f.predict(b) - e).abs() / e;
+            assert!(rel < 0.15, "b={b} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn prediction_improves_with_more_points() {
+        // Fig. 3's shape: prefix fits should predict the final point better
+        // as the prefix grows.
+        let pts = synth(1.0, 0.35, 10_000.0, &[250.0, 500.0, 1000.0, 2000.0, 4000.0, 8000.0]);
+        let target = (16_000.0, 1.0f64 * 16_000.0f64.powf(-0.35) * (-16_000.0f64 / 10_000.0).exp());
+        let mut errs = Vec::new();
+        for n in 3..=pts.len() {
+            let f = fit_auto(&pts[..n], None).unwrap();
+            errs.push((f.predict(target.0).ln() - target.1.ln()).abs());
+        }
+        assert!(
+            errs.last().unwrap() <= errs.first().unwrap(),
+            "errs={errs:?}"
+        );
+    }
+
+    #[test]
+    fn weighted_fit_prefers_weighted_points() {
+        // Mix of two regimes; heavy weights on the late points should fit
+        // them better than uniform.
+        let late = synth(1.0, 0.5, f64::INFINITY, &[5000.0, 10000.0, 20000.0]);
+        let mut pts = synth(3.0, 0.2, f64::INFINITY, &[100.0, 200.0]);
+        pts.extend_from_slice(&late);
+        let w = vec![1.0, 1.0, 50.0, 50.0, 50.0];
+        let fw = fit_plain(&pts, Some(&w)).unwrap();
+        let fu = fit_plain(&pts, None).unwrap();
+        let err = |f: &PowerLaw| -> f64 {
+            late.iter()
+                .map(|&(b, e)| (f.predict(b).ln() - e.ln()).abs())
+                .sum()
+        };
+        assert!(err(&fw) < err(&fu));
+    }
+
+    #[test]
+    fn predict_clamps() {
+        let f = PowerLaw { ln_alpha: 5.0, gamma: 0.0, inv_k: 0.0 };
+        assert!(f.predict(10.0) <= 1.0);
+        assert_eq!(f.predict(0.5), 1.0);
+        let tiny = PowerLaw { ln_alpha: -100.0, gamma: 1.0, inv_k: 0.0 };
+        assert!(tiny.predict(1e6) >= EPS_FLOOR);
+    }
+
+    #[test]
+    fn too_few_points_is_error() {
+        assert!(fit_plain(&[(100.0, 0.5)], None).is_err());
+        assert!(fit_truncated(&[(100.0, 0.5), (200.0, 0.4)], None).is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Parser for `artifacts/manifest.txt` — the build-time contract between
+//! the Python AOT pipeline and the Rust runtime.
+//!
+//! Line-oriented key/value format (no serde dependency in the offline
+//! vendor set):
+//!
+//! ```text
+//! version 1
+//! feat_dim 64
+//! train_bs 256
+//! eval_bs 512
+//! momentum 0.9
+//! weight_decay 0.0005
+//! model res18_c10 arch res18 classes 10 hidden 192 depth 4 residual 1 params 162634 flops_per_sample 323328
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// Metadata for one AOT-compiled model set (arch × class count).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub arch: String,
+    pub classes: usize,
+    pub hidden: usize,
+    pub depth: usize,
+    pub residual: bool,
+    pub params: usize,
+    pub flops_per_sample: u64,
+}
+
+/// Parsed manifest plus the artifact directory it came from.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub feat_dim: usize,
+    pub train_bs: usize,
+    pub eval_bs: usize,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Minibatches per train_chunk execute (K in the artifact shapes).
+    pub chunk_steps: usize,
+    pub models: HashMap<String, ModelMeta>,
+}
+
+fn parse_field<T: std::str::FromStr>(kv: &HashMap<&str, &str>, key: &str, ctx: &str) -> Result<T> {
+    kv.get(key)
+        .ok_or_else(|| Error::Manifest(format!("{ctx}: missing field '{key}'")))?
+        .parse::<T>()
+        .map_err(|_| Error::Manifest(format!("{ctx}: bad value for '{key}'")))
+}
+
+impl Manifest {
+    /// Load `manifest.txt` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "{} unreadable ({e}); run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut globals: HashMap<String, String> = HashMap::new();
+        let mut models = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.is_empty() || parts[0].starts_with('#') {
+                continue;
+            }
+            if parts[0] == "model" {
+                if parts.len() < 2 || parts.len() % 2 != 0 {
+                    return Err(Error::Manifest(format!(
+                        "line {}: malformed model line",
+                        lineno + 1
+                    )));
+                }
+                let name = parts[1].to_string();
+                let kv: HashMap<&str, &str> = parts[2..]
+                    .chunks(2)
+                    .map(|c| (c[0], c[1]))
+                    .collect();
+                let ctx = format!("model {name}");
+                let meta = ModelMeta {
+                    name: name.clone(),
+                    arch: parse_field::<String>(&kv, "arch", &ctx)?,
+                    classes: parse_field(&kv, "classes", &ctx)?,
+                    hidden: parse_field(&kv, "hidden", &ctx)?,
+                    depth: parse_field(&kv, "depth", &ctx)?,
+                    residual: parse_field::<u8>(&kv, "residual", &ctx)? != 0,
+                    params: parse_field(&kv, "params", &ctx)?,
+                    flops_per_sample: parse_field(&kv, "flops_per_sample", &ctx)?,
+                };
+                models.insert(name, meta);
+            } else if parts.len() == 2 {
+                globals.insert(parts[0].to_string(), parts[1].to_string());
+            } else {
+                return Err(Error::Manifest(format!(
+                    "line {}: expected 'key value'",
+                    lineno + 1
+                )));
+            }
+        }
+
+        let get = |key: &str| -> Result<&String> {
+            globals
+                .get(key)
+                .ok_or_else(|| Error::Manifest(format!("missing global '{key}'")))
+        };
+        let version: u32 = get("version")?
+            .parse()
+            .map_err(|_| Error::Manifest("bad version".into()))?;
+        if version != 1 {
+            return Err(Error::Manifest(format!("unsupported version {version}")));
+        }
+        Ok(Manifest {
+            dir,
+            feat_dim: get("feat_dim")?.parse().map_err(|_| Error::Manifest("feat_dim".into()))?,
+            train_bs: get("train_bs")?.parse().map_err(|_| Error::Manifest("train_bs".into()))?,
+            eval_bs: get("eval_bs")?.parse().map_err(|_| Error::Manifest("eval_bs".into()))?,
+            momentum: get("momentum")?.parse().map_err(|_| Error::Manifest("momentum".into()))?,
+            weight_decay: get("weight_decay")?
+                .parse()
+                .map_err(|_| Error::Manifest("weight_decay".into()))?,
+            chunk_steps: get("chunk_steps")?
+                .parse()
+                .map_err(|_| Error::Manifest("chunk_steps".into()))?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| {
+            Error::Manifest(format!(
+                "model set '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// Path of an artifact file (`kind` ∈ init/train/predict/feats).
+    pub fn artifact(&self, kind: &str, model: &str) -> PathBuf {
+        self.dir.join(format!("{kind}_{model}.hlo.txt"))
+    }
+
+    pub fn kcenter_artifact(&self, hidden: usize) -> PathBuf {
+        self.dir.join(format!("kcenter_h{hidden}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version 1
+feat_dim 64
+train_bs 256
+eval_bs 512
+momentum 0.9
+weight_decay 0.0005
+chunk_steps 8
+model res18_c10 arch res18 classes 10 hidden 192 depth 4 residual 1 params 162634 flops_per_sample 323328
+model cnn18_c10 arch cnn18 classes 10 hidden 96 depth 3 residual 0 params 35146 flops_per_sample 69504
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.feat_dim, 64);
+        assert_eq!(m.train_bs, 256);
+        assert_eq!(m.models.len(), 2);
+        let r = m.model("res18_c10").unwrap();
+        assert_eq!(r.params, 162634);
+        assert!(r.residual);
+        let c = m.model("cnn18_c10").unwrap();
+        assert!(!c.residual);
+    }
+
+    #[test]
+    fn artifact_paths() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/arts")).unwrap();
+        assert_eq!(
+            m.artifact("train", "res18_c10"),
+            PathBuf::from("/arts/train_res18_c10.hlo.txt")
+        );
+        assert_eq!(m.kcenter_artifact(192), PathBuf::from("/arts/kcenter_h192.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_global_is_error() {
+        let bad = "version 1\nfeat_dim 64\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn wrong_version_is_error() {
+        let bad = SAMPLE.replace("version 1", "version 9");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn malformed_model_line_is_error() {
+        let bad = format!("{SAMPLE}model broken arch\n");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn unknown_model_lookup_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::new()).unwrap();
+        assert!(m.model("vgg_c10").is_err());
+    }
+}

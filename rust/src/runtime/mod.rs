@@ -1,0 +1,162 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! This is the only module that touches the `xla` crate. The flow follows
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//!
+//! Perf-critical design point (EXPERIMENTS.md §Perf): model state
+//! (params + momentum, one `2P` f32 vector) stays **device-resident** as a
+//! `PjRtBuffer` across the whole training loop — `train_chunk` executables
+//! are single-array-output precisely so their result buffer can be fed back
+//! as the next call's input without a host round-trip. Only minibatch data
+//! crosses the host boundary.
+
+pub mod manifest;
+pub mod session;
+
+pub use manifest::{Manifest, ModelMeta};
+pub use session::{ModelSession, Scores};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::{Error, Result};
+
+/// Cumulative runtime counters (perf accounting, printed by `mcal info`).
+#[derive(Default, Debug, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub executes: u64,
+    pub execute_secs: f64,
+    pub h2d_bytes: u64,
+}
+
+/// Shared PJRT client + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exe_cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<EngineStats>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Self> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            exe_cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(exe) = self.exe_cache.lock().unwrap().get(&path) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Manifest(format!("non-utf8 path {path:?}")))?,
+        )
+        .map_err(|e| Error::Xla(format!("load {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| Error::Xla(format!("compile {}: {e}", path.display())))?,
+        );
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.exe_cache.lock().unwrap().insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    /// Host → device transfer of an f32 tensor.
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.note_h2d(data.len() * 4);
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Host → device transfer of an i32 tensor.
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.note_h2d(data.len() * 4);
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Host → device transfer of a u32 tensor.
+    pub fn buf_u32(&self, data: &[u32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.note_h2d(data.len() * 4);
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute with device-resident inputs; returns the replica-0 outputs.
+    pub fn run_b(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let t0 = Instant::now();
+        let mut out = exe.execute_b(args)?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.executes += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        if out.is_empty() || out[0].is_empty() {
+            return Err(Error::Xla("execute returned no outputs".into()));
+        }
+        Ok(out.remove(0))
+    }
+
+    /// Read a device buffer back as f32s.
+    pub fn read_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+    }
+
+    /// Read a tuple-output buffer into its component literals.
+    pub fn read_tuple(&self, buf: &xla::PjRtBuffer) -> Result<Vec<xla::Literal>> {
+        Ok(buf.to_literal_sync()?.to_tuple()?)
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn note_h2d(&self, bytes: usize) {
+        self.stats.lock().unwrap().h2d_bytes += bytes as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/ (integration);
+    // here we only check cheap invariants.
+    use super::*;
+
+    #[test]
+    fn engine_creates_cpu_client() {
+        let e = Engine::cpu().unwrap();
+        assert!(!e.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let e = Engine::cpu().unwrap();
+        let msg = match e.load("/nonexistent/foo.hlo.txt") {
+            Ok(_) => panic!("expected error"),
+            Err(err) => format!("{err}"),
+        };
+        assert!(msg.contains("foo.hlo.txt"), "{msg}");
+    }
+}

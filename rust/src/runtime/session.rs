@@ -1,0 +1,312 @@
+//! Model session: device-resident training/inference state for one model set.
+//!
+//! A `ModelSession` owns the `state[2P]` device buffer (flat params +
+//! momentum) plus the five compiled entry points of one (arch × classes)
+//! model set. The state buffer never round-trips to the host during
+//! training: `train_chunk` executables return the new state buffer which is
+//! fed straight back on the next call (see runtime module docs).
+
+use std::sync::Arc;
+
+use crate::dataset::Dataset;
+use crate::model::TrainSchedule;
+use crate::prng::Pcg32;
+use crate::{Error, Result};
+
+use super::manifest::{Manifest, ModelMeta};
+use super::Engine;
+
+/// Per-sample uncertainty scores, aligned with the query index order.
+#[derive(Clone, Debug, Default)]
+pub struct Scores {
+    /// p(top1) − p(top2); high = confident (the paper's margin metric).
+    pub margin: Vec<f32>,
+    pub entropy: Vec<f32>,
+    pub maxprob: Vec<f32>,
+    /// Predicted class (the machine label).
+    pub pred: Vec<u32>,
+}
+
+impl Scores {
+    pub fn len(&self) -> usize {
+        self.pred.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pred.is_empty()
+    }
+}
+
+/// Training/inference session bound to one manifest model set.
+pub struct ModelSession<'e> {
+    engine: &'e Engine,
+    pub meta: ModelMeta,
+    feat_dim: usize,
+    train_bs: usize,
+    eval_bs: usize,
+    chunk_steps: usize,
+
+    init_exe: Arc<xla::PjRtLoadedExecutable>,
+    train_exe: Arc<xla::PjRtLoadedExecutable>,
+    predict_exe: Arc<xla::PjRtLoadedExecutable>,
+    feats_exe: Arc<xla::PjRtLoadedExecutable>,
+    loss_exe: Arc<xla::PjRtLoadedExecutable>,
+
+    state: Option<xla::PjRtBuffer>,
+    rng: Pcg32,
+
+    /// Real optimizer steps executed (K-sized chunks × chunk count).
+    pub steps_executed: u64,
+    /// Real sample-passes (steps × train_bs) — perf accounting only;
+    /// dollar pricing uses nominal epochs in [`crate::cost`].
+    pub real_samples_trained: u64,
+
+    // Reused host staging buffers (avoid per-chunk allocation).
+    xs_host: Vec<f32>,
+    ys_host: Vec<i32>,
+    lrs_host: Vec<f32>,
+    eval_host: Vec<f32>,
+}
+
+impl<'e> ModelSession<'e> {
+    /// Open a session for `model_name` (e.g. `res18_c10`), compiling its
+    /// artifacts (cached in the engine) and initializing state from `seed`.
+    pub fn open(
+        engine: &'e Engine,
+        manifest: &Manifest,
+        model_name: &str,
+        seed: u64,
+    ) -> Result<Self> {
+        let meta = manifest.model(model_name)?.clone();
+        let mut s = ModelSession {
+            engine,
+            feat_dim: manifest.feat_dim,
+            train_bs: manifest.train_bs,
+            eval_bs: manifest.eval_bs,
+            chunk_steps: manifest.chunk_steps,
+            init_exe: engine.load(manifest.artifact("init", model_name))?,
+            train_exe: engine.load(manifest.artifact("train", model_name))?,
+            predict_exe: engine.load(manifest.artifact("predict", model_name))?,
+            feats_exe: engine.load(manifest.artifact("feats", model_name))?,
+            loss_exe: engine.load(manifest.artifact("loss", model_name))?,
+            meta,
+            state: None,
+            rng: Pcg32::new(seed, 0x5E55),
+            steps_executed: 0,
+            real_samples_trained: 0,
+            xs_host: Vec::new(),
+            ys_host: Vec::new(),
+            lrs_host: Vec::new(),
+            eval_host: Vec::new(),
+        };
+        s.xs_host = vec![0.0; s.chunk_steps * s.train_bs * s.feat_dim];
+        s.ys_host = vec![0; s.chunk_steps * s.train_bs];
+        s.lrs_host = vec![0.0; s.chunk_steps];
+        s.eval_host = vec![0.0; s.eval_bs * s.feat_dim];
+        s.reinit(seed)?;
+        Ok(s)
+    }
+
+    /// Re-initialize parameters (the paper retrains from scratch whenever B
+    /// grows). Deterministic in `seed`.
+    pub fn reinit(&mut self, seed: u64) -> Result<()> {
+        let key = [(seed & 0xFFFF_FFFF) as u32, (seed >> 32) as u32];
+        let key_buf = self.engine.buf_u32(&key, &[2])?;
+        let mut out = self.engine.run_b(&self.init_exe, &[&key_buf])?;
+        self.state = Some(out.remove(0));
+        Ok(())
+    }
+
+    fn state(&self) -> Result<&xla::PjRtBuffer> {
+        self.state
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("session state uninitialized".into()))
+    }
+
+    /// Train on `(indices, labels)` (parallel slices into `ds`) for
+    /// `epochs` real passes. Returns the number of optimizer steps run.
+    ///
+    /// Minibatches are drawn from an epoch-reshuffled stream; sets smaller
+    /// than one minibatch are sampled with replacement.
+    pub fn train_epochs(
+        &mut self,
+        ds: &Dataset,
+        indices: &[usize],
+        labels: &[u32],
+        epochs: u32,
+        base_lr: f32,
+        schedule: &TrainSchedule,
+    ) -> Result<u64> {
+        if indices.is_empty() {
+            return Err(Error::Coordinator("train_epochs on empty set".into()));
+        }
+        assert_eq!(indices.len(), labels.len());
+        let n = indices.len();
+        let steps_per_epoch = n.div_ceil(self.train_bs).max(1);
+        let total_steps = (epochs as usize * steps_per_epoch).max(1);
+        let chunks = total_steps.div_ceil(self.chunk_steps);
+        let sched_steps = chunks * self.chunk_steps;
+
+        // Epoch-reshuffled order over the training set.
+        let mut order: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut order);
+        let mut cursor = 0usize;
+
+        let mut step = 0usize;
+        let mut state = self.state.take().ok_or_else(|| {
+            Error::Coordinator("session state uninitialized".into())
+        })?;
+        for _ in 0..chunks {
+            for k in 0..self.chunk_steps {
+                // Fill minibatch k.
+                for row in 0..self.train_bs {
+                    let local = if n >= self.train_bs {
+                        if cursor >= n {
+                            self.rng.shuffle(&mut order);
+                            cursor = 0;
+                        }
+                        let l = order[cursor];
+                        cursor += 1;
+                        l
+                    } else {
+                        self.rng.below(n as u32) as usize
+                    };
+                    let src = ds.feature(indices[local]);
+                    let dst_off = (k * self.train_bs + row) * self.feat_dim;
+                    self.xs_host[dst_off..dst_off + self.feat_dim].copy_from_slice(src);
+                    self.ys_host[k * self.train_bs + row] = labels[local] as i32;
+                }
+                self.lrs_host[k] = base_lr * schedule.lr_scale(step, sched_steps);
+                step += 1;
+            }
+            let xs = self.engine.buf_f32(
+                &self.xs_host,
+                &[self.chunk_steps, self.train_bs, self.feat_dim],
+            )?;
+            let ys = self
+                .engine
+                .buf_i32(&self.ys_host, &[self.chunk_steps, self.train_bs])?;
+            let lrs = self.engine.buf_f32(&self.lrs_host, &[self.chunk_steps])?;
+            let mut out = self
+                .engine
+                .run_b(&self.train_exe, &[&state, &xs, &ys, &lrs])?;
+            state = out.remove(0);
+        }
+        self.state = Some(state);
+        self.steps_executed += sched_steps as u64;
+        self.real_samples_trained += (sched_steps * self.train_bs) as u64;
+        Ok(sched_steps as u64)
+    }
+
+    /// Score `indices` of `ds` with the current model. Output is aligned
+    /// with `indices`.
+    pub fn predict(&mut self, ds: &Dataset, indices: &[usize]) -> Result<Scores> {
+        let mut scores = Scores {
+            margin: Vec::with_capacity(indices.len()),
+            entropy: Vec::with_capacity(indices.len()),
+            maxprob: Vec::with_capacity(indices.len()),
+            pred: Vec::with_capacity(indices.len()),
+        };
+        let state = self.state.take().ok_or_else(|| {
+            Error::Coordinator("session state uninitialized".into())
+        })?;
+        let result = self.predict_inner(&state, ds, indices, &mut scores);
+        self.state = Some(state);
+        result?;
+        Ok(scores)
+    }
+
+    fn predict_inner(
+        &mut self,
+        state: &xla::PjRtBuffer,
+        ds: &Dataset,
+        indices: &[usize],
+        scores: &mut Scores,
+    ) -> Result<()> {
+        for chunk in indices.chunks(self.eval_bs) {
+            let real = ds.gather_padded(chunk, self.eval_bs, &mut self.eval_host);
+            let x = self
+                .engine
+                .buf_f32(&self.eval_host, &[self.eval_bs, self.feat_dim])?;
+            let out = self.engine.run_b(&self.predict_exe, &[state, &x])?;
+            // Tuple output: (logits, margin, entropy, maxprob, pred).
+            let parts = self.engine.read_tuple(&out[0])?;
+            if parts.len() != 5 {
+                return Err(Error::Xla(format!(
+                    "predict returned {} outputs, expected 5",
+                    parts.len()
+                )));
+            }
+            let margin = parts[1].to_vec::<f32>()?;
+            let entropy = parts[2].to_vec::<f32>()?;
+            let maxprob = parts[3].to_vec::<f32>()?;
+            let pred = parts[4].to_vec::<i32>()?;
+            scores.margin.extend_from_slice(&margin[..real]);
+            scores.entropy.extend_from_slice(&entropy[..real]);
+            scores.maxprob.extend_from_slice(&maxprob[..real]);
+            scores.pred.extend(pred[..real].iter().map(|&p| p as u32));
+        }
+        Ok(())
+    }
+
+    /// Penultimate-layer features for `indices` (row-major, hidden wide).
+    pub fn features(&mut self, ds: &Dataset, indices: &[usize]) -> Result<Vec<f32>> {
+        let h = self.meta.hidden;
+        let mut feats = Vec::with_capacity(indices.len() * h);
+        let state = self.state.take().ok_or_else(|| {
+            Error::Coordinator("session state uninitialized".into())
+        })?;
+        let mut run = || -> Result<()> {
+            for chunk in indices.chunks(self.eval_bs) {
+                let real = ds.gather_padded(chunk, self.eval_bs, &mut self.eval_host);
+                let x = self
+                    .engine
+                    .buf_f32(&self.eval_host, &[self.eval_bs, self.feat_dim])?;
+                let out = self.engine.run_b(&self.feats_exe, &[&state, &x])?;
+                let all = self.engine.read_f32(&out[0])?;
+                feats.extend_from_slice(&all[..real * h]);
+            }
+            Ok(())
+        };
+        let result = run();
+        self.state = Some(state);
+        result?;
+        Ok(feats)
+    }
+
+    /// Mean cross-entropy over one eval batch (testing / monitoring).
+    /// `indices.len()` must be ≤ eval_bs; the batch is padded and the
+    /// returned loss covers the padded rows too (only meaningful for full
+    /// batches — tests use exactly eval_bs rows).
+    pub fn mean_loss(&mut self, ds: &Dataset, indices: &[usize], labels: &[u32]) -> Result<f32> {
+        assert_eq!(indices.len(), labels.len());
+        if indices.len() > self.eval_bs {
+            return Err(Error::Coordinator(format!(
+                "mean_loss batch {} > eval_bs {}",
+                indices.len(),
+                self.eval_bs
+            )));
+        }
+        ds.gather_padded(indices, self.eval_bs, &mut self.eval_host);
+        let mut y_host = vec![0i32; self.eval_bs];
+        for (i, &y) in labels.iter().enumerate() {
+            y_host[i] = y as i32;
+        }
+        let x = self
+            .engine
+            .buf_f32(&self.eval_host, &[self.eval_bs, self.feat_dim])?;
+        let y = self.engine.buf_i32(&y_host, &[self.eval_bs])?;
+        let state = self.state()?;
+        let out = self.engine.run_b(&self.loss_exe, &[state, &x, &y])?;
+        let v = self.engine.read_f32(&out[0])?;
+        Ok(v[0])
+    }
+
+    pub fn eval_bs(&self) -> usize {
+        self.eval_bs
+    }
+
+    pub fn train_bs(&self) -> usize {
+        self.train_bs
+    }
+}

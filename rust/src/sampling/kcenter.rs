@@ -1,0 +1,214 @@
+//! k-center-greedy (core-set) selection — the Sener & Savarese M(.) baseline.
+//!
+//! Greedy 2-approximation of the k-center problem in penultimate-feature
+//! space: repeatedly pick the pool point farthest from all chosen centers.
+//! The hot loop — relaxing every pool point's min-distance against the new
+//! center — runs on the L1 Pallas kernel (`kcenter_h{H}.hlo.txt`), with the
+//! pool's feature chunks uploaded to the device once and the per-chunk
+//! distance vectors kept device-resident across rounds.
+//!
+//! Initialization uses (a subsample of) the already-labeled set as existing
+//! centers, so new picks cover regions the labeled set misses.
+
+use crate::runtime::Engine;
+use crate::{Error, Result};
+
+/// Max labeled samples used to initialize distances (full initialization is
+/// O(|B|·|pool|·h); a subsample preserves coverage at bounded cost).
+const MAX_INIT_CENTERS: usize = 256;
+
+/// Greedy k-center selection.
+///
+/// - `pool_feats`: row-major `pool_n × h` features of the *unlabeled* pool;
+/// - `labeled_feats`: row-major features of the labeled set (may be empty);
+/// - returns `k` positions into the pool, in pick order.
+pub fn select(
+    engine: &Engine,
+    kcenter_exe: &xla::PjRtLoadedExecutable,
+    chunk_rows: usize,
+    h: usize,
+    pool_feats: &[f32],
+    labeled_feats: &[f32],
+    k: usize,
+) -> Result<Vec<usize>> {
+    if h == 0 || pool_feats.len() % h != 0 || labeled_feats.len() % h != 0 {
+        return Err(Error::Coordinator("kcenter: bad feature shapes".into()));
+    }
+    let pool_n = pool_feats.len() / h;
+    let k = k.min(pool_n);
+    if k == 0 {
+        return Ok(Vec::new());
+    }
+
+    // Upload pool feature chunks once (padded to chunk_rows).
+    let n_chunks = pool_n.div_ceil(chunk_rows);
+    let mut feat_bufs = Vec::with_capacity(n_chunks);
+    let mut staging = vec![0.0f32; chunk_rows * h];
+    for c in 0..n_chunks {
+        let lo = c * chunk_rows;
+        let hi = ((c + 1) * chunk_rows).min(pool_n);
+        staging.fill(0.0);
+        staging[..(hi - lo) * h].copy_from_slice(&pool_feats[lo * h..hi * h]);
+        feat_bufs.push(engine.buf_f32(&staging, &[chunk_rows, h])?);
+    }
+
+    // Host mirror of min-distances (padding rows pinned to 0 so they never
+    // win the argmax) + device-resident distance chunks. Large finite
+    // sentinel instead of +inf to stay safe in f32 kernel arithmetic.
+    const BIG: f32 = 1e30;
+    let mut dists = vec![BIG; n_chunks * chunk_rows];
+    for d in dists.iter_mut().skip(pool_n) {
+        *d = 0.0;
+    }
+    let mut dist_bufs = Vec::with_capacity(n_chunks);
+    for c in 0..n_chunks {
+        dist_bufs.push(engine.buf_f32(&dists[c * chunk_rows..(c + 1) * chunk_rows], &[chunk_rows])?);
+    }
+
+    let relax = |center: &[f32],
+                     dist_bufs: &mut Vec<xla::PjRtBuffer>,
+                     dists: &mut Vec<f32>|
+     -> Result<()> {
+        let c_buf = engine.buf_f32(center, &[h])?;
+        for c in 0..n_chunks {
+            let mut out = engine.run_b(kcenter_exe, &[&feat_bufs[c], &c_buf, &dist_bufs[c]])?;
+            let new_buf = out.remove(0);
+            let host = engine.read_f32(&new_buf)?;
+            dists[c * chunk_rows..(c + 1) * chunk_rows].copy_from_slice(&host);
+            dist_bufs[c] = new_buf;
+        }
+        // Keep padding rows out of the running.
+        for d in dists.iter_mut().skip(pool_n) {
+            *d = 0.0;
+        }
+        Ok(())
+    };
+
+    // Initialize against (a stride-subsampled view of) the labeled set.
+    let labeled_n = labeled_feats.len() / h;
+    if labeled_n > 0 {
+        let stride = labeled_n.div_ceil(MAX_INIT_CENTERS);
+        for i in (0..labeled_n).step_by(stride) {
+            relax(&labeled_feats[i * h..(i + 1) * h], &mut dist_bufs, &mut dists)?;
+        }
+    }
+
+    let mut picks = Vec::with_capacity(k);
+    for round in 0..k {
+        // Farthest point; when nothing is initialized yet (no labeled set,
+        // first round), every distance is BIG and argmax picks position 0 —
+        // an arbitrary but deterministic seed center.
+        let (mut best_i, mut best_d) = (usize::MAX, f32::NEG_INFINITY);
+        for (i, &d) in dists.iter().take(pool_n).enumerate() {
+            if d > best_d {
+                best_d = d;
+                best_i = i;
+            }
+        }
+        if best_i == usize::MAX {
+            break;
+        }
+        picks.push(best_i);
+        if round + 1 < k {
+            relax(
+                &pool_feats[best_i * h..(best_i + 1) * h].to_vec(),
+                &mut dist_bufs,
+                &mut dists,
+            )?;
+        }
+    }
+    Ok(picks)
+}
+
+/// Pure-Rust reference (tests + tiny pools): identical algorithm without
+/// the device path.
+pub fn select_ref(
+    h: usize,
+    pool_feats: &[f32],
+    labeled_feats: &[f32],
+    k: usize,
+) -> Vec<usize> {
+    let pool_n = pool_feats.len() / h;
+    let k = k.min(pool_n);
+    let mut dists = vec![f32::MAX; pool_n];
+    let labeled_n = labeled_feats.len() / h;
+    let d2 = |a: &[f32], b: &[f32]| -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    };
+    if labeled_n > 0 {
+        let stride = labeled_n.div_ceil(MAX_INIT_CENTERS);
+        for i in (0..labeled_n).step_by(stride) {
+            let c = &labeled_feats[i * h..(i + 1) * h];
+            for (p, d) in dists.iter_mut().enumerate() {
+                *d = d.min(d2(&pool_feats[p * h..(p + 1) * h], c));
+            }
+        }
+    }
+    let mut picks = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (mut bi, mut bd) = (usize::MAX, f32::NEG_INFINITY);
+        for (i, &d) in dists.iter().enumerate() {
+            if d > bd {
+                bd = d;
+                bi = i;
+            }
+        }
+        if bi == usize::MAX {
+            break;
+        }
+        picks.push(bi);
+        let c: Vec<f32> = pool_feats[bi * h..(bi + 1) * h].to_vec();
+        for (p, d) in dists.iter_mut().enumerate() {
+            *d = d.min(d2(&pool_feats[p * h..(p + 1) * h], &c));
+        }
+    }
+    picks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ref_covers_clusters() {
+        // Three tight clusters; k=3 picks one point from each.
+        let h = 2;
+        let mut pool = Vec::new();
+        for (cx, cy) in [(0.0f32, 0.0f32), (10.0, 0.0), (0.0, 10.0)] {
+            for j in 0..5 {
+                pool.push(cx + 0.01 * j as f32);
+                pool.push(cy);
+            }
+        }
+        let picks = select_ref(h, &pool, &[], 3);
+        assert_eq!(picks.len(), 3);
+        let cluster = |i: usize| i / 5;
+        let mut cs: Vec<usize> = picks.iter().map(|&p| cluster(p)).collect();
+        cs.sort_unstable();
+        cs.dedup();
+        assert_eq!(cs.len(), 3, "picks {picks:?}");
+    }
+
+    #[test]
+    fn ref_respects_labeled_coverage() {
+        // Labeled set already covers cluster 0 → first pick is NOT cluster 0.
+        let h = 2;
+        let mut pool = Vec::new();
+        for (cx, cy) in [(0.0f32, 0.0f32), (10.0, 0.0)] {
+            for j in 0..4 {
+                pool.push(cx + 0.01 * j as f32);
+                pool.push(cy);
+            }
+        }
+        let labeled = vec![0.0f32, 0.0];
+        let picks = select_ref(h, &pool, &labeled, 1);
+        assert!(picks[0] >= 4, "picks {picks:?}");
+    }
+
+    #[test]
+    fn ref_k_zero_and_oversized() {
+        let pool = vec![0.0f32; 10];
+        assert!(select_ref(2, &pool, &[], 0).is_empty());
+        assert_eq!(select_ref(2, &pool, &[], 99).len(), 5);
+    }
+}

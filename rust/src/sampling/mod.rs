@@ -1,0 +1,208 @@
+//! Sample-selection functions M(.) and L(.) (§3.3).
+//!
+//! - `M(.)` picks which pool samples to human-label for *training*:
+//!   uncertainty metrics (margin / max-entropy / least-confidence), the
+//!   core-set k-center baseline ([`kcenter`]), or random.
+//! - `L(.)` ranks pool samples by how confidently the classifier can
+//!   *machine-label* them: the paper uses margin (top-1 minus top-2
+//!   probability), descending.
+//!
+//! All uncertainty statistics come out of the L1 Pallas scoring kernel via
+//! [`crate::runtime::Scores`]; this module only does ranking/selection.
+
+pub mod kcenter;
+
+use crate::prng::Pcg32;
+use crate::runtime::Scores;
+
+/// Active-learning acquisition metric (the paper's M(.) choices, Fig. 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Smallest top1−top2 probability gap first (default).
+    Margin,
+    /// Largest predictive entropy first.
+    Entropy,
+    /// Smallest max-probability first.
+    LeastConfidence,
+    /// Core-set k-center-greedy in feature space (needs features; handled
+    /// by [`kcenter`], not by [`select_for_training`]).
+    KCenter,
+    /// Uniform random (the no-AL baseline of Fig. 14/15).
+    Random,
+}
+
+impl Metric {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Metric::Margin => "margin",
+            Metric::Entropy => "entropy",
+            Metric::LeastConfidence => "leastconf",
+            Metric::KCenter => "kcenter",
+            Metric::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s {
+            "margin" => Some(Metric::Margin),
+            "entropy" => Some(Metric::Entropy),
+            "leastconf" | "least-confidence" => Some(Metric::LeastConfidence),
+            "kcenter" | "k-center" => Some(Metric::KCenter),
+            "random" => Some(Metric::Random),
+            _ => None,
+        }
+    }
+}
+
+/// Positions of the `k` best acquisition candidates under `metric`,
+/// ascending in "informativeness rank" (most informative first).
+///
+/// Positions index into `scores` (i.e. into whatever slice of the pool was
+/// scored); the caller maps them back to dataset indices. Deterministic:
+/// ties break by position. O(n) selection + O(k log k) ordering.
+///
+/// Panics if `metric` is [`Metric::KCenter`] — that path needs features and
+/// lives in [`kcenter::select`].
+pub fn select_for_training(
+    metric: Metric,
+    scores: &Scores,
+    k: usize,
+    rng: &mut Pcg32,
+) -> Vec<usize> {
+    let n = scores.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    match metric {
+        Metric::Margin => smallest_k(&scores.margin, k),
+        Metric::LeastConfidence => smallest_k(&scores.maxprob, k),
+        Metric::Entropy => {
+            let neg: Vec<f32> = scores.entropy.iter().map(|&e| -e).collect();
+            smallest_k(&neg, k)
+        }
+        Metric::Random => rng.sample_indices(n, k),
+        Metric::KCenter => {
+            panic!("k-center selection requires features; use sampling::kcenter::select")
+        }
+    }
+}
+
+/// L(.): positions sorted most-confident-first by margin (the paper's
+/// machine-labeling ranking, Fig. 5).
+pub fn rank_for_machine_labeling(scores: &Scores) -> Vec<usize> {
+    let mut pos: Vec<usize> = (0..scores.len()).collect();
+    pos.sort_by(|&a, &b| {
+        scores.margin[b]
+            .partial_cmp(&scores.margin[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    pos
+}
+
+/// Positions of the `k` smallest values (most informative first), with
+/// deterministic tie-breaking by position.
+fn smallest_k(values: &[f32], k: usize) -> Vec<usize> {
+    let mut pos: Vec<usize> = (0..values.len()).collect();
+    let k = k.min(pos.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    if k < pos.len() {
+        pos.select_nth_unstable_by(k - 1, |&a, &b| {
+            values[a]
+                .partial_cmp(&values[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        pos.truncate(k);
+    }
+    pos.sort_by(|&a, &b| {
+        values[a]
+            .partial_cmp(&values[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    pos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scores() -> Scores {
+        Scores {
+            margin: vec![0.9, 0.1, 0.5, 0.05, 0.7],
+            entropy: vec![0.1, 2.0, 1.0, 2.2, 0.3],
+            maxprob: vec![0.95, 0.3, 0.6, 0.25, 0.8],
+            pred: vec![0, 1, 2, 3, 4],
+        }
+    }
+
+    #[test]
+    fn margin_picks_most_uncertain() {
+        let mut rng = Pcg32::new(0, 0);
+        assert_eq!(select_for_training(Metric::Margin, &scores(), 2, &mut rng), vec![3, 1]);
+    }
+
+    #[test]
+    fn entropy_picks_highest_entropy() {
+        let mut rng = Pcg32::new(0, 0);
+        assert_eq!(select_for_training(Metric::Entropy, &scores(), 2, &mut rng), vec![3, 1]);
+    }
+
+    #[test]
+    fn leastconf_picks_lowest_maxprob() {
+        let mut rng = Pcg32::new(0, 0);
+        assert_eq!(
+            select_for_training(Metric::LeastConfidence, &scores(), 3, &mut rng),
+            vec![3, 1, 2]
+        );
+    }
+
+    #[test]
+    fn random_is_distinct_and_in_range() {
+        let mut rng = Pcg32::new(1, 0);
+        let got = select_for_training(Metric::Random, &scores(), 3, &mut rng);
+        assert_eq!(got.len(), 3);
+        let mut s = got.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 3);
+        assert!(got.iter().all(|&p| p < 5));
+    }
+
+    #[test]
+    fn k_larger_than_n_clamps() {
+        let mut rng = Pcg32::new(0, 0);
+        assert_eq!(select_for_training(Metric::Margin, &scores(), 99, &mut rng).len(), 5);
+    }
+
+    #[test]
+    fn machine_ranking_is_margin_descending() {
+        let r = rank_for_machine_labeling(&scores());
+        assert_eq!(r, vec![0, 4, 2, 1, 3]);
+    }
+
+    #[test]
+    fn ties_break_by_position() {
+        let s = Scores {
+            margin: vec![0.5, 0.5, 0.5],
+            entropy: vec![1.0, 1.0, 1.0],
+            maxprob: vec![0.5, 0.5, 0.5],
+            pred: vec![0, 0, 0],
+        };
+        let mut rng = Pcg32::new(0, 0);
+        assert_eq!(select_for_training(Metric::Margin, &s, 2, &mut rng), vec![0, 1]);
+        assert_eq!(rank_for_machine_labeling(&s), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn metric_parse_roundtrip() {
+        for m in [Metric::Margin, Metric::Entropy, Metric::LeastConfidence, Metric::KCenter, Metric::Random] {
+            assert_eq!(Metric::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(Metric::parse("bald"), None);
+    }
+}

@@ -1,0 +1,105 @@
+//! Property-testing harness (the offline vendor set has no proptest).
+//!
+//! [`forall`] runs a property over `n` generated cases; on failure it
+//! reports the seed and case index so the exact input replays with
+//! `Gen::for_case(seed, i)`. No shrinking — generators are encouraged to
+//! produce small cases with reasonable probability instead.
+
+use crate::prng::Pcg32;
+
+/// Randomness handle passed to generators.
+pub struct Gen {
+    pub rng: Pcg32,
+}
+
+impl Gen {
+    pub fn for_case(seed: u64, case: u64) -> Gen {
+        Gen { rng: Pcg32::new(seed, 0x9C0DE + case) }
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Vector of f32 drawn from N(0, sigma²).
+    pub fn normal_vec(&mut self, n: usize, sigma: f32) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.rng.fill_normal(&mut v, 0.0, sigma);
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+}
+
+/// Run `prop` over `n` generated cases; panics with seed/case on failure.
+/// `prop` returns `Err(description)` to fail a case.
+pub fn forall<F>(name: &str, seed: u64, n: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> std::result::Result<(), String>,
+{
+    for case in 0..n {
+        let mut g = Gen::for_case(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\n\
+                 replay with Gen::for_case({seed}, {case})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("usize_in bounds", 1, 200, |g| {
+            let lo = g.usize_in(0, 10);
+            let hi = lo + g.usize_in(0, 10);
+            let v = g.usize_in(lo, hi);
+            if v < lo || v > hi {
+                return Err(format!("{v} outside [{lo},{hi}]"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failure() {
+        forall("always fails", 2, 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut a = Gen::for_case(7, 3);
+        let mut b = Gen::for_case(7, 3);
+        assert_eq!(a.normal_vec(8, 1.0), b.normal_vec(8, 1.0));
+        let mut c = Gen::for_case(7, 4);
+        assert_ne!(a.normal_vec(8, 1.0), c.normal_vec(8, 1.0));
+    }
+
+    #[test]
+    fn f64_in_range() {
+        let mut g = Gen::for_case(1, 0);
+        for _ in 0..1000 {
+            let v = g.f64_in(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&v));
+        }
+    }
+}

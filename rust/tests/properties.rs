@@ -1,0 +1,269 @@
+//! Property-based tests (testutil::qc harness) on coordinator invariants:
+//! routing (sample selection), batching (padding/chunking), and state
+//! (cost accounting, search feasibility). Pure-function properties — no
+//! engine needed, so these run everywhere.
+
+use mcal::cost::{
+    adapt_delta, search_min_cost, theta_grid, FittedCostModel, SearchInputs,
+};
+use mcal::dataset::SynthSpec;
+use mcal::powerlaw::{fit_auto, PowerLaw};
+use mcal::prng::Pcg32;
+use mcal::runtime::Scores;
+use mcal::sampling::{rank_for_machine_labeling, select_for_training, Metric};
+use mcal::testutil::{forall, Gen};
+
+fn random_scores(g: &mut Gen, n: usize, classes: usize) -> Scores {
+    let mut margin = Vec::with_capacity(n);
+    let mut entropy = Vec::with_capacity(n);
+    let mut maxprob = Vec::with_capacity(n);
+    let mut pred = Vec::with_capacity(n);
+    for _ in 0..n {
+        margin.push(g.f64_in(0.0, 1.0) as f32);
+        entropy.push(g.f64_in(0.0, (classes as f64).ln()) as f32);
+        maxprob.push(g.f64_in(1.0 / classes as f64, 1.0) as f32);
+        pred.push(g.usize_in(0, classes - 1) as u32);
+    }
+    Scores { margin, entropy, maxprob, pred }
+}
+
+#[test]
+fn prop_selection_returns_distinct_valid_positions() {
+    forall("selection distinct+valid", 0xA11CE, 150, |g| {
+        let n = g.usize_in(1, 400);
+        let k = g.usize_in(0, n + 10);
+        let classes = g.usize_in(2, 20);
+        let scores = random_scores(g, n, classes);
+        let metric = *g.choose(&[Metric::Margin, Metric::Entropy, Metric::LeastConfidence, Metric::Random]);
+        let mut rng = Pcg32::new(g.usize_in(0, 1 << 30) as u64, 1);
+        let sel = select_for_training(metric, &scores, k, &mut rng);
+        if sel.len() != k.min(n) {
+            return Err(format!("len {} != {}", sel.len(), k.min(n)));
+        }
+        let mut sorted = sel.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != sel.len() {
+            return Err("duplicate positions".into());
+        }
+        if sel.iter().any(|&p| p >= n) {
+            return Err("position out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_margin_selection_is_exactly_bottom_k() {
+    forall("margin = bottom-k", 0xB0B, 100, |g| {
+        let n = g.usize_in(2, 300);
+        let k = g.usize_in(1, n);
+        let scores = random_scores(g, n, 10);
+        let mut rng = Pcg32::new(1, 1);
+        let sel = select_for_training(Metric::Margin, &scores, k, &mut rng);
+        let max_sel = sel
+            .iter()
+            .map(|&p| scores.margin[p])
+            .fold(f32::NEG_INFINITY, f32::max);
+        let outside_min = (0..n)
+            .filter(|p| !sel.contains(p))
+            .map(|p| scores.margin[p])
+            .fold(f32::INFINITY, f32::min);
+        if max_sel > outside_min + 1e-6 {
+            return Err(format!("not bottom-k: max_sel={max_sel} outside_min={outside_min}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_machine_ranking_is_total_and_sorted() {
+    forall("L ranking sorted", 0x10C0, 100, |g| {
+        let n = g.usize_in(1, 300);
+        let scores = random_scores(g, n, 5);
+        let r = rank_for_machine_labeling(&scores);
+        if r.len() != n {
+            return Err("not a total ranking".into());
+        }
+        for w in r.windows(2) {
+            if scores.margin[w[0]] < scores.margin[w[1]] - 1e-6 {
+                return Err("margin not descending".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_powerlaw_fit_interpolates_monotone_data() {
+    forall("powerlaw interpolation", 0xF17, 80, |g| {
+        let alpha = g.f64_in(0.2, 3.0);
+        let gamma = g.f64_in(0.05, 0.8);
+        let k = if g.bool() { g.f64_in(5_000.0, 50_000.0) } else { f64::INFINITY };
+        let mut points = Vec::new();
+        let mut b = g.f64_in(100.0, 500.0);
+        for _ in 0..g.usize_in(4, 10) {
+            let eps = (alpha * b.powf(-gamma) * (-b / k).exp()).clamp(1e-6, 1.0);
+            points.push((b, eps));
+            b *= g.f64_in(1.5, 2.5);
+        }
+        let fit = fit_auto(&points, None).map_err(|e| e.to_string())?;
+        for &(b, eps) in &points {
+            // Near the 1e-6 floor the log-space system is ill-conditioned
+            // (and irrelevant in practice — ε ≈ 0); only check above 1e-4.
+            if eps < 1e-4 {
+                continue;
+            }
+            let rel = (fit.predict(b).ln() - eps.ln()).abs();
+            if rel > 0.35 {
+                return Err(format!("bad fit at b={b}: pred={} vs {eps}", fit.predict(b)));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_search_never_exceeds_human_fallback_and_respects_epsilon() {
+    forall("search bounds", 0x5EA, 120, |g| {
+        let grid = theta_grid();
+        let x_total = g.usize_in(5_000, 100_000);
+        let test_size = x_total / 20;
+        let b_cur = g.usize_in(10, x_total / 4);
+        let law = PowerLaw {
+            ln_alpha: g.f64_in(-2.0, 1.0),
+            gamma: g.f64_in(0.0, 0.8),
+            inv_k: if g.bool() { 1.0 / g.f64_in(5_000.0, 80_000.0) } else { 0.0 },
+        };
+        let fits: Vec<Option<PowerLaw>> = grid
+            .iter()
+            .map(|&t| {
+                Some(PowerLaw {
+                    ln_alpha: law.ln_alpha + (0.2 + t).ln(),
+                    ..law
+                })
+            })
+            .collect();
+        let cm = FittedCostModel { a: g.f64_in(0.0, 0.01), b: g.f64_in(0.0, 5.0) };
+        let spent = g.f64_in(0.0, 100.0);
+        let epsilon = g.f64_in(0.01, 0.15);
+        let price = *g.choose(&[0.04, 0.003]);
+        let inp = SearchInputs {
+            x_total,
+            test_size,
+            b_cur,
+            delta: g.usize_in(1, x_total / 10),
+            price_per_label: price,
+            spent,
+            epsilon,
+            theta_grid: &grid,
+            fits: &fits,
+            cost_model: &cm,
+        };
+        let r = search_min_cost(&inp);
+        let pool_max = x_total - test_size;
+        let human_now = spent + (pool_max - b_cur) as f64 * price;
+        if r.c_star > human_now + 1e-6 {
+            return Err(format!("C* {} above human fallback {human_now}", r.c_star));
+        }
+        if r.machine_labeling_viable {
+            let overall = r.s_size as f64 * r.eps_machine / x_total as f64;
+            if overall >= epsilon {
+                return Err(format!("plan violates epsilon: {overall} >= {epsilon}"));
+            }
+            if r.b_opt < b_cur || r.b_opt > pool_max {
+                return Err(format!("b_opt {} outside [{b_cur}, {pool_max}]", r.b_opt));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adapt_delta_always_within_remaining() {
+    forall("adapt_delta bounds", 0xDE17A, 150, |g| {
+        let cm = FittedCostModel { a: g.f64_in(0.0, 0.02), b: g.f64_in(0.0, 10.0) };
+        let b_cur = g.usize_in(0, 50_000);
+        let b_opt = b_cur + g.usize_in(0, 50_000);
+        let c_star = g.f64_in(10.0, 5_000.0);
+        let delta = adapt_delta(&cm, b_cur, b_opt, c_star * 0.8, c_star, g.f64_in(0.0, 0.5), 50);
+        if delta == 0 {
+            return Err("delta must be >= 1".into());
+        }
+        if b_opt > b_cur && delta > b_opt - b_cur {
+            return Err(format!("delta {delta} overshoots remaining {}", b_opt - b_cur));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gather_padded_partitions_exactly() {
+    forall("gather padding", 0x6A7, 100, |g| {
+        let classes = g.usize_in(2, 8);
+        let per_class = g.usize_in(3, 30);
+        let ds = SynthSpec {
+            name: "prop".into(),
+            num_classes: classes,
+            per_class,
+            feat_dim: g.usize_in(2, 16),
+            subclusters: g.usize_in(1, 3),
+            center_scale: 1.0,
+            spread: 0.4,
+            noise: 0.3,
+            seed: g.usize_in(0, 1 << 30) as u64,
+        }
+        .generate()
+        .map_err(|e| e.to_string())?;
+        let n = ds.len();
+        let batch = g.usize_in(1, 2 * n);
+        let take = g.usize_in(0, batch.min(n));
+        let mut rng = Pcg32::new(3, 3);
+        let idx = rng.sample_indices(n, take);
+        let mut out = vec![f32::NAN; batch * ds.feat_dim];
+        let real = ds.gather_padded(&idx, batch, &mut out);
+        if real != take {
+            return Err("wrong real count".into());
+        }
+        for (row, &i) in idx.iter().enumerate() {
+            let got = &out[row * ds.feat_dim..(row + 1) * ds.feat_dim];
+            if got != ds.feature(i) {
+                return Err(format!("row {row} mismatch"));
+            }
+        }
+        for row in take..batch {
+            if out[row * ds.feat_dim..(row + 1) * ds.feat_dim]
+                .iter()
+                .any(|&v| v != 0.0)
+            {
+                return Err("padding not zero".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_error_profile_bounds_and_coverage() {
+    forall("error profile", 0xE88, 100, |g| {
+        let n = g.usize_in(1, 500);
+        let scores = random_scores(g, n, 10);
+        let correct: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+        let grid = theta_grid();
+        let prof = mcal::metrics::error_profile(&scores, &correct, &grid);
+        if prof.len() != grid.len() {
+            return Err("profile length".into());
+        }
+        for &e in &prof {
+            if !(0.0..=1.0).contains(&e) {
+                return Err(format!("error {e} outside [0,1]"));
+            }
+        }
+        // θ=1.0 covers everything: must equal global error.
+        let global = correct.iter().filter(|&&c| !c).count() as f64 / n as f64;
+        if (prof.last().unwrap() - global).abs() > 1e-9 {
+            return Err("theta=1 not global error".into());
+        }
+        Ok(())
+    });
+}

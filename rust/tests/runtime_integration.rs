@@ -1,0 +1,194 @@
+//! Runtime integration tests: real artifacts through the PJRT engine.
+//!
+//! These exercise the full AOT bridge (HLO text → compile → execute_b) and
+//! the device-resident training loop. They require `make artifacts` to have
+//! run (skipped with a message otherwise).
+
+use mcal::dataset::SynthSpec;
+use mcal::model::{ArchKind, TrainSchedule};
+use mcal::runtime::{Engine, Manifest, ModelSession};
+
+fn setup() -> Option<(Engine, Manifest)> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some((Engine::cpu().unwrap(), Manifest::load("artifacts").unwrap()))
+}
+
+fn tiny_ds(classes: usize, per_class: usize, seed: u64) -> mcal::dataset::Dataset {
+    SynthSpec {
+        name: "itest".into(),
+        num_classes: classes,
+        per_class,
+        feat_dim: 64,
+        subclusters: 2,
+        center_scale: 0.8,
+        spread: 0.5,
+        noise: 0.8,
+        seed,
+    }
+    .generate()
+    .unwrap()
+}
+
+#[test]
+fn manifest_matches_artifacts_on_disk() {
+    let Some((_, manifest)) = setup() else { return };
+    assert_eq!(manifest.feat_dim, 64);
+    for name in manifest.models.keys() {
+        for kind in ["init", "train", "predict", "feats", "loss"] {
+            let p = manifest.artifact(kind, name);
+            assert!(p.exists(), "missing {}", p.display());
+        }
+    }
+    for m in manifest.models.values() {
+        assert!(manifest.kcenter_artifact(m.hidden).exists());
+    }
+}
+
+#[test]
+fn session_reinit_is_deterministic() {
+    let Some((engine, manifest)) = setup() else { return };
+    let ds = tiny_ds(10, 60, 1);
+    let idx: Vec<usize> = (0..64).collect();
+
+    let mut s = ModelSession::open(&engine, &manifest, "cnn18_c10", 7).unwrap();
+    let a = s.predict(&ds, &idx).unwrap();
+    s.reinit(7).unwrap();
+    let b = s.predict(&ds, &idx).unwrap();
+    assert_eq!(a.pred, b.pred);
+    assert_eq!(a.margin, b.margin);
+
+    s.reinit(8).unwrap();
+    let c = s.predict(&ds, &idx).unwrap();
+    assert_ne!(a.margin, c.margin, "different seed must change the model");
+}
+
+#[test]
+fn train_epochs_reduces_loss_and_learns_labels() {
+    let Some((engine, manifest)) = setup() else { return };
+    let ds = tiny_ds(10, 150, 2);
+    let mut s = ModelSession::open(&engine, &manifest, "cnn18_c10", 3).unwrap();
+
+    let train_idx: Vec<usize> = (0..800).collect();
+    let train_labels: Vec<u32> = train_idx.iter().map(|&i| ds.groundtruth(i)).collect();
+    let eval_idx: Vec<usize> = (800..800 + s.eval_bs()).collect();
+    let eval_labels: Vec<u32> = eval_idx.iter().map(|&i| ds.groundtruth(i)).collect();
+
+    let loss0 = s.mean_loss(&ds, &eval_idx, &eval_labels).unwrap();
+    let sched = TrainSchedule::default();
+    let steps = s
+        .train_epochs(&ds, &train_idx, &train_labels, 12, ArchKind::Cnn18.base_lr(), &sched)
+        .unwrap();
+    assert!(steps > 0);
+    let loss1 = s.mean_loss(&ds, &eval_idx, &eval_labels).unwrap();
+    assert!(
+        loss1 < 0.6 * loss0,
+        "training must cut eval loss: {loss0} -> {loss1}"
+    );
+
+    // Accuracy on held-out data should be well above chance.
+    let scores = s.predict(&ds, &eval_idx).unwrap();
+    let acc = scores
+        .pred
+        .iter()
+        .zip(eval_labels.iter())
+        .filter(|(&p, &t)| p == t)
+        .count() as f64
+        / eval_labels.len() as f64;
+    assert!(acc > 0.5, "acc={acc}");
+}
+
+#[test]
+fn predict_scores_are_consistent() {
+    let Some((engine, manifest)) = setup() else { return };
+    let ds = tiny_ds(10, 80, 4);
+    let mut s = ModelSession::open(&engine, &manifest, "res18_c10", 1).unwrap();
+    let idx: Vec<usize> = (0..700).collect(); // forces two eval chunks + padding
+    let scores = s.predict(&ds, &idx).unwrap();
+    assert_eq!(scores.len(), 700);
+    for i in 0..700 {
+        assert!(scores.margin[i] >= -1e-5 && scores.margin[i] <= 1.0 + 1e-5);
+        assert!(scores.maxprob[i] >= 0.1 - 1e-5 && scores.maxprob[i] <= 1.0 + 1e-5);
+        assert!(scores.entropy[i] >= -1e-5 && scores.entropy[i] <= (10f32).ln() + 1e-4);
+        assert!(scores.pred[i] < 10);
+    }
+    // Chunking must not depend on batch boundaries: rescoring a suffix
+    // gives identical values.
+    let suffix: Vec<usize> = (512..700).collect();
+    let s2 = s.predict(&ds, &suffix).unwrap();
+    for (j, i) in (512..700).enumerate() {
+        assert_eq!(scores.pred[i], s2.pred[j]);
+        assert!((scores.margin[i] - s2.margin[j]).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn features_shape_and_determinism() {
+    let Some((engine, manifest)) = setup() else { return };
+    let ds = tiny_ds(10, 60, 5);
+    let mut s = ModelSession::open(&engine, &manifest, "res18_c10", 2).unwrap();
+    let idx: Vec<usize> = (0..300).collect();
+    let f1 = s.features(&ds, &idx).unwrap();
+    assert_eq!(f1.len(), 300 * s.meta.hidden);
+    let f2 = s.features(&ds, &idx).unwrap();
+    assert_eq!(f1, f2);
+    assert!(f1.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn kcenter_device_matches_ref() {
+    let Some((engine, manifest)) = setup() else { return };
+    let ds = tiny_ds(10, 60, 6);
+    let mut s = ModelSession::open(&engine, &manifest, "res18_c10", 2).unwrap();
+    let pool: Vec<usize> = (0..550).collect();
+    let labeled: Vec<usize> = (550..590).collect();
+    let pool_f = s.features(&ds, &pool).unwrap();
+    let lab_f = s.features(&ds, &labeled).unwrap();
+    let h = s.meta.hidden;
+
+    let exe = engine.load(manifest.kcenter_artifact(h)).unwrap();
+    let got = mcal::sampling::kcenter::select(
+        &engine,
+        &exe,
+        manifest.eval_bs,
+        h,
+        &pool_f,
+        &lab_f,
+        12,
+    )
+    .unwrap();
+    let want = mcal::sampling::kcenter::select_ref(h, &pool_f, &lab_f, 12);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn train_chunk_state_stays_device_resident() {
+    // Sanity on the perf contract: training many chunks must not grow
+    // h2d transfer by more than the minibatch traffic (i.e. the state
+    // vector is NOT re-uploaded per chunk).
+    let Some((engine, manifest)) = setup() else { return };
+    let ds = tiny_ds(10, 120, 7);
+    let mut s = ModelSession::open(&engine, &manifest, "res50_c10", 1).unwrap();
+    let train_idx: Vec<usize> = (0..1000).collect();
+    let labels: Vec<u32> = train_idx.iter().map(|&i| ds.groundtruth(i)).collect();
+
+    let before = engine.stats().h2d_bytes;
+    let sched = TrainSchedule::default();
+    let steps = s
+        .train_epochs(&ds, &train_idx, &labels, 4, 0.01, &sched)
+        .unwrap();
+    let transferred = engine.stats().h2d_bytes - before;
+    // Per chunk: xs (K*256*64*4) + ys (K*256*4) + lrs (K*4) ≈ 533 KB.
+    let chunks = steps / manifest.chunk_steps as u64;
+    let per_chunk = (manifest.chunk_steps * manifest.train_bs * (manifest.feat_dim + 1) * 4
+        + manifest.chunk_steps * 4) as u64;
+    let budget = chunks * per_chunk + 4 * 1024 * 1024; // + slack
+    // res50 state alone is 2*1.2M*4 ≈ 9.7 MB; re-uploading it per chunk
+    // would blow this budget immediately.
+    assert!(
+        transferred < budget,
+        "h2d {transferred} exceeds minibatch budget {budget} — state not device-resident?"
+    );
+}
