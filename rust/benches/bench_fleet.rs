@@ -1,0 +1,53 @@
+//! Fleet bench: single-threaded vs parallel sweep wall-clock on the
+//! smoke-scale Table 2 grid (hand-rolled harness — criterion is not in the
+//! offline vendor set).
+//!
+//! Runs the same (dataset × arch × δ) trajectory grid once with `jobs = 1`
+//! and once with one worker per core, verifies the emitted table is
+//! byte-identical (the fleet's determinism contract), and prints the
+//! speedup. Record the printed numbers in CHANGES.md when they move.
+//!
+//! Run: `cargo bench --offline --bench bench_fleet`
+
+use std::time::Instant;
+
+use mcal::experiments::common::{Ctx, Scale};
+use mcal::experiments::{fleet, table2};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let datasets = ["fashion-syn", "cifar10-syn", "cifar100-syn"];
+    let cores = fleet::default_jobs();
+
+    let mut csvs = Vec::new();
+    let mut secs = Vec::new();
+    for jobs in [1usize, cores] {
+        let ctx = Ctx::new("artifacts", &format!("results/bench_fleet_j{jobs}"), Scale::Smoke, 42)
+            .unwrap()
+            .with_jobs(jobs);
+        let t0 = Instant::now();
+        let out = table2::run(&ctx, &datasets, 0.05).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "bench_fleet: jobs={jobs:<3} {:>7.1}s  ({} trajectories)",
+            wall,
+            out.trajectories.len()
+        );
+        csvs.push(out.table2.to_csv());
+        secs.push(wall);
+    }
+
+    assert_eq!(
+        csvs[0], csvs[1],
+        "fleet determinism violated: table2 differs between jobs=1 and jobs={cores}"
+    );
+    println!(
+        "bench_fleet: speedup {:.2}x on {cores} cores (serial {:.1}s → parallel {:.1}s)",
+        secs[0] / secs[1].max(1e-9),
+        secs[0],
+        secs[1]
+    );
+}

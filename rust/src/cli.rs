@@ -86,6 +86,18 @@ impl Args {
                 .map_err(|_| Error::Config(format!("--{key}: expected integer, got '{v}'"))),
         }
     }
+
+    /// `--jobs N` — fleet width for parallel experiment sweeps. `0` or
+    /// `auto` (also the default when absent) means one worker per core;
+    /// the caller resolves 0 via `fleet::default_jobs`.
+    pub fn jobs(&self) -> Result<usize> {
+        match self.opt("jobs") {
+            None | Some("auto") => Ok(0),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--jobs: expected integer or 'auto', got '{v}'"))),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -131,5 +143,13 @@ mod tests {
     fn bad_numeric_errors() {
         let a = parse("x --epsilon huh");
         assert!(a.f64_or("epsilon", 0.0).is_err());
+    }
+
+    #[test]
+    fn jobs_parsing() {
+        assert_eq!(parse("exp table2").jobs().unwrap(), 0);
+        assert_eq!(parse("exp table2 --jobs auto").jobs().unwrap(), 0);
+        assert_eq!(parse("exp table2 --jobs 4").jobs().unwrap(), 4);
+        assert!(parse("exp table2 --jobs four").jobs().is_err());
     }
 }

@@ -1,4 +1,5 @@
-//! Naive active-learning baselines (§5.1, Figures 8-10, 12, 16-21; Tbl. 2).
+//! Naive active-learning baselines (§5.1, Figures 8-10, 12, 16-21; Tbl. 2),
+//! as a [`Policy`] over the shared [`LabelingDriver`] loop.
 //!
 //! Naive AL uses a *fixed* acquisition batch δ and no predictive models: it
 //! reacts to the measured "stop-now" cost (ledger + residual human labels
@@ -9,9 +10,9 @@
 //!
 //! Because the AL *trajectory* (which samples get labeled, the per-iteration
 //! error profiles and training charges) does not depend on label prices,
-//! [`run_al_trajectory`] records a price-independent trace that
-//! [`price_trajectory`] converts into dollars for any service — one sweep
-//! prices both Amazon and Satyam columns of Tbl. 2.
+//! [`NaiveAlPolicy`] records a price-independent trace that
+//! [`Trajectory::price_all`] converts into dollars for any service — one
+//! sweep prices both Amazon and Satyam columns of Tbl. 2.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -21,10 +22,11 @@ use crate::dataset::Dataset;
 use crate::metrics;
 use crate::model::ArchKind;
 use crate::runtime::{Engine, Manifest};
-use crate::sampling;
 use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
+use super::events::StopReason;
+use super::policy::{machine_label_top, Decision, LabelingDriver, Policy};
 
 /// One iteration of a price-independent AL trace.
 #[derive(Clone, Debug)]
@@ -68,10 +70,9 @@ pub struct PricedStop {
     pub overall_error: f64,
 }
 
-/// Run naive AL with fixed `delta`, recording the trace until the measured
-/// stop-now cost rises for `hysteresis` consecutive iterations (priced at
-/// `probe_price` — only the *stop point of the recording* depends on it;
-/// use a cap generous enough for post-hoc pricing).
+/// Run naive AL with fixed `delta`, recording the trace until B hits
+/// `max_b_frac` of the non-test pool, the pool drains, or the full-pool
+/// machine-labeling plan becomes feasible.
 pub fn run_al_trajectory(
     engine: &Engine,
     manifest: &Manifest,
@@ -84,85 +85,90 @@ pub fn run_al_trajectory(
     delta: usize,
     max_b_frac: f64,
 ) -> Result<Trajectory> {
-    let t0 = Instant::now();
-    let theta_grid = crate::cost::theta_grid();
-    let mut env = LabelingEnv::new(
-        engine,
-        manifest,
+    LabelingDriver::new(engine, manifest).run(
         ds,
         service,
         ledger,
         arch,
         classes_tag,
         params,
-        theta_grid.clone(),
-    )?;
+        NaiveAlPolicy::new(delta, max_b_frac),
+    )
+}
 
-    let b_cap = ((ds.len() - env.test_idx.len()) as f64 * max_b_frac) as usize;
-    let mut points = Vec::new();
-    let mut iter = 0usize;
+/// Fixed-δ naive AL as a [`Policy`]: no predictive models, just a
+/// price-independent trace of every stopping point.
+#[derive(Debug)]
+pub struct NaiveAlPolicy {
+    /// Fixed acquisition batch.
+    delta: usize,
+    /// B cap as a fraction of the non-test pool (Tbl. 2 uses 0.6).
+    max_b_frac: f64,
+    /// Acquisitions completed so far.
+    iter: usize,
+    points: Vec<TrajPoint>,
+}
 
-    loop {
-        let profile = env.measure()?;
+impl NaiveAlPolicy {
+    pub fn new(delta: usize, max_b_frac: f64) -> Self {
+        NaiveAlPolicy { delta, max_b_frac, iter: 0, points: Vec::new() }
+    }
+}
+
+impl Policy for NaiveAlPolicy {
+    type Output = Trajectory;
+
+    fn plan(&mut self, env: &mut LabelingEnv<'_>, profile: &[f64]) -> Result<Decision> {
+        let b_cap = ((env.ds.len() - env.test_idx.len()) as f64 * self.max_b_frac) as usize;
+
         // Evaluation-only: what the labeled set would look like stopping now.
-        let (theta, _, machine_frac) = env.stop_now(&profile);
+        let (theta, _, machine_frac) = env.stop_now(profile);
         let (overall_err, mfrac) = if theta > 0.0 {
-            let scores = env.session.predict(ds, &env.pool)?;
-            let ranked = sampling::rank_for_machine_labeling(&scores);
-            let take = ((theta * env.pool.len() as f64).floor() as usize).min(ranked.len());
-            let (mut si, mut sp) = (Vec::with_capacity(take), Vec::with_capacity(take));
-            for &p in &ranked[..take] {
-                si.push(env.pool[p]);
-                sp.push(scores.pred[p]);
-            }
+            let take = (theta * env.pool.len() as f64).floor() as usize;
+            let (si, sp) = machine_label_top(env, take)?;
             (
-                metrics::overall_label_error(ds, &si, &sp),
-                take as f64 / ds.len() as f64,
+                metrics::overall_label_error(env.ds, &si, &sp),
+                si.len() as f64 / env.ds.len() as f64,
             )
         } else {
             (0.0, machine_frac)
         };
-        points.push(TrajPoint {
-            iter,
+        self.points.push(TrajPoint {
+            iter: self.iter,
             b_size: env.b_idx.len(),
             training_dollars: env.training_spend,
-            eps_profile: profile,
+            eps_profile: profile.to_vec(),
             pool_size: env.pool.len(),
             overall_error_if_stop: overall_err,
             machine_frac_if_stop: mfrac,
         });
 
-        if env.b_idx.len() >= b_cap || env.pool.is_empty() || iter >= env.params.max_iters {
-            break;
+        if env.b_idx.len() >= b_cap || env.pool.is_empty() || self.iter >= env.params.max_iters {
+            return Ok(Decision::Stop(StopReason::PoolExhausted));
         }
         // Naive-AL stopping: the full-pool plan became feasible (θ = 1.0) —
         // training further can only add cost.
-        if let Some(last) = points.last() {
-            let full_theta_err = *last.eps_profile.last().unwrap_or(&1.0);
-            let overall_full =
-                env.pool.len() as f64 * full_theta_err / ds.len() as f64;
-            if overall_full < env.params.epsilon {
-                break;
-            }
+        let full_theta_err = *profile.last().unwrap_or(&1.0);
+        let overall_full = env.pool.len() as f64 * full_theta_err / env.ds.len() as f64;
+        if overall_full < env.params.epsilon {
+            return Ok(Decision::Stop(StopReason::ReachedBOpt));
         }
-        let got = env.acquire(delta.min(b_cap - env.b_idx.len()))?;
-        if got == 0 {
-            break;
-        }
-        env.retrain()?;
-        iter += 1;
+        self.iter += 1;
+        Ok(Decision::Continue { delta: self.delta.min(b_cap - env.b_idx.len()) })
     }
 
-    Ok(Trajectory {
-        dataset: ds.name.clone(),
-        arch,
-        delta,
-        x_total: ds.len(),
-        test_size: env.test_idx.len(),
-        theta_grid,
-        points,
-        wall_secs: t0.elapsed().as_secs_f64(),
-    })
+    fn finalize(self, env: LabelingEnv<'_>, _stop: StopReason, t0: Instant) -> Result<Trajectory> {
+        Ok(Trajectory {
+            dataset: env.ds.name.clone(),
+            arch: env.arch,
+            delta: self.delta,
+            x_total: env.ds.len(),
+            test_size: env.test_idx.len(),
+            theta_grid: env.theta_grid.clone(),
+            points: self.points,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
 }
 
 impl Trajectory {

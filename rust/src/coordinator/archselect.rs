@@ -8,10 +8,14 @@
 //! to the real ledger as exploration tax. Probe-phase human labels are not
 //! double-charged: with a shared acquisition stream the winning run re-buys
 //! the same labels (see DESIGN.md §Algorithm-notes).
+//!
+//! The probe itself is a [`Policy`] ([`ProbePolicy`]) driven by the shared
+//! [`LabelingDriver`] loop, like every other mode in this crate.
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use crate::annotation::{AnnotationService, Ledger, SimService, SimServiceConfig, Service};
+use crate::annotation::{AnnotationService, Ledger, Service, SimService, SimServiceConfig};
 use crate::cost::{search_min_cost, SearchInputs};
 use crate::dataset::Dataset;
 use crate::model::ArchKind;
@@ -19,8 +23,9 @@ use crate::runtime::{Engine, Manifest};
 use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
-use super::events::RunReport;
+use super::events::{RunReport, StopReason};
 use super::mcal::run_mcal;
+use super::policy::{Decision, LabelingDriver, Policy};
 
 /// Result of one candidate's probe phase.
 #[derive(Clone, Debug)]
@@ -33,8 +38,98 @@ pub struct ProbeResult {
     pub stable: bool,
 }
 
-/// Probe a single candidate: run the MCAL inner loop on a shadow ledger for
-/// at most `probe_iters` acquisitions, returning the stabilized C*.
+/// The probing phase as a [`Policy`]: run the MCAL acquisition cadence for
+/// at most `probe_iters` rounds on a shadow ledger, tracking the C*
+/// estimate until it stabilizes. Its output is the [`ProbeResult`], not a
+/// report — probe runs never finalize a labeling.
+struct ProbePolicy {
+    price: f64,
+    probe_iters: usize,
+    /// Acquisitions completed so far.
+    acquisitions: usize,
+    c_old: Option<f64>,
+    last: Option<(f64, bool)>,
+}
+
+impl ProbePolicy {
+    fn new(price: f64, probe_iters: usize) -> Self {
+        ProbePolicy { price, probe_iters, acquisitions: 0, c_old: None, last: None }
+    }
+}
+
+impl Policy for ProbePolicy {
+    type Output = ProbeResult;
+
+    fn plan(&mut self, env: &mut LabelingEnv<'_>, _profile: &[f64]) -> Result<Decision> {
+        let delta = ((env.params.init_frac * env.x_total() as f64).round() as usize).max(1);
+
+        // Re-estimate C* from the measurements the previous acquisition
+        // produced; a stabilized estimate ends the probe.
+        if self.acquisitions > 0 {
+            let fits = env.fits();
+            if let Some(cm) = env.cost_model() {
+                let s = search_min_cost(&SearchInputs {
+                    x_total: env.x_total(),
+                    test_size: env.test_idx.len(),
+                    b_cur: env.b_idx.len(),
+                    delta,
+                    price_per_label: self.price,
+                    spent: env.ledger.total(),
+                    epsilon: env.params.epsilon,
+                    theta_grid: &env.theta_grid,
+                    fits: &fits,
+                    cost_model: &cm,
+                });
+                let stable = match self.c_old {
+                    Some(old) => {
+                        (s.c_star - old).abs() / s.c_star.max(1e-9)
+                            <= env.params.stability_delta
+                    }
+                    None => false,
+                };
+                self.c_old = Some(s.c_star);
+                self.last = Some((s.c_star, stable && s.machine_labeling_viable));
+                if stable {
+                    return Ok(Decision::Stop(StopReason::ReachedBOpt));
+                }
+            }
+        }
+        if self.acquisitions >= self.probe_iters {
+            return Ok(Decision::Stop(StopReason::MaxIters));
+        }
+        // A probe must not itself burn the exploration budget (EfficientNet
+        // on imagenet-syn costs hundreds of simulated dollars per retrain).
+        let tax_budget = env.params.exploration_tax * env.human_only_cost();
+        if env.training_spend > 0.5 * tax_budget {
+            return Ok(Decision::Stop(StopReason::ExplorationTax));
+        }
+        self.acquisitions += 1;
+        Ok(Decision::Continue { delta })
+    }
+
+    /// The probe's budget is `probe_iters`, independent of
+    /// `params.max_iters` — widen the driver's safety net accordingly.
+    fn round_cap(&self, params: &RunParams) -> usize {
+        params.max_iters.max(self.probe_iters).saturating_add(2)
+    }
+
+    fn finalize(
+        self,
+        env: LabelingEnv<'_>,
+        _stop: StopReason,
+        _t0: Instant,
+    ) -> Result<ProbeResult> {
+        Ok(ProbeResult {
+            arch: env.arch,
+            c_star: self.last.map(|(c, _)| c),
+            b_probed: env.b_idx.len(),
+            training_spend: env.training_spend,
+            stable: self.last.map(|(_, s)| s).unwrap_or(false),
+        })
+    }
+}
+
+/// Probe a single candidate on a shadow ledger, returning the stabilized C*.
 fn probe(
     engine: &Engine,
     manifest: &Manifest,
@@ -54,70 +149,15 @@ fn probe(
         },
         shadow_ledger.clone(),
     );
-    let theta_grid = crate::cost::theta_grid();
-    let mut env = LabelingEnv::new(
-        engine,
-        manifest,
+    LabelingDriver::new(engine, manifest).run(
         ds,
         &shadow_service,
         shadow_ledger,
         arch,
         classes_tag,
         params.clone(),
-        theta_grid,
-    )?;
-
-    let delta = ((params.init_frac * ds.len() as f64).round() as usize).max(1);
-    let mut c_old: Option<f64> = None;
-    let mut last: Option<(f64, bool)> = None;
-    env.measure()?;
-    let tax_budget = env.params.exploration_tax * env.human_only_cost();
-    for _ in 0..probe_iters {
-        // A probe must not itself burn the exploration budget (EfficientNet
-        // on imagenet-syn costs hundreds of simulated dollars per retrain).
-        if env.training_spend > 0.5 * tax_budget {
-            break;
-        }
-        if env.acquire(delta)? == 0 {
-            break;
-        }
-        env.retrain()?;
-        env.measure()?;
-        let fits = env.fits();
-        if let Some(cm) = env.cost_model() {
-            let s = search_min_cost(&SearchInputs {
-                x_total: env.x_total(),
-                test_size: env.test_idx.len(),
-                b_cur: env.b_idx.len(),
-                delta,
-                price_per_label: price,
-                spent: env.ledger.total(),
-                epsilon: env.params.epsilon,
-                theta_grid: &env.theta_grid,
-                fits: &fits,
-                cost_model: &cm,
-            });
-            let stable = match c_old {
-                Some(old) => {
-                    (s.c_star - old).abs() / s.c_star.max(1e-9)
-                        <= env.params.stability_delta
-                }
-                None => false,
-            };
-            c_old = Some(s.c_star);
-            last = Some((s.c_star, stable && s.machine_labeling_viable));
-            if stable {
-                break;
-            }
-        }
-    }
-    Ok(ProbeResult {
-        arch,
-        c_star: last.map(|(c, _)| c),
-        b_probed: env.b_idx.len(),
-        training_spend: env.training_spend,
-        stable: last.map(|(_, s)| s).unwrap_or(false),
-    })
+        ProbePolicy::new(price, probe_iters),
+    )
 }
 
 /// Run MCAL with architecture selection: probe every candidate, commit to

@@ -1,12 +1,13 @@
 //! Budget-constrained MCAL (§4 "Accommodating a budget constraint"):
 //! minimize labeling error subject to a total dollar budget instead of
-//! minimizing cost subject to an error bound.
+//! minimizing cost subject to an error bound — a [`Policy`] over the shared
+//! [`LabelingDriver`] loop.
 //!
-//! The loop mirrors Alg. 1 with [`crate::cost::search_min_error`] replacing
-//! the min-cost search. The finalization differs in one key way (noted in
-//! §4): when the budget cannot cover human-labeling the residual, MCAL
-//! *must* machine-label enough of the pool to stay within budget, accepting
-//! the resulting error — there is no all-human fallback.
+//! The plan step mirrors Alg. 1 with [`crate::cost::search_min_error`]
+//! replacing the min-cost search. The finalization differs in one key way
+//! (noted in §4): when the budget cannot cover human-labeling the residual,
+//! MCAL *must* machine-label enough of the pool to stay within budget,
+//! accepting the resulting error — there is no all-human fallback.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -14,14 +15,13 @@ use std::time::Instant;
 use crate::annotation::{AnnotationService, Ledger};
 use crate::cost::{search_min_error, SearchInputs};
 use crate::dataset::Dataset;
-use crate::metrics;
 use crate::model::ArchKind;
 use crate::runtime::{Engine, Manifest};
-use crate::sampling;
 use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
 use super::events::{RunReport, StopReason};
+use super::policy::{finish_run, machine_label_top, Decision, LabelingDriver, Policy};
 
 /// Run budget-constrained MCAL. `budget` is the total dollar cap.
 pub fn run_budget(
@@ -35,36 +35,64 @@ pub fn run_budget(
     params: RunParams,
     budget: f64,
 ) -> Result<RunReport> {
-    let t0 = Instant::now();
-    let theta_grid = crate::cost::theta_grid();
-    let mut env = LabelingEnv::new(
-        engine,
-        manifest,
+    LabelingDriver::new(engine, manifest).run(
         ds,
         service,
         ledger,
         arch,
         classes_tag,
         params,
-        theta_grid,
-    )?;
+        BudgetPolicy::new(budget),
+    )
+}
 
-    let c_h = env.service.price_per_label();
-    let delta0 = ((env.params.init_frac * env.x_total() as f64).round() as usize).max(1);
-    let mut delta = delta0;
-    let mut err_old: Option<f64> = None;
-    let mut b_opt_plan: Option<usize> = None;
-    let mut stop = StopReason::MaxIters;
-    env.measure()?;
+/// §4's budget mode as a [`Policy`]: min-error search under a dollar cap,
+/// with budget-forced machine labeling at finalize.
+#[derive(Debug)]
+pub struct BudgetPolicy {
+    budget: f64,
+    /// Current acquisition batch δ (δ₀ until the first plan round).
+    delta: usize,
+    /// Last predicted overall error (stability reference).
+    err_old: Option<f64>,
+    /// Last planned B_opt from the min-error search.
+    b_opt_plan: Option<usize>,
+    /// Plan rounds completed (each maps to one acquisition).
+    iter: usize,
+}
 
-    for _ in 0..env.params.max_iters {
+impl BudgetPolicy {
+    pub fn new(budget: f64) -> Self {
+        BudgetPolicy {
+            budget,
+            delta: 0,
+            err_old: None,
+            b_opt_plan: None,
+            iter: 0,
+        }
+    }
+}
+
+impl Policy for BudgetPolicy {
+    type Output = RunReport;
+
+    fn plan(&mut self, env: &mut LabelingEnv<'_>, _profile: &[f64]) -> Result<Decision> {
+        if self.iter >= env.params.max_iters {
+            return Ok(Decision::Stop(StopReason::MaxIters));
+        }
+        let c_h = env.service.price_per_label();
+        let delta0 = ((env.params.init_frac * env.x_total() as f64).round() as usize).max(1);
+        if self.iter == 0 {
+            self.delta = delta0;
+        }
+
         let fits = env.fits();
         if let Some(cm) = env.cost_model() {
             let inp = SearchInputs {
                 x_total: env.x_total(),
                 test_size: env.test_idx.len(),
                 b_cur: env.b_idx.len(),
-                delta,
+                delta: self.delta,
                 price_per_label: c_h,
                 spent: env.ledger.total(),
                 epsilon: env.params.epsilon, // unused by min-error search
@@ -72,106 +100,56 @@ pub fn run_budget(
                 fits: &fits,
                 cost_model: &cm,
             };
-            if let Some(plan) = search_min_error(&inp, budget) {
-                let err_new =
-                    plan.s_size as f64 * plan.eps_machine / env.x_total() as f64;
-                let stable = err_old
+            if let Some(plan) = search_min_error(&inp, self.budget) {
+                let err_new = plan.s_size as f64 * plan.eps_machine / env.x_total() as f64;
+                let stable = self
+                    .err_old
                     .map(|old| (err_new - old).abs() <= 0.01 * old.max(1e-6) + 1e-4)
                     .unwrap_or(false);
-                b_opt_plan = Some(plan.b_opt);
+                self.b_opt_plan = Some(plan.b_opt);
                 if stable && env.b_idx.len() >= plan.b_opt {
-                    stop = StopReason::ReachedBOpt;
-                    break;
+                    return Ok(Decision::Stop(StopReason::ReachedBOpt));
                 }
-                err_old = Some(err_new);
-                delta = delta.max(delta0);
+                self.err_old = Some(err_new);
+                self.delta = self.delta.max(delta0);
             }
         }
 
         // Never train past the point where we could no longer afford to
         // machine-label the whole residual pool (that's the floor cost).
         let committed = env.ledger.total();
-        if committed + delta as f64 * c_h >= budget {
-            stop = StopReason::BudgetExhausted;
-            break;
+        if committed + self.delta as f64 * c_h >= self.budget {
+            return Ok(Decision::Stop(StopReason::BudgetExhausted));
         }
         let room = env.b_cap().saturating_sub(env.b_idx.len());
-        let want = match b_opt_plan {
-            Some(bo) if bo > env.b_idx.len() => delta.min(bo - env.b_idx.len()),
-            _ => delta,
+        let want = match self.b_opt_plan {
+            Some(bo) if bo > env.b_idx.len() => self.delta.min(bo - env.b_idx.len()),
+            _ => self.delta,
         }
         .min(room);
-        if want == 0 || env.pool.is_empty() {
-            stop = StopReason::PoolExhausted;
-            break;
-        }
-        if env.acquire(want)? == 0 {
-            stop = StopReason::PoolExhausted;
-            break;
-        }
-        env.retrain()?;
-        env.measure()?;
+        self.iter += 1;
+        Ok(Decision::Continue { delta: want })
     }
 
-    // ---- finalize under the budget --------------------------------------
-    // We must machine-label at least enough that the residual human labels
-    // fit in what's left of the budget.
-    let spent = env.ledger.total();
-    let remaining = (budget - spent).max(0.0);
-    let affordable_human = (remaining / c_h).floor() as usize;
-    let pool_n = env.pool.len();
-    let s_min = pool_n.saturating_sub(affordable_human);
+    /// Finalize under the budget: machine-label at least enough that the
+    /// residual human labels fit in what's left of it.
+    fn finalize(self, mut env: LabelingEnv<'_>, stop: StopReason, t0: Instant) -> Result<RunReport> {
+        let c_h = env.service.price_per_label();
+        let spent = env.ledger.total();
+        let remaining = (self.budget - spent).max(0.0);
+        let affordable_human = (remaining / c_h).floor() as usize;
+        let pool_n = env.pool.len();
+        let s_min = pool_n.saturating_sub(affordable_human);
 
-    // Error-optimal: machine-label only the most confident; take the max of
-    // s_min and the best measured-feasible θ (more machine labels only if
-    // they're free in error terms).
-    let profile = env.measure()?;
-    let (theta_feasible, _, _) = env.stop_now(&profile);
-    let s_feasible = (theta_feasible * pool_n as f64).floor() as usize;
-    let take = s_min.max(s_feasible).min(pool_n);
+        // Error-optimal: machine-label only the most confident; take the
+        // max of s_min and the best measured-feasible θ (more machine
+        // labels only if they're free in error terms).
+        let profile = env.measure()?;
+        let (theta_feasible, _, _) = env.stop_now(&profile);
+        let s_feasible = (theta_feasible * pool_n as f64).floor() as usize;
+        let take = s_min.max(s_feasible).min(pool_n);
 
-    let (s_indices, s_preds): (Vec<usize>, Vec<u32>) = if take > 0 {
-        let scores = env.session.predict(env.ds, &env.pool)?;
-        let ranked = sampling::rank_for_machine_labeling(&scores);
-        let mut idx = Vec::with_capacity(take);
-        let mut preds = Vec::with_capacity(take);
-        for &p in &ranked[..take] {
-            idx.push(env.pool[p]);
-            preds.push(scores.pred[p]);
-        }
-        (idx, preds)
-    } else {
-        (Vec::new(), Vec::new())
-    };
-
-    let in_s: std::collections::HashSet<usize> = s_indices.iter().copied().collect();
-    let residual: Vec<usize> = env
-        .pool
-        .iter()
-        .copied()
-        .filter(|i| !in_s.contains(i))
-        .collect();
-    env.service.label_batch(env.ds, &residual)?;
-
-    let machine_error = metrics::machine_error(env.ds, &s_indices, &s_preds);
-    let overall_error = metrics::overall_label_error(env.ds, &s_indices, &s_preds);
-
-    Ok(RunReport {
-        dataset: env.ds.name.clone(),
-        arch: env.arch.as_str().into(),
-        service: format!("{c_h:.4}"),
-        epsilon: env.params.epsilon,
-        x_total: env.x_total(),
-        test_size: env.test_idx.len(),
-        b_size: env.b_idx.len(),
-        s_size: s_indices.len(),
-        residual_human: residual.len(),
-        overall_error,
-        machine_error,
-        cost: env.ledger.snapshot(),
-        human_only_cost: env.human_only_cost(),
-        stop_reason: stop,
-        iterations: Vec::new(),
-        wall_secs: t0.elapsed().as_secs_f64(),
-    })
+        let (s_indices, s_preds) = machine_label_top(&mut env, take)?;
+        finish_run(env, s_indices, s_preds, stop, Vec::new(), t0)
+    }
 }

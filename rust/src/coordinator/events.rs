@@ -3,7 +3,12 @@
 //! Every driver in [`crate::experiments`] consumes these records to
 //! regenerate the paper's tables and figures, so they carry everything the
 //! evaluation needs: sizes, dollar breakdowns, predicted optima, measured
-//! errors.
+//! errors. [`IterationRecord`] sequences are produced by the policies
+//! riding the shared [`super::policy::LabelingDriver`] loop and are the
+//! golden-trajectory contract: for a fixed seed they must be bit-identical
+//! across refactors and across fleet job counts. `RunReport` additionally
+//! carries per-cell provenance (dataset, arch, service price, seed) so a
+//! row in a parallel sweep can always be traced back to its run.
 
 use crate::annotation::CostBreakdown;
 
@@ -59,6 +64,9 @@ pub struct RunReport {
     pub arch: String,
     pub service: String,
     pub epsilon: f64,
+    /// Seed the run was driven with (provenance: identifies the cell in a
+    /// multi-seed fleet sweep).
+    pub seed: u64,
     /// |X| (the whole dataset, test set included).
     pub x_total: usize,
     /// |T|.
@@ -99,7 +107,7 @@ impl RunReport {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "{} {} {}: total=${:.2} (human-only ${:.2}, savings {:.1}%) |B|={} ({:.1}%) |S|={} ({:.1}%) err={:.2}% stop={:?}",
+            "{} {} {}: total=${:.2} (human-only ${:.2}, savings {:.1}%) |B|={} ({:.1}%) |S|={} ({:.1}%) err={:.2}% stop={:?} seed={}",
             self.dataset,
             self.arch,
             self.service,
@@ -112,6 +120,7 @@ impl RunReport {
             self.machine_frac() * 100.0,
             self.overall_error * 100.0,
             self.stop_reason,
+            self.seed,
         )
     }
 }
@@ -126,6 +135,7 @@ mod tests {
             arch: "res18".into(),
             service: "amazon".into(),
             epsilon: 0.05,
+            seed: 7,
             x_total: 1000,
             test_size: 50,
             b_size: 100,

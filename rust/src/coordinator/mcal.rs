@@ -1,15 +1,17 @@
 //! The MCAL algorithm (Alg. 1): minimum-cost hybrid labeling for one
-//! candidate architecture.
+//! candidate architecture, as a [`Policy`] over the shared
+//! [`LabelingDriver`] loop.
 //!
-//! Loop structure mirrors the paper:
+//! The plan step mirrors the paper:
 //!
-//! 1. human-label T (5%) and B₀ (1%), train, measure ε_T(S^θ) per θ;
-//! 2. each iteration: acquire δ samples by M(.), retrain, re-measure,
-//!    refit the per-θ truncated power laws and the training-cost model,
-//!    run the joint (B, θ) search for (C*, B_opt, θ*);
+//! 1. setup (driver): human-label T (5%) and B₀ (1%), train, measure
+//!    ε_T(S^θ) per θ;
+//! 2. each plan round: refit the per-θ truncated power laws and the
+//!    training-cost model, run the joint (B, θ) search for
+//!    (C*, B_opt, θ*), record the iteration;
 //! 3. once C* stabilizes (Δ ≤ 5%), adapt δ toward B_opt (line 20);
-//! 4. terminate on: reached B_opt (stable), predicted cost rising,
-//!    exploration tax exceeded with no feasible plan, pool exhausted;
+//! 4. stop on: reached B_opt (stable), predicted cost rising, exploration
+//!    tax exceeded with no feasible plan, pool exhausted (driver);
 //! 5. finalize: train at B_opt, pick S* by L(.) under the measured
 //!    constraint, machine-label it, human-label the residual.
 
@@ -19,14 +21,13 @@ use std::time::Instant;
 use crate::annotation::{AnnotationService, Ledger};
 use crate::cost::{search_min_cost, SearchInputs};
 use crate::dataset::Dataset;
-use crate::metrics;
 use crate::model::ArchKind;
 use crate::runtime::{Engine, Manifest};
-use crate::sampling;
 use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
 use super::events::{IterationRecord, RunReport, StopReason};
+use super::policy::{finish_run, machine_label_top, Decision, LabelingDriver, Policy};
 
 /// Run MCAL for a single architecture. See [`super::archselect`] for the
 /// multi-candidate variant.
@@ -40,35 +41,54 @@ pub fn run_mcal(
     classes_tag: &str,
     params: RunParams,
 ) -> Result<RunReport> {
-    let t0 = Instant::now();
-    let theta_grid = crate::cost::theta_grid();
-    let mut env = LabelingEnv::new(
-        engine, manifest, ds, service, ledger, arch, classes_tag, params, theta_grid,
-    )?;
-    let outcome = run_mcal_loop(&mut env)?;
-    finalize(env, outcome, t0)
+    LabelingDriver::new(engine, manifest).run(
+        ds,
+        service,
+        ledger,
+        arch,
+        classes_tag,
+        params,
+        McalPolicy::new(),
+    )
 }
 
-/// Outcome of the optimizer loop, before final labeling.
-pub(super) struct LoopOutcome {
-    pub stop: StopReason,
-    pub b_opt: Option<usize>,
-    pub records: Vec<IterationRecord>,
+/// Alg. 1 as a [`Policy`]: joint (B, θ) search, C*-stability tracking,
+/// δ adaptation, exploration tax, and the B_opt finalization pass.
+#[derive(Debug, Default)]
+pub struct McalPolicy {
+    /// Current acquisition batch δ (δ₀ until the first adaptation).
+    delta: usize,
+    /// Last predicted C* (stability reference).
+    c_old: Option<f64>,
+    /// Consecutive rounds with rising predicted cost.
+    rising: usize,
+    /// Last viable predicted optimum B_opt (drives finalization).
+    b_opt: Option<usize>,
+    records: Vec<IterationRecord>,
 }
 
-pub(super) fn run_mcal_loop(env: &mut LabelingEnv) -> Result<LoopOutcome> {
-    let delta0 = ((env.params.init_frac * env.x_total() as f64).round() as usize).max(1);
-    let mut delta = delta0;
-    let mut c_old: Option<f64> = None;
-    let mut rising = 0usize;
-    let mut records = Vec::new();
-    let mut last_retrain_dollars = env.cost_obs.last().map(|&(_, d)| d).unwrap_or(0.0);
-    let mut profile = env.measure()?;
+impl McalPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
-    let mut stop = StopReason::MaxIters;
-    let mut b_opt_final: Option<usize> = None;
+impl Policy for McalPolicy {
+    type Output = RunReport;
 
-    for iter in 0..env.params.max_iters {
+    fn plan(&mut self, env: &mut LabelingEnv<'_>, profile: &[f64]) -> Result<Decision> {
+        // One record per plan round; its length doubles as the iteration
+        // counter the pre-Policy loop kept.
+        let iter = self.records.len();
+        if iter >= env.params.max_iters {
+            return Ok(Decision::Stop(StopReason::MaxIters));
+        }
+        let delta0 = ((env.params.init_frac * env.x_total() as f64).round() as usize).max(1);
+        if iter == 0 {
+            self.delta = delta0;
+        }
+        let delta = self.delta;
+
         // ---- predict optimum from current models -----------------------
         let fits = env.fits();
         let cost_model = env.cost_model();
@@ -87,7 +107,7 @@ pub(super) fn run_mcal_loop(env: &mut LabelingEnv) -> Result<LoopOutcome> {
             })
         });
 
-        let (c_new, stable) = match (&search, c_old) {
+        let (c_new, stable) = match (&search, self.c_old) {
             (Some(s), Some(old)) => {
                 let rel = (s.c_star - old).abs() / s.c_star.max(1e-9);
                 (Some(s.c_star), rel <= env.params.stability_delta)
@@ -96,15 +116,14 @@ pub(super) fn run_mcal_loop(env: &mut LabelingEnv) -> Result<LoopOutcome> {
             _ => (None, false),
         };
 
-        let (snow_theta, snow_cost, snow_frac) = env.stop_now(&profile);
-        let _ = snow_theta;
-        records.push(IterationRecord {
+        let (_, snow_cost, snow_frac) = env.stop_now(profile);
+        self.records.push(IterationRecord {
             iter,
             b_size: env.b_idx.len(),
             delta,
-            retrain_dollars: last_retrain_dollars,
+            retrain_dollars: env.cost_obs.last().map(|&(_, d)| d).unwrap_or(0.0),
             ledger_total: env.ledger.total(),
-            eps_profile: profile.clone(),
+            eps_profile: profile.to_vec(),
             c_star: c_new,
             b_opt: search.as_ref().map(|s| s.b_opt),
             theta_star: search.as_ref().map(|s| s.theta_star),
@@ -118,8 +137,7 @@ pub(super) fn run_mcal_loop(env: &mut LabelingEnv) -> Result<LoopOutcome> {
         // minimum number of fit points and minimum B growth before the
         // predictive termination paths may fire (Fig. 3: early-prefix fits
         // extrapolate poorly).
-        let explored_enough =
-            records.len() >= 5 && env.b_idx.len() >= 3 * delta0.max(1);
+        let explored_enough = self.records.len() >= 5 && env.b_idx.len() >= 3 * delta0.max(1);
         // Exploration tax (§5.1 fn. 5): if we've sunk more than x% of the
         // all-human cost into training and the predicted optimum still
         // isn't (meaningfully) beating all-human labeling, cut losses and
@@ -132,28 +150,25 @@ pub(super) fn run_mcal_loop(env: &mut LabelingEnv) -> Result<LoopOutcome> {
             .map(|s| s.machine_labeling_viable && s.c_star < 0.98 * env.human_only_cost())
             .unwrap_or(false);
         if env.training_spend > tax_budget && !plan_beats_human {
-            stop = StopReason::ExplorationTax;
-            b_opt_final = None;
-            break;
+            self.b_opt = None;
+            return Ok(Decision::Stop(StopReason::ExplorationTax));
         }
         if let Some(s) = &search {
             if s.machine_labeling_viable {
-                b_opt_final = Some(s.b_opt);
+                self.b_opt = Some(s.b_opt);
                 if stable && explored_enough && env.b_idx.len() >= s.b_opt {
-                    stop = StopReason::ReachedBOpt;
-                    break;
+                    return Ok(Decision::Stop(StopReason::ReachedBOpt));
                 }
             }
         }
-        if let (Some(new), Some(old)) = (c_new, c_old) {
+        if let (Some(new), Some(old)) = (c_new, self.c_old) {
             if new > old * 1.001 && explored_enough {
-                rising += 1;
-                if rising >= 2 {
-                    stop = StopReason::CostRising;
-                    break;
+                self.rising += 1;
+                if self.rising >= 2 {
+                    return Ok(Decision::Stop(StopReason::CostRising));
                 }
             } else {
-                rising = 0;
+                self.rising = 0;
             }
         }
 
@@ -161,10 +176,9 @@ pub(super) fn run_mcal_loop(env: &mut LabelingEnv) -> Result<LoopOutcome> {
         if stable {
             if let (Some(s), Some(cm)) = (&search, &cost_model) {
                 if s.machine_labeling_viable && s.b_opt > env.b_idx.len() {
-                    let future =
-                        cm.future_training(env.b_idx.len(), s.b_opt, delta);
+                    let future = cm.future_training(env.b_idx.len(), s.b_opt, delta);
                     let fixed = s.c_star - future;
-                    delta = crate::cost::adapt_delta(
+                    self.delta = crate::cost::adapt_delta(
                         cm,
                         env.b_idx.len(),
                         s.b_opt,
@@ -178,110 +192,50 @@ pub(super) fn run_mcal_loop(env: &mut LabelingEnv) -> Result<LoopOutcome> {
             }
         }
 
-        // ---- acquire / retrain / measure --------------------------------
+        // ---- next acquisition -------------------------------------------
         let room = env.b_cap().saturating_sub(env.b_idx.len());
-        let want = delta.min(room);
+        let want = self.delta.min(room);
         // Don't overshoot a known B_opt by more than one δ.
-        let want = match b_opt_final {
-            Some(bo) if stable && bo > env.b_idx.len() => {
-                want.min(bo - env.b_idx.len())
-            }
+        let want = match self.b_opt {
+            Some(bo) if stable && bo > env.b_idx.len() => want.min(bo - env.b_idx.len()),
             _ => want,
         };
-        if want == 0 || env.pool.is_empty() {
-            stop = StopReason::PoolExhausted;
-            break;
+        if c_new.is_some() {
+            self.c_old = c_new;
         }
-        let got = env.acquire(want)?;
-        if got == 0 {
-            stop = StopReason::PoolExhausted;
-            break;
-        }
-        last_retrain_dollars = env.retrain()?;
-        profile = env.measure()?;
-        c_old = c_new.or(c_old);
-        if let Some(c) = c_new {
-            c_old = Some(c);
-        }
+        Ok(Decision::Continue { delta: want })
     }
 
-    Ok(LoopOutcome { stop, b_opt: b_opt_final, records })
-}
-
-/// Final labeling pass: optionally grow B to B_opt (one shot), then pick
-/// S* by L(.) under the measured constraint, machine-label it, human-label
-/// the residual, and evaluate against groundtruth.
-pub(super) fn finalize(
-    mut env: LabelingEnv,
-    outcome: LoopOutcome,
-    t0: Instant,
-) -> Result<RunReport> {
-    // Grow to B_opt if the plan says so and we stopped short.
-    if let Some(b_opt) = outcome.b_opt {
-        let b_opt = b_opt.min(env.b_cap());
-        if b_opt > env.b_idx.len() && !env.pool.is_empty() {
-            let need = b_opt - env.b_idx.len();
-            env.acquire(need)?;
-            env.retrain()?;
+    /// Final labeling pass: optionally grow B to B_opt (one shot), then
+    /// pick S* by L(.) under the measured constraint, machine-label it,
+    /// human-label the residual, and evaluate against groundtruth.
+    fn finalize(self, mut env: LabelingEnv<'_>, stop: StopReason, t0: Instant) -> Result<RunReport> {
+        // Grow to B_opt if the plan says so and we stopped short.
+        if let Some(b_opt) = self.b_opt {
+            let b_opt = b_opt.min(env.b_cap());
+            if b_opt > env.b_idx.len() && !env.pool.is_empty() {
+                let need = b_opt - env.b_idx.len();
+                env.acquire(need)?;
+                env.retrain()?;
+            }
         }
+        let profile = env.measure()?;
+
+        // Largest measured-feasible θ on the *final* model. On the
+        // exploration-tax path the algorithm has declared machine labeling
+        // a failure (§5.1 fn. 5): everything goes to humans, mirroring the
+        // paper's ImageNet decision.
+        let theta = if stop == StopReason::ExplorationTax {
+            0.0
+        } else {
+            env.stop_now(&profile).0
+        };
+        let take = if theta > 0.0 {
+            (theta * env.pool.len() as f64).floor() as usize
+        } else {
+            0
+        };
+        let (s_indices, s_preds) = machine_label_top(&mut env, take)?;
+        finish_run(env, s_indices, s_preds, stop, self.records, t0)
     }
-    let profile = env.measure()?;
-
-    // Largest measured-feasible θ on the *final* model. On the
-    // exploration-tax path the algorithm has declared machine labeling a
-    // failure (§5.1 fn. 5): everything goes to humans, mirroring the
-    // paper's ImageNet decision.
-    let (theta, _, _) = if outcome.stop == StopReason::ExplorationTax {
-        (0.0, 0.0, 0.0)
-    } else {
-        env.stop_now(&profile)
-    };
-
-    let (s_indices, s_preds): (Vec<usize>, Vec<u32>) = if theta > 0.0 {
-        let scores = env.session.predict(env.ds, &env.pool)?;
-        let ranked = sampling::rank_for_machine_labeling(&scores);
-        let take = ((theta * env.pool.len() as f64).floor() as usize).min(ranked.len());
-        let mut idx = Vec::with_capacity(take);
-        let mut preds = Vec::with_capacity(take);
-        for &p in &ranked[..take] {
-            idx.push(env.pool[p]);
-            preds.push(scores.pred[p]);
-        }
-        (idx, preds)
-    } else {
-        (Vec::new(), Vec::new())
-    };
-
-    // Residual: human labels for everything not in S.
-    let in_s: std::collections::HashSet<usize> = s_indices.iter().copied().collect();
-    let residual: Vec<usize> = env
-        .pool
-        .iter()
-        .copied()
-        .filter(|i| !in_s.contains(i))
-        .collect();
-    env.service.label_batch(env.ds, &residual)?;
-
-    // Evaluation vs groundtruth (not visible to the algorithm above).
-    let machine_error = metrics::machine_error(env.ds, &s_indices, &s_preds);
-    let overall_error = metrics::overall_label_error(env.ds, &s_indices, &s_preds);
-
-    Ok(RunReport {
-        dataset: env.ds.name.clone(),
-        arch: env.arch.as_str().into(),
-        service: format!("{:.4}", env.service.price_per_label()),
-        epsilon: env.params.epsilon,
-        x_total: env.x_total(),
-        test_size: env.test_idx.len(),
-        b_size: env.b_idx.len(),
-        s_size: s_indices.len(),
-        residual_human: residual.len(),
-        overall_error,
-        machine_error,
-        cost: env.ledger.snapshot(),
-        human_only_cost: env.human_only_cost(),
-        stop_reason: outcome.stop,
-        iterations: outcome.records,
-        wall_secs: t0.elapsed().as_secs_f64(),
-    })
 }

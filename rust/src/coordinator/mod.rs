@@ -1,14 +1,28 @@
 //! L3 coordinator — the paper's system contribution.
 //!
-//! - [`mcal`]: Alg. 1 — the joint (B, θ, δ) minimum-cost optimizer.
-//! - [`albaseline`]: naive fixed-δ active learning + oracle-δ pricing
-//!   (the paper's comparison baselines, Figs. 8-10, Tbl. 2).
-//! - [`archselect`]: multi-candidate architecture selection (§4).
-//! - [`budget`]: the budget-constrained variant (§4).
+//! The coordinator is one shared loop and a family of pluggable policies:
+//!
+//! - [`policy`]: the seam — [`LabelingDriver`] owns the shared acquire →
+//!   retrain → measure cadence (split setup, termination bookkeeping),
+//!   and the [`Policy`] trait (`plan` → [`Decision`], plus a `finalize`
+//!   hook) owns the strategy. Every mode below is a `Policy` impl.
+//! - [`mcal`]: Alg. 1 — [`McalPolicy`], the joint (B, θ, δ) minimum-cost
+//!   optimizer.
+//! - [`budget`]: [`BudgetPolicy`], the budget-constrained variant (§4).
+//! - [`albaseline`]: [`NaiveAlPolicy`], naive fixed-δ active learning +
+//!   oracle-δ pricing (the paper's comparison baselines, Figs. 8-10,
+//!   Tbl. 2).
+//! - [`archselect`]: multi-candidate architecture selection (§4); its
+//!   probing phase is a private `ProbePolicy` on a shadow ledger.
 //! - [`env`]: shared run state (splits, acquisition, retraining,
-//!   measurement) used by all of the above.
-//! - [`events`]: per-iteration records and run reports consumed by the
-//!   experiment drivers.
+//!   measurement) the driver operates on.
+//! - [`events`]: per-iteration records and run reports (with per-run
+//!   provenance) consumed by the experiment drivers and the parallel
+//!   fleet ([`crate::experiments::fleet`]).
+//!
+//! To add a new labeling strategy, implement [`Policy`] and hand it to
+//! [`LabelingDriver::run`] — the loop, environment and report plumbing are
+//! shared; see ROADMAP.md "Adding a new policy".
 
 pub mod albaseline;
 pub mod archselect;
@@ -16,10 +30,12 @@ pub mod budget;
 pub mod env;
 pub mod events;
 pub mod mcal;
+pub mod policy;
 
-pub use albaseline::{run_al_trajectory, PricedStop, Trajectory};
+pub use albaseline::{run_al_trajectory, NaiveAlPolicy, PricedStop, TrajPoint, Trajectory};
 pub use archselect::{run_with_arch_selection, ProbeResult};
-pub use budget::run_budget;
+pub use budget::{run_budget, BudgetPolicy};
 pub use env::{LabelingEnv, RunParams};
 pub use events::{IterationRecord, RunReport, StopReason};
-pub use mcal::run_mcal;
+pub use mcal::{run_mcal, McalPolicy};
+pub use policy::{Decision, LabelingDriver, Policy};

@@ -1,0 +1,214 @@
+//! The `Policy` / `LabelingDriver` seam — the paper's one loop, written once.
+//!
+//! Every labeling mode in this repo (min-cost MCAL, budget-constrained MCAL,
+//! the naive-AL baselines, the arch-selection probe) is the same loop
+//!
+//! ```text
+//! setup: human-label T and B₀, train, measure ε_T(S^θ)
+//! repeat: plan → acquire δ → retrain → re-measure
+//! finally: machine-label S*, human-label the residual
+//! ```
+//!
+//! instantiated with a different *plan* step and a different *finalize*
+//! step. [`LabelingDriver`] owns everything shared — split setup, the
+//! acquire/retrain/measure cadence, pool-exhaustion and runaway-iteration
+//! bookkeeping — while a [`Policy`] owns only the decisions: how big the
+//! next acquisition is, when to stop, and what artifact the run produces.
+//!
+//! Adding a new stopping rule or selection strategy is therefore a new
+//! `Policy` impl (typically < 100 lines), not a fourth copy of the loop.
+//! See [`super::mcal::McalPolicy`], [`super::budget::BudgetPolicy`] and
+//! [`super::albaseline::NaiveAlPolicy`] for the three paper instantiations.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::annotation::{AnnotationService, Ledger};
+use crate::dataset::Dataset;
+use crate::metrics;
+use crate::model::ArchKind;
+use crate::runtime::{Engine, Manifest};
+use crate::sampling;
+use crate::Result;
+
+use super::env::{LabelingEnv, RunParams};
+use super::events::{IterationRecord, RunReport, StopReason};
+
+/// What a [`Policy`] wants the driver to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Acquire `delta` more human labels by `M(.)`, retrain, re-measure.
+    /// A `delta` of 0 (or an empty pool) ends the run as
+    /// [`StopReason::PoolExhausted`].
+    Continue { delta: usize },
+    /// Leave the loop with this reason; the policy's `finalize` runs next.
+    Stop(StopReason),
+}
+
+/// One labeling strategy plugged into the shared [`LabelingDriver`] loop.
+///
+/// `plan` is called once before the first acquisition (right after setup
+/// measured the initial ε-profile) and once after every retrain/re-measure,
+/// so a policy sees every profile exactly when the pre-refactor hand-rolled
+/// loops did. Policies bound their own iteration counts (the driver only
+/// keeps a `max_iters`-derived safety net) and keep all strategy state —
+/// δ adaptation, stability trackers, per-iteration records — in `self`.
+pub trait Policy {
+    /// The artifact the run produces ([`RunReport`], a trajectory, …).
+    type Output;
+
+    /// Inspect the freshly measured ε_T(S^θ) profile and decide.
+    fn plan(&mut self, env: &mut LabelingEnv<'_>, profile: &[f64]) -> Result<Decision>;
+
+    /// Consume the environment after the loop ended with `stop` and produce
+    /// the run artifact (final labeling pass, report assembly, …).
+    fn finalize(self, env: LabelingEnv<'_>, stop: StopReason, t0: Instant) -> Result<Self::Output>
+    where
+        Self: Sized;
+
+    /// Safety net on plan rounds the driver enforces on top of the policy's
+    /// own stopping rules. The default covers policies bounded by
+    /// `params.max_iters` (one acquisition per round, plus the
+    /// post-final-measure call); a policy with an independent iteration
+    /// budget (e.g. the arch-selection probe) must override this so the
+    /// driver never truncates it.
+    fn round_cap(&self, params: &RunParams) -> usize {
+        params.max_iters.saturating_add(2)
+    }
+}
+
+/// Owns the shared acquire → retrain → measure loop over a [`LabelingEnv`].
+pub struct LabelingDriver<'e> {
+    pub engine: &'e Engine,
+    pub manifest: &'e Manifest,
+}
+
+impl<'e> LabelingDriver<'e> {
+    pub fn new(engine: &'e Engine, manifest: &'e Manifest) -> Self {
+        LabelingDriver { engine, manifest }
+    }
+
+    /// Run one labeling session end to end: set up the splits (T, B₀,
+    /// pool), drive the loop until the policy stops, then hand the
+    /// environment to the policy's `finalize`.
+    pub fn run<P: Policy>(
+        &self,
+        ds: &Dataset,
+        service: &dyn AnnotationService,
+        ledger: Arc<Ledger>,
+        arch: ArchKind,
+        classes_tag: &str,
+        params: RunParams,
+        mut policy: P,
+    ) -> Result<P::Output> {
+        let t0 = Instant::now();
+        let theta_grid = crate::cost::theta_grid();
+        let mut env = LabelingEnv::new(
+            self.engine,
+            self.manifest,
+            ds,
+            service,
+            ledger,
+            arch,
+            classes_tag,
+            params,
+            theta_grid,
+        )?;
+        let stop = Self::drive(&mut env, &mut policy)?;
+        policy.finalize(env, stop, t0)
+    }
+
+    /// The shared loop over an already-constructed environment. Exposed so
+    /// callers that build their own `LabelingEnv` (calibration, tests) can
+    /// still drive it with a policy.
+    pub fn drive<P: Policy>(env: &mut LabelingEnv<'_>, policy: &mut P) -> Result<StopReason> {
+        let mut profile = env.measure()?;
+        // Policies bound their own iteration counts; this is only a safety
+        // net against a policy that never stops.
+        let hard_cap = policy.round_cap(&env.params);
+        for _ in 0..=hard_cap {
+            match policy.plan(env, &profile)? {
+                Decision::Stop(stop) => return Ok(stop),
+                Decision::Continue { delta } => {
+                    if delta == 0 || env.pool.is_empty() {
+                        return Ok(StopReason::PoolExhausted);
+                    }
+                    if env.acquire(delta)? == 0 {
+                        return Ok(StopReason::PoolExhausted);
+                    }
+                    env.retrain()?;
+                    profile = env.measure()?;
+                }
+            }
+        }
+        Ok(StopReason::MaxIters)
+    }
+}
+
+/// Machine-label the `take` most confident pool samples under the current
+/// model (the paper's L(.) ranking). Returns (dataset indices, predicted
+/// labels), aligned. `take == 0` performs no inference.
+pub(super) fn machine_label_top(
+    env: &mut LabelingEnv<'_>,
+    take: usize,
+) -> Result<(Vec<usize>, Vec<u32>)> {
+    if take == 0 || env.pool.is_empty() {
+        return Ok((Vec::new(), Vec::new()));
+    }
+    let scores = env.session.predict(env.ds, &env.pool)?;
+    let ranked = sampling::rank_for_machine_labeling(&scores);
+    let take = take.min(ranked.len());
+    let mut idx = Vec::with_capacity(take);
+    let mut preds = Vec::with_capacity(take);
+    for &p in &ranked[..take] {
+        idx.push(env.pool[p]);
+        preds.push(scores.pred[p]);
+    }
+    Ok((idx, preds))
+}
+
+/// Shared tail of every report-producing run: human-label everything not in
+/// S, evaluate against groundtruth, assemble the [`RunReport`] (including
+/// per-cell provenance: dataset, arch, service price, seed).
+pub(super) fn finish_run(
+    env: LabelingEnv<'_>,
+    s_indices: Vec<usize>,
+    s_preds: Vec<u32>,
+    stop: StopReason,
+    iterations: Vec<IterationRecord>,
+    t0: Instant,
+) -> Result<RunReport> {
+    let in_s: HashSet<usize> = s_indices.iter().copied().collect();
+    let residual: Vec<usize> = env
+        .pool
+        .iter()
+        .copied()
+        .filter(|i| !in_s.contains(i))
+        .collect();
+    env.service.label_batch(env.ds, &residual)?;
+
+    // Evaluation vs groundtruth (not visible to the policies above).
+    let machine_error = metrics::machine_error(env.ds, &s_indices, &s_preds);
+    let overall_error = metrics::overall_label_error(env.ds, &s_indices, &s_preds);
+
+    Ok(RunReport {
+        dataset: env.ds.name.clone(),
+        arch: env.arch.as_str().into(),
+        service: format!("{:.4}", env.service.price_per_label()),
+        epsilon: env.params.epsilon,
+        seed: env.params.seed,
+        x_total: env.x_total(),
+        test_size: env.test_idx.len(),
+        b_size: env.b_idx.len(),
+        s_size: s_indices.len(),
+        residual_human: residual.len(),
+        overall_error,
+        machine_error,
+        cost: env.ledger.snapshot(),
+        human_only_cost: env.human_only_cost(),
+        stop_reason: stop,
+        iterations,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -45,6 +45,9 @@ pub struct Ctx {
     pub results_dir: PathBuf,
     pub scale: Scale,
     pub seed: u64,
+    /// Fleet width for parallel sweeps (see [`super::fleet`]); 1 = serial.
+    /// Result CSVs are identical for any value — only wall-clock changes.
+    pub jobs: usize,
 }
 
 impl Ctx {
@@ -55,9 +58,59 @@ impl Ctx {
             results_dir: PathBuf::from(results_dir),
             scale,
             seed,
+            jobs: 1,
         })
     }
 
+    /// Set the fleet width; `0` means one worker per available core.
+    pub fn with_jobs(mut self, jobs: usize) -> Ctx {
+        self.jobs = if jobs == 0 { super::fleet::default_jobs() } else { jobs };
+        self
+    }
+
+    /// Write a fleet provenance table under `results/provenance/`.
+    /// Scheduling provenance is deliberately kept out of the result CSVs —
+    /// those must stay byte-identical across `--jobs` values.
+    pub fn write_provenance(
+        &self,
+        slug: &str,
+        title: &str,
+        cells: &[super::fleet::CellReport],
+    ) -> Result<()> {
+        super::fleet::provenance_table(title, self.jobs, cells)
+            .write_csv(self.results_dir.join("provenance"), slug)?;
+        Ok(())
+    }
+
+    /// Generate a preset dataset at the context scale.
+    pub fn dataset(&self, name: &str) -> Result<(Dataset, DatasetPreset)> {
+        self.view().dataset(name)
+    }
+
+    /// Fresh (ledger, service) pair for one run.
+    pub fn service(&self, svc: Service) -> (Arc<Ledger>, SimService) {
+        self.view().service(svc)
+    }
+
+    /// The engine-free view of this context. Fleet cell closures capture
+    /// this (it is `Copy + Sync`) instead of `&Ctx`: the engine is NOT
+    /// thread-safe, so each fleet worker gets its own (see
+    /// [`super::fleet::run_sweep`]).
+    pub fn view(&self) -> CtxView<'_> {
+        CtxView { manifest: &self.manifest, scale: self.scale, seed: self.seed }
+    }
+}
+
+/// Everything a fleet cell needs from a [`Ctx`] except the (thread-bound)
+/// engine: the manifest, the run scale and the base seed.
+#[derive(Clone, Copy)]
+pub struct CtxView<'a> {
+    pub manifest: &'a Manifest,
+    pub scale: Scale,
+    pub seed: u64,
+}
+
+impl CtxView<'_> {
     /// Generate a preset dataset at the context scale.
     pub fn dataset(&self, name: &str) -> Result<(Dataset, DatasetPreset)> {
         let p = preset(name, self.seed)?;

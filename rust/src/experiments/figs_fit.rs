@@ -14,17 +14,25 @@ use crate::powerlaw::{fit_plain, fit_truncated};
 use crate::report::Table;
 use crate::Result;
 
-use super::common::Ctx;
+use crate::runtime::Engine;
+
+use super::common::{Ctx, CtxView};
 
 /// Record one AL trajectory to use as the (B, ε_θ) observation source.
-fn observe(ctx: &Ctx, ds_name: &str, arch: ArchKind, delta_frac: f64) -> Result<Trajectory> {
-    let (ds, preset) = ctx.dataset(ds_name)?;
-    let (ledger, service) = ctx.service(Service::Amazon);
-    let params = RunParams { seed: ctx.seed, ..Default::default() };
+fn observe(
+    view: &CtxView<'_>,
+    engine: &Engine,
+    ds_name: &str,
+    arch: ArchKind,
+    delta_frac: f64,
+) -> Result<Trajectory> {
+    let (ds, preset) = view.dataset(ds_name)?;
+    let (ledger, service) = view.service(Service::Amazon);
+    let params = RunParams { seed: view.seed, ..Default::default() };
     let delta = ((delta_frac * ds.len() as f64).round() as usize).max(1);
     run_al_trajectory(
-        &ctx.engine,
-        &ctx.manifest,
+        engine,
+        view.manifest,
         &ds,
         &service,
         ledger,
@@ -54,7 +62,7 @@ fn points_for(traj: &Trajectory, theta: f64) -> Vec<(f64, f64)> {
 }
 
 pub fn fig2_fig3(ctx: &Ctx) -> Result<(Table, Table)> {
-    let traj = observe(ctx, "cifar10-syn", ArchKind::Res18, 0.02)?;
+    let traj = observe(&ctx.view(), &ctx.engine, "cifar10-syn", ArchKind::Res18, 0.02)?;
 
     let mut fig2 = Table::new(
         "Figure 2 — power law vs truncated power law (cifar10-syn, res18)",
@@ -107,32 +115,48 @@ pub fn fig2_fig3(ctx: &Ctx) -> Result<(Table, Table)> {
     Ok((fig2, fig3))
 }
 
-/// Figures 22-27: fit grid over dataset × architecture at θ = 0.5.
+/// Figures 22-27: fit grid over dataset × architecture at θ = 0.5. One
+/// fleet cell per (dataset × arch) trajectory.
 pub fn fig22_27(ctx: &Ctx) -> Result<Table> {
+    let mut cells: Vec<(&str, ArchKind)> = Vec::new();
+    for ds_name in ["cifar10-syn", "cifar100-syn"] {
+        for arch in [ArchKind::Cnn18, ArchKind::Res18, ArchKind::Res50] {
+            cells.push((ds_name, arch));
+        }
+    }
+    let labels: Vec<String> = cells
+        .iter()
+        .map(|(d, a)| format!("{d}/{}", a.as_str()))
+        .collect();
+    let view = ctx.view();
+    let (trajs, cell_reports) = super::fleet::run_sweep(ctx, &labels, |i, engine| {
+        let (ds_name, arch) = cells[i];
+        let traj = observe(&view, engine, ds_name, arch, 0.033)?;
+        log::info!("fig22_27: {ds_name} {arch} done ({} points)", traj.points.len());
+        Ok(traj)
+    })?;
+    ctx.write_provenance("fig22_27_cells", "Figures 22-27 fleet cells", &cell_reports)?;
+
     let mut table = Table::new(
         "Figures 22-27 — fit grid (theta = 0.5)",
         &["dataset", "arch", "b", "observed", "powerlaw_fit", "truncated_fit"],
     );
-    for ds_name in ["cifar10-syn", "cifar100-syn"] {
-        for arch in [ArchKind::Cnn18, ArchKind::Res18, ArchKind::Res50] {
-            let traj = observe(ctx, ds_name, arch, 0.033)?;
-            let pts = points_for(&traj, 0.5);
-            if pts.len() < 4 {
-                continue;
-            }
-            let plain = fit_plain(&pts, None)?;
-            let trunc = fit_truncated(&pts, None).unwrap_or(plain);
-            for &(b, e) in &pts {
-                table.push_row([
-                    ds_name.to_string(),
-                    arch.as_str().to_string(),
-                    format!("{b:.0}"),
-                    format!("{e:.5}"),
-                    format!("{:.5}", plain.predict(b)),
-                    format!("{:.5}", trunc.predict(b)),
-                ]);
-            }
-            log::info!("fig22_27: {ds_name} {arch} done ({} pts)", pts.len());
+    for (&(ds_name, arch), traj) in cells.iter().zip(trajs.iter()) {
+        let pts = points_for(traj, 0.5);
+        if pts.len() < 4 {
+            continue;
+        }
+        let plain = fit_plain(&pts, None)?;
+        let trunc = fit_truncated(&pts, None).unwrap_or(plain);
+        for &(b, e) in &pts {
+            table.push_row([
+                ds_name.to_string(),
+                arch.as_str().to_string(),
+                format!("{b:.0}"),
+                format!("{e:.5}"),
+                format!("{:.5}", plain.predict(b)),
+                format!("{:.5}", trunc.predict(b)),
+            ]);
         }
     }
     table.write_csv(&ctx.results_dir, "fig22_27_fit_grid")?;

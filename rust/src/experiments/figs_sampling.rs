@@ -17,22 +17,25 @@ use crate::sampling::{self, Metric};
 use crate::Result;
 
 use super::common::Ctx;
+use super::fleet;
 
 /// Fig. 4: train to (roughly) the same |B| with different δ and compare the
-/// resulting error profiles.
+/// resulting error profiles. One fleet cell per δ.
 pub fn fig4(ctx: &Ctx, ds_name: &str, b_target_frac: f64) -> Result<Table> {
-    let mut table = Table::new(
-        "Figure 4 — eps(S^theta) dependence on delta",
-        &["delta_frac", "b_reached", "theta", "eps"],
-    );
-    for &dfrac in &[0.01, 0.02, 0.05, 0.10] {
-        let (ds, preset) = ctx.dataset(ds_name)?;
-        let (ledger, service) = ctx.service(Service::Amazon);
-        let params = RunParams { seed: ctx.seed, ..Default::default() };
+    let dfracs = [0.01, 0.02, 0.05, 0.10];
+    let labels: Vec<String> = dfracs.iter().map(|d| format!("{ds_name}/d{d:.3}")).collect();
+    // One shared read-only dataset for all cells (generation is
+    // deterministic, so this matches per-cell regeneration exactly).
+    let (ds, preset) = ctx.dataset(ds_name)?;
+    let view = ctx.view();
+    let (trajs, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+        let dfrac = dfracs[i];
+        let (ledger, service) = view.service(Service::Amazon);
+        let params = RunParams { seed: view.seed, ..Default::default() };
         let delta = ((dfrac * ds.len() as f64).round() as usize).max(1);
-        let traj = run_al_trajectory(
-            &ctx.engine,
-            &ctx.manifest,
+        run_al_trajectory(
+            engine,
+            view.manifest,
             &ds,
             &service,
             ledger,
@@ -41,9 +44,17 @@ pub fn fig4(ctx: &Ctx, ds_name: &str, b_target_frac: f64) -> Result<Table> {
             params,
             delta,
             b_target_frac,
-        )?;
+        )
+    })?;
+    ctx.write_provenance("fig4_cells", "Figure 4 fleet cells", &cell_reports)?;
+
+    let mut table = Table::new(
+        "Figure 4 — eps(S^theta) dependence on delta",
+        &["delta_frac", "b_reached", "theta", "eps"],
+    );
+    for (&dfrac, traj) in dfracs.iter().zip(trajs.iter()) {
         // Use the point closest to the target |B|.
-        let b_target = (b_target_frac * ds.len() as f64 * 0.9) as usize;
+        let b_target = (b_target_frac * traj.x_total as f64 * 0.9) as usize;
         let point = traj
             .points
             .iter()
@@ -179,29 +190,33 @@ pub fn fig5_fig6(ctx: &Ctx, ds_name: &str, b_frac: f64) -> Result<(Table, Table)
     Ok((fig5, fig6))
 }
 
-/// Fig. 11: MCAL end-to-end per acquisition metric.
+/// Fig. 11: MCAL end-to-end per acquisition metric. One fleet cell per
+/// M(.) candidate.
 pub fn fig11(ctx: &Ctx, ds_name: &str) -> Result<Table> {
-    let mut table = Table::new(
-        "Figure 11 — MCAL cost by sampling metric (res18)",
-        &["metric", "total_cost", "savings", "machine_frac", "b_frac", "error"],
-    );
-    for metric in [
+    let metrics = [
         Metric::Margin,
         Metric::Entropy,
         Metric::LeastConfidence,
         Metric::KCenter,
         Metric::Random,
-    ] {
-        let (ds, preset) = ctx.dataset(ds_name)?;
-        let (ledger, service) = ctx.service(Service::Amazon);
+    ];
+    let labels: Vec<String> = metrics
+        .iter()
+        .map(|m| format!("{ds_name}/{}", m.as_str()))
+        .collect();
+    let (ds, preset) = ctx.dataset(ds_name)?;
+    let view = ctx.view();
+    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+        let metric = metrics[i];
+        let (ledger, service) = view.service(Service::Amazon);
         let params = RunParams {
-            seed: ctx.seed,
+            seed: view.seed,
             metric,
             ..Default::default()
         };
         let report = run_mcal(
-            &ctx.engine,
-            &ctx.manifest,
+            engine,
+            view.manifest,
             &ds,
             &service,
             Arc::clone(&ledger),
@@ -210,6 +225,15 @@ pub fn fig11(ctx: &Ctx, ds_name: &str) -> Result<Table> {
             params,
         )?;
         log::info!("fig11 {}: {}", metric.as_str(), report.summary());
+        Ok(report)
+    })?;
+    ctx.write_provenance("fig11_cells", "Figure 11 fleet cells", &cell_reports)?;
+
+    let mut table = Table::new(
+        "Figure 11 — MCAL cost by sampling metric (res18)",
+        &["metric", "total_cost", "savings", "machine_frac", "b_frac", "error"],
+    );
+    for (metric, report) in metrics.iter().zip(reports.iter()) {
         table.push_row([
             metric.as_str().to_string(),
             dollars(report.cost.total()),

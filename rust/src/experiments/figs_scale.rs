@@ -14,25 +14,27 @@ use crate::sampling::Metric;
 use crate::Result;
 
 use super::common::{Ctx, Scale};
+use super::fleet;
 
-/// Fig. 13: subsets of CIFAR-10 with varying samples/class.
+/// Fig. 13: subsets of CIFAR-10 with varying samples/class. One fleet cell
+/// per subset size.
 pub fn fig13(ctx: &Ctx) -> Result<Table> {
-    let mut table = Table::new(
-        "Figure 13 — MCAL on CIFAR-10 subsets (res18)",
-        &["per_class", "total_cost", "human_cost", "savings", "machine_frac", "b_frac"],
-    );
     let per_class_grid: &[usize] = match ctx.scale {
         Scale::Full => &[1000, 2000, 3000, 4000, 5000],
         _ => &[100, 300, 500],
     };
-    for &pc in per_class_grid {
-        let (full, preset) = ctx.dataset("cifar10-syn")?;
+    let labels: Vec<String> = per_class_grid.iter().map(|pc| format!("pc{pc}")).collect();
+    // Generate the full dataset once; each cell takes its own subset.
+    let (full, preset) = ctx.dataset("cifar10-syn")?;
+    let view = ctx.view();
+    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+        let pc = per_class_grid[i];
         let ds = full.subset_per_class(pc.min(full.len() / full.num_classes))?;
-        let (ledger, service) = ctx.service(Service::Amazon);
-        let params = RunParams { seed: ctx.seed, ..Default::default() };
+        let (ledger, service) = view.service(Service::Amazon);
+        let params = RunParams { seed: view.seed, ..Default::default() };
         let report = run_mcal(
-            &ctx.engine,
-            &ctx.manifest,
+            engine,
+            view.manifest,
             &ds,
             &service,
             ledger,
@@ -41,6 +43,15 @@ pub fn fig13(ctx: &Ctx) -> Result<Table> {
             params,
         )?;
         log::info!("fig13 pc={pc}: {}", report.summary());
+        Ok(report)
+    })?;
+    ctx.write_provenance("fig13_cells", "Figure 13 fleet cells", &cell_reports)?;
+
+    let mut table = Table::new(
+        "Figure 13 — MCAL on CIFAR-10 subsets (res18)",
+        &["per_class", "total_cost", "human_cost", "savings", "machine_frac", "b_frac"],
+    );
+    for (pc, report) in per_class_grid.iter().zip(reports.iter()) {
         table.push_row([
             pc.to_string(),
             dollars(report.cost.total()),
@@ -55,51 +66,75 @@ pub fn fig13(ctx: &Ctx) -> Result<Table> {
 }
 
 /// Figs. 14/15: AL gains — MCAL with margin M(.) vs random M(.) (the
-/// "without AL" strawman), for both services.
+/// "without AL" strawman), for both services. One fleet cell per
+/// (dataset × service × metric).
 pub fn fig14_15(ctx: &Ctx, datasets: &[&str]) -> Result<Table> {
+    let services = [Service::Amazon, Service::Satyam];
+    let metrics = [Metric::Margin, Metric::Random];
+    let mut cells: Vec<(&str, Service, Metric)> = Vec::new();
+    for &ds_name in datasets {
+        for svc in services {
+            for metric in metrics {
+                cells.push((ds_name, svc, metric));
+            }
+        }
+    }
+    let labels: Vec<String> = cells
+        .iter()
+        .map(|(d, s, m)| format!("{d}/{}/{}", s.name(), m.as_str()))
+        .collect();
+    // One shared read-only copy of each dataset for its four cells.
+    let mut loaded = Vec::new();
+    for &ds_name in datasets {
+        loaded.push(ctx.dataset(ds_name)?);
+    }
+    let view = ctx.view();
+    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+        let (_, svc, metric) = cells[i];
+        let (ds, preset) = &loaded[i / (services.len() * metrics.len())];
+        let (ledger, service) = view.service(svc);
+        let params = RunParams {
+            seed: view.seed,
+            metric,
+            ..Default::default()
+        };
+        run_mcal(
+            engine,
+            view.manifest,
+            ds,
+            &service,
+            ledger,
+            ArchKind::Res18,
+            preset.classes_tag,
+            params,
+        )
+    })?;
+    ctx.write_provenance("fig14_15_cells", "Figures 14/15 fleet cells", &cell_reports)?;
+
     let mut table = Table::new(
         "Figures 14/15 — gains from active learning",
         &["dataset", "service", "with_al_cost", "without_al_cost", "al_gain"],
     );
-    for &ds_name in datasets {
-        for svc in [Service::Amazon, Service::Satyam] {
-            let mut costs = Vec::new();
-            for metric in [Metric::Margin, Metric::Random] {
-                let (ds, preset) = ctx.dataset(ds_name)?;
-                let (ledger, service) = ctx.service(svc);
-                let params = RunParams {
-                    seed: ctx.seed,
-                    metric,
-                    ..Default::default()
-                };
-                let report = run_mcal(
-                    &ctx.engine,
-                    &ctx.manifest,
-                    &ds,
-                    &service,
-                    ledger,
-                    ArchKind::Res18,
-                    preset.classes_tag,
-                    params,
-                )?;
-                costs.push(report.cost.total());
-            }
-            let gain = 1.0 - costs[0] / costs[1];
-            log::info!(
-                "fig14_15 {ds_name} {}: AL ${:.2} vs no-AL ${:.2} ({:.1}%)",
-                svc.name(),
-                costs[0],
-                costs[1],
-                gain * 100.0
-            );
-            table.push_row([
-                ds_name.to_string(),
-                svc.name(),
-                dollars(costs[0]),
-                dollars(costs[1]),
-                pct(gain),
-            ]);
-        }
+    // Cells arrive (margin, random) per (dataset × service) pair.
+    for pair in reports.chunks(2).zip(cells.chunks(2)) {
+        let (chunk, meta) = pair;
+        let (ds_name, svc, _) = meta[0];
+        let costs = [chunk[0].cost.total(), chunk[1].cost.total()];
+        let gain = 1.0 - costs[0] / costs[1];
+        log::info!(
+            "fig14_15 {ds_name} {}: AL ${:.2} vs no-AL ${:.2} ({:.1}%)",
+            svc.name(),
+            costs[0],
+            costs[1],
+            gain * 100.0
+        );
+        table.push_row([
+            ds_name.to_string(),
+            svc.name(),
+            dollars(costs[0]),
+            dollars(costs[1]),
+            pct(gain),
+        ]);
     }
     table.write_csv(&ctx.results_dir, "fig14_15_al_gains")?;
     Ok(table)

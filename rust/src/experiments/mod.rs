@@ -1,10 +1,18 @@
 //! Experiment drivers: one per paper table/figure (see DESIGN.md §4).
 //!
-//! `mcal exp <id> [--scale full|bench|smoke] [--seed N]` runs a driver,
-//! prints the resulting table(s) as markdown, and writes CSVs under
+//! `mcal exp <id> [--scale full|bench|smoke] [--seed N] [--jobs N]` runs a
+//! driver, prints the resulting table(s) as markdown, and writes CSVs under
 //! `results/`. `mcal exp all` runs the full suite in order.
+//!
+//! Drivers submit their (dataset × arch × service × δ) grids as cells to
+//! the [`fleet`] runner, which shards them across `--jobs` workers
+//! (default: every core). The manifest and generated datasets are shared
+//! read-only; each worker owns its own engine (the PJRT binding is not
+//! thread-safe). Result CSVs are byte-identical for any `--jobs` value;
+//! scheduling details land in `results/provenance/`.
 
 pub mod common;
+pub mod fleet;
 pub mod figs_fit;
 pub mod figs_sampling;
 pub mod figs_scale;
@@ -43,7 +51,8 @@ pub fn dispatch(args: &Args) -> Result<()> {
         args.opt_or("results", "results"),
         scale,
         args.u64_or("seed", 42)?,
-    )?;
+    )?
+    .with_jobs(args.jobs()?);
     run_experiment(&ctx, &id, args)
 }
 

@@ -2,18 +2,65 @@
 //! labeling service, with automatic architecture selection.
 //!
 //! Paper row shape: dataset, service, |B|/|X|, |S|/|X|, DNN selected,
-//! error, human cost, MCAL cost, savings.
+//! error, human cost, MCAL cost, savings. The (dataset × service) cells
+//! run on the [`super::fleet`]; rows are assembled in grid order so the
+//! CSV is identical for any `--jobs` value.
 
 use crate::annotation::Service;
 use crate::coordinator::{run_with_arch_selection, RunParams};
+use crate::dataset::{Dataset, DatasetPreset};
 use crate::report::{dollars, pct, Table};
 use crate::Result;
 
 use super::common::Ctx;
+use super::fleet;
 
 pub const DATASETS: [&str; 3] = ["fashion-syn", "cifar10-syn", "cifar100-syn"];
 
 pub fn run(ctx: &Ctx, services: &[Service], probe_iters: usize) -> Result<Table> {
+    // Generate each dataset once; cells share them read-only.
+    let mut loaded: Vec<(Dataset, DatasetPreset)> = Vec::new();
+    for ds_name in DATASETS {
+        loaded.push(ctx.dataset(ds_name)?);
+    }
+
+    // Cell grid: (dataset × service), in row order.
+    let cells: Vec<(usize, Service)> = (0..loaded.len())
+        .flat_map(|di| services.iter().map(move |&svc| (di, svc)))
+        .collect();
+    let labels: Vec<String> = cells
+        .iter()
+        .map(|&(di, svc)| format!("{}/{}", DATASETS[di], svc.name()))
+        .collect();
+
+    let view = ctx.view();
+    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+        let (di, svc) = cells[i];
+        let (ds, preset) = &loaded[di];
+        let (ledger, service) = view.service(svc);
+        let params = RunParams { seed: view.seed, ..Default::default() };
+        let (report, probes) = run_with_arch_selection(
+            engine,
+            view.manifest,
+            ds,
+            &service,
+            ledger,
+            &preset.candidate_archs,
+            preset.classes_tag,
+            params,
+            probe_iters,
+        )?;
+        log::info!("table1: {}", report.summary());
+        for p in &probes {
+            log::debug!(
+                "  probe {}: C*={:?} stable={} train=${:.2}",
+                p.arch, p.c_star, p.stable, p.training_spend
+            );
+        }
+        Ok(report)
+    })?;
+    ctx.write_provenance("table1_cells", "Table 1 fleet cells", &cell_reports)?;
+
     let mut table = Table::new(
         "Table 1 / Figure 7 — Summary of results (MCAL, auto-arch)",
         &[
@@ -21,44 +68,21 @@ pub fn run(ctx: &Ctx, services: &[Service], probe_iters: usize) -> Result<Table>
             "mcal_cost", "savings", "train_cost", "explore_cost", "stop",
         ],
     );
-    for ds_name in DATASETS {
-        let (ds, preset) = ctx.dataset(ds_name)?;
-        for &svc in services {
-            let (ledger, service) = ctx.service(svc);
-            let params = RunParams { seed: ctx.seed, ..Default::default() };
-            let (report, probes) = run_with_arch_selection(
-                &ctx.engine,
-                &ctx.manifest,
-                &ds,
-                &service,
-                ledger,
-                &preset.candidate_archs,
-                preset.classes_tag,
-                params,
-                probe_iters,
-            )?;
-            log::info!("table1: {}", report.summary());
-            for p in &probes {
-                log::debug!(
-                    "  probe {}: C*={:?} stable={} train=${:.2}",
-                    p.arch, p.c_star, p.stable, p.training_spend
-                );
-            }
-            table.push_row([
-                ds_name.to_string(),
-                svc.name(),
-                pct(report.b_frac()),
-                pct(report.machine_frac()),
-                report.arch.clone(),
-                pct(report.overall_error),
-                dollars(report.human_only_cost),
-                dollars(report.cost.total()),
-                pct(report.savings()),
-                dollars(report.cost.training),
-                dollars(report.cost.exploration),
-                format!("{:?}", report.stop_reason),
-            ]);
-        }
+    for (&(di, svc), report) in cells.iter().zip(reports.iter()) {
+        table.push_row([
+            DATASETS[di].to_string(),
+            svc.name(),
+            pct(report.b_frac()),
+            pct(report.machine_frac()),
+            report.arch.clone(),
+            pct(report.overall_error),
+            dollars(report.human_only_cost),
+            dollars(report.cost.total()),
+            pct(report.savings()),
+            dollars(report.cost.training),
+            dollars(report.cost.exploration),
+            format!("{:?}", report.stop_reason),
+        ]);
     }
     table.write_csv(&ctx.results_dir, "table1")?;
     Ok(table)

@@ -2,7 +2,10 @@
 //!
 //! One price-independent AL trajectory is recorded per (dataset, arch, δ);
 //! each trajectory is then priced for both services (Amazon $0.04, Satyam
-//! $0.003). Emitted artifacts:
+//! $0.003). The (dataset × arch × δ) grid is sharded across cores by the
+//! [`super::fleet`] runner — every cell owns its ledger/service and PRNG
+//! stream, so the emitted CSVs are byte-identical for any `--jobs` value.
+//! Emitted artifacts:
 //!
 //! - `table2.csv` — δ_opt / cost / savings per dataset × arch × service
 //!   (the paper's Table 2);
@@ -10,23 +13,28 @@
 //!   MCAL and human-only reference lines (Figures 8-10 Amazon, 16-18
 //!   Satyam);
 //! - `fig12.csv` — machine-labeled fraction vs δ (Figure 12);
-//! - `fig19_21.csv` — training-cost component vs δ (Figures 19-21).
+//! - `fig19_21.csv` — training-cost component vs δ (Figures 19-21);
+//! - `provenance/table2_cells.csv` — which worker ran which cell, and how
+//!   long it took (scheduling record, not part of the result contract).
 
 use crate::annotation::Service;
 use crate::coordinator::{run_al_trajectory, RunParams, Trajectory};
+use crate::dataset::{Dataset, DatasetPreset};
+use crate::model::ArchKind;
 use crate::report::{dollars, pct, Table};
 use crate::Result;
 
 use super::common::{Ctx, Scale};
+use super::fleet;
 
 /// δ grid as fractions of |X| (paper: 1%-20%; reported δ_opt values are
 /// 1.7-16.7%).
 pub fn delta_grid(scale: Scale) -> Vec<f64> {
     match scale {
         Scale::Full => vec![0.01, 0.02, 0.033, 0.067, 0.10, 0.167],
-        // Bench runs on a single-core box: 4 δ points × 3 archs × 3
-        // datasets = 36 trajectories keeps the sweep under ~20 min while
-        // still bracketing the paper's reported δ_opt values (1.7-16.7%).
+        // Bench keeps 4 δ points × 3 archs × 3 datasets = 36 trajectories;
+        // the fleet shards them across cores, and the grid still brackets
+        // the paper's reported δ_opt values (1.7-16.7%).
         Scale::Bench => vec![0.02, 0.033, 0.067, 0.167],
         Scale::Smoke => vec![0.02, 0.067],
     }
@@ -37,10 +45,77 @@ pub struct SweepOutput {
     pub trajectories: Vec<Trajectory>,
 }
 
+/// One cell of the sweep grid.
+struct Cell<'a> {
+    ds_name: &'a str,
+    ds: &'a Dataset,
+    preset: &'a DatasetPreset,
+    arch: ArchKind,
+    dfrac: f64,
+}
+
 pub fn run(ctx: &Ctx, datasets: &[&str], epsilon: f64) -> Result<SweepOutput> {
     let deltas = delta_grid(ctx.scale);
     let services = [Service::Amazon, Service::Satyam];
 
+    // Generate each dataset once; cells share them read-only.
+    let mut loaded: Vec<(&str, Dataset, DatasetPreset)> = Vec::new();
+    for &ds_name in datasets {
+        let (ds, preset) = ctx.dataset(ds_name)?;
+        loaded.push((ds_name, ds, preset));
+    }
+
+    // The (dataset × arch × δ) grid, in the order the serial sweep used —
+    // assembly below depends on it.
+    let mut cells: Vec<Cell> = Vec::new();
+    for &(ds_name, ref ds, ref preset) in &loaded {
+        for &arch in &preset.candidate_archs {
+            for &dfrac in &deltas {
+                cells.push(Cell { ds_name, ds, preset, arch, dfrac });
+            }
+        }
+    }
+    let labels: Vec<String> = cells
+        .iter()
+        .map(|c| format!("{}/{}/d{:.3}", c.ds_name, c.arch, c.dfrac))
+        .collect();
+
+    // Trajectories are price-independent: record each once with a
+    // throwaway ledger/service. Per-cell seeds match the serial sweep.
+    let view = ctx.view();
+    let (trajectories, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+        let c = &cells[i];
+        let delta = ((c.dfrac * c.ds.len() as f64).round() as usize).max(1);
+        let (ledger, service) = view.service(Service::Amazon);
+        let params = RunParams {
+            seed: view.seed.wrapping_add(delta as u64),
+            ..Default::default()
+        };
+        let traj = run_al_trajectory(
+            engine,
+            view.manifest,
+            c.ds,
+            &service,
+            ledger,
+            c.arch,
+            c.preset.classes_tag,
+            params,
+            delta,
+            0.6,
+        )?;
+        log::info!(
+            "table2: {} {} δ={:.3} -> {} points ({:.1}s)",
+            c.ds_name,
+            c.arch,
+            c.dfrac,
+            traj.points.len(),
+            traj.wall_secs
+        );
+        Ok(traj)
+    })?;
+    ctx.write_provenance("table2_cells", "Table 2 fleet cells", &cell_reports)?;
+
+    // ---- deterministic assembly, in cell order --------------------------
     let mut table2 = Table::new(
         "Table 2 — Oracle-assisted active learning",
         &[
@@ -60,42 +135,18 @@ pub fn run(ctx: &Ctx, datasets: &[&str], epsilon: f64) -> Result<SweepOutput> {
         &["dataset", "arch", "delta_frac", "machine_frac"],
     );
 
-    let mut trajectories = Vec::new();
-    for &ds_name in datasets {
-        let (ds, preset) = ctx.dataset(ds_name)?;
-        for &arch in &preset.candidate_archs {
+    let mut ci = 0usize;
+    for &(ds_name, ref ds, ref preset) in &loaded {
+        for _arch in &preset.candidate_archs {
             for &dfrac in &deltas {
-                let delta = ((dfrac * ds.len() as f64).round() as usize).max(1);
-                // Trajectories are price-independent: record once with a
-                // throwaway ledger/service.
-                let (ledger, service) = ctx.service(Service::Amazon);
-                let params = RunParams {
-                    seed: ctx.seed.wrapping_add(delta as u64),
-                    ..Default::default()
-                };
-                let traj = run_al_trajectory(
-                    &ctx.engine,
-                    &ctx.manifest,
-                    &ds,
-                    &service,
-                    ledger,
-                    arch,
-                    preset.classes_tag,
-                    params,
-                    delta,
-                    0.6,
-                )?;
-                log::info!(
-                    "table2: {ds_name} {arch} δ={dfrac:.3} -> {} points ({:.1}s)",
-                    traj.points.len(),
-                    traj.wall_secs
-                );
+                let traj = &trajectories[ci];
+                ci += 1;
                 for &svc in &services {
                     let stop = traj.best_stop(svc.price_per_label(), epsilon);
                     sweep.push_row([
                         ds_name.to_string(),
                         svc.name(),
-                        arch.as_str().to_string(),
+                        traj.arch.as_str().to_string(),
                         format!("{dfrac:.3}"),
                         dollars(stop.total_cost),
                         dollars(stop.training_cost),
@@ -104,16 +155,13 @@ pub fn run(ctx: &Ctx, datasets: &[&str], epsilon: f64) -> Result<SweepOutput> {
                         pct(stop.overall_error),
                     ]);
                 }
-                {
-                    let stop = traj.best_stop(Service::Amazon.price_per_label(), epsilon);
-                    fig12.push_row([
-                        ds_name.to_string(),
-                        arch.as_str().to_string(),
-                        format!("{dfrac:.3}"),
-                        pct(stop.machine_frac),
-                    ]);
-                }
-                trajectories.push(traj);
+                let stop = traj.best_stop(Service::Amazon.price_per_label(), epsilon);
+                fig12.push_row([
+                    ds_name.to_string(),
+                    traj.arch.as_str().to_string(),
+                    format!("{dfrac:.3}"),
+                    pct(stop.machine_frac),
+                ]);
             }
         }
 
@@ -122,12 +170,10 @@ pub fn run(ctx: &Ctx, datasets: &[&str], epsilon: f64) -> Result<SweepOutput> {
             for &arch in &preset.candidate_archs {
                 let human_only = ds.len() as f64 * svc.price_per_label();
                 let mut best: Option<(f64, crate::coordinator::PricedStop)> = None;
-                for (ti, traj) in trajectories
+                for traj in trajectories
                     .iter()
-                    .enumerate()
-                    .filter(|(_, t)| t.dataset == ds_name && t.arch == arch)
+                    .filter(|t| t.dataset == ds_name && t.arch == arch)
                 {
-                    let _ = ti;
                     let stop = traj.best_stop(svc.price_per_label(), epsilon);
                     let dfrac = traj.delta as f64 / ds.len() as f64;
                     if best.is_none() || stop.total_cost < best.as_ref().unwrap().1.total_cost {

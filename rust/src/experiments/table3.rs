@@ -3,35 +3,38 @@
 //! Paper shape: with ε=10%, Fashion trains on *fewer* samples yet
 //! machine-labels more; CIFAR-10/100 train on more samples to push the
 //! machine-labeled fraction up; savings improve modestly over ε=5%.
+//! One fleet cell per dataset.
 
 use crate::annotation::Service;
 use crate::coordinator::{run_with_arch_selection, RunParams};
+use crate::dataset::{Dataset, DatasetPreset};
 use crate::report::{dollars, pct, Table};
 use crate::Result;
 
 use super::common::Ctx;
+use super::fleet;
 use super::table1::DATASETS;
 
 pub fn run(ctx: &Ctx, epsilon: f64, probe_iters: usize) -> Result<Table> {
-    let mut table = Table::new(
-        format!("Table 3 — Relaxed error constraint (eps = {epsilon})"),
-        &[
-            "dataset", "B/X", "S/X", "dnn", "label_accuracy", "cost_savings",
-            "mcal_cost",
-        ],
-    );
+    let mut loaded: Vec<(Dataset, DatasetPreset)> = Vec::new();
     for ds_name in DATASETS {
-        let (ds, preset) = ctx.dataset(ds_name)?;
-        let (ledger, service) = ctx.service(Service::Amazon);
+        loaded.push(ctx.dataset(ds_name)?);
+    }
+    let labels: Vec<String> = DATASETS.iter().map(|d| d.to_string()).collect();
+
+    let view = ctx.view();
+    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+        let (ds, preset) = &loaded[i];
+        let (ledger, service) = view.service(Service::Amazon);
         let params = RunParams {
             epsilon,
-            seed: ctx.seed,
+            seed: view.seed,
             ..Default::default()
         };
         let (report, _) = run_with_arch_selection(
-            &ctx.engine,
-            &ctx.manifest,
-            &ds,
+            engine,
+            view.manifest,
+            ds,
             &service,
             ledger,
             &preset.candidate_archs,
@@ -40,6 +43,18 @@ pub fn run(ctx: &Ctx, epsilon: f64, probe_iters: usize) -> Result<Table> {
             probe_iters,
         )?;
         log::info!("table3: {}", report.summary());
+        Ok(report)
+    })?;
+    ctx.write_provenance("table3_cells", "Table 3 fleet cells", &cell_reports)?;
+
+    let mut table = Table::new(
+        format!("Table 3 — Relaxed error constraint (eps = {epsilon})"),
+        &[
+            "dataset", "B/X", "S/X", "dnn", "label_accuracy", "cost_savings",
+            "mcal_cost",
+        ],
+    );
+    for (ds_name, report) in DATASETS.iter().zip(reports.iter()) {
         table.push_row([
             ds_name.to_string(),
             pct(report.b_frac()),

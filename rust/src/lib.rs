@@ -12,14 +12,22 @@
 //!
 //! ## Layers
 //!
-//! - **L3 (this crate)** — the coordinator: [`coordinator`] (Alg. 1,
-//!   architecture selection, budget mode, naive-AL baselines), plus every
+//! - **L3 (this crate)** — the coordinator, structured as *one loop, many
+//!   policies*: [`coordinator::LabelingDriver`] owns the shared
+//!   acquire → retrain → measure cadence, and each labeling mode is a
+//!   [`coordinator::Policy`] impl plugged into it —
+//!   [`coordinator::McalPolicy`] (Alg. 1), [`coordinator::BudgetPolicy`]
+//!   (§4 budget mode), [`coordinator::NaiveAlPolicy`] (the naive-AL
+//!   baselines) and the arch-selection probe (§4). Around it, every
 //!   substrate: [`dataset`] (synthetic Gaussian-mixture analogs of
 //!   Fashion-MNIST / CIFAR-10 / CIFAR-100 / ImageNet), [`annotation`]
 //!   (human-labeling-service simulator with bounded-queue workers and a
 //!   dollar ledger), [`powerlaw`] / [`cost`] (the predictive models),
 //!   [`sampling`] (`M(.)` and `L(.)`), [`runtime`] (PJRT execution of the
-//!   AOT artifacts), [`experiments`] (drivers for every paper table/figure).
+//!   AOT artifacts), and [`experiments`] — the paper's table/figure
+//!   drivers, which shard their run grids across cores with the
+//!   [`experiments::fleet`] work-stealing runner (`--jobs N`, one engine
+//!   per worker, deterministic results for any N).
 //! - **L2** — `python/compile/model.py`: JAX classifier fwd/bwd lowered once
 //!   to HLO text (`make artifacts`).
 //! - **L1** — `python/compile/kernels/`: Pallas kernels (tiled dense matmul
@@ -28,6 +36,11 @@
 //!
 //! Python never runs at request time: the binary is self-contained once
 //! `artifacts/` exists.
+
+// The coordinator entry points thread (engine, manifest, dataset, service,
+// ledger, arch, tag, params) through every layer by design — they mirror
+// the paper's run signature rather than hiding it in a context object.
+#![allow(clippy::too_many_arguments)]
 
 pub mod annotation;
 pub mod cli;

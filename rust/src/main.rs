@@ -17,7 +17,11 @@ USAGE:
     mcal run <dataset> [--arch res18|cnn18|res50|effb0|auto] [--service amazon|satyam|<price>]
              [--epsilon 0.05] [--metric margin|entropy|leastconf|kcenter|random]
              [--scale full|bench|smoke] [--seed N] [--artifacts DIR] [--results DIR]
-    mcal exp <id> [--scale full|bench|smoke] [...]       run a paper experiment driver
+    mcal exp <id> [--scale full|bench|smoke] [--jobs N|auto] [...]
+                                                         run a paper experiment driver
+                                                         (--jobs: parallel fleet width,
+                                                          default one worker per core;
+                                                          results are identical for any N)
     mcal info [--artifacts DIR]                          show manifest / engine info
     mcal help
 
@@ -62,12 +66,13 @@ fn dispatch(args: &Args) -> mcal::Result<()> {
 fn ctx_from(args: &Args) -> mcal::Result<Ctx> {
     let scale = Scale::parse(args.opt_or("scale", "full"))
         .ok_or_else(|| mcal::Error::Config("bad --scale".into()))?;
-    Ctx::new(
+    Ok(Ctx::new(
         args.opt_or("artifacts", "artifacts"),
         args.opt_or("results", "results"),
         scale,
         args.u64_or("seed", 42)?,
-    )
+    )?
+    .with_jobs(args.jobs()?))
 }
 
 fn cmd_info(args: &Args) -> mcal::Result<()> {

@@ -34,7 +34,13 @@ pub struct EngineStats {
     pub h2d_bytes: u64,
 }
 
-/// Shared PJRT client + executable cache.
+/// PJRT client + executable cache.
+///
+/// NOT thread-safe: the `xla` 0.1 wrapper types hold non-atomically
+/// refcounted client handles, so an `Engine` must stay on the thread that
+/// created it. The experiment fleet ([`crate::experiments::fleet`])
+/// therefore gives every worker its *own* engine instead of sharing one —
+/// see `fleet::run_sweep`.
 pub struct Engine {
     client: xla::PjRtClient,
     exe_cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
