@@ -10,10 +10,10 @@
 use std::sync::Arc;
 
 use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
-use mcal::coordinator::{run_with_arch_selection, RunParams};
+use mcal::coordinator::{run_with_arch_selection, LabelingDriver, RunParams};
 use mcal::dataset::preset;
 use mcal::report::Table;
-use mcal::runtime::{Engine, Manifest};
+use mcal::runtime::{Engine, EnginePool, Manifest};
 
 fn main() -> mcal::Result<()> {
     let engine = Engine::cpu()?;
@@ -28,9 +28,14 @@ fn main() -> mcal::Result<()> {
         ledger.clone(),
     );
 
+    // One pool lane per candidate: the three probes run concurrently, and
+    // the results are bit-identical to a serial run (drop `.with_pool` to
+    // see for yourself).
+    let pool = EnginePool::new(p.candidate_archs.len() - 1)?;
+    let driver = LabelingDriver::new(&engine, &manifest).with_pool(Some(&pool));
+
     let (report, probes) = run_with_arch_selection(
-        &engine,
-        &manifest,
+        &driver,
         &ds,
         &service,
         ledger,

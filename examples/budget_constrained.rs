@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
-use mcal::coordinator::{run_budget, RunParams};
+use mcal::coordinator::{run_budget, LabelingDriver, RunParams};
 use mcal::dataset::preset;
 use mcal::model::ArchKind;
 use mcal::report::Table;
@@ -37,8 +37,7 @@ fn main() -> mcal::Result<()> {
             ledger.clone(),
         );
         let report = run_budget(
-            &engine,
-            &manifest,
+            &LabelingDriver::new(&engine, &manifest),
             &ds,
             &service,
             ledger.clone(),

@@ -12,10 +12,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
-use mcal::coordinator::{run_with_arch_selection, RunParams};
+use mcal::coordinator::{run_with_arch_selection, LabelingDriver, RunParams};
 use mcal::dataset::preset;
 use mcal::report::Table;
-use mcal::runtime::{Engine, Manifest};
+use mcal::runtime::{Engine, EnginePool, Manifest};
 
 fn main() -> mcal::Result<()> {
     let t0 = Instant::now();
@@ -38,9 +38,13 @@ fn main() -> mcal::Result<()> {
         ledger.clone(),
     );
 
+    // Spend every core on the run: probe lanes × intra-run measure shards.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let pool = EnginePool::for_budget(cores, p.candidate_archs.len())?;
+    let driver = LabelingDriver::new(&engine, &manifest).with_pool(Some(&pool));
+
     let (report, probes) = run_with_arch_selection(
-        &engine,
-        &manifest,
+        &driver,
         &ds,
         &service,
         ledger,

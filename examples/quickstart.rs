@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
-use mcal::coordinator::{run_mcal, RunParams};
+use mcal::coordinator::{run_mcal, LabelingDriver, RunParams};
 use mcal::dataset::preset;
 use mcal::model::ArchKind;
 use mcal::runtime::{Engine, Manifest};
@@ -33,8 +33,7 @@ fn main() -> mcal::Result<()> {
 
     // 4. Run MCAL: ε = 5% error budget, margin-based acquisition.
     let report = run_mcal(
-        &engine,
-        &manifest,
+        &LabelingDriver::new(&engine, &manifest),
         &ds,
         &service,
         ledger,

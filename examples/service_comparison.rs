@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
-use mcal::coordinator::{run_mcal, RunParams};
+use mcal::coordinator::{run_mcal, LabelingDriver, RunParams};
 use mcal::dataset::preset;
 use mcal::model::ArchKind;
 use mcal::report::Table;
@@ -34,8 +34,7 @@ fn main() -> mcal::Result<()> {
             ledger.clone(),
         );
         let report = run_mcal(
-            &engine,
-            &manifest,
+            &LabelingDriver::new(&engine, &manifest),
             &ds,
             &service,
             ledger,

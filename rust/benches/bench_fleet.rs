@@ -1,24 +1,32 @@
-//! Fleet bench: single-threaded vs parallel sweep wall-clock on the
-//! smoke-scale Table 2 grid (hand-rolled harness — criterion is not in the
-//! offline vendor set).
+//! Fleet + pool bench: wall-clock for the two parallelism layers
+//! (hand-rolled harness — criterion is not in the offline vendor set).
 //!
-//! Runs the same (dataset × arch × δ) trajectory grid once with `jobs = 1`
-//! and once with one worker per core, verifies the emitted table is
-//! byte-identical (the fleet's determinism contract), and prints the
-//! speedup. Record the printed numbers in CHANGES.md when they move.
+//! Phase 1 — cell-level: the smoke-scale Table 2 grid with `jobs = 1` vs
+//! one worker per core, asserting the emitted table is byte-identical
+//! (the fleet's determinism contract) and printing the speedup.
+//!
+//! Phase 2 — intra-run: a full arch selection (probe phase + winner run)
+//! serial vs one pool lane per candidate, asserting bit-identical probe
+//! results and the same winner. This is the acceptance instrument for the
+//! worker-pool subsystem. The timed window covers both intra-run layers —
+//! concurrent probes (the dominant cost: every candidate runs its own
+//! probe loop) and the winner's pool-sharded scoring — so the printed
+//! number is the end-to-end intra-run win. Record the printed numbers in
+//! CHANGES.md when they move.
 //!
 //! Run: `cargo bench --offline --bench bench_fleet`
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
+use mcal::coordinator::{run_with_arch_selection, LabelingDriver, RunParams};
+use mcal::dataset::preset;
 use mcal::experiments::common::{Ctx, Scale};
 use mcal::experiments::{fleet, table2};
+use mcal::runtime::{Engine, EnginePool, Manifest};
 
-fn main() {
-    if !std::path::Path::new("artifacts/manifest.txt").exists() {
-        eprintln!("artifacts not built; run `make artifacts` first");
-        std::process::exit(1);
-    }
+fn bench_cells() {
     let datasets = ["fashion-syn", "cifar10-syn", "cifar100-syn"];
     let cores = fleet::default_jobs();
 
@@ -32,7 +40,7 @@ fn main() {
         let out = table2::run(&ctx, &datasets, 0.05).unwrap();
         let wall = t0.elapsed().as_secs_f64();
         println!(
-            "bench_fleet: jobs={jobs:<3} {:>7.1}s  ({} trajectories)",
+            "bench_fleet: cells jobs={jobs:<3} {:>7.1}s  ({} trajectories)",
             wall,
             out.trajectories.len()
         );
@@ -45,9 +53,97 @@ fn main() {
         "fleet determinism violated: table2 differs between jobs=1 and jobs={cores}"
     );
     println!(
-        "bench_fleet: speedup {:.2}x on {cores} cores (serial {:.1}s → parallel {:.1}s)",
+        "bench_fleet: cells speedup {:.2}x on {cores} cores (serial {:.1}s -> parallel {:.1}s)",
         secs[0] / secs[1].max(1e-9),
         secs[0],
         secs[1]
     );
+}
+
+fn bench_probe_phase() {
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let p = preset("cifar10-syn", 77).unwrap();
+    let mut ds = p.spec.scaled(0.1).generate().unwrap();
+    ds.name = "cifar10-syn".into();
+    let lanes = p.candidate_archs.len().min(fleet::default_jobs());
+
+    // Untimed warm-up: compile every candidate's artifacts into the inline
+    // engine so the serial measurement isn't charged for one-time
+    // compilation the pooled run would then inherit on lane 0. (Pool
+    // worker lanes still compile inside their timed window, so if
+    // anything the printed speedup is understated.)
+    {
+        let mut warm_ds = p.spec.scaled(0.02).generate().unwrap();
+        warm_ds.name = "cifar10-syn".into();
+        let ledger = Arc::new(Ledger::new());
+        let service = SimService::new(
+            SimServiceConfig { service: Service::Amazon, seed: 1, ..Default::default() },
+            ledger.clone(),
+        );
+        let driver = LabelingDriver::new(&engine, &manifest);
+        run_with_arch_selection(
+            &driver,
+            &warm_ds,
+            &service,
+            ledger,
+            &p.candidate_archs,
+            p.classes_tag,
+            RunParams { seed: 1, ..Default::default() },
+            1,
+        )
+        .unwrap();
+    }
+
+    let run = |pool: Option<&EnginePool>, tag: &str| {
+        let ledger = Arc::new(Ledger::new());
+        let service = SimService::new(
+            SimServiceConfig { service: Service::Amazon, seed: 77, ..Default::default() },
+            ledger.clone(),
+        );
+        let driver = LabelingDriver::new(&engine, &manifest).with_pool(pool);
+        let t0 = Instant::now();
+        let (report, probes) = run_with_arch_selection(
+            &driver,
+            &ds,
+            &service,
+            ledger,
+            &p.candidate_archs,
+            p.classes_tag,
+            RunParams { seed: 77, ..Default::default() },
+            6,
+        )
+        .unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "bench_fleet: arch-select {tag:<16} {wall:>7.1}s  (winner {}, {} probes)",
+            report.arch,
+            probes.len()
+        );
+        let key: Vec<_> = probes.iter().map(|pr| pr.bit_key()).collect();
+        (wall, key, report.arch.clone())
+    };
+
+    let (serial_wall, serial_key, serial_winner) = run(None, "serial");
+    let pool = EnginePool::new(lanes - 1).unwrap();
+    let (par_wall, par_key, par_winner) = run(Some(&pool), &format!("jobs={lanes}"));
+
+    assert_eq!(serial_key, par_key, "probe results differ between serial and pooled runs");
+    assert_eq!(serial_winner, par_winner);
+    println!(
+        "bench_fleet: intra-run speedup {:.2}x on {lanes} lanes, probes dominant \
+         (serial {:.1}s -> parallel {:.1}s)",
+        serial_wall / par_wall.max(1e-9),
+        serial_wall,
+        par_wall
+    );
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        std::process::exit(1);
+    }
+    bench_cells();
+    bench_probe_phase();
 }

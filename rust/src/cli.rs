@@ -87,8 +87,9 @@ impl Args {
         }
     }
 
-    /// `--jobs N` — fleet width for parallel experiment sweeps. `0` or
-    /// `auto` (also the default when absent) means one worker per core;
+    /// `--jobs N` — total parallelism budget (split between sweep cells
+    /// and intra-run workers by `runtime::pool::split_jobs`). `0` or
+    /// `auto` (also the default when absent) means one engine per core;
     /// the caller resolves 0 via `fleet::default_jobs`.
     pub fn jobs(&self) -> Result<usize> {
         match self.opt("jobs") {

@@ -21,7 +21,6 @@ use crate::annotation::{AnnotationService, Ledger};
 use crate::dataset::Dataset;
 use crate::metrics;
 use crate::model::ArchKind;
-use crate::runtime::{Engine, Manifest};
 use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
@@ -74,8 +73,7 @@ pub struct PricedStop {
 /// `max_b_frac` of the non-test pool, the pool drains, or the full-pool
 /// machine-labeling plan becomes feasible.
 pub fn run_al_trajectory(
-    engine: &Engine,
-    manifest: &Manifest,
+    driver: &LabelingDriver<'_>,
     ds: &Dataset,
     service: &dyn AnnotationService,
     ledger: Arc<Ledger>,
@@ -85,15 +83,8 @@ pub fn run_al_trajectory(
     delta: usize,
     max_b_frac: f64,
 ) -> Result<Trajectory> {
-    LabelingDriver::new(engine, manifest).run(
-        ds,
-        service,
-        ledger,
-        arch,
-        classes_tag,
-        params,
-        NaiveAlPolicy::new(delta, max_b_frac),
-    )
+    let policy = NaiveAlPolicy::new(delta, max_b_frac);
+    driver.run(ds, service, ledger, arch, classes_tag, params, policy)
 }
 
 /// Fixed-δ naive AL as a [`Policy`]: no predictive models, just a

@@ -11,6 +11,13 @@
 //!
 //! The probe itself is a [`Policy`] ([`ProbePolicy`]) driven by the shared
 //! [`LabelingDriver`] loop, like every other mode in this crate.
+//!
+//! Candidate probes are independent (shadow ledger, shadow service, own
+//! PRNG stream derived from the *arch id*), so when the driver carries an
+//! [`EnginePool`] they run concurrently — one scatter task per candidate,
+//! each on its own lane engine. Serial and concurrent probing produce
+//! bit-identical `ProbeResult`s and the same winner for any `--jobs`
+//! value (pinned by `tests/pool_parallel.rs`).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -19,7 +26,8 @@ use crate::annotation::{AnnotationService, Ledger, Service, SimService, SimServi
 use crate::cost::{search_min_cost, SearchInputs};
 use crate::dataset::Dataset;
 use crate::model::ArchKind;
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::pool::task_seed;
+use crate::runtime::{Engine, EnginePool};
 use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
@@ -36,6 +44,22 @@ pub struct ProbeResult {
     pub b_probed: usize,
     pub training_spend: f64,
     pub stable: bool,
+}
+
+impl ProbeResult {
+    /// Bit-level comparison key for determinism checks: every field that
+    /// must be `--jobs`-invariant, floats as raw bits. Shared by
+    /// `tests/pool_parallel.rs` and `benches/bench_fleet.rs` so the two
+    /// assertions cannot drift apart when fields are added.
+    pub fn bit_key(&self) -> (String, Option<u64>, usize, u64, bool) {
+        (
+            self.arch.to_string(),
+            self.c_star.map(f64::to_bits),
+            self.b_probed,
+            self.training_spend.to_bits(),
+            self.stable,
+        )
+    }
 }
 
 /// The probing phase as a [`Policy`]: run the MCAL acquisition cadence for
@@ -131,8 +155,7 @@ impl Policy for ProbePolicy {
 
 /// Probe a single candidate on a shadow ledger, returning the stabilized C*.
 fn probe(
-    engine: &Engine,
-    manifest: &Manifest,
+    driver: &LabelingDriver<'_>,
     ds: &Dataset,
     price: f64,
     arch: ArchKind,
@@ -149,7 +172,7 @@ fn probe(
         },
         shadow_ledger.clone(),
     );
-    LabelingDriver::new(engine, manifest).run(
+    driver.run(
         ds,
         &shadow_service,
         shadow_ledger,
@@ -161,10 +184,12 @@ fn probe(
 }
 
 /// Run MCAL with architecture selection: probe every candidate, commit to
-/// the cheapest, charge losers' probe training as exploration.
+/// the cheapest, charge losers' probe training as exploration. With a
+/// pool on `driver`, candidate probes run concurrently (and the winner's
+/// run shards its measurements over the same pool); without one they run
+/// serially on `driver.engine`. Both paths are bit-identical.
 pub fn run_with_arch_selection(
-    engine: &Engine,
-    manifest: &Manifest,
+    driver: &LabelingDriver<'_>,
     ds: &Dataset,
     service: &dyn AnnotationService,
     ledger: Arc<Ledger>,
@@ -176,21 +201,35 @@ pub fn run_with_arch_selection(
     assert!(!candidates.is_empty());
     if candidates.len() == 1 {
         // Nothing to select — skip the probe phase entirely.
-        let report = run_mcal(
-            engine, manifest, ds, service, ledger, candidates[0], classes_tag, params,
-        )?;
+        let report = run_mcal(driver, ds, service, ledger, candidates[0], classes_tag, params)?;
         return Ok((report, Vec::new()));
     }
     let price = service.price_per_label();
-    let mut probes = Vec::new();
-    for &arch in candidates {
+    let manifest = driver.manifest;
+    // One probe per candidate. The seed derives from the stable arch id —
+    // not the schedule slot — so the ranking is identical however many
+    // lanes run it (and however the candidate list is ordered). The old
+    // `seed.wrapping_add(arch + 1)` had the same invariance; `task_seed`
+    // just mixes harder (adjacent arch ids no longer yield adjacent
+    // seeds), which changes probe trajectories vs PR 1 — intentional, and
+    // nothing pins the old values (see CHANGES.md).
+    let probe_one = |arch: ArchKind, engine: &Engine, inner: Option<&EnginePool>| {
         let mut p = params.clone();
-        // Decorrelate probe subsets across candidates.
-        p.seed = params.seed.wrapping_add(arch as u64 + 1);
-        probes.push(probe(
-            engine, manifest, ds, price, arch, classes_tag, &p, probe_iters,
-        )?);
-    }
+        p.seed = task_seed(params.seed, arch as u64);
+        let lane_driver = LabelingDriver::new(engine, manifest).with_pool(inner);
+        probe(&lane_driver, ds, price, arch, classes_tag, &p, probe_iters)
+    };
+    let probes: Vec<ProbeResult> = match driver.pool {
+        Some(pool) => {
+            pool.map(driver.engine, candidates, |&arch, scope| {
+                probe_one(arch, scope.engine, scope.inner)
+            })?
+        }
+        None => candidates
+            .iter()
+            .map(|&arch| probe_one(arch, driver.engine, None))
+            .collect::<Result<_>>()?,
+    };
 
     // Winner: lowest *stabilized* C* (unstable estimates only compete when
     // no candidate stabilized); fall back to the cheapest-to-train arch
@@ -223,8 +262,11 @@ pub fn run_with_arch_selection(
         ledger.reclassify_as_exploration(exploration);
     }
 
-    let report = run_mcal(
-        engine, manifest, ds, service, ledger, winner, classes_tag, params,
-    )?;
+    // The winner's run shards its measurements over the *outer* pool
+    // lanes only; with a nested `(outer, inner)` split, worker lanes'
+    // nested engines idle through this phase. Fine while probes dominate
+    // wall-clock — revisit (reshape the pool between phases) if winner
+    // runs ever grow to dominate.
+    let report = run_mcal(driver, ds, service, ledger, winner, classes_tag, params)?;
     Ok((report, probes))
 }

@@ -16,7 +16,6 @@ use crate::annotation::{AnnotationService, Ledger};
 use crate::cost::{search_min_error, SearchInputs};
 use crate::dataset::Dataset;
 use crate::model::ArchKind;
-use crate::runtime::{Engine, Manifest};
 use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
@@ -25,8 +24,7 @@ use super::policy::{finish_run, machine_label_top, Decision, LabelingDriver, Pol
 
 /// Run budget-constrained MCAL. `budget` is the total dollar cap.
 pub fn run_budget(
-    engine: &Engine,
-    manifest: &Manifest,
+    driver: &LabelingDriver<'_>,
     ds: &Dataset,
     service: &dyn AnnotationService,
     ledger: Arc<Ledger>,
@@ -35,15 +33,7 @@ pub fn run_budget(
     params: RunParams,
     budget: f64,
 ) -> Result<RunReport> {
-    LabelingDriver::new(engine, manifest).run(
-        ds,
-        service,
-        ledger,
-        arch,
-        classes_tag,
-        params,
-        BudgetPolicy::new(budget),
-    )
+    driver.run(ds, service, ledger, arch, classes_tag, params, BudgetPolicy::new(budget))
 }
 
 /// §4's budget mode as a [`Policy`]: min-error search under a dollar cap,

@@ -10,7 +10,7 @@ use crate::dataset::Dataset;
 use crate::metrics;
 use crate::model::{ArchKind, TrainSchedule};
 use crate::prng::Pcg32;
-use crate::runtime::{Engine, Manifest, ModelSession};
+use crate::runtime::{ChunkScorer, Engine, EnginePool, Manifest, ModelSession, Scores};
 use crate::sampling::{self, Metric};
 use crate::{Error, Result};
 
@@ -77,6 +77,12 @@ pub struct LabelingEnv<'e> {
     pub session: ModelSession<'e>,
     engine: &'e Engine,
     manifest: &'e Manifest,
+    /// Intra-run worker pool for sharded scoring (θ-grid measurement and
+    /// pool-batch ranking). `None` (the default) keeps every predict on the
+    /// session's own engine; either way the scores are bit-identical — see
+    /// [`LabelingEnv::predict_indices`]. Set by
+    /// [`super::policy::LabelingDriver`] from its own pool.
+    pub engine_pool: Option<&'e EnginePool>,
 
     pub rng: Pcg32,
     pub theta_grid: Vec<f64>,
@@ -146,6 +152,7 @@ impl<'e> LabelingEnv<'e> {
             session,
             engine,
             manifest,
+            engine_pool: None,
             rng,
             theta_grid,
             test_idx,
@@ -218,7 +225,7 @@ impl<'e> LabelingEnv<'e> {
                 self.rng.sample_indices(n, k)
             }
             _ => {
-                let scores = self.session.predict(self.ds, &view_idx)?;
+                let scores = self.predict_indices(&view_idx)?;
                 let picks =
                     sampling::select_for_training(self.params.metric, &scores, k, &mut self.rng);
                 picks.into_iter().map(|p| view[p]).collect()
@@ -266,10 +273,56 @@ impl<'e> LabelingEnv<'e> {
         Ok(dollars)
     }
 
+    /// Score `indices` with the current model, sharding the batch across
+    /// [`LabelingEnv::engine_pool`] when one is attached and the batch is
+    /// big enough to pay for it.
+    ///
+    /// Determinism: shard boundaries are `eval_bs`-aligned, so every lane
+    /// executes exactly the padded batches the serial path would, against a
+    /// bit-exact host round-trip of the session state, through the same
+    /// compiled executable — the concatenated result is bit-identical for
+    /// any pool width (pinned by `tests/pool_parallel.rs`).
+    pub fn predict_indices(&mut self, indices: &[usize]) -> Result<Scores> {
+        let eval_bs = self.session.eval_bs();
+        let pool = match self.engine_pool {
+            // Shard only when every lane gets at least one full batch —
+            // below that, the per-shard state upload (and the state
+            // read-back) costs more than the batches it parallelizes.
+            Some(p) if p.workers() > 0 && indices.len() > p.lanes() * eval_bs => p,
+            _ => return self.session.predict(self.ds, indices),
+        };
+        let state = self.session.state_host()?;
+        let model_name = self.session.meta.name.clone();
+        let n = indices.len();
+        let chunks = n.div_ceil(eval_bs);
+        // Contiguous, chunk-aligned shards; trim so none is empty.
+        let span = chunks.div_ceil(pool.lanes()) * eval_bs;
+        let shards = n.div_ceil(span);
+        let ds = self.ds;
+        let manifest = self.manifest;
+        let (parts, _) = pool.scatter(self.engine, shards, |s, scope| {
+            let lo = s * span;
+            let hi = (lo + span).min(n);
+            ChunkScorer::open(scope.engine, manifest, &model_name, &state)?
+                .score(ds, &indices[lo..hi])
+        })?;
+        let mut out = Scores::default();
+        for p in parts {
+            out.margin.extend_from_slice(&p.margin);
+            out.entropy.extend_from_slice(&p.entropy);
+            out.maxprob.extend_from_slice(&p.maxprob);
+            out.pred.extend_from_slice(&p.pred);
+        }
+        Ok(out)
+    }
+
     /// Measure ε_T(S^θ) over the θ grid with the current model and record
     /// the observations for the power-law fits. Returns the profile.
     pub fn measure(&mut self) -> Result<Vec<f64>> {
-        let scores = self.session.predict(self.ds, &self.test_idx)?;
+        let test_idx = std::mem::take(&mut self.test_idx);
+        let scores = self.predict_indices(&test_idx);
+        self.test_idx = test_idx;
+        let scores = scores?;
         let correct: Vec<bool> = scores
             .pred
             .iter()

@@ -22,18 +22,17 @@ use crate::annotation::{AnnotationService, Ledger};
 use crate::cost::{search_min_cost, SearchInputs};
 use crate::dataset::Dataset;
 use crate::model::ArchKind;
-use crate::runtime::{Engine, Manifest};
 use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
 use super::events::{IterationRecord, RunReport, StopReason};
 use super::policy::{finish_run, machine_label_top, Decision, LabelingDriver, Policy};
 
-/// Run MCAL for a single architecture. See [`super::archselect`] for the
+/// Run MCAL for a single architecture on `driver`'s engine (and intra-run
+/// pool, if it carries one). See [`super::archselect`] for the
 /// multi-candidate variant.
 pub fn run_mcal(
-    engine: &Engine,
-    manifest: &Manifest,
+    driver: &LabelingDriver<'_>,
     ds: &Dataset,
     service: &dyn AnnotationService,
     ledger: Arc<Ledger>,
@@ -41,15 +40,7 @@ pub fn run_mcal(
     classes_tag: &str,
     params: RunParams,
 ) -> Result<RunReport> {
-    LabelingDriver::new(engine, manifest).run(
-        ds,
-        service,
-        ledger,
-        arch,
-        classes_tag,
-        params,
-        McalPolicy::new(),
-    )
+    driver.run(ds, service, ledger, arch, classes_tag, params, McalPolicy::new())
 }
 
 /// Alg. 1 as a [`Policy`]: joint (B, θ) search, C*-stability tracking,

@@ -3,9 +3,11 @@
 //! The coordinator is one shared loop and a family of pluggable policies:
 //!
 //! - [`policy`]: the seam — [`LabelingDriver`] owns the shared acquire →
-//!   retrain → measure cadence (split setup, termination bookkeeping),
-//!   and the [`Policy`] trait (`plan` → [`Decision`], plus a `finalize`
-//!   hook) owns the strategy. Every mode below is a `Policy` impl.
+//!   retrain → measure cadence (split setup, termination bookkeeping)
+//!   plus the run's execution resources (engine, manifest, optional
+//!   intra-run [`crate::runtime::EnginePool`] for sharded scoring), and
+//!   the [`Policy`] trait (`plan` → [`Decision`], plus a `finalize` hook)
+//!   owns the strategy. Every mode below is a `Policy` impl.
 //! - [`mcal`]: Alg. 1 — [`McalPolicy`], the joint (B, θ, δ) minimum-cost
 //!   optimizer.
 //! - [`budget`]: [`BudgetPolicy`], the budget-constrained variant (§4).
@@ -13,9 +15,12 @@
 //!   oracle-δ pricing (the paper's comparison baselines, Figs. 8-10,
 //!   Tbl. 2).
 //! - [`archselect`]: multi-candidate architecture selection (§4); its
-//!   probing phase is a private `ProbePolicy` on a shadow ledger.
+//!   probing phase is a private `ProbePolicy` on a shadow ledger, and the
+//!   candidate probes run concurrently when the driver carries a pool.
 //! - [`env`]: shared run state (splits, acquisition, retraining,
-//!   measurement) the driver operates on.
+//!   measurement) the driver operates on; θ-grid measurement and
+//!   pool-batch scoring shard across the driver's pool, bit-identically
+//!   to the serial path.
 //! - [`events`]: per-iteration records and run reports (with per-run
 //!   provenance) consumed by the experiment drivers and the parallel
 //!   fleet ([`crate::experiments::fleet`]).

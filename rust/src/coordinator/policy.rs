@@ -28,7 +28,7 @@ use crate::annotation::{AnnotationService, Ledger};
 use crate::dataset::Dataset;
 use crate::metrics;
 use crate::model::ArchKind;
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{Engine, EnginePool, Manifest, WorkerScope};
 use crate::sampling;
 use crate::Result;
 
@@ -79,14 +79,34 @@ pub trait Policy {
 }
 
 /// Owns the shared acquire → retrain → measure loop over a [`LabelingEnv`].
+///
+/// The driver is also where a run's execution resources are bound: the
+/// engine it trains on, the manifest, and (optionally) an intra-run
+/// [`EnginePool`] that the environment uses to shard θ-grid measurement
+/// and pool-batch scoring across lanes. Results are bit-identical with or
+/// without a pool — attach one purely for wall-clock.
 pub struct LabelingDriver<'e> {
     pub engine: &'e Engine,
     pub manifest: &'e Manifest,
+    pub pool: Option<&'e EnginePool>,
 }
 
 impl<'e> LabelingDriver<'e> {
     pub fn new(engine: &'e Engine, manifest: &'e Manifest) -> Self {
-        LabelingDriver { engine, manifest }
+        LabelingDriver { engine, manifest, pool: None }
+    }
+
+    /// Attach (or detach) an intra-run worker pool.
+    pub fn with_pool(mut self, pool: Option<&'e EnginePool>) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    /// Driver for one pool lane: the lane's engine plus its nested pool.
+    /// This is how fleet cells and arch-selection probes build their
+    /// drivers — never from the pool that is running them (deadlock).
+    pub fn for_scope(scope: &WorkerScope<'e>, manifest: &'e Manifest) -> Self {
+        LabelingDriver { engine: scope.engine, manifest, pool: scope.inner }
     }
 
     /// Run one labeling session end to end: set up the splits (T, B₀,
@@ -115,6 +135,10 @@ impl<'e> LabelingDriver<'e> {
             params,
             theta_grid,
         )?;
+        // `intra()`: a pool whose width lives entirely in its caller-lane
+        // nested pool (an `outer = 1` budget split) delegates to it, so a
+        // single-candidate arch selection still shards its measurements.
+        env.engine_pool = self.pool.map(EnginePool::intra);
         let stop = Self::drive(&mut env, &mut policy)?;
         policy.finalize(env, stop, t0)
     }
@@ -156,7 +180,12 @@ pub(super) fn machine_label_top(
     if take == 0 || env.pool.is_empty() {
         return Ok((Vec::new(), Vec::new()));
     }
-    let scores = env.session.predict(env.ds, &env.pool)?;
+    // Full-pool scoring is the single biggest batch of a run; shard it
+    // across the env's pool lanes when one is attached.
+    let pool_idx = std::mem::take(&mut env.pool);
+    let scores = env.predict_indices(&pool_idx);
+    env.pool = pool_idx;
+    let scores = scores?;
     let ranked = sampling::rank_for_machine_labeling(&scores);
     let take = take.min(ranked.len());
     let mut idx = Vec::with_capacity(take);

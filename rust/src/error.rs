@@ -33,6 +33,10 @@ pub enum Error {
     #[error("coordinator: {0}")]
     Coordinator(String),
 
+    /// Worker-pool failures (setup, poisoned scatter, panicked task).
+    #[error("pool: {0}")]
+    Pool(String),
+
     #[error("io: {0}")]
     Io(#[from] std::io::Error),
 }

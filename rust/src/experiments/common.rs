@@ -45,8 +45,10 @@ pub struct Ctx {
     pub results_dir: PathBuf,
     pub scale: Scale,
     pub seed: u64,
-    /// Fleet width for parallel sweeps (see [`super::fleet`]); 1 = serial.
-    /// Result CSVs are identical for any value — only wall-clock changes.
+    /// Total parallelism budget for sweeps (see [`super::fleet`]); 1 =
+    /// serial. Split between cell lanes and intra-run workers by
+    /// [`crate::runtime::pool::split_jobs`]. Result CSVs are identical for
+    /// any value — only wall-clock changes.
     pub jobs: usize,
 }
 
@@ -94,8 +96,8 @@ impl Ctx {
 
     /// The engine-free view of this context. Fleet cell closures capture
     /// this (it is `Copy + Sync`) instead of `&Ctx`: the engine is NOT
-    /// thread-safe, so each fleet worker gets its own (see
-    /// [`super::fleet::run_sweep`]).
+    /// thread-safe, so each pool lane owns its own (see
+    /// [`super::fleet::run_sweep`] and [`crate::runtime::pool`]).
     pub fn view(&self) -> CtxView<'_> {
         CtxView { manifest: &self.manifest, scale: self.scale, seed: self.seed }
     }

@@ -8,20 +8,19 @@
 //!   at θ = 50%.
 
 use crate::annotation::Service;
-use crate::coordinator::{run_al_trajectory, RunParams, Trajectory};
+use crate::coordinator::{run_al_trajectory, LabelingDriver, RunParams, Trajectory};
 use crate::model::ArchKind;
+use crate::runtime::EnginePool;
 use crate::powerlaw::{fit_plain, fit_truncated};
 use crate::report::Table;
 use crate::Result;
-
-use crate::runtime::Engine;
 
 use super::common::{Ctx, CtxView};
 
 /// Record one AL trajectory to use as the (B, ε_θ) observation source.
 fn observe(
     view: &CtxView<'_>,
-    engine: &Engine,
+    driver: &LabelingDriver<'_>,
     ds_name: &str,
     arch: ArchKind,
     delta_frac: f64,
@@ -31,8 +30,7 @@ fn observe(
     let params = RunParams { seed: view.seed, ..Default::default() };
     let delta = ((delta_frac * ds.len() as f64).round() as usize).max(1);
     run_al_trajectory(
-        engine,
-        view.manifest,
+        driver,
         &ds,
         &service,
         ledger,
@@ -62,7 +60,10 @@ fn points_for(traj: &Trajectory, theta: f64) -> Vec<(f64, f64)> {
 }
 
 pub fn fig2_fig3(ctx: &Ctx) -> Result<(Table, Table)> {
-    let traj = observe(&ctx.view(), &ctx.engine, "cifar10-syn", ArchKind::Res18, 0.02)?;
+    // Single-trajectory experiment: the --jobs budget goes intra-run.
+    let run_pool = EnginePool::for_budget(ctx.jobs, 1)?;
+    let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&run_pool));
+    let traj = observe(&ctx.view(), &driver, "cifar10-syn", ArchKind::Res18, 0.02)?;
 
     let mut fig2 = Table::new(
         "Figure 2 — power law vs truncated power law (cifar10-syn, res18)",
@@ -129,9 +130,10 @@ pub fn fig22_27(ctx: &Ctx) -> Result<Table> {
         .map(|(d, a)| format!("{d}/{}", a.as_str()))
         .collect();
     let view = ctx.view();
-    let (trajs, cell_reports) = super::fleet::run_sweep(ctx, &labels, |i, engine| {
+    let (trajs, cell_reports) = super::fleet::run_sweep(ctx, &labels, |i, scope| {
         let (ds_name, arch) = cells[i];
-        let traj = observe(&view, engine, ds_name, arch, 0.033)?;
+        let driver = LabelingDriver::for_scope(scope, view.manifest);
+        let traj = observe(&view, &driver, ds_name, arch, 0.033)?;
         log::info!("fig22_27: {ds_name} {arch} done ({} points)", traj.points.len());
         Ok(traj)
     })?;

@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use crate::annotation::Service;
-use crate::coordinator::{run_al_trajectory, run_mcal, LabelingEnv, RunParams};
+use crate::coordinator::{run_al_trajectory, run_mcal, LabelingDriver, LabelingEnv, RunParams};
 use crate::model::ArchKind;
 use crate::report::{dollars, pct, Table};
 use crate::sampling::{self, Metric};
@@ -28,14 +28,13 @@ pub fn fig4(ctx: &Ctx, ds_name: &str, b_target_frac: f64) -> Result<Table> {
     // deterministic, so this matches per-cell regeneration exactly).
     let (ds, preset) = ctx.dataset(ds_name)?;
     let view = ctx.view();
-    let (trajs, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+    let (trajs, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let dfrac = dfracs[i];
         let (ledger, service) = view.service(Service::Amazon);
         let params = RunParams { seed: view.seed, ..Default::default() };
         let delta = ((dfrac * ds.len() as f64).round() as usize).max(1);
         run_al_trajectory(
-            engine,
-            view.manifest,
+            &LabelingDriver::for_scope(scope, view.manifest),
             &ds,
             &service,
             ledger,
@@ -206,7 +205,7 @@ pub fn fig11(ctx: &Ctx, ds_name: &str) -> Result<Table> {
         .collect();
     let (ds, preset) = ctx.dataset(ds_name)?;
     let view = ctx.view();
-    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let metric = metrics[i];
         let (ledger, service) = view.service(Service::Amazon);
         let params = RunParams {
@@ -215,8 +214,7 @@ pub fn fig11(ctx: &Ctx, ds_name: &str) -> Result<Table> {
             ..Default::default()
         };
         let report = run_mcal(
-            engine,
-            view.manifest,
+            &LabelingDriver::for_scope(scope, view.manifest),
             &ds,
             &service,
             Arc::clone(&ledger),

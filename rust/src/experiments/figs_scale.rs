@@ -7,8 +7,9 @@
 //!   exploration tax.
 
 use crate::annotation::Service;
-use crate::coordinator::{run_mcal, run_with_arch_selection, RunParams, StopReason};
+use crate::coordinator::{run_mcal, run_with_arch_selection, LabelingDriver, RunParams, StopReason};
 use crate::model::ArchKind;
+use crate::runtime::EnginePool;
 use crate::report::{dollars, pct, Table};
 use crate::sampling::Metric;
 use crate::Result;
@@ -27,14 +28,13 @@ pub fn fig13(ctx: &Ctx) -> Result<Table> {
     // Generate the full dataset once; each cell takes its own subset.
     let (full, preset) = ctx.dataset("cifar10-syn")?;
     let view = ctx.view();
-    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let pc = per_class_grid[i];
         let ds = full.subset_per_class(pc.min(full.len() / full.num_classes))?;
         let (ledger, service) = view.service(Service::Amazon);
         let params = RunParams { seed: view.seed, ..Default::default() };
         let report = run_mcal(
-            engine,
-            view.manifest,
+            &LabelingDriver::for_scope(scope, view.manifest),
             &ds,
             &service,
             ledger,
@@ -89,7 +89,7 @@ pub fn fig14_15(ctx: &Ctx, datasets: &[&str]) -> Result<Table> {
         loaded.push(ctx.dataset(ds_name)?);
     }
     let view = ctx.view();
-    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let (_, svc, metric) = cells[i];
         let (ds, preset) = &loaded[i / (services.len() * metrics.len())];
         let (ledger, service) = view.service(svc);
@@ -99,8 +99,7 @@ pub fn fig14_15(ctx: &Ctx, datasets: &[&str]) -> Result<Table> {
             ..Default::default()
         };
         run_mcal(
-            engine,
-            view.manifest,
+            &LabelingDriver::for_scope(scope, view.manifest),
             ds,
             &service,
             ledger,
@@ -152,9 +151,12 @@ pub fn imagenet(ctx: &Ctx) -> Result<Table> {
     let (ds, preset) = ctx.dataset("imagenet-syn")?;
     let (ledger, service) = ctx.service(Service::Amazon);
     let params = RunParams { seed: ctx.seed, ..Default::default() };
+    // Single-cell experiment: the whole --jobs budget goes intra-run
+    // (concurrent probes × sharded measurement).
+    let run_pool = EnginePool::for_budget(ctx.jobs, preset.candidate_archs.len())?;
+    let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&run_pool));
     let (report, _) = run_with_arch_selection(
-        &ctx.engine,
-        &ctx.manifest,
+        &driver,
         &ds,
         &service,
         ledger,

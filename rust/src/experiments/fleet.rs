@@ -1,35 +1,33 @@
-//! Work-stealing parallel sweep runner for experiment cells.
+//! Fleet: experiment-cell sweeps as a thin client of
+//! [`crate::runtime::pool`].
 //!
 //! Every paper table/figure is a grid of independent *cells* — one
 //! (dataset × arch × service × δ × seed) labeling run each. Cells share
 //! the [`crate::runtime::Manifest`] and the generated datasets read-only,
 //! while each cell owns its ledger, simulated service and PRNG stream —
-//! so cell results are bit-identical no matter how many workers run them
-//! or in which order they're stolen.
+//! so cell results are bit-identical no matter how many lanes run them or
+//! in which order they're stolen.
 //!
-//! Engines are **per worker**, not shared: the `xla` 0.1 PJRT wrappers are
-//! not thread-safe (non-atomic refcounts inside the client handles), so
-//! each worker thread builds its own [`Engine`] and keeps it for all the
-//! cells it steals. Workers therefore re-compile the artifacts their cells
-//! need (once per worker, amortized over the whole sweep); the serial path
-//! reuses the context's warm engine instead.
+//! The worker-spawning machinery (scoped engines, work-stealing cursor,
+//! index-ordered collection, poisoning) used to live here; it is now the
+//! shared [`EnginePool`] subsystem, and this module only translates a
+//! [`Ctx`] into a pool. The single `--jobs` budget is split by
+//! [`crate::runtime::pool::split_jobs`] between *cell lanes* and
+//! *intra-run workers*: a
+//! wide grid spends everything on cell lanes (`inner = 1`, exactly the old
+//! fleet), while a grid narrower than the budget hands each lane a nested
+//! pool so arch-selection probes and θ-grid measurement inside one cell
+//! parallelize too (`WorkerScope::inner`, consumed via
+//! [`crate::coordinator::LabelingDriver::for_scope`]).
 //!
-//! The scheduler is deliberately tiny (the offline vendor set has no
-//! rayon): workers pull cell indices from one shared atomic counter. That
-//! *is* work stealing for this workload — cells are coarse (seconds each),
-//! so the only imbalance that matters is a slow straggler, and a shared
-//! counter keeps every worker busy until the grid is empty. Results are
-//! returned in submission order regardless of the schedule; per-cell
-//! provenance (worker, wall-clock) is reported separately precisely
+//! `jobs <= 1` degenerates to a serial loop on the context's warm engine.
+//! Results are returned in submission order regardless of the schedule;
+//! per-cell provenance (lane, wall-clock) is reported separately precisely
 //! because it is *not* deterministic.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
-
 use crate::report::Table;
-use crate::runtime::Engine;
-use crate::{Error, Result};
+use crate::runtime::pool::{EnginePool, WorkerScope};
+use crate::Result;
 
 use super::common::Ctx;
 
@@ -39,7 +37,7 @@ pub fn default_jobs() -> usize {
 }
 
 /// Scheduling record for one completed cell — provenance, not results:
-/// which worker ran it and how long it took. Written to
+/// which lane ran it and how long it took. Written to
 /// `results/provenance/` by the drivers; never part of the deterministic
 /// result CSVs.
 #[derive(Clone, Debug)]
@@ -68,236 +66,52 @@ pub fn provenance_table(title: impl Into<String>, jobs: usize, cells: &[CellRepo
     t
 }
 
-/// Run `labels.len()` cells across `ctx.jobs` workers; `f(i, engine)`
-/// computes cell `i` on the worker's engine. Returns the results in cell
-/// order plus one [`CellReport`] per cell.
-///
-/// `jobs <= 1` (or a single cell) runs inline on the caller thread against
-/// the context's own engine — no threads, no extra PJRT client. In the
-/// parallel path a failing cell stops the steal loop (in-flight cells
-/// finish, no new ones start) and the lowest-index error is returned.
+/// Run `labels.len()` cells across a pool sized from `ctx.jobs`;
+/// `f(i, scope)` computes cell `i` on its lane's engine (build the cell's
+/// driver with `LabelingDriver::for_scope` to also pick up the lane's
+/// nested intra-run pool). Returns the results in cell order plus one
+/// [`CellReport`] per cell. A failing cell stops the steal loop (in-flight
+/// cells finish, no new ones start) and the lowest-index error is
+/// returned.
 pub fn run_sweep<T, F>(ctx: &Ctx, labels: &[String], f: F) -> Result<(Vec<T>, Vec<CellReport>)>
 where
     T: Send,
-    F: Fn(usize, &Engine) -> Result<T> + Sync,
+    F: Fn(usize, &WorkerScope<'_>) -> Result<T> + Sync,
 {
-    if ctx.jobs <= 1 || labels.len() <= 1 {
-        run_serial(&ctx.engine, labels, f)
-    } else {
-        run_workers(ctx.jobs, labels, Engine::cpu, f)
+    if labels.is_empty() {
+        // for_budget(_, 0) would hand the whole budget to (unused) nested
+        // pools; don't spawn threads for an empty grid.
+        return Ok((Vec::new(), Vec::new()));
     }
-}
-
-/// Inline path: every cell on the caller's thread against one resource.
-fn run_serial<T, R, F>(resource: &R, labels: &[String], f: F) -> Result<(Vec<T>, Vec<CellReport>)>
-where
-    F: Fn(usize, &R) -> Result<T>,
-{
-    let mut out = Vec::with_capacity(labels.len());
-    let mut reports = Vec::with_capacity(labels.len());
-    for (i, label) in labels.iter().enumerate() {
-        let t0 = Instant::now();
-        out.push(f(i, resource)?);
-        reports.push(CellReport {
-            index: i,
-            label: label.clone(),
-            worker: 0,
-            wall_secs: t0.elapsed().as_secs_f64(),
-        });
-    }
-    Ok((out, reports))
-}
-
-/// Parallel path: `jobs` scoped workers, each owning one `init()`-built
-/// resource, stealing cell indices from a shared counter.
-fn run_workers<T, R, F, G>(
-    jobs: usize,
-    labels: &[String],
-    init: G,
-    f: F,
-) -> Result<(Vec<T>, Vec<CellReport>)>
-where
-    T: Send,
-    F: Fn(usize, &R) -> Result<T> + Sync,
-    G: Fn() -> Result<R> + Sync,
-{
-    let n = labels.len();
-    let jobs = jobs.max(1).min(n.max(1));
-
-    type Slot<T> = Option<(Result<T>, usize, f64)>;
-    let next = AtomicUsize::new(0);
-    let poisoned = AtomicBool::new(false);
-    let setup_err: Mutex<Option<Error>> = Mutex::new(None);
-    let slots: Mutex<Vec<Slot<T>>> = Mutex::new((0..n).map(|_| None).collect());
-    std::thread::scope(|scope| {
-        for w in 0..jobs {
-            let next = &next;
-            let poisoned = &poisoned;
-            let setup_err = &setup_err;
-            let slots = &slots;
-            let init = &init;
-            let f = &f;
-            scope.spawn(move || {
-                // A worker that can't build its resource bows out; the
-                // sweep continues on the surviving workers.
-                let resource = match init() {
-                    Ok(r) => r,
-                    Err(e) => {
-                        setup_err.lock().unwrap().get_or_insert(e);
-                        return;
-                    }
-                };
-                loop {
-                    if poisoned.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let t0 = Instant::now();
-                    let r = f(i, &resource);
-                    let wall = t0.elapsed().as_secs_f64();
-                    if r.is_err() {
-                        poisoned.store(true, Ordering::Relaxed);
-                    }
-                    slots.lock().unwrap()[i] = Some((r, w, wall));
-                }
-            });
-        }
-    });
-
-    // After a poisoning error (or all workers failing setup) the un-stolen
-    // suffix is legitimately empty; surface the lowest-index error.
-    let mut setup_err = setup_err.into_inner().unwrap();
-    let slots = slots.into_inner().unwrap();
-    let mut out = Vec::with_capacity(n);
-    let mut reports = Vec::with_capacity(n);
-    let mut first_err = None;
-    for (i, slot) in slots.into_iter().enumerate() {
-        match slot {
-            Some((Ok(v), worker, wall_secs)) => {
-                out.push(v);
-                reports.push(CellReport {
-                    index: i,
-                    label: labels[i].clone(),
-                    worker,
-                    wall_secs,
-                });
-            }
-            Some((Err(e), _, _)) => {
-                first_err.get_or_insert(e);
-            }
-            None => {
-                if first_err.is_none() {
-                    first_err = Some(setup_err.take().unwrap_or_else(|| {
-                        Error::Coordinator(format!(
-                            "fleet cell {i} ({}) produced no result",
-                            labels[i]
-                        ))
-                    }));
-                }
-            }
-        }
-    }
-    match first_err {
-        Some(e) => Err(e),
-        None => Ok((out, reports)),
-    }
+    let pool = EnginePool::for_budget(ctx.jobs, labels.len())?;
+    let (out, tasks) = pool.scatter(&ctx.engine, labels.len(), f)?;
+    let cells = tasks
+        .into_iter()
+        .map(|t| CellReport {
+            index: t.index,
+            label: labels[t.index].clone(),
+            worker: t.lane,
+            wall_secs: t.wall_secs,
+        })
+        .collect();
+    Ok((out, cells))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn labels(n: usize) -> Vec<String> {
-        (0..n).map(|i| format!("c{i}")).collect()
-    }
-
-    fn unit() -> Result<()> {
-        Ok(())
-    }
-
-    #[test]
-    fn results_arrive_in_cell_order_regardless_of_jobs() {
-        let ls = labels(37);
-        for jobs in [1, 2, 8, 64] {
-            let (out, reports) = run_workers(jobs, &ls, unit, |i, _| Ok(i * i)).unwrap();
-            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
-            assert_eq!(reports.len(), 37);
-            for (i, r) in reports.iter().enumerate() {
-                assert_eq!(r.index, i);
-                assert_eq!(r.label, format!("c{i}"));
-            }
-        }
-    }
-
-    #[test]
-    fn parallel_equals_serial() {
-        // A mildly uneven workload: result must not depend on scheduling.
-        let ls = labels(64);
-        let work = |i: usize, _: &()| -> Result<u64> {
-            let mut acc = 0u64;
-            for k in 0..((i % 7) + 1) * 10_000 {
-                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k as u64 + i as u64);
-            }
-            Ok(acc)
-        };
-        let (serial, _) = run_serial(&(), &ls, |i, r| work(i, r)).unwrap();
-        let (parallel, _) = run_workers(8, &ls, unit, work).unwrap();
-        assert_eq!(serial, parallel);
-    }
-
-    #[test]
-    fn lowest_index_error_wins_and_poisons_the_sweep() {
-        let ls = labels(16);
-        let err = run_workers(4, &ls, unit, |i, _| -> Result<usize> {
-            if i % 5 == 3 {
-                Err(Error::Config(format!("boom {i}")))
-            } else {
-                Ok(i)
-            }
-        })
-        .unwrap_err();
-        assert!(format!("{err}").contains("boom 3"), "{err}");
-    }
-
-    #[test]
-    fn worker_setup_failure_surfaces_when_no_worker_survives() {
-        let ls = labels(4);
-        let err = run_workers(
-            2,
-            &ls,
-            || -> Result<()> { Err(Error::Config("no engine".into())) },
-            |i, _| Ok(i),
-        )
-        .unwrap_err();
-        assert!(format!("{err}").contains("no engine"), "{err}");
-    }
-
-    #[test]
-    fn empty_grid_is_fine() {
-        let (out, reports) = run_serial::<usize, (), _>(&(), &[], |_, _| unreachable!()).unwrap();
-        assert!(out.is_empty());
-        assert!(reports.is_empty());
-    }
-
-    #[test]
-    fn workers_are_recorded() {
-        let ls = labels(32);
-        let (_, reports) = run_workers(4, &ls, unit, |i, _| {
-            std::thread::sleep(std::time::Duration::from_millis(1));
-            Ok(i)
-        })
-        .unwrap();
-        assert!(reports.iter().all(|r| r.worker < 4));
-    }
-
     #[test]
     fn provenance_table_shape() {
-        let ls = labels(3);
-        let (_, reports) = run_workers(2, &ls, unit, |i, _| Ok(i)).unwrap();
-        let t = provenance_table("demo", 2, &reports);
+        let cells: Vec<CellReport> = (0..3)
+            .map(|i| CellReport {
+                index: i,
+                label: format!("c{i}"),
+                worker: i % 2,
+                wall_secs: 0.25 * i as f64,
+            })
+            .collect();
+        let t = provenance_table("demo", 2, &cells);
         assert_eq!(t.rows.len(), 3);
         assert!(t.title.contains("jobs=2"));
     }

@@ -5,11 +5,14 @@
 //! `results/`. `mcal exp all` runs the full suite in order.
 //!
 //! Drivers submit their (dataset × arch × service × δ) grids as cells to
-//! the [`fleet`] runner, which shards them across `--jobs` workers
-//! (default: every core). The manifest and generated datasets are shared
-//! read-only; each worker owns its own engine (the PJRT binding is not
-//! thread-safe). Result CSVs are byte-identical for any `--jobs` value;
-//! scheduling details land in `results/provenance/`.
+//! the [`fleet`] runner, a thin client of the shared
+//! [`crate::runtime::pool`] subsystem (default budget: every core). The
+//! `--jobs` budget is split between cell lanes and per-lane intra-run
+//! workers, so narrow grids still saturate it via parallel arch-selection
+//! probes and θ-grid measurement shards. The manifest and generated
+//! datasets are shared read-only; each lane owns its own engine (the PJRT
+//! binding is not thread-safe). Result CSVs are byte-identical for any
+//! `--jobs` value; scheduling details land in `results/provenance/`.
 
 pub mod common;
 pub mod fleet;

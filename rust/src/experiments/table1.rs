@@ -7,7 +7,7 @@
 //! CSV is identical for any `--jobs` value.
 
 use crate::annotation::Service;
-use crate::coordinator::{run_with_arch_selection, RunParams};
+use crate::coordinator::{run_with_arch_selection, LabelingDriver, RunParams};
 use crate::dataset::{Dataset, DatasetPreset};
 use crate::report::{dollars, pct, Table};
 use crate::Result;
@@ -34,14 +34,13 @@ pub fn run(ctx: &Ctx, services: &[Service], probe_iters: usize) -> Result<Table>
         .collect();
 
     let view = ctx.view();
-    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let (di, svc) = cells[i];
         let (ds, preset) = &loaded[di];
         let (ledger, service) = view.service(svc);
         let params = RunParams { seed: view.seed, ..Default::default() };
         let (report, probes) = run_with_arch_selection(
-            engine,
-            view.manifest,
+            &LabelingDriver::for_scope(scope, view.manifest),
             ds,
             &service,
             ledger,

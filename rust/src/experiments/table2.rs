@@ -18,7 +18,7 @@
 //!   long it took (scheduling record, not part of the result contract).
 
 use crate::annotation::Service;
-use crate::coordinator::{run_al_trajectory, RunParams, Trajectory};
+use crate::coordinator::{run_al_trajectory, LabelingDriver, RunParams, Trajectory};
 use crate::dataset::{Dataset, DatasetPreset};
 use crate::model::ArchKind;
 use crate::report::{dollars, pct, Table};
@@ -83,7 +83,7 @@ pub fn run(ctx: &Ctx, datasets: &[&str], epsilon: f64) -> Result<SweepOutput> {
     // Trajectories are price-independent: record each once with a
     // throwaway ledger/service. Per-cell seeds match the serial sweep.
     let view = ctx.view();
-    let (trajectories, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+    let (trajectories, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let c = &cells[i];
         let delta = ((c.dfrac * c.ds.len() as f64).round() as usize).max(1);
         let (ledger, service) = view.service(Service::Amazon);
@@ -92,8 +92,7 @@ pub fn run(ctx: &Ctx, datasets: &[&str], epsilon: f64) -> Result<SweepOutput> {
             ..Default::default()
         };
         let traj = run_al_trajectory(
-            engine,
-            view.manifest,
+            &LabelingDriver::for_scope(scope, view.manifest),
             c.ds,
             &service,
             ledger,

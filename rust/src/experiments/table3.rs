@@ -6,7 +6,7 @@
 //! One fleet cell per dataset.
 
 use crate::annotation::Service;
-use crate::coordinator::{run_with_arch_selection, RunParams};
+use crate::coordinator::{run_with_arch_selection, LabelingDriver, RunParams};
 use crate::dataset::{Dataset, DatasetPreset};
 use crate::report::{dollars, pct, Table};
 use crate::Result;
@@ -23,7 +23,7 @@ pub fn run(ctx: &Ctx, epsilon: f64, probe_iters: usize) -> Result<Table> {
     let labels: Vec<String> = DATASETS.iter().map(|d| d.to_string()).collect();
 
     let view = ctx.view();
-    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, engine| {
+    let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let (ds, preset) = &loaded[i];
         let (ledger, service) = view.service(Service::Amazon);
         let params = RunParams {
@@ -32,8 +32,7 @@ pub fn run(ctx: &Ctx, epsilon: f64, probe_iters: usize) -> Result<Table> {
             ..Default::default()
         };
         let (report, _) = run_with_arch_selection(
-            engine,
-            view.manifest,
+            &LabelingDriver::for_scope(scope, view.manifest),
             ds,
             &service,
             ledger,

@@ -24,10 +24,13 @@
 //!   (human-labeling-service simulator with bounded-queue workers and a
 //!   dollar ledger), [`powerlaw`] / [`cost`] (the predictive models),
 //!   [`sampling`] (`M(.)` and `L(.)`), [`runtime`] (PJRT execution of the
-//!   AOT artifacts), and [`experiments`] — the paper's table/figure
-//!   drivers, which shard their run grids across cores with the
-//!   [`experiments::fleet`] work-stealing runner (`--jobs N`, one engine
-//!   per worker, deterministic results for any N).
+//!   AOT artifacts, plus [`runtime::pool`] — the shared worker-pool
+//!   subsystem: one engine per thread, deterministic scatter/map), and
+//!   [`experiments`] — the paper's table/figure drivers, which shard
+//!   their run grids across the pool via [`experiments::fleet`]
+//!   (`--jobs N` splits one budget between experiment cells, concurrent
+//!   arch-selection probes and θ-grid measurement shards; results are
+//!   bit-identical for any N).
 //! - **L2** — `python/compile/model.py`: JAX classifier fwd/bwd lowered once
 //!   to HLO text (`make artifacts`).
 //! - **L1** — `python/compile/kernels/`: Pallas kernels (tiled dense matmul

@@ -5,9 +5,10 @@ use std::process::ExitCode;
 
 use mcal::annotation::Service;
 use mcal::cli::Args;
-use mcal::coordinator::{run_mcal, run_with_arch_selection, RunParams};
+use mcal::coordinator::{run_mcal, run_with_arch_selection, LabelingDriver, RunParams};
 use mcal::experiments::common::{Ctx, Scale};
 use mcal::model::ArchKind;
+use mcal::runtime::EnginePool;
 use mcal::sampling::Metric;
 
 const USAGE: &str = "\
@@ -16,11 +17,18 @@ mcal — Minimum Cost Human-Machine Active Labeling (ICLR'23 reproduction)
 USAGE:
     mcal run <dataset> [--arch res18|cnn18|res50|effb0|auto] [--service amazon|satyam|<price>]
              [--epsilon 0.05] [--metric margin|entropy|leastconf|kcenter|random]
-             [--scale full|bench|smoke] [--seed N] [--artifacts DIR] [--results DIR]
+             [--scale full|bench|smoke] [--seed N] [--jobs N|auto]
+             [--probe-iters 8 (with --arch auto)] [--artifacts DIR] [--results DIR]
+    mcal arch-select <dataset> [--service ...] [--probe-iters 8] [--jobs N|auto] [...]
+                                                         probe every candidate architecture
+                                                         (concurrently with --jobs > 1) and
+                                                         run MCAL on the winner; stdout is
+                                                         byte-identical for any --jobs
     mcal exp <id> [--scale full|bench|smoke] [--jobs N|auto] [...]
                                                          run a paper experiment driver
-                                                         (--jobs: parallel fleet width,
-                                                          default one worker per core;
+                                                         (--jobs: total parallelism budget,
+                                                          split between cells and intra-run
+                                                          workers, default one per core;
                                                           results are identical for any N)
     mcal info [--artifacts DIR]                          show manifest / engine info
     mcal help
@@ -55,6 +63,7 @@ fn dispatch(args: &Args) -> mcal::Result<()> {
         }
         "info" => cmd_info(args),
         "run" => cmd_run(args),
+        "arch-select" => cmd_arch_select(args),
         "calib" => cmd_calib(args),
         "exp" => mcal::experiments::dispatch(args),
         other => Err(mcal::Error::Config(format!(
@@ -73,6 +82,38 @@ fn ctx_from(args: &Args) -> mcal::Result<Ctx> {
         args.u64_or("seed", 42)?,
     )?
     .with_jobs(args.jobs()?))
+}
+
+/// Intra-run parallelism for the single-run commands (`run`,
+/// `arch-select`): unlike `exp`, these default to 1 — a lone run should
+/// not fan engines across every core unless asked to.
+fn single_run_jobs(args: &Args, ctx: &Ctx) -> usize {
+    if args.opt("jobs").is_some() {
+        ctx.jobs
+    } else {
+        1
+    }
+}
+
+/// Run knobs shared by the single-run commands (`run`, `arch-select`), so
+/// the two honor the same flags identically.
+fn single_run_params(args: &Args, ctx: &Ctx) -> mcal::Result<RunParams> {
+    let metric = Metric::parse(args.opt_or("metric", "margin"))
+        .ok_or_else(|| mcal::Error::Config("bad --metric".into()))?;
+    let mut params = RunParams {
+        epsilon: args.f64_or("epsilon", 0.05)?,
+        metric,
+        seed: ctx.seed,
+        ..Default::default()
+    };
+    params.schedule.real_epochs =
+        args.usize_or("real-epochs", params.schedule.real_epochs as usize)? as u32;
+    // §Perf ablation: --score-cap 0 disables the pool-scoring subsample.
+    match args.usize_or("score-cap", 20_000)? {
+        0 => params.pool_score_cap = None,
+        cap => params.pool_score_cap = Some(cap),
+    }
+    Ok(params)
 }
 
 fn cmd_info(args: &Args) -> mcal::Result<()> {
@@ -166,36 +207,25 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
 
     let svc = Service::parse(args.opt_or("service", "amazon"))
         .ok_or_else(|| mcal::Error::Config("bad --service".into()))?;
-    let metric = Metric::parse(args.opt_or("metric", "margin"))
-        .ok_or_else(|| mcal::Error::Config("bad --metric".into()))?;
-
-    let mut params = RunParams {
-        epsilon: args.f64_or("epsilon", 0.05)?,
-        metric,
-        seed: ctx.seed,
-        ..Default::default()
-    };
-    params.schedule.real_epochs = args.usize_or("real-epochs", params.schedule.real_epochs as usize)? as u32;
-    // §Perf ablation: --score-cap 0 disables the pool-scoring subsample.
-    match args.usize_or("score-cap", 20_000)? {
-        0 => params.pool_score_cap = None,
-        cap => params.pool_score_cap = Some(cap),
-    }
+    let params = single_run_params(args, &ctx)?;
 
     let (ledger, service) = ctx.service(svc);
 
     let arch_opt = args.opt_or("arch", "auto");
+    let jobs = single_run_jobs(args, &ctx);
     let report = if arch_opt == "auto" {
+        let probe_iters = args.usize_or("probe-iters", 8)?;
+        let pool = EnginePool::for_budget(jobs, preset.candidate_archs.len())?;
+        let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
         let (report, probes) = run_with_arch_selection(
-            &ctx.engine,
-            &ctx.manifest,
+            &driver,
             &ds,
             &service,
             ledger,
             &preset.candidate_archs,
             preset.classes_tag,
             params,
-            8,
+            probe_iters,
         )?;
         for p in &probes {
             println!(
@@ -207,16 +237,9 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
     } else {
         let arch = ArchKind::parse(arch_opt)
             .ok_or_else(|| mcal::Error::Config(format!("bad --arch '{arch_opt}'")))?;
-        run_mcal(
-            &ctx.engine,
-            &ctx.manifest,
-            &ds,
-            &service,
-            ledger,
-            arch,
-            preset.classes_tag,
-            params,
-        )?
+        let pool = EnginePool::new(jobs.saturating_sub(1))?;
+        let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
+        run_mcal(&driver, &ds, &service, ledger, arch, preset.classes_tag, params)?
     };
 
     println!("{}", report.summary());
@@ -225,5 +248,57 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
         "breakdown: human=${:.2} training=${:.2} exploration=${:.2} retrains={} wall={:.1}s",
         c.human_labeling, c.training, c.exploration, c.retrains, report.wall_secs
     );
+    Ok(())
+}
+
+/// Architecture selection as a first-class command. Probes run
+/// concurrently on a `--jobs`-sized pool; stdout carries only the
+/// deterministic report (probe table, winner, run summary) and is
+/// byte-identical for any `--jobs` value — wall-clock goes to stderr.
+fn cmd_arch_select(args: &Args) -> mcal::Result<()> {
+    let dataset_name = args
+        .positionals
+        .first()
+        .ok_or_else(|| mcal::Error::Config("arch-select: missing <dataset>".into()))?
+        .clone();
+    let ctx = ctx_from(args)?;
+    let (ds, preset) = ctx.dataset(&dataset_name)?;
+    let svc = Service::parse(args.opt_or("service", "amazon"))
+        .ok_or_else(|| mcal::Error::Config("bad --service".into()))?;
+    let params = single_run_params(args, &ctx)?;
+    let probe_iters = args.usize_or("probe-iters", 8)?;
+    let (ledger, service) = ctx.service(svc);
+
+    let jobs = single_run_jobs(args, &ctx);
+    let pool = EnginePool::for_budget(jobs, preset.candidate_archs.len())?;
+    let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
+
+    let t0 = std::time::Instant::now();
+    let (report, probes) = run_with_arch_selection(
+        &driver,
+        &ds,
+        &service,
+        ledger,
+        &preset.candidate_archs,
+        preset.classes_tag,
+        params,
+        probe_iters,
+    )?;
+
+    let n_candidates = preset.candidate_archs.len();
+    println!("arch-select {} candidates={n_candidates} seed={}", ds.name, ctx.seed);
+    for p in &probes {
+        let c_star = p
+            .c_star
+            .map(|c| format!("{c:.6}"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "probe {}: c_star={} b_probed={} training=${:.4} stable={}",
+            p.arch, c_star, p.b_probed, p.training_spend, p.stable
+        );
+    }
+    println!("winner {}", report.arch);
+    println!("{}", report.summary());
+    eprintln!("wall {:.1}s (jobs={jobs})", t0.elapsed().as_secs_f64());
     Ok(())
 }

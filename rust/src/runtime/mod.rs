@@ -12,10 +12,12 @@
 //! crosses the host boundary.
 
 pub mod manifest;
+pub mod pool;
 pub mod session;
 
 pub use manifest::{Manifest, ModelMeta};
-pub use session::{ModelSession, Scores};
+pub use pool::{EnginePool, TaskReport, WorkerScope};
+pub use session::{ChunkScorer, ModelSession, Scores};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -38,9 +40,10 @@ pub struct EngineStats {
 ///
 /// NOT thread-safe: the `xla` 0.1 wrapper types hold non-atomically
 /// refcounted client handles, so an `Engine` must stay on the thread that
-/// created it. The experiment fleet ([`crate::experiments::fleet`])
-/// therefore gives every worker its *own* engine instead of sharing one —
-/// see `fleet::run_sweep`.
+/// created it. All parallelism therefore goes through [`pool::EnginePool`],
+/// which owns one engine per worker thread; the experiment fleet
+/// ([`crate::experiments::fleet`]), the arch-selection probes and the
+/// θ-grid measurement shards are all clients of that pool.
 pub struct Engine {
     client: xla::PjRtClient,
     exe_cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,

@@ -1,0 +1,618 @@
+//! Shared worker-pool subsystem: N per-thread engines plus a deterministic
+//! `scatter`/`map` API.
+//!
+//! The xla 0.1 PJRT wrappers are not thread-safe (non-atomic refcounts in
+//! the client handles), so parallelism in this crate is always *one engine
+//! per thread*. Before this module, that pattern was private to the
+//! experiment fleet; [`EnginePool`] makes it reusable by every layer that
+//! has independent work units — experiment cells
+//! ([`crate::experiments::fleet`]), arch-selection candidate probes
+//! ([`crate::coordinator::archselect`]), and θ-grid measurement shards
+//! ([`crate::coordinator::LabelingEnv`]).
+//!
+//! ## Execution model
+//!
+//! An `EnginePool` owns `workers()` persistent threads. Each thread builds
+//! its own [`Engine`] lazily on the first task it receives (busy lanes
+//! still build concurrently, each on its own thread; lanes a workload
+//! never reaches cost one idle thread, not a PJRT client) and keeps it
+//! for the pool's lifetime, so executables compiled for one task stay
+//! warm for every later task on that lane. [`EnginePool::scatter`]
+//! fans `n` indexed tasks over the workers **and the calling thread**: the
+//! caller is lane 0 and runs tasks against the `inline` engine it passes
+//! in, so a pool of `w` workers gives `w + 1` concurrent lanes and a pool
+//! of width 0 degenerates to a plain serial loop on the caller's (warm)
+//! engine — the serial and parallel paths are the same code.
+//!
+//! Scheduling is work-stealing via one shared atomic cursor, exactly as the
+//! pre-pool fleet did: tasks are coarse, so a shared counter keeps every
+//! lane busy until the grid drains, and no task order is promised.
+//!
+//! ## Determinism contract
+//!
+//! Results are collected into index-ordered slots, so `scatter` returns
+//! them in task order no matter which lane ran what. Combined with two
+//! rules for task authors this makes results bit-identical for **any**
+//! pool width (the `--jobs`-invariance pinned by `tests/policy_golden.rs`
+//! and `tests/pool_parallel.rs`):
+//!
+//! 1. a task must derive all randomness from its own index or stable
+//!    identity — use [`task_seed`] — never from execution order;
+//! 2. a task must touch only its own state plus shared *read-only* data
+//!    (engines compile the same artifacts to the same executables, so the
+//!    same task on any lane computes the same bits).
+//!
+//! Lane assignment and wall-clock per task are returned as [`TaskReport`]s
+//! — provenance, deliberately separate from results, because they are the
+//! one thing that is *not* deterministic.
+//!
+//! ## Nested pools and the `--jobs` budget
+//!
+//! A single `--jobs N` budget covers both sweep-level and intra-run
+//! parallelism: [`split_jobs`] factors it into `outer` lanes × `inner`
+//! engines per lane, and [`EnginePool::with_inner`] gives every lane
+//! (including the caller's lane 0) a private nested pool of `inner - 1`
+//! workers, exposed to tasks as [`WorkerScope::inner`]. A task must only
+//! ever scatter onto its *own* lane's nested pool — scattering back onto
+//! the pool that is running you would deadlock, which is why
+//! `WorkerScope::inner` is the only pool a task can see.
+//!
+//! ## Errors
+//!
+//! A failing (or panicking) task poisons the scatter: in-flight tasks
+//! finish, no new ones start, and the lowest-index error is returned. A
+//! worker whose engine fails to build bows out and the surviving lanes
+//! (at minimum the caller) absorb its share.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::prng::splitmix64;
+use crate::{Error, Result};
+
+use super::Engine;
+
+/// Derive an independent PRNG seed for one task of a scatter. Depends only
+/// on the base seed and the task's stable identity (its index, or any
+/// stable id the caller prefers), never on lane or schedule — the heart of
+/// the pool's `--jobs`-invariance contract.
+pub fn task_seed(seed: u64, task: u64) -> u64 {
+    let mut s = seed ^ task.wrapping_mul(0x2545_F491_4F6C_DD1D);
+    splitmix64(&mut s)
+}
+
+/// Factor a total `--jobs` budget into `(outer, inner)`: `outer` sweep
+/// lanes × `inner` engines per lane, with `outer * inner <= jobs` and
+/// `outer <= tasks`. When the grid is narrower than the budget the spare
+/// width goes intra-run — a single-cell sweep on an 8-way budget yields
+/// `(1, 8)` — but inner width is uniform per lane, so a non-divisible
+/// remainder is dropped rather than unevenly distributed:
+/// `split_jobs(6, 4)` is `(4, 1)`, not 4 lanes plus 2 stragglers.
+pub fn split_jobs(jobs: usize, tasks: usize) -> (usize, usize) {
+    let jobs = jobs.max(1);
+    let outer = jobs.min(tasks.max(1));
+    (outer, (jobs / outer).max(1))
+}
+
+/// What one scatter task sees: the lane's engine, the lane's private
+/// nested pool (if the pool was built with one), and the lane id (0 =
+/// caller, 1..=workers). Engines are lane-bound — never smuggle one out.
+pub struct WorkerScope<'p> {
+    pub engine: &'p Engine,
+    pub inner: Option<&'p EnginePool>,
+    pub lane: usize,
+}
+
+/// Scheduling record for one completed task — provenance, not results.
+#[derive(Clone, Debug)]
+pub struct TaskReport {
+    pub index: usize,
+    /// Lane that ran the task (0 = the calling thread).
+    pub lane: usize,
+    pub wall_secs: f64,
+}
+
+// ---------------------------------------------------------------- internals
+
+type Slot<T> = Option<(Result<T>, usize, f64)>;
+
+/// One scatter's shared state plus the user closure. Lives on the caller's
+/// stack for the duration of `scatter`; workers see it through a
+/// lifetime-erased reference (see the SAFETY note in `scatter`).
+struct ScatterJob<T, F> {
+    cursor: AtomicUsize,
+    n: usize,
+    poisoned: AtomicBool,
+    slots: Mutex<Vec<Slot<T>>>,
+    setup_err: Mutex<Option<String>>,
+    f: F,
+}
+
+/// Object-safe face of a `ScatterJob`, so workers can run jobs of any
+/// `(T, F)`. `Sync` supertrait: workers share one job by reference.
+trait Job: Sync {
+    fn run(&self, scope: &WorkerScope<'_>);
+    fn setup_failed(&self, msg: &str);
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+impl<T, F> Job for ScatterJob<T, F>
+where
+    T: Send,
+    F: Fn(usize, &WorkerScope<'_>) -> Result<T> + Sync,
+{
+    /// The steal loop every lane runs: claim the next index, compute,
+    /// deposit into the index-ordered slot. A panic in the closure is
+    /// caught and converted to an error so the pool never hangs or dies.
+    fn run(&self, scope: &WorkerScope<'_>) {
+        loop {
+            if self.poisoned.load(Ordering::Relaxed) {
+                break;
+            }
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            let t0 = Instant::now();
+            let r = catch_unwind(AssertUnwindSafe(|| (self.f)(i, scope))).unwrap_or_else(|p| {
+                Err(Error::Pool(format!("task {i} panicked: {}", panic_message(&*p))))
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            if r.is_err() {
+                self.poisoned.store(true, Ordering::Relaxed);
+            }
+            self.slots.lock().unwrap()[i] = Some((r, scope.lane, wall));
+        }
+    }
+
+    fn setup_failed(&self, msg: &str) {
+        self.setup_err.lock().unwrap().get_or_insert_with(|| msg.to_string());
+    }
+}
+
+/// Collect a finished job's slots in index order; lowest-index error wins.
+fn collect<T, F>(job: ScatterJob<T, F>) -> Result<(Vec<T>, Vec<TaskReport>)> {
+    let n = job.n;
+    let mut setup_err = job.setup_err.into_inner().unwrap();
+    let slots = job.slots.into_inner().unwrap();
+    let mut out = Vec::with_capacity(n);
+    let mut reports = Vec::with_capacity(n);
+    let mut first_err: Option<Error> = None;
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some((Ok(v), lane, wall_secs)) => {
+                out.push(v);
+                reports.push(TaskReport { index: i, lane, wall_secs });
+            }
+            Some((Err(e), _, _)) => {
+                first_err.get_or_insert(e);
+            }
+            None => {
+                // Only reachable after poisoning (the caller lane drains
+                // everything otherwise); keep a fallback for robustness.
+                if first_err.is_none() {
+                    first_err = Some(match setup_err.take() {
+                        Some(m) => Error::Pool(format!("worker setup failed: {m}")),
+                        None => Error::Pool(format!("task {i} produced no result")),
+                    });
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok((out, reports)),
+    }
+}
+
+/// Countdown the caller blocks on until every dispatched worker has
+/// finished (or abandoned) the current job.
+struct Completion {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Completion {
+    fn new(n: usize) -> Self {
+        Completion { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn finish(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.cv.wait(r).unwrap();
+        }
+    }
+}
+
+/// Waits on drop, so `scatter` cannot unwind past its stack-held job while
+/// a worker still references it.
+struct WaitGuard<'a>(&'a Completion);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// Signals completion on drop. Every dispatched [`Msg`] owns one, so the
+/// caller is released exactly once per message on every path: after the
+/// worker runs the job, while a worker unwinds mid-job (only possible
+/// outside the user closure, which is `catch_unwind`-wrapped), when a
+/// send fails, and — crucially — when a dead worker's queue is destroyed
+/// with messages still in it.
+struct FinishGuard(Arc<Completion>);
+
+impl Drop for FinishGuard {
+    fn drop(&mut self) {
+        self.0.finish();
+    }
+}
+
+struct Msg {
+    job: &'static (dyn Job + 'static),
+    done: FinishGuard,
+}
+
+struct Worker {
+    tx: Option<Sender<Msg>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+fn worker_main(rx: Receiver<Msg>, lane: usize, inner_workers: usize) {
+    // The lane's engine (and nested pool) build lazily on the first task
+    // it receives: lanes a workload never reaches cost an idle thread,
+    // not a PJRT client, and the busy lanes of a first scatter still
+    // build concurrently (each on its own thread). A build failure is
+    // reported per job via `setup_failed`; the caller lane still drains
+    // the work.
+    let mut built: Option<std::result::Result<(Engine, Option<EnginePool>), String>> = None;
+    while let Ok(Msg { job, done }) = rx.recv() {
+        let _fin = done;
+        let b = built.get_or_insert_with(|| {
+            let engine = Engine::cpu().map_err(|e| e.to_string())?;
+            let inner = match inner_workers {
+                0 => None,
+                w => Some(EnginePool::new(w).map_err(|e| e.to_string())?),
+            };
+            Ok((engine, inner))
+        });
+        match &*b {
+            Ok((engine, inner)) => {
+                let scope = WorkerScope { engine, inner: inner.as_ref(), lane };
+                job.run(&scope);
+            }
+            Err(e) => job.setup_failed(e),
+        }
+    }
+}
+
+/// A pool of persistent worker threads, each owning a private [`Engine`]
+/// (and optionally a nested pool). See the module docs for the execution
+/// and determinism model.
+pub struct EnginePool {
+    workers: Vec<Worker>,
+    inline_inner: Option<Box<EnginePool>>,
+    /// Latch so a lane that failed engine setup is reported once per pool,
+    /// not once per scatter.
+    degraded_warned: AtomicBool,
+}
+
+impl EnginePool {
+    /// Pool of `workers` lanes beyond the caller. `new(0)` is a valid
+    /// zero-thread pool whose `scatter` is a serial loop on the caller.
+    pub fn new(workers: usize) -> Result<EnginePool> {
+        Self::with_inner(workers, 0)
+    }
+
+    /// Pool for a total `--jobs` budget over `tasks` independent work
+    /// units: [`split_jobs`] factors the budget into outer lanes × inner
+    /// width, and this translates both to pool widths (the caller is a
+    /// lane, so each level spawns one thread fewer than its width). The
+    /// one constructor every budget-driven caller should use.
+    pub fn for_budget(jobs: usize, tasks: usize) -> Result<EnginePool> {
+        let (outer, inner) = split_jobs(jobs, tasks);
+        Self::with_inner(outer - 1, inner - 1)
+    }
+
+    /// Pool of `workers` lanes beyond the caller, where every lane
+    /// (including the caller's lane 0) additionally owns a private nested
+    /// pool of `inner_workers` threads, surfaced as [`WorkerScope::inner`].
+    /// Engine count: `(workers + 1) * (inner_workers + 1) - 1` plus the
+    /// caller's own engine — i.e. `outer * inner` lanes for
+    /// `with_inner(outer - 1, inner - 1)`.
+    pub fn with_inner(workers: usize, inner_workers: usize) -> Result<EnginePool> {
+        let mut ws = Vec::with_capacity(workers);
+        for lane in 1..=workers {
+            let (tx, rx) = channel();
+            let handle = std::thread::Builder::new()
+                .name(format!("mcal-pool-{lane}"))
+                .spawn(move || worker_main(rx, lane, inner_workers))
+                .map_err(|e| Error::Pool(format!("spawn worker {lane}: {e}")))?;
+            ws.push(Worker { tx: Some(tx), handle: Some(handle) });
+        }
+        let inline_inner = match inner_workers {
+            0 => None,
+            w => Some(Box::new(EnginePool::new(w)?)),
+        };
+        Ok(EnginePool { workers: ws, inline_inner, degraded_warned: AtomicBool::new(false) })
+    }
+
+    /// Worker threads beyond the caller lane.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Concurrent lanes a scatter uses (workers + the caller).
+    pub fn lanes(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// The pool intra-run work should scatter on. A `(1, inner)` budget
+    /// split builds a pool whose entire width lives in the caller lane's
+    /// nested pool (`with_inner(0, inner - 1)`); work dispatched *by the
+    /// caller itself* (rather than through `scatter`, which hands lane 0
+    /// its nested pool via [`WorkerScope::inner`]) must delegate to that
+    /// nested pool or the width is unreachable.
+    pub fn intra(&self) -> &EnginePool {
+        if self.workers.is_empty() {
+            if let Some(inner) = &self.inline_inner {
+                return inner.intra();
+            }
+        }
+        self
+    }
+
+    /// Run `n` indexed tasks across all lanes; the caller participates as
+    /// lane 0 using `inline` (its own, typically warm, engine). Returns
+    /// results in task order plus one [`TaskReport`] per task. See the
+    /// module docs for determinism and error semantics.
+    pub fn scatter<T, F>(
+        &self,
+        inline: &Engine,
+        n: usize,
+        f: F,
+    ) -> Result<(Vec<T>, Vec<TaskReport>)>
+    where
+        T: Send,
+        F: Fn(usize, &WorkerScope<'_>) -> Result<T> + Sync,
+    {
+        let job = ScatterJob {
+            cursor: AtomicUsize::new(0),
+            n,
+            poisoned: AtomicBool::new(false),
+            slots: Mutex::new((0..n).map(|_| None).collect()),
+            setup_err: Mutex::new(None),
+            f,
+        };
+        // The caller is a lane too, so at most n - 1 workers are useful.
+        let fan = self.workers.len().min(n.saturating_sub(1));
+        let completion = Arc::new(Completion::new(fan));
+        if fan > 0 {
+            // SAFETY: `job` outlives every use of `erased`. Workers only
+            // touch the job between receiving the message and dropping
+            // their `FinishGuard`, and the `WaitGuard` below blocks this
+            // frame (even on unwind) until all `fan` guards have dropped —
+            // so the reference never dangles while live. The borrows
+            // captured in `f` are likewise pinned by this frame.
+            let job_ref: &(dyn Job + '_) = &job;
+            let erased: &'static (dyn Job + 'static) = unsafe {
+                std::mem::transmute::<&(dyn Job + '_), &'static (dyn Job + 'static)>(job_ref)
+            };
+            for w in &self.workers[..fan] {
+                let msg = Msg { job: erased, done: FinishGuard(Arc::clone(&completion)) };
+                if let Some(tx) = &w.tx {
+                    // A failed send (worker died earlier) hands `msg` back,
+                    // and dropping it releases that share of the wait via
+                    // its FinishGuard — as does a message destroyed in a
+                    // dead worker's queue, so no delivery race can leave
+                    // the caller waiting on a share nobody holds.
+                    let _ = tx.send(msg);
+                }
+            }
+        }
+        {
+            let _wait = WaitGuard(&completion);
+            let inner = self.inline_inner.as_deref();
+            let scope = WorkerScope { engine: inline, inner, lane: 0 };
+            job.run(&scope);
+        }
+        // A worker whose engine failed to build is not an error (the
+        // surviving lanes absorb its share) — but a degraded pool must
+        // leave a trace. stderr, not the `log` facade: the binary installs
+        // no logger, and a sweep quietly running below its `--jobs` budget
+        // must be visible. Latched: once per pool, not per scatter.
+        if let Some(m) = job.setup_err.lock().unwrap().as_deref() {
+            if !self.degraded_warned.swap(true, Ordering::Relaxed) {
+                eprintln!("warning: pool degraded — a worker lane failed engine setup: {m}");
+            }
+        }
+        collect(job)
+    }
+
+    /// Convenience over [`EnginePool::scatter`]: one task per item.
+    pub fn map<I, T, F>(&self, inline: &Engine, items: &[I], f: F) -> Result<Vec<T>>
+    where
+        I: Sync,
+        T: Send,
+        F: Fn(&I, &WorkerScope<'_>) -> Result<T> + Sync,
+    {
+        Ok(self.scatter(inline, items.len(), |i, scope| f(&items[i], scope))?.0)
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        // Close every channel first so all workers wind down concurrently,
+        // then join.
+        for w in &mut self.workers {
+            w.tx = None;
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+
+    #[test]
+    fn split_jobs_budgets() {
+        assert_eq!(split_jobs(1, 10), (1, 1));
+        assert_eq!(split_jobs(4, 10), (4, 1));
+        assert_eq!(split_jobs(8, 2), (2, 4));
+        assert_eq!(split_jobs(8, 3), (3, 2));
+        assert_eq!(split_jobs(8, 1), (1, 8));
+        assert_eq!(split_jobs(0, 0), (1, 1));
+        // The factored budget never exceeds the requested one.
+        for jobs in 1..=16 {
+            for tasks in 1..=16 {
+                let (o, i) = split_jobs(jobs, tasks);
+                assert!(o * i <= jobs.max(1), "jobs={jobs} tasks={tasks}");
+                assert!(o <= tasks);
+            }
+        }
+    }
+
+    #[test]
+    fn task_seed_is_stable_and_decorrelated() {
+        assert_eq!(task_seed(42, 3), task_seed(42, 3));
+        assert_ne!(task_seed(42, 3), task_seed(42, 4));
+        assert_ne!(task_seed(42, 3), task_seed(43, 3));
+        // Streams from adjacent tasks should not collide early.
+        let mut a = Pcg32::new(task_seed(7, 0), 0);
+        let mut b = Pcg32::new(task_seed(7, 1), 0);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    /// One pool + engine reused across the scheduling assertions (PJRT
+    /// clients are heavyweight; keep the count low).
+    #[test]
+    fn scatter_is_index_ordered_width_invariant_and_reusable() {
+        let inline = Engine::cpu().unwrap();
+        let serial = EnginePool::new(0).unwrap();
+        let wide = EnginePool::new(3).unwrap();
+        // Mildly uneven per-task work, seeded per task index.
+        let work = |i: usize, _: &WorkerScope<'_>| -> Result<u64> {
+            let mut rng = Pcg32::new(task_seed(42, i as u64), 0xF00);
+            let mut acc = 0u64;
+            for _ in 0..((i % 5) + 1) * 2_000 {
+                acc = acc.wrapping_add(rng.next_u64());
+            }
+            Ok(acc)
+        };
+        let (a, ra) = serial.scatter(&inline, 23, work).unwrap();
+        let (b, rb) = wide.scatter(&inline, 23, work).unwrap();
+        assert_eq!(a, b, "results must be identical for any pool width");
+        assert_eq!(ra.len(), 23);
+        for (i, r) in ra.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.lane, 0, "zero-width pool runs everything on the caller");
+        }
+        assert!(rb.iter().all(|r| r.lane <= 3));
+
+        // Persistent workers: the same pool serves later scatters.
+        let (c, _) = wide.scatter(&inline, 5, |i, _| Ok(i * i)).unwrap();
+        assert_eq!(c, vec![0, 1, 4, 9, 16]);
+
+        // map() is scatter by item.
+        let doubled = wide.map(&inline, &[10usize, 20, 30], |x, _| Ok(x * 2)).unwrap();
+        assert_eq!(doubled, vec![20, 40, 60]);
+
+        // Empty and single-task scatters stay inline.
+        let (e, er) = wide.scatter(&inline, 0, |_, _| -> Result<()> { unreachable!() }).unwrap();
+        assert!(e.is_empty() && er.is_empty());
+        let (one, or) = wide.scatter(&inline, 1, |i, s| Ok((i, s.lane))).unwrap();
+        assert_eq!(one, vec![(0, 0)]);
+        assert_eq!(or[0].lane, 0);
+    }
+
+    /// The poisoned-worker contract: a failing task stops the sweep, the
+    /// lowest-index error surfaces, and a panicking task is an error — not
+    /// a hang, not a crash.
+    #[test]
+    fn poisoning_surfaces_lowest_index_error_and_catches_panics() {
+        let inline = Engine::cpu().unwrap();
+        let pool = EnginePool::new(2).unwrap();
+
+        let err = pool
+            .scatter(&inline, 16, |i, _| -> Result<usize> {
+                if i % 5 == 3 {
+                    Err(Error::Config(format!("boom {i}")))
+                } else {
+                    Ok(i)
+                }
+            })
+            .unwrap_err();
+        assert!(format!("{err}").contains("boom 3"), "{err}");
+
+        let err = pool
+            .scatter(&inline, 8, |i, _| -> Result<usize> {
+                if i == 2 {
+                    panic!("kaboom");
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("panicked") && msg.contains("kaboom"), "{msg}");
+
+        // The pool survives both incidents.
+        let (ok, _) = pool.scatter(&inline, 4, |i, _| Ok(i + 1)).unwrap();
+        assert_eq!(ok, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn intra_delegates_caller_only_pools_to_their_nested_pool() {
+        let flat = EnginePool::new(1).unwrap();
+        assert_eq!(flat.intra().workers(), 1);
+        // An `outer = 1` split: all width lives in the caller's nested pool.
+        let caller_only = EnginePool::with_inner(0, 2).unwrap();
+        assert_eq!(caller_only.intra().workers(), 2);
+        let empty = EnginePool::new(0).unwrap();
+        assert_eq!(empty.intra().workers(), 0);
+    }
+
+    #[test]
+    fn nested_inner_pools_reach_every_lane() {
+        let inline = Engine::cpu().unwrap();
+        // 2 lanes (caller + 1 worker), each with a 1-worker nested pool.
+        let pool = EnginePool::with_inner(1, 1).unwrap();
+        let (out, _) = pool
+            .scatter(&inline, 4, |i, scope| {
+                let inner = scope.inner.expect("every lane has a nested pool");
+                assert_eq!(inner.workers(), 1);
+                let (parts, _) = inner.scatter(scope.engine, 3, |j, _| Ok((i + 1) * (j + 1)))?;
+                Ok(parts.iter().sum::<usize>())
+            })
+            .unwrap();
+        assert_eq!(out, vec![6, 12, 18, 24]);
+    }
+}

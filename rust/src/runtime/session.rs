@@ -223,30 +223,24 @@ impl<'e> ModelSession<'e> {
         indices: &[usize],
         scores: &mut Scores,
     ) -> Result<()> {
-        for chunk in indices.chunks(self.eval_bs) {
-            let real = ds.gather_padded(chunk, self.eval_bs, &mut self.eval_host);
-            let x = self
-                .engine
-                .buf_f32(&self.eval_host, &[self.eval_bs, self.feat_dim])?;
-            let out = self.engine.run_b(&self.predict_exe, &[state, &x])?;
-            // Tuple output: (logits, margin, entropy, maxprob, pred).
-            let parts = self.engine.read_tuple(&out[0])?;
-            if parts.len() != 5 {
-                return Err(Error::Xla(format!(
-                    "predict returned {} outputs, expected 5",
-                    parts.len()
-                )));
-            }
-            let margin = parts[1].to_vec::<f32>()?;
-            let entropy = parts[2].to_vec::<f32>()?;
-            let maxprob = parts[3].to_vec::<f32>()?;
-            let pred = parts[4].to_vec::<i32>()?;
-            scores.margin.extend_from_slice(&margin[..real]);
-            scores.entropy.extend_from_slice(&entropy[..real]);
-            scores.maxprob.extend_from_slice(&maxprob[..real]);
-            scores.pred.extend(pred[..real].iter().map(|&p| p as u32));
-        }
-        Ok(())
+        score_chunks(
+            self.engine,
+            &self.predict_exe,
+            state,
+            ds,
+            indices,
+            self.eval_bs,
+            self.feat_dim,
+            &mut self.eval_host,
+            scores,
+        )
+    }
+
+    /// Host snapshot of the state vector (`[2P]` flat params + momentum).
+    /// The f32 round-trip is bit-exact, so a [`ChunkScorer`] built from it
+    /// scores exactly like this session's own `predict`.
+    pub fn state_host(&self) -> Result<Vec<f32>> {
+        self.engine.read_f32(self.state()?)
     }
 
     /// Penultimate-layer features for `indices` (row-major, hidden wide).
@@ -308,5 +302,107 @@ impl<'e> ModelSession<'e> {
 
     pub fn train_bs(&self) -> usize {
         self.train_bs
+    }
+}
+
+/// The shared scoring loop of [`ModelSession::predict`] and
+/// [`ChunkScorer::score`]: run `indices` through the predict executable in
+/// `eval_bs`-sized padded batches against `state`, appending to `scores`.
+/// Both callers walk identical batch boundaries, which is what makes
+/// pool-sharded scoring bit-identical to the serial path (see
+/// [`crate::runtime::pool`]).
+#[allow(clippy::too_many_arguments)]
+fn score_chunks(
+    engine: &Engine,
+    exe: &xla::PjRtLoadedExecutable,
+    state: &xla::PjRtBuffer,
+    ds: &Dataset,
+    indices: &[usize],
+    eval_bs: usize,
+    feat_dim: usize,
+    host: &mut [f32],
+    scores: &mut Scores,
+) -> Result<()> {
+    for chunk in indices.chunks(eval_bs) {
+        let real = ds.gather_padded(chunk, eval_bs, host);
+        let x = engine.buf_f32(host, &[eval_bs, feat_dim])?;
+        let out = engine.run_b(exe, &[state, &x])?;
+        // Tuple output: (logits, margin, entropy, maxprob, pred).
+        let parts = engine.read_tuple(&out[0])?;
+        if parts.len() != 5 {
+            return Err(Error::Xla(format!(
+                "predict returned {} outputs, expected 5",
+                parts.len()
+            )));
+        }
+        let margin = parts[1].to_vec::<f32>()?;
+        let entropy = parts[2].to_vec::<f32>()?;
+        let maxprob = parts[3].to_vec::<f32>()?;
+        let pred = parts[4].to_vec::<i32>()?;
+        scores.margin.extend_from_slice(&margin[..real]);
+        scores.entropy.extend_from_slice(&entropy[..real]);
+        scores.maxprob.extend_from_slice(&maxprob[..real]);
+        scores.pred.extend(pred[..real].iter().map(|&p| p as u32));
+    }
+    Ok(())
+}
+
+/// Stateless scorer: one model set's predict entry point bound to a host
+/// snapshot of trained state, on an arbitrary engine. Pool lanes build one
+/// of these (uploading the state once per shard) to score slices of a
+/// batch in parallel — see [`crate::coordinator::LabelingEnv`]'s sharded
+/// scoring. The executable is cached in the lane's engine, so repeated
+/// shards on one lane recompile nothing.
+pub struct ChunkScorer<'e> {
+    engine: &'e Engine,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    state: xla::PjRtBuffer,
+    eval_bs: usize,
+    feat_dim: usize,
+    host: Vec<f32>,
+}
+
+impl<'e> ChunkScorer<'e> {
+    /// Bind `model_name`'s predict executable on `engine` to a host state
+    /// snapshot (from [`ModelSession::state_host`]).
+    pub fn open(
+        engine: &'e Engine,
+        manifest: &Manifest,
+        model_name: &str,
+        state: &[f32],
+    ) -> Result<Self> {
+        let exe = engine.load(manifest.artifact("predict", model_name))?;
+        let state = engine.buf_f32(state, &[state.len()])?;
+        Ok(ChunkScorer {
+            engine,
+            exe,
+            state,
+            eval_bs: manifest.eval_bs,
+            feat_dim: manifest.feat_dim,
+            host: vec![0.0; manifest.eval_bs * manifest.feat_dim],
+        })
+    }
+
+    /// Score `indices` of `ds`; output aligned with `indices`. Batch
+    /// boundaries match [`ModelSession::predict`] exactly.
+    pub fn score(&mut self, ds: &Dataset, indices: &[usize]) -> Result<Scores> {
+        let mut scores = Scores {
+            margin: Vec::with_capacity(indices.len()),
+            entropy: Vec::with_capacity(indices.len()),
+            maxprob: Vec::with_capacity(indices.len()),
+            pred: Vec::with_capacity(indices.len()),
+        };
+        score_chunks(
+            self.engine,
+            &self.exe,
+            &self.state,
+            ds,
+            indices,
+            self.eval_bs,
+            self.feat_dim,
+            &mut self.host,
+            &mut scores,
+        )?;
+        Ok(scores)
     }
 }

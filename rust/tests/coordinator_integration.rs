@@ -5,7 +5,8 @@ use std::sync::Arc;
 
 use mcal::annotation::{AnnotationService, Ledger, Service, SimService, SimServiceConfig};
 use mcal::coordinator::{
-    run_al_trajectory, run_budget, run_mcal, run_with_arch_selection, RunParams, StopReason,
+    run_al_trajectory, run_budget, run_mcal, run_with_arch_selection, LabelingDriver, RunParams,
+    StopReason,
 };
 use mcal::dataset::preset;
 use mcal::model::ArchKind;
@@ -14,6 +15,12 @@ use mcal::runtime::{Engine, Manifest};
 struct Fixture {
     engine: Engine,
     manifest: Manifest,
+}
+
+impl Fixture {
+    fn driver(&self) -> LabelingDriver<'_> {
+        LabelingDriver::new(&self.engine, &self.manifest)
+    }
 }
 
 fn setup() -> Option<Fixture> {
@@ -63,8 +70,7 @@ fn mcal_end_to_end_fashion_smoke() {
     let params = RunParams { seed: 11, ..Default::default() };
 
     let report = run_mcal(
-        &f.engine,
-        &f.manifest,
+        &f.driver(),
         &ds,
         &svc,
         ledger.clone(),
@@ -107,8 +113,7 @@ fn mcal_respects_error_bound_across_seeds() {
         let (ledger, svc) = service(Service::Amazon, seed);
         let params = RunParams { seed, ..Default::default() };
         let report = run_mcal(
-            &f.engine,
-            &f.manifest,
+            &f.driver(),
             &ds,
             &svc,
             ledger,
@@ -135,8 +140,7 @@ fn mcal_is_deterministic_per_seed() {
         let (ledger, svc) = service(Service::Amazon, 5);
         let params = RunParams { seed: 5, ..Default::default() };
         let report = run_mcal(
-            &f.engine,
-            &f.manifest,
+            &f.driver(),
             &ds,
             &svc,
             ledger,
@@ -159,8 +163,7 @@ fn al_trajectory_and_pricing() {
     let delta = (ds.len() / 20).max(1);
 
     let traj = run_al_trajectory(
-        &f.engine,
-        &f.manifest,
+        &f.driver(),
         &ds,
         &svc,
         ledger,
@@ -195,8 +198,7 @@ fn mcal_beats_or_matches_human_only_everywhere_it_claims() {
     let (ledger, svc) = service(Service::Amazon, 3);
     let params = RunParams { seed: 3, ..Default::default() };
     let report = run_mcal(
-        &f.engine,
-        &f.manifest,
+        &f.driver(),
         &ds,
         &svc,
         ledger,
@@ -222,8 +224,7 @@ fn arch_selection_returns_probes_and_viable_report() {
     let (ledger, svc) = service(Service::Amazon, 9);
     let params = RunParams { seed: 9, ..Default::default() };
     let (report, probes) = run_with_arch_selection(
-        &f.engine,
-        &f.manifest,
+        &f.driver(),
         &ds,
         &svc,
         ledger.clone(),
@@ -253,8 +254,7 @@ fn budget_mode_respects_budget() {
         let (ledger, svc) = service(Service::Amazon, 13);
         let params = RunParams { seed: 13, ..Default::default() };
         let report = run_budget(
-            &f.engine,
-            &f.manifest,
+            &f.driver(),
             &ds,
             &svc,
             ledger.clone(),
@@ -287,8 +287,7 @@ fn budget_mode_tighter_budget_means_more_machine_labels() {
         let (ledger, svc) = service(Service::Amazon, 17);
         let params = RunParams { seed: 17, ..Default::default() };
         let report = run_budget(
-            &f.engine,
-            &f.manifest,
+            &f.driver(),
             &ds,
             &svc,
             ledger,
@@ -325,8 +324,7 @@ fn error_injection_still_within_relaxed_bound() {
     );
     let params = RunParams { seed: 19, ..Default::default() };
     let report = run_mcal(
-        &f.engine,
-        &f.manifest,
+        &f.driver(),
         &ds,
         &svc,
         ledger,

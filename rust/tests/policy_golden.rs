@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
 use mcal::coordinator::{
-    run_al_trajectory, run_budget, run_mcal, IterationRecord, RunParams, RunReport,
+    run_al_trajectory, run_budget, run_mcal, IterationRecord, LabelingDriver, RunParams, RunReport,
 };
 use mcal::dataset::preset;
 use mcal::experiments::common::{Ctx, Scale};
@@ -24,6 +24,12 @@ use mcal::runtime::{Engine, Manifest};
 struct Fixture {
     engine: Engine,
     manifest: Manifest,
+}
+
+impl Fixture {
+    fn driver(&self) -> LabelingDriver<'_> {
+        LabelingDriver::new(&self.engine, &self.manifest)
+    }
 }
 
 fn setup() -> Option<Fixture> {
@@ -136,8 +142,7 @@ fn mcal_policy_golden_trajectory_is_reproducible() {
         let (_, svc) = service(Service::Amazon, 23);
         let params = RunParams { seed: 23, ..Default::default() };
         let report = run_mcal(
-            &f.engine,
-            &f.manifest,
+            &f.driver(),
             &ds,
             &svc,
             svc.ledger().clone(),
@@ -177,8 +182,7 @@ fn budget_policy_report_is_reproducible() {
         let (_, svc) = service(Service::Amazon, 29);
         let params = RunParams { seed: 29, ..Default::default() };
         let report = run_budget(
-            &f.engine,
-            &f.manifest,
+            &f.driver(),
             &ds,
             &svc,
             svc.ledger().clone(),
@@ -204,8 +208,7 @@ fn naive_al_policy_trajectory_is_reproducible() {
         let params = RunParams { seed: 31, ..Default::default() };
         let delta = (ds.len() / 20).max(1);
         let traj = run_al_trajectory(
-            &f.engine,
-            &f.manifest,
+            &f.driver(),
             &ds,
             &svc,
             svc.ledger().clone(),

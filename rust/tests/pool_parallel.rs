@@ -1,0 +1,173 @@
+//! `runtime::pool` integration: `--jobs`-invariance of the layers built on
+//! the pool — arch-selection probe rankings and θ-grid measure profiles
+//! must be bit-identical for any pool width. Runs against real artifacts
+//! and skips itself when they are absent, like the other integration
+//! suites. (The poisoned-worker error-propagation contract is unit-tested
+//! inside `runtime::pool` itself — it needs no artifacts.)
+
+use std::sync::Arc;
+
+use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
+use mcal::coordinator::{
+    run_with_arch_selection, LabelingDriver, LabelingEnv, ProbeResult, RunParams,
+};
+use mcal::dataset::preset;
+use mcal::model::ArchKind;
+use mcal::runtime::{Engine, EnginePool, Manifest};
+
+struct Fixture {
+    engine: Engine,
+    manifest: Manifest,
+}
+
+fn setup() -> Option<Fixture> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Fixture {
+        engine: Engine::cpu().unwrap(),
+        manifest: Manifest::load("artifacts").unwrap(),
+    })
+}
+
+fn scaled_dataset(
+    name: &str,
+    seed: u64,
+    scale: f64,
+) -> (mcal::dataset::Dataset, mcal::dataset::DatasetPreset) {
+    let p = preset(name, seed).unwrap();
+    let spec = p.spec.scaled(scale);
+    let mut ds = spec.generate().unwrap();
+    ds.name = name.to_string();
+    (ds, p)
+}
+
+fn service(seed: u64) -> (Arc<Ledger>, SimService) {
+    let ledger = Arc::new(Ledger::new());
+    let svc = SimService::new(
+        SimServiceConfig { service: Service::Amazon, seed, ..Default::default() },
+        ledger.clone(),
+    );
+    (ledger, svc)
+}
+
+fn bits64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The acceptance check for concurrent arch selection: serial probing, a
+/// flat 3-lane pool and a nested (3 lanes × 2) pool must produce
+/// bit-identical probe rankings, the same winner and the same final
+/// report.
+type ProbeKey = (String, Option<u64>, usize, u64, bool);
+type SelectionKey = (Vec<ProbeKey>, String, u64, usize, usize);
+
+#[test]
+fn probe_rankings_and_winner_are_jobs_invariant() {
+    let Some(f) = setup() else { return };
+    let run_one = |pool: Option<&EnginePool>| -> SelectionKey {
+        let (ds, preset) = scaled_dataset("cifar10-syn", 33, 0.05);
+        let (ledger, svc) = service(33);
+        let params = RunParams { seed: 33, ..Default::default() };
+        let driver = LabelingDriver::new(&f.engine, &f.manifest).with_pool(pool);
+        let (report, probes) = run_with_arch_selection(
+            &driver,
+            &ds,
+            &svc,
+            ledger,
+            &preset.candidate_archs,
+            preset.classes_tag,
+            params,
+            5,
+        )
+        .unwrap();
+        let keys: Vec<_> = probes.iter().map(ProbeResult::bit_key).collect();
+        (keys, report.arch.clone(), report.cost.total().to_bits(), report.b_size, report.s_size)
+    };
+
+    let serial = run_one(None);
+    assert_eq!(serial.0.len(), 3, "cifar10-syn probes all three candidates");
+
+    let flat_pool = EnginePool::new(2).unwrap();
+    let flat = run_one(Some(&flat_pool));
+    assert_eq!(serial, flat, "flat pool must not change probe rankings or the winner");
+
+    let nested_pool = EnginePool::with_inner(2, 1).unwrap();
+    let nested = run_one(Some(&nested_pool));
+    assert_eq!(serial, nested, "nested intra-run pools must not change results");
+}
+
+/// The acceptance check for sharded scoring: θ-grid measure profiles and
+/// full-pool score batches must be bit-identical between a serial env and
+/// one sharding over a 4-lane pool.
+#[test]
+fn measure_profiles_and_pool_scores_are_jobs_invariant() {
+    let Some(f) = setup() else { return };
+    let pool = EnginePool::new(3).unwrap();
+    // test_frac 0.2 at 0.2 scale makes |T| exceed the sharding gate
+    // (one full eval batch per lane), so the measure path itself shards
+    // (not just the pool-batch ranking).
+    let params = RunParams { seed: 21, test_frac: 0.2, ..Default::default() };
+    let grid = mcal::cost::theta_grid();
+
+    let (ds1, preset) = scaled_dataset("fashion-syn", 21, 0.2);
+    let (ledger1, svc1) = service(21);
+    let mut serial = LabelingEnv::new(
+        &f.engine,
+        &f.manifest,
+        &ds1,
+        &svc1,
+        ledger1,
+        ArchKind::Res18,
+        preset.classes_tag,
+        params.clone(),
+        grid.clone(),
+    )
+    .unwrap();
+
+    let (ds2, _) = scaled_dataset("fashion-syn", 21, 0.2);
+    let (ledger2, svc2) = service(21);
+    let mut sharded = LabelingEnv::new(
+        &f.engine,
+        &f.manifest,
+        &ds2,
+        &svc2,
+        ledger2,
+        ArchKind::Res18,
+        preset.classes_tag,
+        params,
+        grid,
+    )
+    .unwrap();
+    sharded.engine_pool = Some(&pool);
+
+    // Past the sharding gate: more than one full eval batch per lane.
+    let gate = pool.lanes() * serial.session.eval_bs();
+    assert!(
+        serial.test_idx.len() > gate,
+        "|T| = {} must exceed the sharding gate ({gate})",
+        serial.test_idx.len()
+    );
+
+    let p1 = serial.measure().unwrap();
+    let p2 = sharded.measure().unwrap();
+    assert_eq!(bits64(&p1), bits64(&p2), "θ-grid profiles must be bit-identical");
+
+    // Full-pool scoring: the machine-labeling ranking input, and the
+    // biggest batch of a run.
+    let idx1 = serial.pool.clone();
+    let idx2 = sharded.pool.clone();
+    assert_eq!(idx1, idx2, "identical seeds must produce identical splits");
+    assert!(idx1.len() > gate);
+    let s1 = serial.predict_indices(&idx1).unwrap();
+    let s2 = sharded.predict_indices(&idx2).unwrap();
+    assert_eq!(s1.pred, s2.pred);
+    assert_eq!(bits32(&s1.margin), bits32(&s2.margin));
+    assert_eq!(bits32(&s1.entropy), bits32(&s2.entropy));
+    assert_eq!(bits32(&s1.maxprob), bits32(&s2.maxprob));
+}
