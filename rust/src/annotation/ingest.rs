@@ -1,0 +1,397 @@
+//! Streaming annotation ingestion: acquisition orders, label chunks, and
+//! the handle that commits them — the seam that lets the coordinator
+//! overlap human labeling with classifier training.
+//!
+//! ## Model
+//!
+//! The paper's cost model (§2) has two spend streams — human labeling and
+//! classifier training — and real annotation services resolve the first
+//! asynchronously: a request is *submitted*, fanned out to an annotator
+//! fleet, and results stream back in batches. This module gives that data
+//! path a first-class shape:
+//!
+//! - a [`LabelOrder`] is one acquisition request: the dataset indices to
+//!   label, a stable order id, and a per-order seed stream derived by
+//!   [`order_seed`] (so every label in the order resolves identically no
+//!   matter which worker, chunk, or wall-clock instant resolves it);
+//! - the service (see [`super::AnnotationService::submit`]) resolves the
+//!   order in [`LabelChunk`]s — contiguous, order-relative slices of the
+//!   result, possibly arriving out of order;
+//! - an [`IngestHandle`] is the consumer side: it buffers out-of-order
+//!   chunks and exposes the *committed prefix* — labels are only ever
+//!   observed in order, so every consumer sees the same sequence
+//!   regardless of chunk size, latency, or worker schedule.
+//!
+//! ## Determinism contract
+//!
+//! Everything observable through a handle is a pure function of the order
+//! (`id`, `indices`, `seed`) and the service's pricing/error knobs — never
+//! of chunk boundaries, simulated latency, worker count, or arrival
+//! order. [`resolve_label`] pins the label side (per-*slot* seed streams,
+//! not per-worker), and the prefix-commit rule pins the observation side.
+//! Streaming changes wall-clock only; `rust/tests/ingest_stream.rs` holds
+//! the end-to-end version of this promise.
+//!
+//! ## Overlap
+//!
+//! The coordinator submits an order and starts the next retrain
+//! immediately; the training loop's minibatch assembly calls
+//! [`IngestHandle::wait_slot`] for the few labels it does not have yet, so
+//! the tail of human labeling overlaps training compute (see
+//! [`crate::coordinator::LabelingEnv::retrain`]). The only hard barrier is
+//! where Alg. 1 semantically needs the complete batch: the ε_T(S^θ)
+//! measurement, which runs after [`IngestHandle::drain`] has committed the
+//! whole order.
+
+#![deny(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+use crate::prng::{stream_seed, Pcg32};
+use crate::{Error, Result};
+
+/// Salt mixed into [`order_seed`] so order streams never collide with the
+/// worker-pool task streams derived from the same run seed.
+const ORDER_STREAM_SALT: u64 = 0x1A6E_57A7_0D3E_11B5;
+
+/// Derive the seed stream for one acquisition order of a seeded run.
+///
+/// Depends only on the run seed and the order's stable id — never on
+/// chunking, latency, or scheduling — mirroring
+/// [`crate::runtime::pool::task_seed`] (both delegate to
+/// [`crate::prng::stream_seed`]).
+///
+/// ```
+/// use mcal::annotation::ingest::order_seed;
+/// assert_eq!(order_seed(42, 3), order_seed(42, 3));
+/// assert_ne!(order_seed(42, 3), order_seed(42, 4));
+/// assert_ne!(order_seed(42, 3), order_seed(43, 3));
+/// ```
+pub fn order_seed(run_seed: u64, order_id: u64) -> u64 {
+    stream_seed(run_seed ^ ORDER_STREAM_SALT, order_id)
+}
+
+/// Resolve the human label for one slot of an order: groundtruth, except
+/// with probability `error_rate` a uniformly wrong (but valid) class.
+///
+/// The flip draws from a PRNG stream derived from `(order seed, slot)`,
+/// so a slot's label is identical whichever annotator worker resolves it
+/// and however the order is chunked — the label-side half of the ingest
+/// determinism contract.
+pub fn resolve_label(
+    order_seed: u64,
+    slot: usize,
+    truth: u32,
+    classes: u32,
+    error_rate: f64,
+) -> u32 {
+    if error_rate <= 0.0 || classes <= 1 {
+        return truth;
+    }
+    let mut rng = Pcg32::new(stream_seed(order_seed, slot as u64), 0xA770);
+    if rng.next_f64() < error_rate {
+        let mut wrong = rng.below(classes);
+        if wrong == truth {
+            wrong = (wrong + 1) % classes;
+        }
+        wrong
+    } else {
+        truth
+    }
+}
+
+/// Knobs for streaming ingestion, surfaced on the CLI as `--ingest-chunk`
+/// and `--ingest-latency` and applied to every simulated service a run
+/// builds. Pure wall-clock knobs: results are bit-identical for every
+/// setting (see the module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IngestConfig {
+    /// Labels per [`LabelChunk`]; `0` resolves each order as one chunk
+    /// (monolithic — the synchronous behavior). The default.
+    pub chunk_size: usize,
+    /// Simulated annotator turnaround per label (a chunk of `k` labels
+    /// takes `k × latency` on its worker). Defaults to zero.
+    pub latency: Duration,
+}
+
+/// One acquisition order: a batch of dataset indices submitted to an
+/// annotation service as a unit, with a stable id and its own seed stream.
+#[derive(Clone, Debug)]
+pub struct LabelOrder {
+    /// Order id, unique within a run (assigned sequentially by the
+    /// coordinator); provenance key for the ledger's per-order accounting.
+    pub id: u64,
+    /// Dataset indices to label; chunk offsets and result slots are
+    /// positions into this list.
+    pub indices: Vec<usize>,
+    /// Per-order seed stream (see [`order_seed`]).
+    pub seed: u64,
+}
+
+impl LabelOrder {
+    /// Build order `id` over `indices` for a run seeded with `run_seed`,
+    /// deriving the order's seed stream with [`order_seed`].
+    pub fn new(id: u64, indices: Vec<usize>, run_seed: u64) -> LabelOrder {
+        LabelOrder { id, indices, seed: order_seed(run_seed, id) }
+    }
+
+    /// Number of labels the order asks for.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Whether the order is empty.
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+}
+
+/// One resolved slice of an order: labels for slots
+/// `offset .. offset + labels.len()` of the order's index list.
+#[derive(Clone, Debug)]
+pub struct LabelChunk {
+    /// First order slot this chunk covers.
+    pub offset: usize,
+    /// Resolved labels, aligned with the order's indices at `offset..`.
+    pub labels: Vec<u32>,
+}
+
+/// Consumer side of a submitted [`LabelOrder`]: receives [`LabelChunk`]s
+/// (possibly out of order), buffers them, and exposes labels strictly as a
+/// growing committed prefix.
+///
+/// Blocking happens here — [`wait_slot`](IngestHandle::wait_slot) parks
+/// the caller until the slot's chunk lands, which is how the coordinator's
+/// gated retrain overlaps label latency with training compute.
+///
+/// ```
+/// use std::sync::mpsc::channel;
+/// use mcal::annotation::ingest::{IngestHandle, LabelChunk};
+///
+/// let (tx, rx) = channel();
+/// // Chunks may arrive out of order; the handle commits them in order.
+/// tx.send(LabelChunk { offset: 2, labels: vec![30, 40] }).unwrap();
+/// tx.send(LabelChunk { offset: 0, labels: vec![10, 20] }).unwrap();
+/// drop(tx);
+///
+/// let mut h = IngestHandle::streaming(7, 4, rx);
+/// assert_eq!(h.ready(), 0);
+/// assert_eq!(h.wait_slot(0).unwrap(), 10);
+/// assert_eq!(h.ready(), 4); // absorbing chunk 0 also commits buffered chunk 2
+/// assert_eq!(h.drain().unwrap(), vec![10, 20, 30, 40]);
+/// ```
+#[derive(Debug)]
+pub struct IngestHandle {
+    order_id: u64,
+    expect: usize,
+    rx: Option<Receiver<LabelChunk>>,
+    committed: Vec<u32>,
+    buffered: BTreeMap<usize, Vec<u32>>,
+    chunks_received: usize,
+}
+
+impl IngestHandle {
+    /// Handle over a live chunk stream for an order of `expect` labels.
+    pub fn streaming(order_id: u64, expect: usize, rx: Receiver<LabelChunk>) -> IngestHandle {
+        IngestHandle {
+            order_id,
+            expect,
+            rx: Some(rx),
+            committed: Vec::with_capacity(expect),
+            buffered: BTreeMap::new(),
+            chunks_received: 0,
+        }
+    }
+
+    /// Handle over an already-resolved order (the synchronous degenerate
+    /// case — e.g. [`super::AnnotationService`]'s default `submit`).
+    pub fn resolved(order_id: u64, labels: Vec<u32>) -> IngestHandle {
+        IngestHandle {
+            order_id,
+            expect: labels.len(),
+            rx: None,
+            committed: labels,
+            buffered: BTreeMap::new(),
+            chunks_received: 0,
+        }
+    }
+
+    /// Id of the order this handle tracks.
+    pub fn order_id(&self) -> u64 {
+        self.order_id
+    }
+
+    /// Total labels the order will deliver.
+    pub fn len(&self) -> usize {
+        self.expect
+    }
+
+    /// Whether the order delivers no labels at all.
+    pub fn is_empty(&self) -> bool {
+        self.expect == 0
+    }
+
+    /// Labels committed so far (the in-order prefix).
+    pub fn ready(&self) -> usize {
+        self.committed.len()
+    }
+
+    /// Chunks absorbed so far — wall-clock provenance, not part of the
+    /// deterministic result surface (like [`crate::runtime::TaskReport`]).
+    pub fn chunks_received(&self) -> usize {
+        self.chunks_received
+    }
+
+    fn absorb(&mut self, chunk: LabelChunk) {
+        self.chunks_received += 1;
+        if chunk.offset == self.committed.len() {
+            self.committed.extend_from_slice(&chunk.labels);
+            // Commit any buffered successors that are now contiguous.
+            while let Some(next) = self.buffered.remove(&self.committed.len()) {
+                self.committed.extend_from_slice(&next);
+            }
+        } else {
+            self.buffered.insert(chunk.offset, chunk.labels);
+        }
+    }
+
+    /// Block until the label for order slot `slot` is committed, then
+    /// return it. This is the gate the coordinator's streamed retrain sits
+    /// on: waiting consumes wall-clock only — the value returned for a
+    /// slot is the same however long it takes to land.
+    pub fn wait_slot(&mut self, slot: usize) -> Result<u32> {
+        if slot >= self.expect {
+            return Err(Error::Annotation(format!(
+                "order {}: slot {slot} out of range ({} labels)",
+                self.order_id, self.expect
+            )));
+        }
+        while self.committed.len() <= slot {
+            let rx = self.rx.as_ref().ok_or_else(|| {
+                Error::Annotation(format!(
+                    "order {}: stream ended at {} of {} labels",
+                    self.order_id,
+                    self.committed.len(),
+                    self.expect
+                ))
+            })?;
+            match rx.recv() {
+                Ok(chunk) => self.absorb(chunk),
+                Err(_) => {
+                    return Err(Error::Annotation(format!(
+                        "order {}: annotation stream closed early ({} of {} labels)",
+                        self.order_id,
+                        self.committed.len(),
+                        self.expect
+                    )))
+                }
+            }
+        }
+        Ok(self.committed[slot])
+    }
+
+    /// Block until the whole order is committed and return its labels,
+    /// aligned with the order's indices. The coordinator calls this at its
+    /// barrier points (before the ε_T measurement; at synchronous
+    /// purchases like the T/B₀ setup and the residual pass).
+    pub fn drain(mut self) -> Result<Vec<u32>> {
+        if self.expect > 0 {
+            self.wait_slot(self.expect - 1)?;
+        }
+        if self.committed.len() != self.expect {
+            return Err(Error::Annotation(format!(
+                "order {}: stream delivered {} of {} labels",
+                self.order_id,
+                self.committed.len(),
+                self.expect
+            )));
+        }
+        Ok(self.committed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn order_seed_streams_are_stable_and_distinct() {
+        assert_eq!(order_seed(9, 0), order_seed(9, 0));
+        assert_ne!(order_seed(9, 0), order_seed(9, 1));
+        // Order streams must not collide with pool task streams of the
+        // same run seed.
+        assert_ne!(order_seed(9, 0), crate::runtime::pool::task_seed(9, 0));
+    }
+
+    #[test]
+    fn resolve_label_is_slot_deterministic() {
+        let seed = order_seed(3, 1);
+        for slot in 0..64 {
+            assert_eq!(
+                resolve_label(seed, slot, 2, 10, 0.5),
+                resolve_label(seed, slot, 2, 10, 0.5),
+            );
+        }
+        // Zero error rate is exactly groundtruth.
+        assert_eq!(resolve_label(seed, 0, 7, 10, 0.0), 7);
+        // Errors are wrong-but-valid classes.
+        let flips = (0..200)
+            .filter(|&s| resolve_label(seed, s, 1, 5, 1.0) != 1)
+            .count();
+        assert_eq!(flips, 200);
+        assert!((0..200).all(|s| resolve_label(seed, s, 1, 5, 1.0) < 5));
+    }
+
+    #[test]
+    fn out_of_order_chunks_commit_in_order() {
+        let (tx, rx) = channel();
+        tx.send(LabelChunk { offset: 4, labels: vec![4, 5] }).unwrap();
+        tx.send(LabelChunk { offset: 2, labels: vec![2, 3] }).unwrap();
+        tx.send(LabelChunk { offset: 0, labels: vec![0, 1] }).unwrap();
+        drop(tx);
+        let mut h = IngestHandle::streaming(1, 6, rx);
+        assert_eq!(h.wait_slot(5).unwrap(), 5);
+        assert_eq!(h.chunks_received(), 3);
+        assert_eq!(h.drain().unwrap(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn wait_slot_blocks_until_the_chunk_lands() {
+        let (tx, rx) = channel();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(LabelChunk { offset: 0, labels: vec![11, 22] }).unwrap();
+        });
+        let mut h = IngestHandle::streaming(2, 2, rx);
+        assert_eq!(h.wait_slot(1).unwrap(), 22);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn closed_stream_is_a_clean_error() {
+        let (tx, rx) = channel::<LabelChunk>();
+        drop(tx);
+        let mut h = IngestHandle::streaming(5, 3, rx);
+        let msg = format!("{}", h.wait_slot(0).unwrap_err());
+        assert!(msg.contains("order 5") && msg.contains("closed early"), "{msg}");
+    }
+
+    #[test]
+    fn resolved_handle_needs_no_stream() {
+        let h = IngestHandle::resolved(0, vec![9, 8, 7]);
+        assert_eq!(h.ready(), 3);
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.drain().unwrap(), vec![9, 8, 7]);
+        // Empty orders drain immediately too.
+        assert!(IngestHandle::resolved(1, Vec::new()).drain().unwrap().is_empty());
+    }
+
+    #[test]
+    fn wait_slot_out_of_range_is_error() {
+        let mut h = IngestHandle::resolved(2, vec![1]);
+        assert!(h.wait_slot(1).is_err());
+    }
+}

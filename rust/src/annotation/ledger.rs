@@ -3,8 +3,32 @@
 //! Everything MCAL optimizes ultimately lands here: human-label purchases,
 //! simulated-rig training charges, and the "exploration tax" (training
 //! spend on candidate architectures that were later dropped, §5.1 fn. 5).
+//!
+//! Alongside the running totals the ledger keeps a per-order log
+//! ([`OrderRecord`]): one entry per submitted [`super::ingest::LabelOrder`],
+//! recorded at submission on the run's own thread by the coordinator
+//! (which owns order ids — services only charge). Determinism contract:
+//! every charge and order record is applied in program order by the run
+//! that owns the ledger, so totals are bit-identical across ingestion
+//! chunk sizes, latencies, and `--jobs` values — an order is charged once
+//! as a unit (count × price), never chunk-by-chunk, because f64 addition
+//! order would otherwise leak chunking into the total.
 
 use std::sync::Mutex;
+
+/// Provenance for one submitted acquisition order: what was bought as a
+/// unit and what it cost. Surfaced in
+/// [`crate::coordinator::RunReport::orders`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OrderRecord {
+    /// Order id (sequential within a run; see
+    /// [`super::ingest::LabelOrder::id`]).
+    pub id: u64,
+    /// Labels the order purchased.
+    pub labels: u64,
+    /// Dollars charged for the order (labels × price).
+    pub dollars: f64,
+}
 
 /// Snapshot of ledger totals.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -27,6 +51,7 @@ impl CostBreakdown {
 #[derive(Default)]
 pub struct Ledger {
     inner: Mutex<CostBreakdown>,
+    orders: Mutex<Vec<OrderRecord>>,
 }
 
 impl Ledger {
@@ -52,6 +77,17 @@ impl Ledger {
         let mut g = self.inner.lock().unwrap();
         g.training -= dollars;
         g.exploration += dollars;
+    }
+
+    /// Log one submitted acquisition order (provenance; totals are charged
+    /// separately via [`Ledger::charge_labels`]).
+    pub fn record_order(&self, id: u64, labels: u64, dollars: f64) {
+        self.orders.lock().unwrap().push(OrderRecord { id, labels, dollars });
+    }
+
+    /// The per-order log, in submission order.
+    pub fn order_log(&self) -> Vec<OrderRecord> {
+        self.orders.lock().unwrap().clone()
     }
 
     pub fn snapshot(&self) -> CostBreakdown {
@@ -91,6 +127,17 @@ mod tests {
         assert!((s.training - 6.0).abs() < 1e-12);
         assert!((s.exploration - 4.0).abs() < 1e-12);
         assert!((l.total() - before).abs() < 1e-12);
+    }
+
+    #[test]
+    fn order_log_preserves_submission_order() {
+        let l = Ledger::new();
+        l.record_order(0, 50, 2.0);
+        l.record_order(1, 10, 0.4);
+        let log = l.order_log();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0], OrderRecord { id: 0, labels: 50, dollars: 2.0 });
+        assert_eq!(log[1].id, 1);
     }
 
     #[test]

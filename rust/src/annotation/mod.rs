@@ -5,13 +5,23 @@
 //! service: a bounded-queue worker pool that resolves labeling requests
 //! from dataset groundtruth (the paper's evaluation assumes perfect human
 //! labels, §2 fn. 2 — an error-rate knob exists for robustness studies),
-//! and a thread-safe dollar [`Ledger`] that every cost in the system flows
-//! through (human labels, simulated GPU training, exploration tax).
+//! a streaming [`ingest`] layer that resolves acquisition orders in
+//! chunks so labeling can overlap training, and a thread-safe dollar
+//! [`Ledger`] (with per-order accounting) that every cost in the system
+//! flows through (human labels, simulated GPU training, exploration tax).
+//!
+//! Determinism contract: label values derive from per-order seed streams
+//! ([`ingest::order_seed`] + [`ingest::resolve_label`]) and charges apply
+//! once per order on the submitting thread, so everything a run observes
+//! through this module is bit-identical across worker counts, ingestion
+//! chunk sizes, simulated latencies, and `--jobs` values.
 
+pub mod ingest;
 pub mod ledger;
 pub mod sim;
 
-pub use ledger::{CostBreakdown, Ledger};
+pub use ingest::{IngestConfig, IngestHandle, LabelChunk, LabelOrder};
+pub use ledger::{CostBreakdown, Ledger, OrderRecord};
 pub use sim::{SimService, SimServiceConfig};
 
 use crate::dataset::Dataset;
@@ -62,6 +72,21 @@ pub trait AnnotationService: Send + Sync {
     /// Obtain human labels for `indices`, charging the ledger. Output is
     /// aligned with `indices`.
     fn label_batch(&self, ds: &Dataset, indices: &[usize]) -> Result<Vec<u32>>;
+
+    /// Submit an acquisition [`LabelOrder`] and return the consumer-side
+    /// [`IngestHandle`] its labels stream through. The whole order is
+    /// charged at submission, as one unit. (The per-order
+    /// [`OrderRecord`] log is written by the coordinator, which owns
+    /// order ids — an implementation only charges.)
+    ///
+    /// The default resolves the order synchronously via
+    /// [`AnnotationService::label_batch`] (a pre-committed handle), so any
+    /// service is streamable; [`SimService`] overrides it to resolve
+    /// orders in configurable chunks on its worker fleet.
+    fn submit(&self, ds: &Dataset, order: LabelOrder) -> Result<IngestHandle> {
+        let labels = self.label_batch(ds, &order.indices)?;
+        Ok(IngestHandle::resolved(order.id, labels))
+    }
 
     /// Number of labels purchased so far.
     fn labels_purchased(&self) -> u64;

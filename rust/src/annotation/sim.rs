@@ -13,18 +13,35 @@
 //! - optional `error_rate` flips labels uniformly (the paper assumes
 //!   perfect human labels; the knob exists for robustness studies);
 //! - every completed label charges the shared [`Ledger`].
+//!
+//! Two request shapes ride the same worker fleet: the synchronous
+//! [`AnnotationService::label_batch`] (submit, block, collect), and the
+//! streaming [`AnnotationService::submit`] — a [`LabelOrder`] resolved in
+//! `chunk_size`-label [`LabelChunk`]s that flow back through an
+//! [`IngestHandle`] while the caller does other work. Determinism
+//! contract: every label derives from a per-*slot* seed stream
+//! ([`super::ingest::resolve_label`]) — the order's stream for streamed
+//! requests, a sequential per-batch stream for synchronous ones — and a
+//! request is charged once, as a unit, on the submitting thread. Labels
+//! and ledger totals are therefore bit-identical for any `chunk_size`,
+//! `latency`, or worker count.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use super::ingest::{resolve_label, IngestHandle, LabelChunk, LabelOrder};
 use super::ledger::Ledger;
 use super::{AnnotationService, Service};
 use crate::dataset::Dataset;
-use crate::prng::Pcg32;
+use crate::prng::stream_seed;
 use crate::{Error, Result};
+
+/// Salt for the per-`label_batch` seed streams, so synchronous batches
+/// never collide with order streams derived from the same seed.
+const BATCH_STREAM_SALT: u64 = 0xBA7C_45A1_7E11_0AB5;
 
 /// Simulator tuning.
 #[derive(Clone, Debug)]
@@ -34,6 +51,10 @@ pub struct SimServiceConfig {
     pub queue_cap: usize,
     /// Simulated annotator turnaround per label (0 = instant).
     pub latency: Duration,
+    /// Labels per streamed [`LabelChunk`] when resolving a submitted
+    /// order; `0` resolves each order as a single chunk. Wall-clock only —
+    /// results are bit-identical for every value.
+    pub chunk_size: usize,
     /// Probability a human label is wrong (paper: 0).
     pub error_rate: f64,
     pub seed: u64,
@@ -46,6 +67,7 @@ impl Default for SimServiceConfig {
             workers: 4,
             queue_cap: 1024,
             latency: Duration::ZERO,
+            chunk_size: 0,
             error_rate: 0.0,
             seed: 0,
         }
@@ -53,8 +75,19 @@ impl Default for SimServiceConfig {
 }
 
 enum Job {
-    // (slot in the output vec, groundtruth label, num_classes)
-    Label(usize, u32, u32),
+    // (slot in the output vec, groundtruth label, num_classes, the
+    // batch's seed stream — flips derive per slot, never per worker)
+    Label(usize, u32, u32, u64),
+    /// One chunk of a streamed order: resolve `truths` (order slots
+    /// `offset..offset + truths.len()`) against the order's seed stream
+    /// and send the labels back on `tx`.
+    Chunk {
+        offset: usize,
+        truths: Vec<u32>,
+        classes: u32,
+        order_seed: u64,
+        tx: Sender<LabelChunk>,
+    },
     Stop,
 }
 
@@ -70,6 +103,9 @@ pub struct SimService {
     pool: Mutex<Option<Pool>>,
     results: Arc<Mutex<Vec<(usize, u32)>>>,
     purchased: AtomicU64,
+    /// Synchronous `label_batch` calls served so far — each gets its own
+    /// flip-seed stream (see [`BATCH_STREAM_SALT`]).
+    batches: AtomicU64,
 }
 
 impl SimService {
@@ -80,6 +116,7 @@ impl SimService {
             pool: Mutex::new(None),
             results: Arc::new(Mutex::new(Vec::new())),
             purchased: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
         }
     }
 
@@ -91,39 +128,62 @@ impl SimService {
         let (tx, rx) = sync_channel::<Job>(self.cfg.queue_cap);
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::new();
-        for w in 0..self.cfg.workers.max(1) {
+        for _ in 0..self.cfg.workers.max(1) {
             let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
             let results = self.results.clone();
             let latency = self.cfg.latency;
             let error_rate = self.cfg.error_rate;
-            let mut rng = Pcg32::new(self.cfg.seed, 0xA770 + w as u64);
             handles.push(std::thread::spawn(move || loop {
                 let job = { rx.lock().unwrap().recv() };
                 match job {
-                    Ok(Job::Label(slot, truth, classes)) => {
+                    Ok(Job::Label(slot, truth, classes, seed)) => {
                         if !latency.is_zero() {
                             std::thread::sleep(latency);
                         }
-                        let label = if error_rate > 0.0
-                            && (rng.next_f64() < error_rate)
-                            && classes > 1
-                        {
-                            // Uniform wrong label.
-                            let mut l = rng.below(classes);
-                            if l == truth {
-                                l = (l + 1) % classes;
-                            }
-                            l
-                        } else {
-                            truth
-                        };
+                        let label = resolve_label(seed, slot, truth, classes, error_rate);
                         results.lock().unwrap().push((slot, label));
+                    }
+                    Ok(Job::Chunk { offset, truths, classes, order_seed, tx }) => {
+                        if !latency.is_zero() {
+                            // One annotator works the chunk label by label.
+                            std::thread::sleep(latency * truths.len() as u32);
+                        }
+                        let labels: Vec<u32> = truths
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &truth)| {
+                                resolve_label(order_seed, offset + i, truth, classes, error_rate)
+                            })
+                            .collect();
+                        // A dropped handle (abandoned run) just discards
+                        // the chunk.
+                        let _ = tx.send(LabelChunk { offset, labels });
                     }
                     Ok(Job::Stop) | Err(_) => break,
                 }
             }));
         }
         Pool { tx, handles }
+    }
+
+    /// Lock the worker pool, bringing it up on first use. Both request
+    /// paths (`label_batch`, `submit`) go through here.
+    fn ensure_pool(&self) -> std::sync::MutexGuard<'_, Option<Pool>> {
+        let mut guard = self.pool.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(self.spawn_pool());
+        }
+        guard
+    }
+
+    fn check_indices(&self, ds: &Dataset, indices: &[usize]) -> Result<()> {
+        if let Some(&bad) = indices.iter().find(|&&i| i >= ds.len()) {
+            return Err(Error::Annotation(format!(
+                "index {bad} out of range (dataset len {})",
+                ds.len()
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -136,24 +196,23 @@ impl AnnotationService for SimService {
         if indices.is_empty() {
             return Ok(Vec::new());
         }
-        if let Some(&bad) = indices.iter().find(|&&i| i >= ds.len()) {
-            return Err(Error::Annotation(format!(
-                "index {bad} out of range (dataset len {})",
-                ds.len()
-            )));
-        }
+        self.check_indices(ds, indices)?;
+
+        // Each synchronous batch gets its own seed stream (sequential
+        // batch counter, advanced on the caller's thread), so label flips
+        // derive from (batch, slot) — deterministic per call sequence,
+        // never per worker schedule.
+        let batch = self.batches.fetch_add(1, Ordering::Relaxed);
+        let batch_seed = stream_seed(self.cfg.seed ^ BATCH_STREAM_SALT, batch);
 
         // Bring up the worker pool lazily, drain results synchronously.
-        let mut guard = self.pool.lock().unwrap();
-        if guard.is_none() {
-            *guard = Some(self.spawn_pool());
-        }
+        let guard = self.ensure_pool();
         let pool = guard.as_ref().unwrap();
         self.results.lock().unwrap().clear();
 
         for (slot, &i) in indices.iter().enumerate() {
             pool.tx
-                .send(Job::Label(slot, ds.groundtruth(i), ds.num_classes as u32))
+                .send(Job::Label(slot, ds.groundtruth(i), ds.num_classes as u32, batch_seed))
                 .map_err(|_| Error::Annotation("worker pool hung up".into()))?;
         }
         // Wait for all results (the submitter blocks on the bounded queue
@@ -178,6 +237,45 @@ impl AnnotationService for SimService {
         self.ledger
             .charge_labels(indices.len() as u64, self.price_per_label());
         Ok(out)
+    }
+
+    /// Streamed resolution: charge the whole order at submission (one
+    /// ledger charge, on the caller's thread — deterministic order and
+    /// float math; the per-order [`super::OrderRecord`] log is written by
+    /// the coordinator, which owns order ids), then fan the order out to
+    /// the worker fleet in `chunk_size`-label chunks. Chunks may resolve
+    /// out of order across workers; the returned handle commits them in
+    /// order. Submission applies the queue's backpressure: with more than
+    /// `queue_cap` chunks in flight, `submit` blocks until workers drain
+    /// the queue.
+    fn submit(&self, ds: &Dataset, order: LabelOrder) -> Result<IngestHandle> {
+        self.check_indices(ds, &order.indices)?;
+        let n = order.indices.len();
+        if n == 0 {
+            // Match label_batch: an empty request has no side effects.
+            return Ok(IngestHandle::resolved(order.id, Vec::new()));
+        }
+        let chunk = if self.cfg.chunk_size == 0 { n } else { self.cfg.chunk_size };
+        let (tx, rx) = channel();
+        let guard = self.ensure_pool();
+        let pool = guard.as_ref().unwrap();
+        for (ci, slice) in order.indices.chunks(chunk).enumerate() {
+            let truths: Vec<u32> = slice.iter().map(|&i| ds.groundtruth(i)).collect();
+            pool.tx
+                .send(Job::Chunk {
+                    offset: ci * chunk,
+                    truths,
+                    classes: ds.num_classes as u32,
+                    order_seed: order.seed,
+                    tx: tx.clone(),
+                })
+                .map_err(|_| Error::Annotation("worker pool hung up".into()))?;
+        }
+        // Charge only once the whole order is accepted — a failed submit
+        // must have no side effects, exactly like label_batch.
+        self.purchased.fetch_add(n as u64, Ordering::Relaxed);
+        self.ledger.charge_labels(n as u64, self.price_per_label());
+        Ok(IngestHandle::streaming(order.id, n, rx))
     }
 
     fn labels_purchased(&self) -> u64 {
@@ -283,6 +381,130 @@ mod tests {
         let svc = SimService::new(SimServiceConfig::default(), ledger.clone());
         assert!(svc.label_batch(&ds, &[]).unwrap().is_empty());
         assert_eq!(ledger.snapshot().labels_purchased, 0);
+    }
+
+    #[test]
+    fn submitted_order_resolves_to_groundtruth_and_charges_once() {
+        let ds = ds();
+        let ledger = Arc::new(Ledger::new());
+        let svc = SimService::new(
+            SimServiceConfig {
+                service: Service::Satyam,
+                chunk_size: 7,
+                workers: 3,
+                ..Default::default()
+            },
+            ledger.clone(),
+        );
+        let idx: Vec<usize> = (0..60).collect();
+        let order = LabelOrder::new(0, idx.clone(), 42);
+        let labels = svc.submit(&ds, order).unwrap().drain().unwrap();
+        for (&i, &l) in idx.iter().zip(labels.iter()) {
+            assert_eq!(l, ds.groundtruth(i));
+        }
+        let snap = ledger.snapshot();
+        assert_eq!(snap.labels_purchased, 60);
+        assert!((snap.human_labeling - 60.0 * 0.003).abs() < 1e-12);
+        assert_eq!(svc.labels_purchased(), 60);
+        // The per-order log is written by the coordinator (which owns
+        // order ids), not by the service.
+        assert!(ledger.order_log().is_empty());
+    }
+
+    /// The streaming determinism contract at the service level: identical
+    /// committed labels and ledger totals for any chunk size, latency, or
+    /// worker count — even with label errors injected.
+    #[test]
+    fn streamed_labels_are_chunk_latency_and_worker_invariant() {
+        let ds = ds();
+        let configs = [
+            (0usize, 1usize, 0u64),   // monolithic, single worker
+            (1, 4, 0),                // per-label chunks
+            (7, 3, 0),                // odd chunk, non-dividing
+            (64, 2, 120),             // chunk > order, with latency (µs)
+        ];
+        let mut runs: Vec<(Vec<u32>, u64)> = Vec::new();
+        for &(chunk_size, workers, latency_us) in &configs {
+            let ledger = Arc::new(Ledger::new());
+            let svc = SimService::new(
+                SimServiceConfig {
+                    chunk_size,
+                    workers,
+                    latency: Duration::from_micros(latency_us),
+                    error_rate: 0.35,
+                    seed: 11,
+                    ..Default::default()
+                },
+                ledger.clone(),
+            );
+            let order = LabelOrder::new(3, (0..50).collect(), 11);
+            let labels = svc.submit(&ds, order).unwrap().drain().unwrap();
+            runs.push((labels, ledger.snapshot().human_labeling.to_bits()));
+        }
+        for r in &runs[1..] {
+            assert_eq!(r.0, runs[0].0, "labels must not depend on chunking");
+            assert_eq!(r.1, runs[0].1, "ledger totals must not depend on chunking");
+        }
+        // The error knob really fired (rate 0.35 over 50 labels).
+        let wrong = runs[0]
+            .0
+            .iter()
+            .enumerate()
+            .filter(|&(i, &l)| l != ds.groundtruth(i))
+            .count();
+        assert!(wrong > 0, "expected some injected errors");
+    }
+
+    /// Synchronous batches are worker-schedule-independent too: flips
+    /// derive from (batch, slot) streams, so two services with the same
+    /// seed and call sequence produce identical labels whatever their
+    /// worker counts.
+    #[test]
+    fn label_batch_flips_are_worker_invariant() {
+        let ds = ds();
+        let mut runs: Vec<Vec<u32>> = Vec::new();
+        for workers in [1usize, 4] {
+            let svc = SimService::new(
+                SimServiceConfig { workers, error_rate: 0.5, seed: 9, ..Default::default() },
+                Arc::new(Ledger::new()),
+            );
+            // Two calls: streams must advance per batch, not per label slot.
+            let a = svc.label_batch(&ds, &(0..80).collect::<Vec<_>>()).unwrap();
+            let b = svc.label_batch(&ds, &(0..80).collect::<Vec<_>>()).unwrap();
+            assert_ne!(a, b, "each batch draws a fresh flip stream");
+            runs.push(a.into_iter().chain(b).collect());
+        }
+        assert_eq!(runs[0], runs[1], "labels must not depend on worker count");
+    }
+
+    #[test]
+    fn submit_out_of_range_is_error_and_charges_nothing() {
+        let ds = ds();
+        let ledger = Arc::new(Ledger::new());
+        let svc = SimService::new(SimServiceConfig::default(), ledger.clone());
+        let order = LabelOrder::new(0, vec![ds.len()], 1);
+        assert!(svc.submit(&ds, order).is_err());
+        assert_eq!(ledger.snapshot().labels_purchased, 0);
+        assert!(ledger.order_log().is_empty());
+    }
+
+    #[test]
+    fn sync_and_streamed_requests_share_one_pool() {
+        let ds = ds();
+        let svc = SimService::new(
+            SimServiceConfig { workers: 2, chunk_size: 5, ..Default::default() },
+            Arc::new(Ledger::new()),
+        );
+        // Interleave order submission with a synchronous batch.
+        let handle = svc.submit(&ds, LabelOrder::new(0, (0..20).collect(), 9)).unwrap();
+        let sync = svc.label_batch(&ds, &(20..40).collect::<Vec<_>>()).unwrap();
+        assert_eq!(sync.len(), 20);
+        let streamed = handle.drain().unwrap();
+        assert_eq!(streamed.len(), 20);
+        for (i, &l) in streamed.iter().enumerate() {
+            assert_eq!(l, ds.groundtruth(i));
+        }
+        assert_eq!(svc.labels_purchased(), 40);
     }
 
     #[test]

@@ -87,6 +87,18 @@ impl Args {
         }
     }
 
+    /// Duration option given in (possibly fractional) milliseconds, e.g.
+    /// `--ingest-latency 0.5`. Negative values are rejected.
+    pub fn duration_ms_or(&self, key: &str, default_ms: f64) -> Result<std::time::Duration> {
+        let ms = self.f64_or(key, default_ms)?;
+        if !ms.is_finite() || ms < 0.0 {
+            return Err(Error::Config(format!(
+                "--{key}: expected a non-negative duration in ms, got '{ms}'"
+            )));
+        }
+        Ok(std::time::Duration::from_nanos((ms * 1e6) as u64))
+    }
+
     /// `--jobs N` — total parallelism budget (split between sweep cells
     /// and intra-run workers by `runtime::pool::split_jobs`). `0` or
     /// `auto` (also the default when absent) means one engine per core;
@@ -144,6 +156,16 @@ mod tests {
     fn bad_numeric_errors() {
         let a = parse("x --epsilon huh");
         assert!(a.f64_or("epsilon", 0.0).is_err());
+    }
+
+    #[test]
+    fn duration_ms_parsing() {
+        use std::time::Duration;
+        let a = parse("run x --ingest-latency 0.5");
+        assert_eq!(a.duration_ms_or("ingest-latency", 0.0).unwrap(), Duration::from_micros(500));
+        assert_eq!(parse("run x").duration_ms_or("ingest-latency", 2.0).unwrap(), Duration::from_millis(2));
+        assert!(parse("run x --ingest-latency -1").duration_ms_or("ingest-latency", 0.0).is_err());
+        assert!(parse("run x --ingest-latency soon").duration_ms_or("ingest-latency", 0.0).is_err());
     }
 
     #[test]

@@ -154,6 +154,12 @@ impl Policy for ProbePolicy {
 }
 
 /// Probe a single candidate on a shadow ledger, returning the stabilized C*.
+///
+/// The shadow service deliberately uses the default synchronous
+/// [`SimServiceConfig`] (no `--ingest-*` knobs, default annotator width):
+/// probe purchases are a shadow simulation whose labels the winning run
+/// re-buys on the real service — the real service's streaming data path is
+/// what the ingest knobs model, and it is untouched here.
 fn probe(
     driver: &LabelingDriver<'_>,
     ds: &Dataset,

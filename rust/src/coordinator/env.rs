@@ -1,10 +1,24 @@
 //! Shared labeling-run environment: dataset splits, label acquisition,
 //! retraining, and measurement primitives used by both the MCAL optimizer
 //! ([`super::mcal`]) and the naive-AL baselines ([`super::albaseline`]).
+//!
+//! Every label purchase is an acquisition *order*
+//! ([`crate::annotation::LabelOrder`], sequential ids, per-order seed
+//! streams): [`LabelingEnv::acquire`] submits the order and returns while
+//! labels are still streaming in, [`LabelingEnv::retrain`] trains through
+//! the in-flight order (gating minibatch assembly on label arrival, so
+//! the tail of human labeling overlaps training compute), and
+//! [`LabelingEnv::measure`] is the barrier — Alg. 1's ε_T(S^θ) is only
+//! read once the full batch S^θ is committed. Determinism contract: the
+//! committed label set, iteration records, and ledger totals are
+//! bit-identical for any ingestion chunk size, simulated latency, or
+//! `--jobs` value — streaming and sharding change wall-clock, never
+//! results (pinned by `tests/ingest_stream.rs` and
+//! `tests/pool_parallel.rs`).
 
 use std::sync::Arc;
 
-use crate::annotation::{AnnotationService, Ledger};
+use crate::annotation::{AnnotationService, IngestHandle, LabelOrder, Ledger};
 use crate::cost::RigModel;
 use crate::dataset::Dataset;
 use crate::metrics;
@@ -90,11 +104,18 @@ pub struct LabelingEnv<'e> {
     /// Human-labeled test set T (indices into ds) and its labels.
     pub test_idx: Vec<usize>,
     pub test_labels: Vec<u32>,
-    /// Human-labeled training set B and its labels.
+    /// Human-labeled training set B and its labels. While an acquisition
+    /// order is in flight, `b_idx` already contains the ordered samples
+    /// but `b_labels` only holds the committed prefix — the gap is exactly
+    /// the pending order (see [`LabelingEnv::settle`]).
     pub b_idx: Vec<usize>,
     pub b_labels: Vec<u32>,
     /// Unlabeled pool X \ T \ B.
     pub pool: Vec<usize>,
+    /// In-flight acquisition order (labels streaming in), if any.
+    pending: Option<IngestHandle>,
+    /// Next acquisition-order id (0 = T, 1 = B₀, 2.. = iterations).
+    order_counter: u64,
 
     /// Observed (|B|, retrain dollars) pairs → fitted cost model.
     pub cost_obs: Vec<(f64, f64)>,
@@ -103,6 +124,27 @@ pub struct LabelingEnv<'e> {
     /// Cumulative simulated training dollars (this run only).
     pub training_spend: f64,
     retrain_counter: u64,
+}
+
+/// Submit one acquisition order and log it in the ledger. The coordinator
+/// — not the service — is the single author of order provenance, so the
+/// per-order log is complete for *any* [`AnnotationService`], including
+/// ones that resolve orders through the trait's default synchronous
+/// `submit`. Recording happens on the run's own thread, after a
+/// successful submission, in program order — deterministic content and
+/// order regardless of chunking, latency, or `--jobs`.
+fn place_order(
+    service: &dyn AnnotationService,
+    ledger: &Ledger,
+    ds: &Dataset,
+    id: u64,
+    indices: Vec<usize>,
+    run_seed: u64,
+) -> Result<IngestHandle> {
+    let n = indices.len();
+    let handle = service.submit(ds, LabelOrder::new(id, indices, run_seed))?;
+    ledger.record_order(id, n as u64, n as f64 * service.price_per_label());
+    Ok(handle)
 }
 
 impl<'e> LabelingEnv<'e> {
@@ -139,8 +181,11 @@ impl<'e> LabelingEnv<'e> {
         let b_idx: Vec<usize> = order[test_n..test_n + init_n].to_vec();
         let pool: Vec<usize> = order[test_n + init_n..].to_vec();
 
-        let test_labels = service.label_batch(ds, &test_idx)?;
-        let b_labels = service.label_batch(ds, &b_idx)?;
+        // Setup purchases are orders too (ids 0 and 1), drained on the
+        // spot: there is nothing to overlap before the first train.
+        let test_labels =
+            place_order(service, &ledger, ds, 0, test_idx.clone(), params.seed)?.drain()?;
+        let b_labels = place_order(service, &ledger, ds, 1, b_idx.clone(), params.seed)?.drain()?;
 
         let profile_obs = vec![Vec::new(); theta_grid.len()];
         let mut env = LabelingEnv {
@@ -160,6 +205,8 @@ impl<'e> LabelingEnv<'e> {
             b_idx,
             b_labels,
             pool,
+            pending: None,
+            order_counter: 2,
             cost_obs: Vec::new(),
             profile_obs: Vec::new(),
             training_spend: 0.0,
@@ -185,8 +232,38 @@ impl<'e> LabelingEnv<'e> {
         self.ds.len() as f64 * self.service.price_per_label()
     }
 
-    /// Acquire `k` pool samples by `M(.)`, human-label them, add to B.
+    /// Submit the next acquisition order: `indices` leave the pool, join
+    /// `b_idx`, and their labels start streaming in as the new pending
+    /// order. Charged (once, as a unit) at submission.
+    fn submit_order(&mut self, indices: Vec<usize>) -> Result<()> {
+        let id = self.order_counter;
+        self.order_counter += 1;
+        let handle =
+            place_order(self.service, &self.ledger, self.ds, id, indices, self.params.seed)?;
+        self.pending = Some(handle);
+        Ok(())
+    }
+
+    /// Commit any in-flight acquisition order: block until its labels have
+    /// all arrived and append them to `b_labels`. Idempotent; wall-clock
+    /// only (the committed labels do not depend on when this runs).
+    pub fn settle(&mut self) -> Result<()> {
+        if let Some(handle) = self.pending.take() {
+            let labels = handle.drain()?;
+            self.b_labels.extend_from_slice(&labels);
+        }
+        debug_assert_eq!(self.b_idx.len(), self.b_labels.len());
+        Ok(())
+    }
+
+    /// Acquire `k` pool samples by `M(.)` and submit them for human
+    /// labeling as one order. Returns as soon as the order is submitted —
+    /// the labels stream in while the caller proceeds to
+    /// [`LabelingEnv::retrain`], which trains through the in-flight order.
     pub fn acquire(&mut self, k: usize) -> Result<usize> {
+        // A back-to-back acquire (no retrain between) must observe the
+        // previous order's labels before selecting on top of them.
+        self.settle()?;
         let k = k.min(self.pool.len());
         if k == 0 {
             return Ok(0);
@@ -239,15 +316,36 @@ impl<'e> LabelingEnv<'e> {
         for p in positions {
             new_idx.push(self.pool.swap_remove(p));
         }
-        let new_labels = self.service.label_batch(self.ds, &new_idx)?;
         self.b_idx.extend_from_slice(&new_idx);
-        self.b_labels.extend_from_slice(&new_labels);
+        self.submit_order(new_idx)?;
         Ok(k)
+    }
+
+    /// Buy labels for `indices` right now, as one settled order (setup and
+    /// residual purchases — paths with nothing to overlap). An empty
+    /// purchase places no order at all, like the old synchronous path.
+    pub fn buy_now(&mut self, indices: &[usize]) -> Result<Vec<u32>> {
+        if indices.is_empty() {
+            return Ok(Vec::new());
+        }
+        let id = self.order_counter;
+        self.order_counter += 1;
+        place_order(self.service, &self.ledger, self.ds, id, indices.to_vec(), self.params.seed)?
+            .drain()
     }
 
     /// Retrain from scratch on the current B; charges the simulated rig
     /// cost to the ledger and records the cost observation. Returns the
     /// dollars charged.
+    ///
+    /// With an acquisition order in flight, training starts immediately:
+    /// the first pass visits the already-labeled prefix of B first and
+    /// gates on [`IngestHandle::wait_slot`] only when a minibatch reaches
+    /// a sample whose label has not landed yet — the overlap seam between
+    /// the paper's two spend streams. The minibatch schedule and the
+    /// resulting model depend only on seeds, never on arrival timing (see
+    /// [`crate::runtime::ModelSession::train_epochs_gated`]). The order is
+    /// fully committed by the time this returns.
     pub fn retrain(&mut self) -> Result<f64> {
         self.retrain_counter += 1;
         let seed = self
@@ -255,14 +353,37 @@ impl<'e> LabelingEnv<'e> {
             .seed
             .wrapping_add(self.retrain_counter.wrapping_mul(0x9E37_79B9));
         self.session.reinit(seed)?;
-        self.session.train_epochs(
-            self.ds,
-            &self.b_idx,
-            &self.b_labels,
-            self.params.schedule.real_epochs * self.arch.real_epoch_factor(),
-            self.arch.base_lr(),
-            &self.params.schedule,
-        )?;
+        let fresh_from = self.b_labels.len();
+        {
+            let committed = &self.b_labels;
+            let pending = &mut self.pending;
+            let mut label_of = |local: usize| -> Result<u32> {
+                if local < fresh_from {
+                    Ok(committed[local])
+                } else {
+                    pending
+                        .as_mut()
+                        .ok_or_else(|| {
+                            Error::Coordinator(format!(
+                                "label for B position {local} neither committed nor in flight"
+                            ))
+                        })?
+                        .wait_slot(local - fresh_from)
+                }
+            };
+            self.session.train_epochs_gated(
+                self.ds,
+                &self.b_idx,
+                fresh_from,
+                &mut label_of,
+                self.params.schedule.real_epochs * self.arch.real_epoch_factor(),
+                self.arch.base_lr(),
+                &self.params.schedule,
+            )?;
+        }
+        // Commit the order's remaining labels (training typically consumed
+        // them all already).
+        self.settle()?;
         let dollars = self
             .params
             .rig
@@ -318,7 +439,13 @@ impl<'e> LabelingEnv<'e> {
 
     /// Measure ε_T(S^θ) over the θ grid with the current model and record
     /// the observations for the power-law fits. Returns the profile.
+    ///
+    /// This is the streaming barrier: Alg. 1 reads ε_T for the *full*
+    /// batch S^θ, so any still-pending acquisition order is committed
+    /// first (normally a no-op — [`LabelingEnv::retrain`] already
+    /// consumed the order while training).
     pub fn measure(&mut self) -> Result<Vec<f64>> {
+        self.settle()?;
         let test_idx = std::mem::take(&mut self.test_idx);
         let scores = self.predict_indices(&test_idx);
         self.test_idx = test_idx;

@@ -10,7 +10,7 @@
 //! carries per-cell provenance (dataset, arch, service price, seed) so a
 //! row in a parallel sweep can always be traced back to its run.
 
-use crate::annotation::CostBreakdown;
+use crate::annotation::{CostBreakdown, OrderRecord};
 
 /// One MCAL / active-learning iteration.
 #[derive(Clone, Debug)]
@@ -86,6 +86,11 @@ pub struct RunReport {
     pub human_only_cost: f64,
     pub stop_reason: StopReason,
     pub iterations: Vec<IterationRecord>,
+    /// Per-order purchase log (id, labels, dollars): order 0 is T, 1 is
+    /// B₀, then one order per acquisition, and finally the residual pass.
+    /// Deterministic provenance — bit-identical across ingestion chunk
+    /// sizes, latencies, and `--jobs` values, like everything else here.
+    pub orders: Vec<OrderRecord>,
     /// Wall-clock seconds of the whole run (simulation time, not rig time).
     pub wall_secs: f64,
 }
@@ -153,6 +158,7 @@ mod tests {
             human_only_cost: 40.0,
             stop_reason: StopReason::ReachedBOpt,
             iterations: vec![],
+            orders: vec![],
             wall_secs: 1.0,
         }
     }

@@ -18,9 +18,14 @@
 //!   probing phase is a private `ProbePolicy` on a shadow ledger, and the
 //!   candidate probes run concurrently when the driver carries a pool.
 //! - [`env`]: shared run state (splits, acquisition, retraining,
-//!   measurement) the driver operates on; θ-grid measurement and
-//!   pool-batch scoring shard across the driver's pool, bit-identically
-//!   to the serial path.
+//!   measurement) the driver operates on. Acquisition is streamed: each
+//!   `Continue { delta }` becomes a submitted
+//!   [`crate::annotation::LabelOrder`] whose labels arrive in chunks
+//!   while the retrain already runs (the ε_T measurement is the barrier);
+//!   θ-grid measurement and pool-batch scoring shard across the driver's
+//!   pool. Both are bit-identical to the serial/synchronous path for any
+//!   chunk size, latency, or `--jobs` (`tests/ingest_stream.rs`,
+//!   `tests/pool_parallel.rs`).
 //! - [`events`]: per-iteration records and run reports (with per-run
 //!   provenance) consumed by the experiment drivers and the parallel
 //!   fleet ([`crate::experiments::fleet`]).

@@ -15,6 +15,16 @@
 //! bookkeeping — while a [`Policy`] owns only the decisions: how big the
 //! next acquisition is, when to stop, and what artifact the run produces.
 //!
+//! Acquisition is *streamed*: a policy's `Continue { delta }` becomes a
+//! submitted [`crate::annotation::LabelOrder`], and the environment's
+//! retrain starts while the order's labels are still arriving — the tail
+//! of human labeling overlaps training compute, with a barrier only at
+//! the ε_T measurement (see [`LabelingEnv::retrain`] /
+//! [`LabelingEnv::measure`]). Policies are oblivious to all of this: the
+//! same `plan`/`finalize` code runs whether the service resolves orders
+//! monolithically or in latency-laden chunks, and produces bit-identical
+//! records either way.
+//!
 //! Adding a new stopping rule or selection strategy is therefore a new
 //! `Policy` impl (typically < 100 lines), not a fourth copy of the loop.
 //! See [`super::mcal::McalPolicy`], [`super::budget::BudgetPolicy`] and
@@ -198,10 +208,12 @@ pub(super) fn machine_label_top(
 }
 
 /// Shared tail of every report-producing run: human-label everything not in
-/// S, evaluate against groundtruth, assemble the [`RunReport`] (including
-/// per-cell provenance: dataset, arch, service price, seed).
+/// S (the residual, bought as the run's final acquisition order), evaluate
+/// against groundtruth, assemble the [`RunReport`] (including per-cell
+/// provenance: dataset, arch, service price, seed, and the ledger's
+/// per-order purchase log).
 pub(super) fn finish_run(
-    env: LabelingEnv<'_>,
+    mut env: LabelingEnv<'_>,
     s_indices: Vec<usize>,
     s_preds: Vec<u32>,
     stop: StopReason,
@@ -215,7 +227,7 @@ pub(super) fn finish_run(
         .copied()
         .filter(|i| !in_s.contains(i))
         .collect();
-    env.service.label_batch(env.ds, &residual)?;
+    env.buy_now(&residual)?;
 
     // Evaluation vs groundtruth (not visible to the policies above).
     let machine_error = metrics::machine_error(env.ds, &s_indices, &s_preds);
@@ -238,6 +250,7 @@ pub(super) fn finish_run(
         human_only_cost: env.human_only_cost(),
         stop_reason: stop,
         iterations,
+        orders: env.ledger.order_log(),
         wall_secs: t0.elapsed().as_secs_f64(),
     })
 }

@@ -12,6 +12,10 @@
 //! - [`search_min_cost`] / [`adapt_delta`] — the optimizer: grid over future
 //!   training sizes B′ × machine-label fractions θ, predicting error with
 //!   the per-θ truncated power laws, subject to `(|S|/|X|)·ε(S) < ε`.
+//!
+//! Determinism contract: everything here is pure float math over its
+//! inputs — no randomness, no threading — so searches and fits are
+//! bit-identical wherever they run (`--jobs`-invariant by construction).
 
 use crate::model::ArchKind;
 use crate::powerlaw::{lstsq, PowerLaw};

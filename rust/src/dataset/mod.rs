@@ -9,6 +9,12 @@
 //! sub-clusters per class (slows the learning curve the way intra-class
 //! visual diversity does), and tunable within-cluster noise (sets the
 //! achievable error floor).
+//!
+//! Determinism contract: generation draws every sample from
+//! [`crate::prng::Pcg32`] streams derived from the spec seed, in a fixed
+//! order — a spec generates bit-identical datasets on every machine and
+//! thread, which is what lets fleet lanes regenerate or share them
+//! interchangeably.
 
 pub mod registry;
 pub mod synth;

@@ -4,7 +4,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::annotation::{Ledger, Service, SimService, SimServiceConfig};
+use crate::annotation::{IngestConfig, Ledger, Service, SimService, SimServiceConfig};
 use crate::dataset::{preset, Dataset, DatasetPreset};
 use crate::runtime::{Engine, Manifest};
 use crate::Result;
@@ -50,6 +50,10 @@ pub struct Ctx {
     /// [`crate::runtime::pool::split_jobs`]. Result CSVs are identical for
     /// any value — only wall-clock changes.
     pub jobs: usize,
+    /// Streaming-annotation knobs (`--ingest-chunk`, `--ingest-latency`)
+    /// applied to every simulated service this context builds. Wall-clock
+    /// only: results are bit-identical for every setting.
+    pub ingest: IngestConfig,
 }
 
 impl Ctx {
@@ -61,12 +65,20 @@ impl Ctx {
             scale,
             seed,
             jobs: 1,
+            ingest: IngestConfig::default(),
         })
     }
 
     /// Set the fleet width; `0` means one worker per available core.
     pub fn with_jobs(mut self, jobs: usize) -> Ctx {
         self.jobs = if jobs == 0 { super::fleet::default_jobs() } else { jobs };
+        self
+    }
+
+    /// Set the streaming-annotation knobs every service built from this
+    /// context will use.
+    pub fn with_ingest(mut self, ingest: IngestConfig) -> Ctx {
+        self.ingest = ingest;
         self
     }
 
@@ -89,9 +101,12 @@ impl Ctx {
         self.view().dataset(name)
     }
 
-    /// Fresh (ledger, service) pair for one run.
+    /// Fresh (ledger, service) pair for one run. Ctx-level callers are
+    /// single runs (no sweep cells to split with), so the simulated
+    /// annotator fleet gets the whole resolved `--jobs` budget —
+    /// wall-clock only, never results.
     pub fn service(&self, svc: Service) -> (Arc<Ledger>, SimService) {
-        self.view().service(svc)
+        self.view().service_with(svc, self.jobs)
     }
 
     /// The engine-free view of this context. Fleet cell closures capture
@@ -99,17 +114,24 @@ impl Ctx {
     /// thread-safe, so each pool lane owns its own (see
     /// [`super::fleet::run_sweep`] and [`crate::runtime::pool`]).
     pub fn view(&self) -> CtxView<'_> {
-        CtxView { manifest: &self.manifest, scale: self.scale, seed: self.seed }
+        CtxView {
+            manifest: &self.manifest,
+            scale: self.scale,
+            seed: self.seed,
+            ingest: self.ingest,
+        }
     }
 }
 
 /// Everything a fleet cell needs from a [`Ctx`] except the (thread-bound)
-/// engine: the manifest, the run scale and the base seed.
+/// engine: the manifest, the run scale, the base seed, and the streaming
+/// ingestion knobs.
 #[derive(Clone, Copy)]
 pub struct CtxView<'a> {
     pub manifest: &'a Manifest,
     pub scale: Scale,
     pub seed: u64,
+    pub ingest: IngestConfig,
 }
 
 impl CtxView<'_> {
@@ -126,11 +148,24 @@ impl CtxView<'_> {
         Ok((ds, p))
     }
 
-    /// Fresh (ledger, service) pair for one run.
-    pub fn service(&self, svc: Service) -> (Arc<Ledger>, SimService) {
+    /// Fresh (ledger, service) pair for one run, with the context's
+    /// ingestion knobs and an explicit annotator-fleet width — the one
+    /// service constructor, so the `--jobs` budget covers annotator
+    /// threads everywhere. Fleet cells pass
+    /// [`super::fleet::ingest_workers`] (their `split_jobs` inner share);
+    /// ctx-level callers pass their whole budget via [`Ctx::service`].
+    /// Worker count is wall-clock only, never results.
+    pub fn service_with(&self, svc: Service, workers: usize) -> (Arc<Ledger>, SimService) {
         let ledger = Arc::new(Ledger::new());
         let service = SimService::new(
-            SimServiceConfig { service: svc, seed: self.seed, ..Default::default() },
+            SimServiceConfig {
+                service: svc,
+                seed: self.seed,
+                workers: workers.max(1),
+                chunk_size: self.ingest.chunk_size,
+                latency: self.ingest.latency,
+                ..Default::default()
+            },
             ledger.clone(),
         );
         (ledger, service)

@@ -18,15 +18,18 @@ use crate::Result;
 use super::common::{Ctx, CtxView};
 
 /// Record one AL trajectory to use as the (B, ε_θ) observation source.
+/// `ingest_workers` sizes the cell's simulated annotator fleet (its share
+/// of the `--jobs` budget — wall-clock only).
 fn observe(
     view: &CtxView<'_>,
     driver: &LabelingDriver<'_>,
     ds_name: &str,
     arch: ArchKind,
     delta_frac: f64,
+    ingest_workers: usize,
 ) -> Result<Trajectory> {
     let (ds, preset) = view.dataset(ds_name)?;
-    let (ledger, service) = view.service(Service::Amazon);
+    let (ledger, service) = view.service_with(Service::Amazon, ingest_workers);
     let params = RunParams { seed: view.seed, ..Default::default() };
     let delta = ((delta_frac * ds.len() as f64).round() as usize).max(1);
     run_al_trajectory(
@@ -63,7 +66,7 @@ pub fn fig2_fig3(ctx: &Ctx) -> Result<(Table, Table)> {
     // Single-trajectory experiment: the --jobs budget goes intra-run.
     let run_pool = EnginePool::for_budget(ctx.jobs, 1)?;
     let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&run_pool));
-    let traj = observe(&ctx.view(), &driver, "cifar10-syn", ArchKind::Res18, 0.02)?;
+    let traj = observe(&ctx.view(), &driver, "cifar10-syn", ArchKind::Res18, 0.02, ctx.jobs)?;
 
     let mut fig2 = Table::new(
         "Figure 2 — power law vs truncated power law (cifar10-syn, res18)",
@@ -133,7 +136,8 @@ pub fn fig22_27(ctx: &Ctx) -> Result<Table> {
     let (trajs, cell_reports) = super::fleet::run_sweep(ctx, &labels, |i, scope| {
         let (ds_name, arch) = cells[i];
         let driver = LabelingDriver::for_scope(scope, view.manifest);
-        let traj = observe(&view, &driver, ds_name, arch, 0.033)?;
+        let traj =
+            observe(&view, &driver, ds_name, arch, 0.033, super::fleet::ingest_workers(scope))?;
         log::info!("fig22_27: {ds_name} {arch} done ({} points)", traj.points.len());
         Ok(traj)
     })?;

@@ -30,7 +30,7 @@ pub fn fig4(ctx: &Ctx, ds_name: &str, b_target_frac: f64) -> Result<Table> {
     let view = ctx.view();
     let (trajs, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let dfrac = dfracs[i];
-        let (ledger, service) = view.service(Service::Amazon);
+        let (ledger, service) = view.service_with(Service::Amazon, fleet::ingest_workers(scope));
         let params = RunParams { seed: view.seed, ..Default::default() };
         let delta = ((dfrac * ds.len() as f64).round() as usize).max(1);
         run_al_trajectory(
@@ -207,7 +207,7 @@ pub fn fig11(ctx: &Ctx, ds_name: &str) -> Result<Table> {
     let view = ctx.view();
     let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let metric = metrics[i];
-        let (ledger, service) = view.service(Service::Amazon);
+        let (ledger, service) = view.service_with(Service::Amazon, fleet::ingest_workers(scope));
         let params = RunParams {
             seed: view.seed,
             metric,

@@ -31,7 +31,7 @@ pub fn fig13(ctx: &Ctx) -> Result<Table> {
     let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let pc = per_class_grid[i];
         let ds = full.subset_per_class(pc.min(full.len() / full.num_classes))?;
-        let (ledger, service) = view.service(Service::Amazon);
+        let (ledger, service) = view.service_with(Service::Amazon, fleet::ingest_workers(scope));
         let params = RunParams { seed: view.seed, ..Default::default() };
         let report = run_mcal(
             &LabelingDriver::for_scope(scope, view.manifest),
@@ -92,7 +92,7 @@ pub fn fig14_15(ctx: &Ctx, datasets: &[&str]) -> Result<Table> {
     let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let (_, svc, metric) = cells[i];
         let (ds, preset) = &loaded[i / (services.len() * metrics.len())];
-        let (ledger, service) = view.service(svc);
+        let (ledger, service) = view.service_with(svc, fleet::ingest_workers(scope));
         let params = RunParams {
             seed: view.seed,
             metric,

@@ -20,6 +20,11 @@
 //! parallelize too (`WorkerScope::inner`, consumed via
 //! [`crate::coordinator::LabelingDriver::for_scope`]).
 //!
+//! Streaming annotation ingestion shares the same budget: a cell's
+//! simulated annotator fleet is sized by [`ingest_workers`] from the
+//! lane's `inner` share, so `--jobs N` bounds engines *and* annotator
+//! threads together.
+//!
 //! `jobs <= 1` degenerates to a serial loop on the context's warm engine.
 //! Results are returned in submission order regardless of the schedule;
 //! per-cell provenance (lane, wall-clock) is reported separately precisely
@@ -34,6 +39,17 @@ use super::common::Ctx;
 /// Number of workers `--jobs auto` (or `--jobs 0`) resolves to.
 pub fn default_jobs() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Annotation-sim worker budget for one cell: the same `inner` share
+/// [`crate::runtime::pool::split_jobs`] gave the lane's nested engine
+/// pool, so streamed-ingestion annotator threads ride the one `--jobs`
+/// budget instead of multiplying it (each lane already owns `inner`
+/// engines; its simulated annotators — which sleep far more than they
+/// compute — reuse that allowance). Worker count is wall-clock only;
+/// results are bit-identical regardless.
+pub fn ingest_workers(scope: &WorkerScope<'_>) -> usize {
+    scope.inner.map(|p| p.lanes()).unwrap_or(1)
 }
 
 /// Scheduling record for one completed cell — provenance, not results:

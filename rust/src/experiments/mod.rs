@@ -11,8 +11,12 @@
 //! workers, so narrow grids still saturate it via parallel arch-selection
 //! probes and θ-grid measurement shards. The manifest and generated
 //! datasets are shared read-only; each lane owns its own engine (the PJRT
-//! binding is not thread-safe). Result CSVs are byte-identical for any
-//! `--jobs` value; scheduling details land in `results/provenance/`.
+//! binding is not thread-safe). Streaming-annotation knobs
+//! (`--ingest-chunk`, `--ingest-latency`) flow through
+//! [`common::Ctx::with_ingest`] to every cell's simulated service, whose
+//! annotator fleet shares the `--jobs` budget ([`fleet::ingest_workers`]).
+//! Result CSVs are byte-identical for any `--jobs` value, ingestion chunk
+//! size, and latency; scheduling details land in `results/provenance/`.
 
 pub mod common;
 pub mod fleet;

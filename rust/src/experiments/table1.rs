@@ -37,7 +37,7 @@ pub fn run(ctx: &Ctx, services: &[Service], probe_iters: usize) -> Result<Table>
     let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let (di, svc) = cells[i];
         let (ds, preset) = &loaded[di];
-        let (ledger, service) = view.service(svc);
+        let (ledger, service) = view.service_with(svc, fleet::ingest_workers(scope));
         let params = RunParams { seed: view.seed, ..Default::default() };
         let (report, probes) = run_with_arch_selection(
             &LabelingDriver::for_scope(scope, view.manifest),

@@ -86,7 +86,7 @@ pub fn run(ctx: &Ctx, datasets: &[&str], epsilon: f64) -> Result<SweepOutput> {
     let (trajectories, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let c = &cells[i];
         let delta = ((c.dfrac * c.ds.len() as f64).round() as usize).max(1);
-        let (ledger, service) = view.service(Service::Amazon);
+        let (ledger, service) = view.service_with(Service::Amazon, fleet::ingest_workers(scope));
         let params = RunParams {
             seed: view.seed.wrapping_add(delta as u64),
             ..Default::default()

@@ -25,7 +25,7 @@ pub fn run(ctx: &Ctx, epsilon: f64, probe_iters: usize) -> Result<Table> {
     let view = ctx.view();
     let (reports, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
         let (ds, preset) = &loaded[i];
-        let (ledger, service) = view.service(Service::Amazon);
+        let (ledger, service) = view.service_with(Service::Amazon, fleet::ingest_workers(scope));
         let params = RunParams {
             epsilon,
             seed: view.seed,

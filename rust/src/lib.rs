@@ -21,16 +21,22 @@
 //!   baselines) and the arch-selection probe (§4). Around it, every
 //!   substrate: [`dataset`] (synthetic Gaussian-mixture analogs of
 //!   Fashion-MNIST / CIFAR-10 / CIFAR-100 / ImageNet), [`annotation`]
-//!   (human-labeling-service simulator with bounded-queue workers and a
-//!   dollar ledger), [`powerlaw`] / [`cost`] (the predictive models),
+//!   (human-labeling-service simulator with bounded-queue workers, a
+//!   dollar ledger with per-order accounting, and [`annotation::ingest`]
+//!   — streaming acquisition orders that let human labeling overlap
+//!   retraining), [`powerlaw`] / [`cost`] (the predictive models),
 //!   [`sampling`] (`M(.)` and `L(.)`), [`runtime`] (PJRT execution of the
 //!   AOT artifacts, plus [`runtime::pool`] — the shared worker-pool
 //!   subsystem: one engine per thread, deterministic scatter/map), and
 //!   [`experiments`] — the paper's table/figure drivers, which shard
 //!   their run grids across the pool via [`experiments::fleet`]
 //!   (`--jobs N` splits one budget between experiment cells, concurrent
-//!   arch-selection probes and θ-grid measurement shards; results are
-//!   bit-identical for any N).
+//!   arch-selection probes, θ-grid measurement shards and simulated
+//!   annotator fleets; results are bit-identical for any N, any
+//!   ingestion chunk size, and any simulated latency).
+//!
+//! The layered tour with the paper-to-code map lives in
+//! `docs/ARCHITECTURE.md`.
 //! - **L2** — `python/compile/model.py`: JAX classifier fwd/bwd lowered once
 //!   to HLO text (`make artifacts`).
 //! - **L1** — `python/compile/kernels/`: Pallas kernels (tiled dense matmul

@@ -3,7 +3,7 @@
 
 use std::process::ExitCode;
 
-use mcal::annotation::Service;
+use mcal::annotation::{IngestConfig, Service};
 use mcal::cli::Args;
 use mcal::coordinator::{run_mcal, run_with_arch_selection, LabelingDriver, RunParams};
 use mcal::experiments::common::{Ctx, Scale};
@@ -18,7 +18,16 @@ USAGE:
     mcal run <dataset> [--arch res18|cnn18|res50|effb0|auto] [--service amazon|satyam|<price>]
              [--epsilon 0.05] [--metric margin|entropy|leastconf|kcenter|random]
              [--scale full|bench|smoke] [--seed N] [--jobs N|auto]
+             [--ingest-chunk N] [--ingest-latency MS]
              [--probe-iters 8 (with --arch auto)] [--artifacts DIR] [--results DIR]
+                                                         --ingest-chunk: stream human labels
+                                                         back in N-label chunks (0 = whole
+                                                         order at once); --ingest-latency:
+                                                         simulated annotator ms per label.
+                                                         Labeling overlaps retraining; both
+                                                         knobs change wall-clock only — with
+                                                         a fixed seed, results are identical
+                                                         for every setting
     mcal arch-select <dataset> [--service ...] [--probe-iters 8] [--jobs N|auto] [...]
                                                          probe every candidate architecture
                                                          (concurrently with --jobs > 1) and
@@ -75,13 +84,18 @@ fn dispatch(args: &Args) -> mcal::Result<()> {
 fn ctx_from(args: &Args) -> mcal::Result<Ctx> {
     let scale = Scale::parse(args.opt_or("scale", "full"))
         .ok_or_else(|| mcal::Error::Config("bad --scale".into()))?;
+    let ingest = IngestConfig {
+        chunk_size: args.usize_or("ingest-chunk", 0)?,
+        latency: args.duration_ms_or("ingest-latency", 0.0)?,
+    };
     Ok(Ctx::new(
         args.opt_or("artifacts", "artifacts"),
         args.opt_or("results", "results"),
         scale,
         args.u64_or("seed", 42)?,
     )?
-    .with_jobs(args.jobs()?))
+    .with_jobs(args.jobs()?)
+    .with_ingest(ingest))
 }
 
 /// Intra-run parallelism for the single-run commands (`run`,
@@ -209,10 +223,11 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
         .ok_or_else(|| mcal::Error::Config("bad --service".into()))?;
     let params = single_run_params(args, &ctx)?;
 
-    let (ledger, service) = ctx.service(svc);
-
     let arch_opt = args.opt_or("arch", "auto");
     let jobs = single_run_jobs(args, &ctx);
+    // The simulated annotator fleet rides the same --jobs budget as the
+    // engines (worker count is wall-clock only, never results).
+    let (ledger, service) = ctx.view().service_with(svc, jobs);
     let report = if arch_opt == "auto" {
         let probe_iters = args.usize_or("probe-iters", 8)?;
         let pool = EnginePool::for_budget(jobs, preset.candidate_archs.len())?;
@@ -248,6 +263,11 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
         "breakdown: human=${:.2} training=${:.2} exploration=${:.2} retrains={} wall={:.1}s",
         c.human_labeling, c.training, c.exploration, c.retrains, report.wall_secs
     );
+    println!(
+        "orders: {} submitted ({} labels streamed)",
+        report.orders.len(),
+        report.orders.iter().map(|o| o.labels).sum::<u64>()
+    );
     Ok(())
 }
 
@@ -267,9 +287,10 @@ fn cmd_arch_select(args: &Args) -> mcal::Result<()> {
         .ok_or_else(|| mcal::Error::Config("bad --service".into()))?;
     let params = single_run_params(args, &ctx)?;
     let probe_iters = args.usize_or("probe-iters", 8)?;
-    let (ledger, service) = ctx.service(svc);
 
     let jobs = single_run_jobs(args, &ctx);
+    // Annotator fleet shares the --jobs budget (wall-clock only).
+    let (ledger, service) = ctx.view().service_with(svc, jobs);
     let pool = EnginePool::for_budget(jobs, preset.candidate_archs.len())?;
     let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
 

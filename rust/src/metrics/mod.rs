@@ -5,6 +5,11 @@
 //! [`overall_label_error`] computes the paper's headline error
 //! `(#wrong machine labels)/|X|`; [`error_on_top_fraction`] computes the
 //! test-set estimate ε_T(S^θ) that feeds the power-law fits (Alg. 1 l. 15).
+//!
+//! Determinism contract: pure functions of their score/label inputs, with
+//! a fixed summation order — profiles are bit-identical however the
+//! underlying scoring was sharded (`--jobs`) or the labels were streamed
+//! in (ingestion chunking).
 
 use crate::dataset::Dataset;
 use crate::runtime::Scores;

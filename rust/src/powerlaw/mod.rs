@@ -7,6 +7,11 @@
 //! ε(S^θ(D(B))) = α · |B|^(−γ) · exp(−|B|/k)
 //! ```
 //!
+//! Determinism contract: fitting is pure, fixed-order float math over the
+//! observation list — bit-identical wherever it runs; the observations
+//! themselves are deterministic per seed (see
+//! [`crate::coordinator::LabelingEnv`]).
+//!
 //! In log space this is **linear** in (ln α, γ, 1/k):
 //!
 //! ```text

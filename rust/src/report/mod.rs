@@ -1,5 +1,10 @@
 //! Result emitters: CSV files + aligned-markdown tables for every
 //! experiment driver (results land in `results/` by default).
+//!
+//! Determinism contract: rows are emitted in the caller's (submission)
+//! order with fixed formatting, so result CSVs are byte-identical for any
+//! `--jobs`, ingestion chunk size, or latency — scheduling provenance
+//! goes to `results/provenance/` instead, never into result files.
 
 use std::fmt::Write as _;
 use std::io::Write as _;

@@ -71,7 +71,6 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::prng::splitmix64;
 use crate::{Error, Result};
 
 use super::Engine;
@@ -79,10 +78,12 @@ use super::Engine;
 /// Derive an independent PRNG seed for one task of a scatter. Depends only
 /// on the base seed and the task's stable identity (its index, or any
 /// stable id the caller prefers), never on lane or schedule — the heart of
-/// the pool's `--jobs`-invariance contract.
+/// the pool's `--jobs`-invariance contract. This is the pool-facing name
+/// for the crate-wide [`stream_seed`](crate::prng::stream_seed) derivation
+/// (the annotation ingest layer derives its per-order seed streams from
+/// the same function), so the two layers cannot drift apart.
 pub fn task_seed(seed: u64, task: u64) -> u64 {
-    let mut s = seed ^ task.wrapping_mul(0x2545_F491_4F6C_DD1D);
-    splitmix64(&mut s)
+    crate::prng::stream_seed(seed, task)
 }
 
 /// Factor a total `--jobs` budget into `(outer, inner)`: `outer` sweep

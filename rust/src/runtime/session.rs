@@ -127,7 +127,9 @@ impl<'e> ModelSession<'e> {
     /// `epochs` real passes. Returns the number of optimizer steps run.
     ///
     /// Minibatches are drawn from an epoch-reshuffled stream; sets smaller
-    /// than one minibatch are sampled with replacement.
+    /// than one minibatch are sampled with replacement. This is the
+    /// fully-committed case of [`ModelSession::train_epochs_gated`]
+    /// (`fresh_from = indices.len()`, all labels in hand).
     pub fn train_epochs(
         &mut self,
         ds: &Dataset,
@@ -137,19 +139,58 @@ impl<'e> ModelSession<'e> {
         base_lr: f32,
         schedule: &TrainSchedule,
     ) -> Result<u64> {
+        assert_eq!(indices.len(), labels.len());
+        self.train_epochs_gated(
+            ds,
+            indices,
+            indices.len(),
+            &mut |local| Ok(labels[local]),
+            epochs,
+            base_lr,
+            schedule,
+        )
+    }
+
+    /// [`ModelSession::train_epochs`] with streamed labels: positions
+    /// `>= fresh_from` of `indices` may have labels still in flight, and
+    /// `label_of(local)` may block until position `local`'s label lands
+    /// (see [`crate::annotation::IngestHandle::wait_slot`]).
+    ///
+    /// The data schedule is streaming-aware but timing-independent: the
+    /// first pass visits the committed positions (`< fresh_from`) in
+    /// shuffled order and then the fresh tail in acquisition order — so
+    /// training compute on already-labeled samples overlaps the tail of
+    /// human labeling — and every later pass reshuffles the whole set.
+    /// Determinism contract: the minibatch stream is a pure function of
+    /// (session rng, `indices.len()`, `fresh_from`) and each label of a
+    /// pure `label_of`, never of arrival timing — `label_of` gates
+    /// wall-clock only. With `fresh_from = indices.len()` the schedule is
+    /// exactly the classic epoch-reshuffled stream.
+    pub fn train_epochs_gated(
+        &mut self,
+        ds: &Dataset,
+        indices: &[usize],
+        fresh_from: usize,
+        label_of: &mut dyn FnMut(usize) -> Result<u32>,
+        epochs: u32,
+        base_lr: f32,
+        schedule: &TrainSchedule,
+    ) -> Result<u64> {
         if indices.is_empty() {
             return Err(Error::Coordinator("train_epochs on empty set".into()));
         }
-        assert_eq!(indices.len(), labels.len());
         let n = indices.len();
+        let fresh_from = fresh_from.min(n);
         let steps_per_epoch = n.div_ceil(self.train_bs).max(1);
         let total_steps = (epochs as usize * steps_per_epoch).max(1);
         let chunks = total_steps.div_ceil(self.chunk_steps);
         let sched_steps = chunks * self.chunk_steps;
 
-        // Epoch-reshuffled order over the training set.
+        // First pass: committed prefix shuffled, fresh tail in acquisition
+        // order (ingest chunks land exactly in that order). Wraps reshuffle
+        // everything — by then the full batch is committed.
         let mut order: Vec<usize> = (0..n).collect();
-        self.rng.shuffle(&mut order);
+        self.rng.shuffle(&mut order[..fresh_from]);
         let mut cursor = 0usize;
 
         let mut step = 0usize;
@@ -171,10 +212,19 @@ impl<'e> ModelSession<'e> {
                     } else {
                         self.rng.below(n as u32) as usize
                     };
+                    let label = match label_of(local) {
+                        Ok(l) => l,
+                        Err(e) => {
+                            // Restore state so the session survives a
+                            // broken label stream.
+                            self.state = Some(state);
+                            return Err(e);
+                        }
+                    };
                     let src = ds.feature(indices[local]);
                     let dst_off = (k * self.train_bs + row) * self.feat_dim;
                     self.xs_host[dst_off..dst_off + self.feat_dim].copy_from_slice(src);
-                    self.ys_host[k * self.train_bs + row] = labels[local] as i32;
+                    self.ys_host[k * self.train_bs + row] = label as i32;
                 }
                 self.lrs_host[k] = base_lr * schedule.lr_scale(step, sched_steps);
                 step += 1;

@@ -9,6 +9,12 @@
 //!
 //! All uncertainty statistics come out of the L1 Pallas scoring kernel via
 //! [`crate::runtime::Scores`]; this module only does ranking/selection.
+//!
+//! Determinism contract: rankings use stable tie-breaks (index order) and
+//! any randomness (random acquisition, tie shuffling) draws from the
+//! caller-supplied [`crate::prng::Pcg32`] stream — selection is
+//! bit-identical for a fixed seed regardless of `--jobs` or ingestion
+//! chunking.
 
 pub mod kcenter;
 
