@@ -86,12 +86,24 @@ fn main() -> mcal::Result<()> {
         "E2E headline — fashion-syn / Amazon (paper: 86% savings, |B|=6.1%, |S|=85%, err 4.0%)",
         &["metric", "paper", "measured"],
     );
-    t.push_row(["human-only cost".into(), "$2800".into(), format!("${:.2}", report.human_only_cost)]);
+    t.push_row([
+        "human-only cost".into(),
+        "$2800".into(),
+        format!("${:.2}", report.human_only_cost),
+    ]);
     t.push_row(["MCAL cost".into(), "$400".into(), format!("${:.2}", report.cost.total())]);
     t.push_row(["savings".into(), "86%".into(), format!("{:.1}%", report.savings() * 100.0)]);
     t.push_row(["|B|/|X|".into(), "6.1%".into(), format!("{:.1}%", report.b_frac() * 100.0)]);
-    t.push_row(["|S|/|X|".into(), "85.0%".into(), format!("{:.1}%", report.machine_frac() * 100.0)]);
-    t.push_row(["label error".into(), "4.0%".into(), format!("{:.2}%", report.overall_error * 100.0)]);
+    t.push_row([
+        "|S|/|X|".into(),
+        "85.0%".into(),
+        format!("{:.1}%", report.machine_frac() * 100.0),
+    ]);
+    t.push_row([
+        "label error".into(),
+        "4.0%".into(),
+        format!("{:.2}%", report.overall_error * 100.0),
+    ]);
     t.push_row(["DNN selected".into(), "res18".into(), report.arch.clone()]);
     println!("\n{}", t.to_markdown());
     let path = t.write_csv("results", "e2e_fashion")?;

@@ -35,17 +35,23 @@
 //! ## Overlap
 //!
 //! The coordinator submits an order and starts the next retrain
-//! immediately; the training loop's minibatch assembly calls
-//! [`IngestHandle::wait_slot`] for the few labels it does not have yet, so
-//! the tail of human labeling overlaps training compute (see
-//! [`crate::coordinator::LabelingEnv::retrain`]). The only hard barrier is
-//! where Alg. 1 semantically needs the complete batch: the ε_T(S^θ)
-//! measurement, which runs after [`IngestHandle::drain`] has committed the
-//! whole order.
+//! immediately; the training loop's minibatch assembly pulls labels
+//! through a [`GatedLabels`] view — the committed prefix of B plus the
+//! in-flight order — blocking only for the few labels it does not have
+//! yet, so the tail of human labeling overlaps training compute (see
+//! [`crate::coordinator::LabelingEnv::retrain`]). The finalize pass rides
+//! the same view: the residual purchase is a *sequence* of orders (one
+//! per ingest chunk) whose labels resolve while the machine-label
+//! evaluation runs, gated only where the report's groundtruth walk
+//! reaches a slot that has not landed (see
+//! [`crate::coordinator::LabelingEnv::buy_streamed`]). The only hard
+//! barrier is where Alg. 1 semantically needs the complete batch: the
+//! ε_T(S^θ) measurement, which runs after [`IngestHandle::drain`] has
+//! committed the whole order.
 
 #![deny(missing_docs)]
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::Receiver;
 use std::time::Duration;
 
@@ -238,6 +244,14 @@ impl IngestHandle {
         self.committed.len()
     }
 
+    /// The committed prefix itself, aligned with the order's indices at
+    /// slot 0. Consumers that copy labels out in bulk (see
+    /// [`GatedLabels`]) read this after a [`wait_slot`](Self::wait_slot)
+    /// instead of re-waiting slot by slot.
+    pub fn committed(&self) -> &[u32] {
+        &self.committed
+    }
+
     /// Chunks absorbed so far — wall-clock provenance, not part of the
     /// deterministic result surface (like [`crate::runtime::TaskReport`]).
     pub fn chunks_received(&self) -> usize {
@@ -309,6 +323,145 @@ impl IngestHandle {
             )));
         }
         Ok(self.committed)
+    }
+}
+
+/// Gated iteration over a label sequence that is part committed, part in
+/// flight: a committed prefix (labels already in hand) followed by one or
+/// more submitted [`LabelOrder`]s whose labels are still streaming in.
+///
+/// This is the one gated-prefix implementation shared by the two overlap
+/// seams of a run:
+///
+/// - **retrain** ([`crate::coordinator::LabelingEnv::retrain`]): the
+///   committed prefix is B's already-labeled samples, the pending order is
+///   the acquisition just submitted — minibatch assembly calls
+///   [`get`](Self::get) and training compute overlaps the tail of human
+///   labeling;
+/// - **finalize** ([`crate::coordinator::LabelingEnv::buy_streamed`]): the
+///   prefix is empty and the pending orders are the residual purchase,
+///   split into one order per ingest chunk — the machine-label evaluation
+///   runs while the residual resolves, and the report's groundtruth walk
+///   gates only on slots whose label has not landed yet.
+///
+/// Determinism contract: [`get`](Self::get) blocks (wall-clock only) until
+/// the slot's label is committed; the value returned for a slot is a pure
+/// function of the orders, never of chunking, latency, worker schedule, or
+/// how long the wait took.
+///
+/// ```
+/// use std::sync::mpsc::channel;
+/// use mcal::annotation::ingest::{GatedLabels, IngestHandle, LabelChunk};
+///
+/// let committed = vec![1, 2];
+/// let (tx, rx) = channel();
+/// tx.send(LabelChunk { offset: 0, labels: vec![3, 4] }).unwrap();
+/// drop(tx);
+/// let mut g = GatedLabels::over(&committed);
+/// g.push_order(IngestHandle::streaming(7, 2, rx));
+/// assert_eq!(g.len(), 4);
+/// assert_eq!(g.get(1).unwrap(), 2); // committed prefix: no gating
+/// assert_eq!(g.get(3).unwrap(), 4); // gated on the in-flight order
+/// assert_eq!(g.finish().unwrap(), vec![3, 4]); // the streamed tail
+/// ```
+#[derive(Debug)]
+pub struct GatedLabels<'a> {
+    /// Slots `0..committed.len()`: labels already in hand.
+    committed: &'a [u32],
+    /// Labels pulled from pending orders so far (slots `committed.len()..`).
+    tail: Vec<u32>,
+    /// In-flight orders in slot order; the front one is partially consumed.
+    pending: VecDeque<IngestHandle>,
+    /// How many labels of the front pending order are already in `tail`.
+    front_taken: usize,
+    /// Total labels the pushed orders deliver (== `tail`'s final length).
+    expect: usize,
+}
+
+impl<'a> GatedLabels<'a> {
+    /// Gated view whose slots `0..committed.len()` are already labeled.
+    /// Push in-flight orders with [`push_order`](Self::push_order); their
+    /// labels occupy the following slots, in push order.
+    pub fn over(committed: &'a [u32]) -> GatedLabels<'a> {
+        GatedLabels {
+            committed,
+            tail: Vec::new(),
+            pending: VecDeque::new(),
+            front_taken: 0,
+            expect: 0,
+        }
+    }
+
+    /// Append an in-flight order; its labels become the next
+    /// [`len`](Self::len)`..len + handle.len()` slots. Empty orders are
+    /// dropped (they deliver nothing to gate on).
+    pub fn push_order(&mut self, handle: IngestHandle) {
+        if handle.is_empty() {
+            return;
+        }
+        self.expect += handle.len();
+        self.pending.push_back(handle);
+    }
+
+    /// Total slots: committed prefix plus every pushed order.
+    pub fn len(&self) -> usize {
+        self.committed.len() + self.expect
+    }
+
+    /// Whether the view covers no slots at all.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pull at least one more label from the front pending order into the
+    /// tail (blocking until it lands), then bulk-copy whatever else that
+    /// order has already committed.
+    fn pull_front(&mut self) -> Result<()> {
+        let handle = self.pending.front_mut().ok_or_else(|| {
+            Error::Annotation(format!(
+                "gated labels: slot {} requested but no order in flight",
+                self.tail.len(),
+            ))
+        })?;
+        handle.wait_slot(self.front_taken)?;
+        let ready = handle.committed();
+        self.tail.extend_from_slice(&ready[self.front_taken..]);
+        self.front_taken = ready.len();
+        if self.front_taken == handle.len() {
+            self.pending.pop_front();
+            self.front_taken = 0;
+        }
+        Ok(())
+    }
+
+    /// The label at `slot`, blocking until it has landed. Committed-prefix
+    /// slots return immediately; in-flight slots gate on their order (and
+    /// commit every slot before them, preserving the prefix rule).
+    pub fn get(&mut self, slot: usize) -> Result<u32> {
+        if let Some(&label) = self.committed.get(slot) {
+            return Ok(label);
+        }
+        let t = slot - self.committed.len();
+        if t >= self.expect {
+            return Err(Error::Annotation(format!(
+                "gated labels: slot {slot} out of range ({} slots)",
+                self.len(),
+            )));
+        }
+        while self.tail.len() <= t {
+            self.pull_front()?;
+        }
+        Ok(self.tail[t])
+    }
+
+    /// Block until every pending order has resolved and return the full
+    /// streamed tail (the labels for slots `committed.len()..len()`,
+    /// aligned with the pushed orders' indices).
+    pub fn finish(mut self) -> Result<Vec<u32>> {
+        while self.tail.len() < self.expect {
+            self.pull_front()?;
+        }
+        Ok(self.tail)
     }
 }
 
@@ -393,5 +546,54 @@ mod tests {
     fn wait_slot_out_of_range_is_error() {
         let mut h = IngestHandle::resolved(2, vec![1]);
         assert!(h.wait_slot(1).is_err());
+    }
+
+    #[test]
+    fn gated_labels_spans_prefix_and_orders() {
+        let committed = vec![10, 11];
+        let mut g = GatedLabels::over(&committed);
+        g.push_order(IngestHandle::resolved(0, vec![20, 21, 22]));
+        g.push_order(IngestHandle::resolved(1, Vec::new())); // dropped
+        g.push_order(IngestHandle::resolved(2, vec![30]));
+        assert_eq!(g.len(), 6);
+        // Out-of-order access across segment boundaries.
+        assert_eq!(g.get(5).unwrap(), 30);
+        assert_eq!(g.get(0).unwrap(), 10);
+        assert_eq!(g.get(3).unwrap(), 21);
+        assert!(g.get(6).is_err(), "past-the-end slot is an error");
+        assert_eq!(g.finish().unwrap(), vec![20, 21, 22, 30]);
+    }
+
+    #[test]
+    fn gated_labels_gate_on_chunk_arrival_across_orders() {
+        let committed = vec![1];
+        let (tx_a, rx_a) = channel();
+        let (tx_b, rx_b) = channel();
+        // Order B resolves before order A: slot order must still hold.
+        tx_b.send(LabelChunk { offset: 0, labels: vec![9] }).unwrap();
+        drop(tx_b);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(15));
+            tx_a.send(LabelChunk { offset: 0, labels: vec![5, 6] }).unwrap();
+        });
+        let mut g = GatedLabels::over(&committed);
+        g.push_order(IngestHandle::streaming(0, 2, rx_a));
+        g.push_order(IngestHandle::streaming(1, 1, rx_b));
+        assert_eq!(g.get(3).unwrap(), 9, "slot 3 waits for order A to commit first");
+        assert_eq!(g.get(1).unwrap(), 5);
+        t.join().unwrap();
+        assert_eq!(g.finish().unwrap(), vec![5, 6, 9]);
+    }
+
+    #[test]
+    fn gated_labels_surface_broken_streams() {
+        let (tx, rx) = channel::<LabelChunk>();
+        drop(tx);
+        let mut g = GatedLabels::over(&[]);
+        g.push_order(IngestHandle::streaming(4, 2, rx));
+        let msg = format!("{}", g.get(0).unwrap_err());
+        assert!(msg.contains("order 4"), "{msg}");
+        // An empty view needs no orders at all.
+        assert!(GatedLabels::over(&[]).finish().unwrap().is_empty());
     }
 }

@@ -9,10 +9,14 @@
 //! recorded at submission on the run's own thread by the coordinator
 //! (which owns order ids — services only charge). Determinism contract:
 //! every charge and order record is applied in program order by the run
-//! that owns the ledger, so totals are bit-identical across ingestion
-//! chunk sizes, latencies, and `--jobs` values — an order is charged once
-//! as a unit (count × price), never chunk-by-chunk, because f64 addition
-//! order would otherwise leak chunking into the total.
+//! that owns the ledger, and label dollars accumulate as *integer label
+//! counts* per distinct price (the f64 total is computed from the counts
+//! on demand), so totals are bit-identical across ingestion chunk sizes,
+//! latencies, and `--jobs` values — and invariant to how a purchase is
+//! split into orders. The streamed finalize pass leans on that last
+//! property: the residual is one order *per ingest chunk*, each charged
+//! at submission, yet the ledger total is the same however many orders
+//! carry it (running f64 accumulation would leak the split into rounding).
 
 use std::sync::Mutex;
 
@@ -47,10 +51,43 @@ impl CostBreakdown {
     }
 }
 
+/// Internal running state: label purchases accumulate as integer counts
+/// per distinct price, so the dollar column is a pure function of *what*
+/// was bought, never of how the purchases were split into orders or in
+/// which f64 addition order the charges landed.
+#[derive(Default)]
+struct Totals {
+    /// `(price, labels)` buckets in first-charge order. A run's charges
+    /// hit the buckets in program order, so the bucket order — and with it
+    /// the summation order in [`Totals::breakdown`] — is deterministic.
+    label_buckets: Vec<(f64, u64)>,
+    training: f64,
+    exploration: f64,
+    retrains: u64,
+}
+
+impl Totals {
+    fn breakdown(&self) -> CostBreakdown {
+        let mut human_labeling = 0.0;
+        let mut labels_purchased = 0u64;
+        for &(price, count) in &self.label_buckets {
+            human_labeling += count as f64 * price;
+            labels_purchased += count;
+        }
+        CostBreakdown {
+            human_labeling,
+            training: self.training,
+            exploration: self.exploration,
+            labels_purchased,
+            retrains: self.retrains,
+        }
+    }
+}
+
 /// Append-only cost accumulator shared across worker threads.
 #[derive(Default)]
 pub struct Ledger {
-    inner: Mutex<CostBreakdown>,
+    inner: Mutex<Totals>,
     orders: Mutex<Vec<OrderRecord>>,
 }
 
@@ -61,8 +98,14 @@ impl Ledger {
 
     pub fn charge_labels(&self, count: u64, price_per_label: f64) {
         let mut g = self.inner.lock().unwrap();
-        g.human_labeling += count as f64 * price_per_label;
-        g.labels_purchased += count;
+        let pos = g
+            .label_buckets
+            .iter()
+            .position(|(p, _)| p.to_bits() == price_per_label.to_bits());
+        match pos {
+            Some(i) => g.label_buckets[i].1 += count,
+            None => g.label_buckets.push((price_per_label, count)),
+        }
     }
 
     pub fn charge_training(&self, dollars: f64) {
@@ -91,7 +134,7 @@ impl Ledger {
     }
 
     pub fn snapshot(&self) -> CostBreakdown {
-        *self.inner.lock().unwrap()
+        self.inner.lock().unwrap().breakdown()
     }
 
     pub fn total(&self) -> f64 {
@@ -138,6 +181,33 @@ mod tests {
         assert_eq!(log.len(), 2);
         assert_eq!(log[0], OrderRecord { id: 0, labels: 50, dollars: 2.0 });
         assert_eq!(log[1].id, 1);
+    }
+
+    /// The split-invariance the streamed finalize pass relies on: charging
+    /// a purchase as one unit or as many orders lands on the same bits.
+    #[test]
+    fn label_totals_are_invariant_to_purchase_splits() {
+        let whole = Ledger::new();
+        whole.charge_labels(977, 0.04);
+        let split = Ledger::new();
+        for chunk in [500u64, 250, 127, 100] {
+            split.charge_labels(chunk, 0.04);
+        }
+        assert_eq!(
+            whole.snapshot().human_labeling.to_bits(),
+            split.snapshot().human_labeling.to_bits(),
+            "dollar totals must not depend on how a purchase was split"
+        );
+        assert_eq!(whole.snapshot().labels_purchased, split.snapshot().labels_purchased);
+
+        // Distinct prices keep distinct buckets, summed in first-charge order.
+        let mixed = Ledger::new();
+        mixed.charge_labels(10, 0.04);
+        mixed.charge_labels(20, 0.003);
+        mixed.charge_labels(5, 0.04);
+        let s = mixed.snapshot();
+        assert_eq!(s.labels_purchased, 35);
+        assert!((s.human_labeling - (15.0 * 0.04 + 20.0 * 0.003)).abs() < 1e-12);
     }
 
     #[test]

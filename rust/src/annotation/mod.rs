@@ -20,7 +20,7 @@ pub mod ingest;
 pub mod ledger;
 pub mod sim;
 
-pub use ingest::{IngestConfig, IngestHandle, LabelChunk, LabelOrder};
+pub use ingest::{GatedLabels, IngestConfig, IngestHandle, LabelChunk, LabelOrder};
 pub use ledger::{CostBreakdown, Ledger, OrderRecord};
 pub use sim::{SimService, SimServiceConfig};
 
@@ -86,6 +86,20 @@ pub trait AnnotationService: Send + Sync {
     fn submit(&self, ds: &Dataset, order: LabelOrder) -> Result<IngestHandle> {
         let labels = self.label_batch(ds, &order.indices)?;
         Ok(IngestHandle::resolved(order.id, labels))
+    }
+
+    /// The granularity (in labels) this service resolves orders at; `0`
+    /// means whole orders resolve as one unit. The coordinator mirrors it
+    /// when it splits a large purchase into a *sequence* of orders (the
+    /// streamed finalize pass, [`crate::coordinator::LabelingEnv::buy_streamed`]):
+    /// matching the service's own chunking keeps order sizes aligned with
+    /// what the annotator fleet actually works on. A sizing hint only:
+    /// with the paper's perfect annotators results never depend on it
+    /// (with injected label errors, each order is an independent
+    /// annotation job, so the error *realization* follows the split —
+    /// see [`ingest::resolve_label`]).
+    fn ingest_chunk(&self) -> usize {
+        0
     }
 
     /// Number of labels purchased so far.

@@ -278,6 +278,13 @@ impl AnnotationService for SimService {
         Ok(IngestHandle::streaming(order.id, n, rx))
     }
 
+    /// The configured streaming chunk size (`--ingest-chunk`), so the
+    /// coordinator's streamed purchases split into orders the size the
+    /// worker fleet resolves anyway.
+    fn ingest_chunk(&self) -> usize {
+        self.cfg.chunk_size
+    }
+
     fn labels_purchased(&self) -> u64 {
         self.purchased.load(Ordering::Relaxed)
     }

@@ -108,7 +108,9 @@ impl Args {
             None | Some("auto") => Ok(0),
             Some(v) => v
                 .parse()
-                .map_err(|_| Error::Config(format!("--jobs: expected integer or 'auto', got '{v}'"))),
+                .map_err(|_| {
+                    Error::Config(format!("--jobs: expected integer or 'auto', got '{v}'"))
+                }),
         }
     }
 }
@@ -163,9 +165,14 @@ mod tests {
         use std::time::Duration;
         let a = parse("run x --ingest-latency 0.5");
         assert_eq!(a.duration_ms_or("ingest-latency", 0.0).unwrap(), Duration::from_micros(500));
-        assert_eq!(parse("run x").duration_ms_or("ingest-latency", 2.0).unwrap(), Duration::from_millis(2));
+        assert_eq!(
+            parse("run x").duration_ms_or("ingest-latency", 2.0).unwrap(),
+            Duration::from_millis(2)
+        );
         assert!(parse("run x --ingest-latency -1").duration_ms_or("ingest-latency", 0.0).is_err());
-        assert!(parse("run x --ingest-latency soon").duration_ms_or("ingest-latency", 0.0).is_err());
+        assert!(parse("run x --ingest-latency soon")
+            .duration_ms_or("ingest-latency", 0.0)
+            .is_err());
     }
 
     #[test]

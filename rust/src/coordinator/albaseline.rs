@@ -148,6 +148,12 @@ impl Policy for NaiveAlPolicy {
         Ok(Decision::Continue { delta: self.delta.min(b_cap - env.b_idx.len()) })
     }
 
+    /// Naive AL's artifact is the price-independent trace itself: no
+    /// residual is purchased here (every stopping point's residual is
+    /// priced post hoc by [`Trajectory::price_all`]), so unlike the
+    /// report-producing policies there is nothing for the streamed
+    /// finalize (`finish_run`) to overlap — the run's label stream ends
+    /// with the last acquisition order.
     fn finalize(self, env: LabelingEnv<'_>, _stop: StopReason, t0: Instant) -> Result<Trajectory> {
         Ok(Trajectory {
             dataset: env.ds.name.clone(),

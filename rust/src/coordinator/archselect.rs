@@ -137,6 +137,9 @@ impl Policy for ProbePolicy {
         params.max_iters.max(self.probe_iters).saturating_add(2)
     }
 
+    /// Probes never buy a residual (their shadow purchases are re-bought
+    /// by the winner's real run, whose `finish_run` streams it), so this
+    /// finalize only snapshots the probe's estimate.
     fn finalize(
         self,
         env: LabelingEnv<'_>,

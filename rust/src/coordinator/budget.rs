@@ -122,8 +122,15 @@ impl Policy for BudgetPolicy {
     }
 
     /// Finalize under the budget: machine-label at least enough that the
-    /// residual human labels fit in what's left of it.
-    fn finalize(self, mut env: LabelingEnv<'_>, stop: StopReason, t0: Instant) -> Result<RunReport> {
+    /// residual human labels fit in what's left of it. The residual
+    /// purchase itself streams through `finish_run` (one ingest order per
+    /// chunk, overlapped with the evaluation) like every other report run.
+    fn finalize(
+        self,
+        mut env: LabelingEnv<'_>,
+        stop: StopReason,
+        t0: Instant,
+    ) -> Result<RunReport> {
         let c_h = env.service.price_per_label();
         let spent = env.ledger.total();
         let remaining = (self.budget - spent).max(0.0);

@@ -9,16 +9,19 @@
 //! the in-flight order (gating minibatch assembly on label arrival, so
 //! the tail of human labeling overlaps training compute), and
 //! [`LabelingEnv::measure`] is the barrier — Alg. 1's ε_T(S^θ) is only
-//! read once the full batch S^θ is committed. Determinism contract: the
-//! committed label set, iteration records, and ledger totals are
-//! bit-identical for any ingestion chunk size, simulated latency, or
-//! `--jobs` value — streaming and sharding change wall-clock, never
-//! results (pinned by `tests/ingest_stream.rs` and
-//! `tests/pool_parallel.rs`).
+//! read once the full batch S^θ is committed. The run's final (and
+//! largest) purchase streams too: [`LabelingEnv::buy_streamed`] submits
+//! the residual as one order per ingest chunk and the report evaluation
+//! proceeds over the committed prefix while the orders resolve.
+//! Determinism contract: the committed label set, iteration records, and
+//! ledger totals are bit-identical for any ingestion chunk size,
+//! simulated latency, or `--jobs` value — streaming and sharding change
+//! wall-clock, never results (pinned by `tests/ingest_stream.rs`,
+//! `tests/finalize_stream.rs` and `tests/pool_parallel.rs`).
 
 use std::sync::Arc;
 
-use crate::annotation::{AnnotationService, IngestHandle, LabelOrder, Ledger};
+use crate::annotation::{AnnotationService, GatedLabels, IngestHandle, LabelOrder, Ledger};
 use crate::cost::RigModel;
 use crate::dataset::Dataset;
 use crate::metrics;
@@ -172,7 +175,9 @@ impl<'e> LabelingEnv<'e> {
 
         let n = ds.len();
         let test_n = ((params.test_frac * n as f64).round() as usize).clamp(1, n - 2);
-        let init_n = ((params.init_frac * n as f64).round() as usize).max(ds.num_classes.min(n / 4)).max(2);
+        let init_n = ((params.init_frac * n as f64).round() as usize)
+            .max(ds.num_classes.min(n / 4))
+            .max(2);
 
         // Sample T then B0 from the remainder.
         let mut order: Vec<usize> = (0..n).collect();
@@ -321,17 +326,36 @@ impl<'e> LabelingEnv<'e> {
         Ok(k)
     }
 
-    /// Buy labels for `indices` right now, as one settled order (setup and
-    /// residual purchases — paths with nothing to overlap). An empty
-    /// purchase places no order at all, like the old synchronous path.
-    pub fn buy_now(&mut self, indices: &[usize]) -> Result<Vec<u32>> {
+    /// Buy labels for `indices` as a *sequence* of in-flight orders — one
+    /// per ingest chunk ([`AnnotationService::ingest_chunk`]; `0` = a
+    /// single order) — and return the [`GatedLabels`] view their labels
+    /// stream through. This is the finalize pass's purchase path: the
+    /// caller submits, proceeds with the machine-label evaluation while
+    /// the annotator fleet resolves the orders, and gates (wall-clock
+    /// only) where it reads a label that has not landed yet.
+    ///
+    /// Every order is charged at its submission, in program order; the
+    /// ledger's integer-bucket label accounting keeps the dollar total
+    /// bit-identical however many orders carry the purchase. An empty
+    /// purchase places no order and has no side effects.
+    pub fn buy_streamed(&mut self, indices: &[usize]) -> Result<GatedLabels<'static>> {
+        let mut gated = GatedLabels::over(&[]);
         if indices.is_empty() {
-            return Ok(Vec::new());
+            return Ok(gated);
         }
-        let id = self.order_counter;
-        self.order_counter += 1;
-        place_order(self.service, &self.ledger, self.ds, id, indices.to_vec(), self.params.seed)?
-            .drain()
+        let chunk = match self.service.ingest_chunk() {
+            0 => indices.len(),
+            c => c,
+        };
+        let seed = self.params.seed;
+        for slice in indices.chunks(chunk) {
+            let id = self.order_counter;
+            self.order_counter += 1;
+            let handle =
+                place_order(self.service, &self.ledger, self.ds, id, slice.to_vec(), seed)?;
+            gated.push_order(handle);
+        }
+        Ok(gated)
     }
 
     /// Retrain from scratch on the current B; charges the simulated rig
@@ -340,10 +364,13 @@ impl<'e> LabelingEnv<'e> {
     ///
     /// With an acquisition order in flight, training starts immediately:
     /// the first pass visits the already-labeled prefix of B first and
-    /// gates on [`IngestHandle::wait_slot`] only when a minibatch reaches
-    /// a sample whose label has not landed yet — the overlap seam between
-    /// the paper's two spend streams. The minibatch schedule and the
-    /// resulting model depend only on seeds, never on arrival timing (see
+    /// gates on a [`GatedLabels`] view (committed prefix + pending order)
+    /// only when a minibatch reaches a sample whose label has not landed
+    /// yet — the overlap seam between the paper's two spend streams, and
+    /// the same gated-prefix implementation the finalize pass streams the
+    /// residual purchase through ([`LabelingEnv::buy_streamed`]). The
+    /// minibatch schedule and the resulting model depend only on seeds,
+    /// never on arrival timing (see
     /// [`crate::runtime::ModelSession::train_epochs_gated`]). The order is
     /// fully committed by the time this returns.
     pub fn retrain(&mut self) -> Result<f64> {
@@ -354,23 +381,22 @@ impl<'e> LabelingEnv<'e> {
             .wrapping_add(self.retrain_counter.wrapping_mul(0x9E37_79B9));
         self.session.reinit(seed)?;
         let fresh_from = self.b_labels.len();
-        {
-            let committed = &self.b_labels;
-            let pending = &mut self.pending;
-            let mut label_of = |local: usize| -> Result<u32> {
-                if local < fresh_from {
-                    Ok(committed[local])
-                } else {
-                    pending
-                        .as_mut()
-                        .ok_or_else(|| {
-                            Error::Coordinator(format!(
-                                "label for B position {local} neither committed nor in flight"
-                            ))
-                        })?
-                        .wait_slot(local - fresh_from)
-                }
-            };
+        let tail = {
+            // The shared gated-prefix view (committed B labels + the
+            // in-flight order) — the same implementation the finalize
+            // pass streams the residual through.
+            let mut gated = GatedLabels::over(&self.b_labels);
+            if let Some(handle) = self.pending.take() {
+                gated.push_order(handle);
+            }
+            if self.b_idx.len() != gated.len() {
+                return Err(Error::Coordinator(format!(
+                    "B has {} positions but {} labels are committed or in flight",
+                    self.b_idx.len(),
+                    gated.len()
+                )));
+            }
+            let mut label_of = |local: usize| gated.get(local);
             self.session.train_epochs_gated(
                 self.ds,
                 &self.b_idx,
@@ -380,10 +406,12 @@ impl<'e> LabelingEnv<'e> {
                 self.arch.base_lr(),
                 &self.params.schedule,
             )?;
-        }
-        // Commit the order's remaining labels (training typically consumed
-        // them all already).
-        self.settle()?;
+            // Commit the order's remaining labels (training typically
+            // consumed them all already).
+            gated.finish()?
+        };
+        self.b_labels.extend_from_slice(&tail);
+        debug_assert_eq!(self.b_idx.len(), self.b_labels.len());
         let dollars = self
             .params
             .rig

@@ -81,15 +81,30 @@ pub struct RunReport {
     pub overall_error: f64,
     /// Measured machine-label error on S.
     pub machine_error: f64,
+    /// Measured error of the residual's *human* labels vs groundtruth —
+    /// 0 unless the annotation service injects label errors (the paper
+    /// assumes perfect human labels, §2 fn. 2). Computed by streaming the
+    /// residual's ingest orders through the gated finalize pass, so it is
+    /// also the field that proves the streamed residual was actually read.
+    /// With injected errors its *realization* follows the residual's order
+    /// split (each order is an independent annotation job with its own
+    /// seed stream); with the default perfect annotators it is identically
+    /// 0 for every ingest config.
+    pub residual_label_error: f64,
     pub cost: CostBreakdown,
     /// Cost of human-labeling everything (|X| · C_h).
     pub human_only_cost: f64,
     pub stop_reason: StopReason,
     pub iterations: Vec<IterationRecord>,
     /// Per-order purchase log (id, labels, dollars): order 0 is T, 1 is
-    /// B₀, then one order per acquisition, and finally the residual pass.
-    /// Deterministic provenance — bit-identical across ingestion chunk
-    /// sizes, latencies, and `--jobs` values, like everything else here.
+    /// B₀, then one order per acquisition, and finally the residual pass
+    /// as one order *per ingest chunk* (a monolithic service yields a
+    /// single trailing order; a chunked one yields
+    /// ⌈residual / chunk⌉ — the one documented place where the log's
+    /// *shape* follows the ingest config). Content per order is
+    /// deterministic, and every aggregate over the log (label total,
+    /// dollar total) is bit-identical across ingestion chunk sizes,
+    /// latencies, and `--jobs` values, like everything else here.
     pub orders: Vec<OrderRecord>,
     /// Wall-clock seconds of the whole run (simulation time, not rig time).
     pub wall_secs: f64,
@@ -148,6 +163,7 @@ mod tests {
             residual_human: 250,
             overall_error: 0.03,
             machine_error: 0.05,
+            residual_label_error: 0.0,
             cost: CostBreakdown {
                 human_labeling: 16.0,
                 training: 4.0,

@@ -13,7 +13,9 @@
 //! 4. stop on: reached B_opt (stable), predicted cost rising, exploration
 //!    tax exceeded with no feasible plan, pool exhausted (driver);
 //! 5. finalize: train at B_opt, pick S* by L(.) under the measured
-//!    constraint, machine-label it, human-label the residual.
+//!    constraint, machine-label it, human-label the residual — streamed
+//!    as one ingest order per chunk, overlapped with the evaluation
+//!    (`finish_run`).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -199,8 +201,14 @@ impl Policy for McalPolicy {
 
     /// Final labeling pass: optionally grow B to B_opt (one shot), then
     /// pick S* by L(.) under the measured constraint, machine-label it,
-    /// human-label the residual, and evaluate against groundtruth.
-    fn finalize(self, mut env: LabelingEnv<'_>, stop: StopReason, t0: Instant) -> Result<RunReport> {
+    /// and hand off to `finish_run`, which streams the residual purchase
+    /// (one ingest order per chunk) while evaluating against groundtruth.
+    fn finalize(
+        self,
+        mut env: LabelingEnv<'_>,
+        stop: StopReason,
+        t0: Instant,
+    ) -> Result<RunReport> {
         // Grow to B_opt if the plan says so and we stopped short.
         if let Some(b_opt) = self.b_opt {
             let b_opt = b_opt.min(env.b_cap());

@@ -20,8 +20,12 @@
 //! retrain starts while the order's labels are still arriving — the tail
 //! of human labeling overlaps training compute, with a barrier only at
 //! the ε_T measurement (see [`LabelingEnv::retrain`] /
-//! [`LabelingEnv::measure`]). Policies are oblivious to all of this: the
-//! same `plan`/`finalize` code runs whether the service resolves orders
+//! [`LabelingEnv::measure`]). The finalize pass streams too: the residual
+//! purchase — the run's biggest order, and the dominant term of the
+//! paper's Eqn. 1 cost at high ε — is submitted as one order per ingest
+//! chunk and the report's evaluation overlaps their resolution (see
+//! `finish_run`). Policies are oblivious to all of this: the same
+//! `plan`/`finalize` code runs whether the service resolves orders
 //! monolithically or in latency-laden chunks, and produces bit-identical
 //! records either way.
 //!
@@ -207,11 +211,21 @@ pub(super) fn machine_label_top(
     Ok((idx, preds))
 }
 
-/// Shared tail of every report-producing run: human-label everything not in
-/// S (the residual, bought as the run's final acquisition order), evaluate
-/// against groundtruth, assemble the [`RunReport`] (including per-cell
-/// provenance: dataset, arch, service price, seed, and the ledger's
-/// per-order purchase log).
+/// Shared tail of every report-producing run: human-label everything not
+/// in S (the residual — the run's single largest purchase, submitted as a
+/// *sequence* of in-flight ingest orders, one per chunk), evaluate against
+/// groundtruth while the orders resolve, assemble the [`RunReport`]
+/// (including per-cell provenance: dataset, arch, service price, seed, and
+/// the ledger's per-order purchase log).
+///
+/// The pipelining mirrors the gated retrain: the machine-label evaluation
+/// (`metrics::machine_error` / `overall_label_error`) runs over S — which
+/// needs no residual label — while the annotator fleet works the orders;
+/// the residual's own groundtruth walk then streams through the shared
+/// [`crate::annotation::GatedLabels`] view, gating (wall-clock only) on
+/// slots whose label has not landed yet. Orders are charged once each at
+/// submission; the ledger's integer-bucket accounting keeps every dollar
+/// total bit-identical however many orders carry the residual.
 pub(super) fn finish_run(
     mut env: LabelingEnv<'_>,
     s_indices: Vec<usize>,
@@ -227,11 +241,15 @@ pub(super) fn finish_run(
         .copied()
         .filter(|i| !in_s.contains(i))
         .collect();
-    env.buy_now(&residual)?;
+    // Submit first: the residual's labels stream in while the machine-label
+    // evaluation below runs.
+    let mut residual_labels = env.buy_streamed(&residual)?;
 
     // Evaluation vs groundtruth (not visible to the policies above).
     let machine_error = metrics::machine_error(env.ds, &s_indices, &s_preds);
     let overall_error = metrics::overall_label_error(env.ds, &s_indices, &s_preds);
+    let residual_label_error =
+        metrics::streamed_label_error(env.ds, &residual, &mut |slot| residual_labels.get(slot))?;
 
     Ok(RunReport {
         dataset: env.ds.name.clone(),
@@ -246,6 +264,7 @@ pub(super) fn finish_run(
         residual_human: residual.len(),
         overall_error,
         machine_error,
+        residual_label_error,
         cost: env.ledger.snapshot(),
         human_only_cost: env.human_only_cost(),
         stop_reason: stop,

@@ -337,7 +337,9 @@ mod tests {
 
     #[test]
     fn cost_model_fit_recovers_line() {
-        let pts: Vec<(f64, f64)> = (1..=6).map(|i| (i as f64 * 1000.0, 0.002 * i as f64 * 1000.0 + 1.5)).collect();
+        let pts: Vec<(f64, f64)> = (1..=6)
+            .map(|i| (i as f64 * 1000.0, 0.002 * i as f64 * 1000.0 + 1.5))
+            .collect();
         let cm = FittedCostModel::fit(&pts).unwrap();
         assert!((cm.a - 0.002).abs() < 1e-9);
         assert!((cm.b - 1.5).abs() < 1e-6);

@@ -180,7 +180,10 @@ pub fn imagenet(ctx: &Ctx) -> Result<Table> {
     // The paper's qualitative claim: for this dataset MCAL should decline
     // (ExplorationTax) or machine-label almost nothing.
     if report.stop_reason != StopReason::ExplorationTax && report.machine_frac() > 0.2 {
-        log::warn!("imagenet-syn unexpectedly machine-labeled {:.1}%", report.machine_frac() * 100.0);
+        log::warn!(
+            "imagenet-syn unexpectedly machine-labeled {:.1}%",
+            report.machine_frac() * 100.0
+        );
     }
     table.write_csv(&ctx.results_dir, "imagenet_decline")?;
     Ok(table)

@@ -46,8 +46,11 @@ pub fn default_jobs() -> usize {
 /// pool, so streamed-ingestion annotator threads ride the one `--jobs`
 /// budget instead of multiplying it (each lane already owns `inner`
 /// engines; its simulated annotators — which sleep far more than they
-/// compute — reuse that allowance). Worker count is wall-clock only;
-/// results are bit-identical regardless.
+/// compute — reuse that allowance). The finalize pass buys its residual
+/// through the *same* service this sizes, so the streamed finalize fleet
+/// is bounded by the same split — no second annotator budget exists
+/// anywhere. Worker count is wall-clock only; results are bit-identical
+/// regardless.
 pub fn ingest_workers(scope: &WorkerScope<'_>) -> usize {
     scope.inner.map(|p| p.lanes()).unwrap_or(1)
 }

@@ -24,10 +24,14 @@ USAGE:
                                                          back in N-label chunks (0 = whole
                                                          order at once); --ingest-latency:
                                                          simulated annotator ms per label.
-                                                         Labeling overlaps retraining; both
-                                                         knobs change wall-clock only — with
-                                                         a fixed seed, results are identical
-                                                         for every setting
+                                                         Labeling overlaps retraining, and
+                                                         the final residual purchase streams
+                                                         as one order per chunk while the
+                                                         report evaluates. Both knobs change
+                                                         wall-clock only — with a fixed seed,
+                                                         results are identical for every
+                                                         setting (the order *log* lists the
+                                                         residual as its chunk count)
     mcal arch-select <dataset> [--service ...] [--probe-iters 8] [--jobs N|auto] [...]
                                                          probe every candidate architecture
                                                          (concurrently with --jobs > 1) and

@@ -94,6 +94,30 @@ pub fn accuracy(ds: &Dataset, indices: &[usize], preds: &[u32]) -> f64 {
     1.0 - machine_error(ds, indices, preds)
 }
 
+/// [`machine_error`]'s counting over a *streamed* label sequence: the
+/// fraction of `indices` whose label (pulled slot by slot from `label_of`)
+/// disagrees with groundtruth. `label_of(slot)` may block until the slot's
+/// label lands — this is how the finalize pass evaluates the residual
+/// purchase while its ingest orders are still resolving (see
+/// [`crate::annotation::GatedLabels`]). Gating is wall-clock only: the
+/// result is a pure function of the labels, summed in slot order.
+pub fn streamed_label_error(
+    ds: &Dataset,
+    indices: &[usize],
+    label_of: &mut dyn FnMut(usize) -> crate::Result<u32>,
+) -> crate::Result<f64> {
+    if indices.is_empty() {
+        return Ok(0.0);
+    }
+    let mut wrong = 0usize;
+    for (slot, &i) in indices.iter().enumerate() {
+        if label_of(slot)? != ds.groundtruth(i) {
+            wrong += 1;
+        }
+    }
+    Ok(wrong as f64 / indices.len() as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +198,22 @@ mod tests {
         let ds = ds();
         assert_eq!(machine_error(&ds, &[], &[]), 0.0);
         assert_eq!(overall_label_error(&ds, &[], &[]), 0.0);
+    }
+
+    #[test]
+    fn streamed_error_matches_machine_error() {
+        let ds = ds();
+        let idx = vec![0, 3, 7, 9];
+        let mut labels: Vec<u32> = idx.iter().map(|&i| ds.groundtruth(i)).collect();
+        labels[2] = (labels[2] + 1) % 3;
+        let streamed = streamed_label_error(&ds, &idx, &mut |slot| Ok(labels[slot])).unwrap();
+        assert!((streamed - machine_error(&ds, &idx, &labels)).abs() < 1e-15);
+        // Empty sets need no labels; errors pass straight through.
+        let mut never = |_: usize| -> crate::Result<u32> { unreachable!() };
+        assert_eq!(streamed_label_error(&ds, &[], &mut never).unwrap(), 0.0);
+        let mut broken = |_: usize| -> crate::Result<u32> {
+            Err(crate::Error::Annotation("broken stream".into()))
+        };
+        assert!(streamed_label_error(&ds, &idx, &mut broken).is_err());
     }
 }

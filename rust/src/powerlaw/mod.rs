@@ -113,7 +113,13 @@ pub fn solve_linear(a: &mut [f64], b: &mut [f64], n: usize) -> Result<Vec<f64>> 
 
 /// Weighted linear least squares: minimize Σ w_i (x·f_i − y_i)² with ridge.
 /// `features` is row-major `m×n`.
-pub fn lstsq(features: &[f64], y: &[f64], w: Option<&[f64]>, m: usize, n: usize) -> Result<Vec<f64>> {
+pub fn lstsq(
+    features: &[f64],
+    y: &[f64],
+    w: Option<&[f64]>,
+    m: usize,
+    n: usize,
+) -> Result<Vec<f64>> {
     let mut ata = vec![0.0; n * n];
     let mut aty = vec![0.0; n];
     for i in 0..m {
@@ -258,7 +264,12 @@ mod tests {
     fn truncated_beats_plain_on_falloff_data() {
         // Like Fig. 2: with a real falloff, the truncated fit should have
         // lower log-RMSE than the plain fit.
-        let pts = synth(1.0, 0.3, 8_000.0, &[250.0, 500.0, 1000.0, 2000.0, 4000.0, 8000.0, 16000.0]);
+        let pts = synth(
+            1.0,
+            0.3,
+            8_000.0,
+            &[250.0, 500.0, 1000.0, 2000.0, 4000.0, 8000.0, 16000.0],
+        );
         let ft = fit_truncated(&pts, None).unwrap();
         let fp = fit_plain(&pts, None).unwrap();
         assert!(ft.rmse_log(&pts) < fp.rmse_log(&pts) * 0.5);

@@ -65,7 +65,10 @@ impl Engine {
     }
 
     /// Load + compile an HLO-text artifact (cached by path).
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+    pub fn load(
+        &self,
+        path: impl AsRef<Path>,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         let path = path.as_ref().to_path_buf();
         if let Some(exe) = self.exe_cache.lock().unwrap().get(&path) {
             return Ok(exe.clone());

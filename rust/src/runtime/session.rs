@@ -153,8 +153,13 @@ impl<'e> ModelSession<'e> {
 
     /// [`ModelSession::train_epochs`] with streamed labels: positions
     /// `>= fresh_from` of `indices` may have labels still in flight, and
-    /// `label_of(local)` may block until position `local`'s label lands
-    /// (see [`crate::annotation::IngestHandle::wait_slot`]).
+    /// `label_of(local)` may block until position `local`'s label lands.
+    /// The canonical `label_of` is a [`crate::annotation::GatedLabels`]
+    /// view (committed prefix + in-flight orders) — the one gated-prefix
+    /// implementation shared by this training path and the coordinator's
+    /// streamed finalize pass; this method deliberately takes the closure,
+    /// not the view, so the runtime layer stays ignorant of annotation
+    /// types.
     ///
     /// The data schedule is streaming-aware but timing-independent: the
     /// first pass visits the committed positions (`< fresh_from`) in

@@ -62,7 +62,9 @@ pub fn select(
     }
     let mut dist_bufs = Vec::with_capacity(n_chunks);
     for c in 0..n_chunks {
-        dist_bufs.push(engine.buf_f32(&dists[c * chunk_rows..(c + 1) * chunk_rows], &[chunk_rows])?);
+        dist_bufs.push(
+            engine.buf_f32(&dists[c * chunk_rows..(c + 1) * chunk_rows], &[chunk_rows])?,
+        );
     }
 
     let relax = |center: &[f32],

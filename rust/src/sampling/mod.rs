@@ -206,7 +206,13 @@ mod tests {
 
     #[test]
     fn metric_parse_roundtrip() {
-        for m in [Metric::Margin, Metric::Entropy, Metric::LeastConfidence, Metric::KCenter, Metric::Random] {
+        for m in [
+            Metric::Margin,
+            Metric::Entropy,
+            Metric::LeastConfidence,
+            Metric::KCenter,
+            Metric::Random,
+        ] {
             assert_eq!(Metric::parse(m.as_str()), Some(m));
         }
         assert_eq!(Metric::parse("bald"), None);

@@ -1,0 +1,76 @@
+//! Scaffolding shared by the streaming determinism suites
+//! (`ingest_stream.rs`, `finalize_stream.rs`): the artifact-gated
+//! engine/manifest fixture, the smoke-scale dataset, the ingest-config
+//! grid, and the residual order-log partitioning rule. A directory
+//! module, so cargo compiles it into each suite via `mod common;`
+//! instead of building it as its own test crate.
+
+use std::time::Duration;
+
+use mcal::annotation::{Service, SimServiceConfig};
+use mcal::coordinator::RunReport;
+use mcal::dataset::{preset, Dataset, DatasetPreset};
+use mcal::runtime::{Engine, Manifest};
+
+pub struct Fixture {
+    pub engine: Engine,
+    pub manifest: Manifest,
+}
+
+pub fn setup() -> Option<Fixture> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Fixture {
+        engine: Engine::cpu().unwrap(),
+        manifest: Manifest::load("artifacts").unwrap(),
+    })
+}
+
+pub fn smoke_dataset(name: &str, seed: u64) -> (Dataset, DatasetPreset) {
+    let p = preset(name, seed).unwrap();
+    let spec = p.spec.scaled(0.05);
+    let mut ds = spec.generate().unwrap();
+    ds.name = name.to_string();
+    (ds, p)
+}
+
+/// The ingestion configurations that must all land on the same bits:
+/// monolithic/synchronous on a single worker, per-label chunks on a wide
+/// fleet, odd non-dividing chunks with simulated latency, and mid-size
+/// chunks on a narrow fleet — 4 points across chunk size × latency ×
+/// worker count.
+pub fn ingest_configs(seed: u64) -> Vec<SimServiceConfig> {
+    let base = SimServiceConfig { service: Service::Amazon, seed, ..Default::default() };
+    vec![
+        SimServiceConfig { chunk_size: 0, workers: 1, ..base.clone() },
+        SimServiceConfig { chunk_size: 1, workers: 4, ..base.clone() },
+        SimServiceConfig {
+            chunk_size: 7,
+            workers: 3,
+            latency: Duration::from_micros(50),
+            ..base.clone()
+        },
+        SimServiceConfig { chunk_size: 16, workers: 2, ..base },
+    ]
+}
+
+/// Index of the first residual order: the minimal trailing run of orders
+/// whose labels sum to `residual_human`. The residual is submitted as one
+/// order *per ingest chunk* (the documented config-shaped part of the
+/// log), so comparisons collapse that suffix into an aggregate.
+pub fn residual_cut(r: &RunReport) -> usize {
+    let mut cut = r.orders.len();
+    let mut acc = 0u64;
+    while acc < r.residual_human as u64 {
+        assert!(cut > 0, "order log does not cover the residual ({acc} of {})", r.residual_human);
+        cut -= 1;
+        acc += r.orders[cut].labels;
+    }
+    assert_eq!(
+        acc, r.residual_human as u64,
+        "trailing orders must exactly partition the residual"
+    );
+    cut
+}

@@ -127,7 +127,11 @@ fn mcal_respects_error_bound_across_seeds() {
             "seed {seed}: {}",
             report.summary()
         );
-        assert!(report.cost.total() <= report.human_only_cost * 1.35, "seed {seed}: {}", report.summary());
+        assert!(
+            report.cost.total() <= report.human_only_cost * 1.35,
+            "seed {seed}: {}",
+            report.summary()
+        );
     }
 }
 

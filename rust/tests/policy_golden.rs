@@ -117,7 +117,9 @@ fn serialize_records(rs: &[IterationRecord]) -> String {
 /// The golden-comparison key of a whole report (everything except
 /// wall-clock).
 #[allow(clippy::type_complexity)]
-fn report_key(r: &RunReport) -> (String, String, u64, usize, usize, usize, usize, u64, u64, u64, String) {
+fn report_key(
+    r: &RunReport,
+) -> (String, String, u64, usize, usize, usize, usize, u64, u64, u64, String) {
     (
         r.dataset.clone(),
         r.arch.clone(),

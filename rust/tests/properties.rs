@@ -34,7 +34,8 @@ fn prop_selection_returns_distinct_valid_positions() {
         let k = g.usize_in(0, n + 10);
         let classes = g.usize_in(2, 20);
         let scores = random_scores(g, n, classes);
-        let metric = *g.choose(&[Metric::Margin, Metric::Entropy, Metric::LeastConfidence, Metric::Random]);
+        let metric =
+            *g.choose(&[Metric::Margin, Metric::Entropy, Metric::LeastConfidence, Metric::Random]);
         let mut rng = Pcg32::new(g.usize_in(0, 1 << 30) as u64, 1);
         let sel = select_for_training(metric, &scores, k, &mut rng);
         if sel.len() != k.min(n) {
