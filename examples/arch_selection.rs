@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
-use mcal::coordinator::{run_with_arch_selection, LabelingDriver, RunParams};
+use mcal::coordinator::{run_with_arch_selection, ArchSelectConfig, LabelingDriver, RunParams};
 use mcal::dataset::preset;
 use mcal::report::Table;
 use mcal::runtime::{Engine, EnginePool, Manifest};
@@ -42,7 +42,9 @@ fn main() -> mcal::Result<()> {
         &p.candidate_archs,
         p.classes_tag,
         RunParams { seed: 5, ..Default::default() },
-        8,
+        // Default config: 8 probe rounds, winner warm-started from its
+        // probe state (set `warm_start: false` to re-run it from scratch).
+        ArchSelectConfig::default(),
     )?;
 
     let mut t = Table::new(

@@ -1,8 +1,8 @@
-//! End-to-end validation driver (DESIGN.md §End-to-end): run the complete
+//! End-to-end validation driver (docs/DESIGN.md §End-to-end): run the complete
 //! MCAL pipeline — synthetic Fashion-MNIST workload at full 70k scale,
 //! automatic architecture selection across {cnn18, res18, res50}, Amazon
 //! pricing — and report the paper's headline metric (total labeling cost
-//! vs human-only, Table 1 row 1). Recorded in EXPERIMENTS.md §E2E.
+//! vs human-only, Table 1 row 1). Recorded in docs/DESIGN.md §End-to-end.
 //!
 //! ```bash
 //! cargo run --release --offline --example label_fashion_e2e
@@ -12,7 +12,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
-use mcal::coordinator::{run_with_arch_selection, LabelingDriver, RunParams};
+use mcal::coordinator::{run_with_arch_selection, ArchSelectConfig, LabelingDriver, RunParams};
 use mcal::dataset::preset;
 use mcal::report::Table;
 use mcal::runtime::{Engine, EnginePool, Manifest};
@@ -51,7 +51,7 @@ fn main() -> mcal::Result<()> {
         &p.candidate_archs,
         p.classes_tag,
         RunParams { seed: 42, ..Default::default() },
-        8,
+        ArchSelectConfig::default(),
     )?;
 
     println!("\n== architecture probe phase ==");
@@ -66,6 +66,12 @@ fn main() -> mcal::Result<()> {
     }
 
     println!("\n== final labeling run ==");
+    if let Some(ws) = &report.warm_start {
+        println!(
+            "  warm-started from the winning probe: resumed at round {}, {} labels re-bought, ${:.2} probe training inherited",
+            ws.rounds_skipped, ws.labels_rebought, ws.training_saved
+        );
+    }
     println!("{}", report.summary());
     for it in &report.iterations {
         println!(

@@ -44,7 +44,7 @@ from .kernels import kcenter
 # (model_name, arch, classes) — every combination an experiment needs.
 # C=10  : fashion-syn + cifar10-syn      (paper: Fashion-MNIST / CIFAR-10)
 # C=100 : cifar100-syn                   (paper: CIFAR-100)
-# C=300 : imagenet-syn                   (paper: ImageNet, scaled — DESIGN.md)
+# C=300 : imagenet-syn                   (paper: ImageNet, scaled — docs/DESIGN.md §Substitutions)
 MODEL_SETS = [
     ("cnn18_c10", "cnn18", 10),
     ("res18_c10", "res18", 10),

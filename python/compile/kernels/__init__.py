@@ -11,7 +11,7 @@ kernel so that the L2 jax entry points lower them into the same HLO module:
 - :mod:`.kcenter` — blocked min-distance update for k-center (core-set)
   sample selection (Sener & Savarese baseline in Fig. 5/6/11).
 
-All kernels run with ``interpret=True`` (see DESIGN.md §Hardware-adaptation):
+All kernels run with ``interpret=True`` (see docs/DESIGN.md §Hardware-adaptation):
 they lower to plain HLO executable on the CPU PJRT plugin; real-TPU tiling
 is expressed through the BlockSpecs and documented VMEM/MXU estimates.
 """

@@ -10,7 +10,7 @@ Pallas matmul kernel and exposes a ``jax.custom_vjp`` so the L2 training graph
               dw = x^T @ g                 (same tiled kernel)
               db = sum_rows(g)
 
-TPU mapping (DESIGN.md §Hardware-adaptation): the grid is (M/bm, N/bn); each
+TPU mapping (docs/DESIGN.md §Hardware-adaptation): the grid is (M/bm, N/bn); each
 grid step keeps an (bm, K) x-tile, a (K, bn) w-tile, and an (bm, bn) output
 tile resident in VMEM and issues bm×bn×K MACs to the MXU. K (feature /
 hidden width, ≤ 512 in our architectures) is kept whole so no K-loop /

@@ -2,7 +2,7 @@
 
 The paper trains CNN18 / ResNet18 / ResNet50 (and EfficientNet-B0 for
 ImageNet) on image pixels. Our substrate operates on 64-d feature vectors
-(see DESIGN.md §Substitutions) and uses MLP *analogs* that preserve the two
+(see docs/DESIGN.md §Substitutions) and uses MLP *analogs* that preserve the two
 orderings MCAL's optimizer actually consumes: achievable accuracy
 (res50 > res18 > cnn18) and training cost per sample (res50 > res18 > cnn18).
 

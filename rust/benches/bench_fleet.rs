@@ -20,7 +20,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
-use mcal::coordinator::{run_with_arch_selection, LabelingDriver, RunParams};
+use mcal::coordinator::{run_with_arch_selection, ArchSelectConfig, LabelingDriver, RunParams};
 use mcal::dataset::preset;
 use mcal::experiments::common::{Ctx, Scale};
 use mcal::experiments::{fleet, table2};
@@ -90,7 +90,7 @@ fn bench_probe_phase() {
             &p.candidate_archs,
             p.classes_tag,
             RunParams { seed: 1, ..Default::default() },
-            1,
+            ArchSelectConfig { probe_iters: 1, ..Default::default() },
         )
         .unwrap();
     }
@@ -111,7 +111,7 @@ fn bench_probe_phase() {
             &p.candidate_archs,
             p.classes_tag,
             RunParams { seed: 77, ..Default::default() },
-            6,
+            ArchSelectConfig { probe_iters: 6, ..Default::default() },
         )
         .unwrap();
         let wall = t0.elapsed().as_secs_f64();

@@ -1,7 +1,7 @@
 //! Hot-path microbenchmarks (hand-rolled harness — criterion is not in the
-//! offline vendor set). This is the §Perf instrument: it measures each
-//! layer of the stack in isolation so the optimization log in
-//! EXPERIMENTS.md §Perf has stable numbers.
+//! offline vendor set): each layer of the stack measured in isolation, so
+//! perf work on the runtime (docs/ARCHITECTURE.md, Layer 2) has stable
+//! numbers to diff against.
 //!
 //! Run: `cargo bench --offline` (or `--bench bench_hotpath`).
 

@@ -44,10 +44,14 @@
 //! per ingest chunk) whose labels resolve while the machine-label
 //! evaluation runs, gated only where the report's groundtruth walk
 //! reaches a slot that has not landed (see
-//! [`crate::coordinator::LabelingEnv::buy_streamed`]). The only hard
-//! barrier is where Alg. 1 semantically needs the complete batch: the
-//! ε_T(S^θ) measurement, which runs after [`IngestHandle::drain`] has
-//! committed the whole order.
+//! [`crate::coordinator::LabelingEnv::buy_streamed`]). So does the
+//! warm-start re-buy: a resumed run re-purchases its snapshot's T ∪ B as
+//! one streamed purchase submitted before the model session even
+//! compiles, gating at the first settle
+//! ([`crate::coordinator::LabelingEnv::resume`]). The only hard barrier
+//! is where Alg. 1 semantically needs the complete batch: the ε_T(S^θ)
+//! measurement, which runs after [`IngestHandle::drain`] has committed
+//! the whole order.
 
 #![deny(missing_docs)]
 
@@ -342,7 +346,11 @@ impl IngestHandle {
 ///   prefix is empty and the pending orders are the residual purchase,
 ///   split into one order per ingest chunk — the machine-label evaluation
 ///   runs while the residual resolves, and the report's groundtruth walk
-///   gates only on slots whose label has not landed yet.
+///   gates only on slots whose label has not landed yet;
+/// - **warm-start resume** ([`crate::coordinator::LabelingEnv::resume`]):
+///   the prefix is empty and the pending orders re-buy the snapshot's
+///   T ∪ B — submitted before the model session compiles, drained at the
+///   resumed run's first settle.
 ///
 /// Determinism contract: [`get`](Self::get) blocks (wall-clock only) until
 /// the slot's label is committed; the value returned for a slot is a pure

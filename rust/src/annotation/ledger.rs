@@ -25,8 +25,12 @@ use std::sync::Mutex;
 /// [`crate::coordinator::RunReport::orders`].
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct OrderRecord {
-    /// Order id (sequential within a run; see
-    /// [`super::ingest::LabelOrder::id`]).
+    /// Order id (see [`super::ingest::LabelOrder::id`]): sequential
+    /// within a run, except the warm-start re-buy, whose orders id from
+    /// the reserved top-half space
+    /// ([`crate::coordinator::state::WARM_ORDER_BASE`]) so the resumed
+    /// loop's sequential ids stay invariant to how the re-buy was
+    /// chunked.
     pub id: u64,
     /// Labels the order purchased.
     pub labels: u64,

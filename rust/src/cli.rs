@@ -60,6 +60,30 @@ impl Args {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// Paired on/off boolean flags: `--<name>` forces true, `--no-<name>`
+    /// forces false, absent means `default`. Giving both is an error —
+    /// silently letting one win would hide a typo in a long command line.
+    /// So is giving either a *value* (`--<name> false`, `--<name>=0`):
+    /// the greedy parser stores that as an option, and quietly falling
+    /// back to the default would invert what the user asked for.
+    pub fn on_off(&self, name: &str, default: bool) -> Result<bool> {
+        let no_name = format!("no-{name}");
+        if self.opt(name).is_some() || self.opt(&no_name).is_some() {
+            return Err(Error::Config(format!(
+                "--{name} is an on/off flag and takes no value \
+                 (say --{name} or --{no_name})"
+            )));
+        }
+        match (self.flag(name), self.flag(&no_name)) {
+            (true, true) => Err(Error::Config(format!(
+                "--{name} and --{no_name} are mutually exclusive"
+            ))),
+            (true, false) => Ok(true),
+            (false, true) => Ok(false),
+            (false, false) => Ok(default),
+        }
+    }
+
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.opt(key) {
             None => Ok(default),
@@ -173,6 +197,25 @@ mod tests {
         assert!(parse("run x --ingest-latency soon")
             .duration_ms_or("ingest-latency", 0.0)
             .is_err());
+    }
+
+    #[test]
+    fn on_off_flag_pairs() {
+        assert!(parse("run x").on_off("warm-start", true).unwrap());
+        assert!(!parse("run x").on_off("warm-start", false).unwrap());
+        assert!(parse("run x --warm-start").on_off("warm-start", false).unwrap());
+        assert!(!parse("run x --no-warm-start").on_off("warm-start", true).unwrap());
+        assert!(parse("run x --warm-start --no-warm-start")
+            .on_off("warm-start", true)
+            .is_err());
+        // Value forms must error, not silently fall back to the default:
+        // the greedy parser captures them as options, not flags.
+        assert!(parse("run x --warm-start false").on_off("warm-start", true).is_err());
+        assert!(parse("run x --warm-start=0").on_off("warm-start", true).is_err());
+        assert!(parse("run x --no-warm-start yes").on_off("warm-start", true).is_err());
+        // A flag just before a positional is the same trap: the
+        // positional is eaten as the value, so it must error too.
+        assert!(parse("run --warm-start fashion-syn").on_off("warm-start", true).is_err());
     }
 
     #[test]

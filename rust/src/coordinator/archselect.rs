@@ -6,8 +6,15 @@
 //! The candidate with the lowest stabilized C* wins and runs the full MCAL
 //! loop on the real ledger; the losers' probe *training* spend is charged
 //! to the real ledger as exploration tax. Probe-phase human labels are not
-//! double-charged: with a shared acquisition stream the winning run re-buys
-//! the same labels (see DESIGN.md §Algorithm-notes).
+//! double-charged: the winner re-buys its probe's exact label set on the
+//! real service — by default as a warm start
+//! ([`ArchSelectConfig::warm_start`]): the winning probe's state is
+//! captured as a [`ProbeState`] and the real run *resumes* from it
+//! (weights, PRNG cursors and fit history restored; T ∪ B re-bought as
+//! one streamed purchase) instead of replaying the probe from scratch —
+//! which would re-pay the probe's training spend, exactly the
+//! classifier-cost waste the paper minimizes (see docs/DESIGN.md
+//! §Algorithm-notes).
 //!
 //! The probe itself is a [`Policy`] ([`ProbePolicy`]) driven by the shared
 //! [`LabelingDriver`] loop, like every other mode in this crate.
@@ -32,8 +39,32 @@ use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
 use super::events::{RunReport, StopReason};
-use super::mcal::run_mcal;
+use super::mcal::{run_mcal, run_mcal_warm};
 use super::policy::{Decision, LabelingDriver, Policy};
+use super::state::ProbeState;
+
+/// Knobs for [`run_with_arch_selection`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArchSelectConfig {
+    /// Maximum probe acquisitions per candidate (the paper probes a
+    /// handful of rounds; the probe also self-bounds on C* stability and
+    /// the exploration-tax allowance).
+    pub probe_iters: usize,
+    /// Warm-start the winner from its probe's captured [`ProbeState`]
+    /// (the default): the real run resumes the probe — weights, PRNG
+    /// streams and fit history inherited, T ∪ B re-bought as one streamed
+    /// purchase — reporting the saved double-pay as
+    /// [`RunReport::warm_start`]. `false` restores the pre-warm-start
+    /// behavior: the winner re-runs the full MCAL loop from scratch under
+    /// the sweep's base seed (`--no-warm-start` on the CLI).
+    pub warm_start: bool,
+}
+
+impl Default for ArchSelectConfig {
+    fn default() -> Self {
+        ArchSelectConfig { probe_iters: 8, warm_start: true }
+    }
+}
 
 /// Result of one candidate's probe phase.
 #[derive(Clone, Debug)]
@@ -69,6 +100,9 @@ impl ProbeResult {
 struct ProbePolicy {
     price: f64,
     probe_iters: usize,
+    /// Capture the probe's final state as a [`ProbeState`] (set when the
+    /// selection phase will warm-start its winner).
+    capture: bool,
     /// Acquisitions completed so far.
     acquisitions: usize,
     c_old: Option<f64>,
@@ -76,13 +110,13 @@ struct ProbePolicy {
 }
 
 impl ProbePolicy {
-    fn new(price: f64, probe_iters: usize) -> Self {
-        ProbePolicy { price, probe_iters, acquisitions: 0, c_old: None, last: None }
+    fn new(price: f64, probe_iters: usize, capture: bool) -> Self {
+        ProbePolicy { price, probe_iters, capture, acquisitions: 0, c_old: None, last: None }
     }
 }
 
 impl Policy for ProbePolicy {
-    type Output = ProbeResult;
+    type Output = (ProbeResult, Option<ProbeState>);
 
     fn plan(&mut self, env: &mut LabelingEnv<'_>, _profile: &[f64]) -> Result<Decision> {
         let delta = ((env.params.init_frac * env.x_total() as f64).round() as usize).max(1);
@@ -138,21 +172,32 @@ impl Policy for ProbePolicy {
     }
 
     /// Probes never buy a residual (their shadow purchases are re-bought
-    /// by the winner's real run, whose `finish_run` streams it), so this
-    /// finalize only snapshots the probe's estimate.
+    /// by the winner's real run — in one go at warm-start resume, or
+    /// implicitly by a from-scratch re-run), so this finalize only
+    /// snapshots the probe's estimate, plus — when the selection phase
+    /// will warm-start — the probe's full [`ProbeState`].
     fn finalize(
         self,
-        env: LabelingEnv<'_>,
+        mut env: LabelingEnv<'_>,
         _stop: StopReason,
         _t0: Instant,
-    ) -> Result<ProbeResult> {
-        Ok(ProbeResult {
+    ) -> Result<(ProbeResult, Option<ProbeState>)> {
+        let state = if self.capture {
+            Some(ProbeState {
+                run: env.snapshot(self.acquisitions)?,
+                shadow_orders: env.ledger.order_log(),
+            })
+        } else {
+            None
+        };
+        let result = ProbeResult {
             arch: env.arch,
             c_star: self.last.map(|(c, _)| c),
             b_probed: env.b_idx.len(),
             training_spend: env.training_spend,
             stable: self.last.map(|(_, s)| s).unwrap_or(false),
-        })
+        };
+        Ok((result, state))
     }
 }
 
@@ -171,7 +216,8 @@ fn probe(
     classes_tag: &str,
     params: &RunParams,
     probe_iters: usize,
-) -> Result<ProbeResult> {
+    capture: bool,
+) -> Result<(ProbeResult, Option<ProbeState>)> {
     let shadow_ledger = Arc::new(Ledger::new());
     let shadow_service = SimService::new(
         SimServiceConfig {
@@ -188,15 +234,43 @@ fn probe(
         arch,
         classes_tag,
         params.clone(),
-        ProbePolicy::new(price, probe_iters),
+        ProbePolicy::new(price, probe_iters, capture),
     )
 }
 
+/// NaN-safe winner selection: the lowest *stabilized* C* wins; unstable
+/// estimates only compete when no candidate stabilized; the
+/// cheapest-to-train architecture is the fallback when no candidate
+/// produced a viable estimate at all. A NaN C* (a degenerate fit) is
+/// treated as "no viable estimate" rather than fed to the comparator —
+/// and the comparator itself is [`f64::total_cmp`], so selection can
+/// never panic however the probe math went.
+fn pick_winner(probes: &[ProbeResult], candidates: &[ArchKind]) -> ArchKind {
+    let pick = |pool: Vec<&ProbeResult>| -> Option<ArchKind> {
+        pool.into_iter()
+            .filter(|p| p.c_star.is_some_and(|c| !c.is_nan()))
+            .min_by(|a, b| a.c_star.unwrap().total_cmp(&b.c_star.unwrap()))
+            .map(|p| p.arch)
+    };
+    pick(probes.iter().filter(|p| p.stable).collect())
+        .or_else(|| pick(probes.iter().collect()))
+        .unwrap_or_else(|| {
+            *candidates
+                .iter()
+                .max_by(|a, b| a.rig_throughput().total_cmp(&b.rig_throughput()))
+                .unwrap()
+        })
+}
+
 /// Run MCAL with architecture selection: probe every candidate, commit to
-/// the cheapest, charge losers' probe training as exploration. With a
-/// pool on `driver`, candidate probes run concurrently (and the winner's
-/// run shards its measurements over the same pool); without one they run
-/// serially on `driver.engine`. Both paths are bit-identical.
+/// the cheapest, charge losers' probe training as exploration, and (by
+/// default — [`ArchSelectConfig::warm_start`]) *resume* the winner from
+/// its probe's captured state instead of re-running it from scratch. With
+/// a pool on `driver`, candidate probes run concurrently (and the
+/// winner's run shards its measurements over the same pool); without one
+/// they run serially on `driver.engine`. Both paths are bit-identical for
+/// any `--jobs` and any ingest config (`tests/pool_parallel.rs`,
+/// `tests/warmstart.rs`).
 pub fn run_with_arch_selection(
     driver: &LabelingDriver<'_>,
     ds: &Dataset,
@@ -205,7 +279,7 @@ pub fn run_with_arch_selection(
     candidates: &[ArchKind],
     classes_tag: &str,
     params: RunParams,
-    probe_iters: usize,
+    cfg: ArchSelectConfig,
 ) -> Result<(RunReport, Vec<ProbeResult>)> {
     assert!(!candidates.is_empty());
     if candidates.len() == 1 {
@@ -226,9 +300,9 @@ pub fn run_with_arch_selection(
         let mut p = params.clone();
         p.seed = task_seed(params.seed, arch as u64);
         let lane_driver = LabelingDriver::new(engine, manifest).with_pool(inner);
-        probe(&lane_driver, ds, price, arch, classes_tag, &p, probe_iters)
+        probe(&lane_driver, ds, price, arch, classes_tag, &p, cfg.probe_iters, cfg.warm_start)
     };
-    let probes: Vec<ProbeResult> = match driver.pool {
+    let mut probed: Vec<(ProbeResult, Option<ProbeState>)> = match driver.pool {
         Some(pool) => {
             pool.map(driver.engine, candidates, |&arch, scope| {
                 probe_one(arch, scope.engine, scope.inner)
@@ -239,26 +313,9 @@ pub fn run_with_arch_selection(
             .map(|&arch| probe_one(arch, driver.engine, None))
             .collect::<Result<_>>()?,
     };
+    let probes: Vec<ProbeResult> = probed.iter().map(|(r, _)| r.clone()).collect();
 
-    // Winner: lowest *stabilized* C* (unstable estimates only compete when
-    // no candidate stabilized); fall back to the cheapest-to-train arch
-    // when no candidate produced a viable estimate at all.
-    let pick = |pool: Vec<&ProbeResult>| -> Option<ArchKind> {
-        pool.into_iter()
-            .filter(|p| p.c_star.is_some())
-            .min_by(|a, b| a.c_star.unwrap().partial_cmp(&b.c_star.unwrap()).unwrap())
-            .map(|p| p.arch)
-    };
-    let winner = pick(probes.iter().filter(|p| p.stable).collect())
-        .or_else(|| pick(probes.iter().collect()))
-        .unwrap_or_else(|| {
-            *candidates
-                .iter()
-                .max_by(|a, b| {
-                    a.rig_throughput().partial_cmp(&b.rig_throughput()).unwrap()
-                })
-                .unwrap()
-        });
+    let winner = pick_winner(&probes, candidates);
 
     // Losers' probe training is sunk exploration cost on the real ledger.
     let exploration: f64 = probes
@@ -276,6 +333,72 @@ pub fn run_with_arch_selection(
     // nested engines idle through this phase. Fine while probes dominate
     // wall-clock — revisit (reshape the pool between phases) if winner
     // runs ever grow to dominate.
-    let report = run_mcal(driver, ds, service, ledger, winner, classes_tag, params)?;
+    let winner_state = probed
+        .iter_mut()
+        .find(|(r, _)| r.arch == winner)
+        .and_then(|(_, s)| s.take());
+    let report = match winner_state {
+        // Warm start: resume the winning probe — its state carries the
+        // probe's own seed stream, so the real run continues the probe's
+        // trajectory (lane-invariant: the seed derives from the arch id).
+        Some(ps) => run_mcal_warm(driver, ds, service, ledger, classes_tag, params, ps.run)?,
+        None => run_mcal(driver, ds, service, ledger, winner, classes_tag, params)?,
+    };
     Ok((report, probes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe_of(arch: ArchKind, c_star: Option<f64>, stable: bool) -> ProbeResult {
+        ProbeResult { arch, c_star, b_probed: 10, training_spend: 1.0, stable }
+    }
+
+    /// The regression the NaN-safe pick fixes: a probe whose degenerate
+    /// fits produced a NaN C* used to panic the `partial_cmp(..).unwrap()`
+    /// comparator; now it is excluded as "no viable estimate".
+    #[test]
+    fn pick_winner_survives_nan_estimates() {
+        let candidates = [ArchKind::Cnn18, ArchKind::Res18, ArchKind::Res50];
+        let probes = vec![
+            probe_of(ArchKind::Cnn18, Some(f64::NAN), true),
+            probe_of(ArchKind::Res18, Some(20.0), true),
+            probe_of(ArchKind::Res50, Some(10.0), false),
+        ];
+        // The NaN probe is stable but non-viable: the finite stable
+        // estimate wins (not the lower-but-unstable one).
+        assert_eq!(pick_winner(&probes, &candidates), ArchKind::Res18);
+
+        // All estimates NaN → fall through to the cheapest-to-train arch,
+        // without panicking.
+        let all_nan: Vec<ProbeResult> = candidates
+            .iter()
+            .map(|&a| probe_of(a, Some(f64::NAN), true))
+            .collect();
+        assert_eq!(pick_winner(&all_nan, &candidates), ArchKind::Cnn18);
+    }
+
+    #[test]
+    fn pick_winner_prefers_stable_then_lowest() {
+        let candidates = [ArchKind::Cnn18, ArchKind::Res18];
+        // Unstable-but-lower loses to stable-but-higher …
+        let probes = vec![
+            probe_of(ArchKind::Cnn18, Some(5.0), false),
+            probe_of(ArchKind::Res18, Some(8.0), true),
+        ];
+        assert_eq!(pick_winner(&probes, &candidates), ArchKind::Res18);
+        // … but competes when nothing stabilized.
+        let none_stable = vec![
+            probe_of(ArchKind::Cnn18, Some(5.0), false),
+            probe_of(ArchKind::Res18, Some(8.0), false),
+        ];
+        assert_eq!(pick_winner(&none_stable, &candidates), ArchKind::Cnn18);
+        // No estimates at all → cheapest to train.
+        let no_estimates = vec![
+            probe_of(ArchKind::Cnn18, None, false),
+            probe_of(ArchKind::Res18, None, false),
+        ];
+        assert_eq!(pick_winner(&no_estimates, &candidates), ArchKind::Cnn18);
+    }
 }

@@ -13,11 +13,19 @@
 //! largest) purchase streams too: [`LabelingEnv::buy_streamed`] submits
 //! the residual as one order per ingest chunk and the report evaluation
 //! proceeds over the committed prefix while the orders resolve.
+//! A run is also a *resumable value*: [`LabelingEnv::snapshot`] captures
+//! it as a [`super::state::RunState`] (acquired set, bit-exact session
+//! state, PRNG cursors, fit history) and [`LabelingEnv::resume`] rebuilds
+//! it on a fresh service/ledger, re-buying the captured human-label set
+//! as one streamed purchase — the warm-start seam arch selection uses to
+//! spare the winner from replaying its own probe.
+//!
 //! Determinism contract: the committed label set, iteration records, and
 //! ledger totals are bit-identical for any ingestion chunk size,
 //! simulated latency, or `--jobs` value — streaming and sharding change
 //! wall-clock, never results (pinned by `tests/ingest_stream.rs`,
-//! `tests/finalize_stream.rs` and `tests/pool_parallel.rs`).
+//! `tests/finalize_stream.rs`, `tests/pool_parallel.rs` and, for
+//! snapshot/resume, `tests/warmstart.rs`).
 
 use std::sync::Arc;
 
@@ -30,6 +38,9 @@ use crate::prng::Pcg32;
 use crate::runtime::{ChunkScorer, Engine, EnginePool, Manifest, ModelSession, Scores};
 use crate::sampling::{self, Metric};
 use crate::{Error, Result};
+
+use super::events::WarmStartReport;
+use super::state::{RunState, WARM_ORDER_BASE};
 
 /// Knobs shared by every run type (paper defaults in `Default`).
 #[derive(Clone, Debug)]
@@ -117,8 +128,20 @@ pub struct LabelingEnv<'e> {
     pub pool: Vec<usize>,
     /// In-flight acquisition order (labels streaming in), if any.
     pending: Option<IngestHandle>,
-    /// Next acquisition-order id (0 = T, 1 = B₀, 2.. = iterations).
+    /// The warm-start re-buy (T ∪ B labels re-purchased on the real
+    /// service) still streaming in, if this run was resumed from a
+    /// [`RunState`]. Drained by [`LabelingEnv::settle`] into
+    /// `test_labels`/`b_labels`.
+    warm_pending: Option<GatedLabels<'static>>,
+    /// Next acquisition-order id (0 = T, 1 = B₀, 2.. = iterations; a
+    /// resumed run continues the captured run's counter, and its re-buy
+    /// ids from the reserved [`WARM_ORDER_BASE`] space instead).
     order_counter: u64,
+    /// Warm-start provenance when this run was resumed from a
+    /// [`RunState`] (surfaced as
+    /// [`crate::coordinator::RunReport::warm_start`]); `None` on cold
+    /// runs.
+    pub warm_start: Option<WarmStartReport>,
 
     /// Observed (|B|, retrain dollars) pairs → fitted cost model.
     pub cost_obs: Vec<(f64, f64)>,
@@ -148,6 +171,39 @@ fn place_order(
     let handle = service.submit(ds, LabelOrder::new(id, indices, run_seed))?;
     ledger.record_order(id, n as u64, n as f64 * service.price_per_label());
     Ok(handle)
+}
+
+/// Submit `indices` as one streamed purchase: a *sequence* of in-flight
+/// orders — one per ingest chunk ([`AnnotationService::ingest_chunk`];
+/// `0` = a single order) — with ids drawn from `next_id`, each charged
+/// (and logged) at submission in program order. Returns the
+/// [`GatedLabels`] view the labels stream through. An empty purchase
+/// places no order and has no side effects.
+///
+/// The shared submission path of [`LabelingEnv::buy_streamed`] (the
+/// finalize pass's residual, sequential ids) and the warm-start re-buy in
+/// [`LabelingEnv::resume`] (reserved [`WARM_ORDER_BASE`] ids).
+fn stream_orders(
+    service: &dyn AnnotationService,
+    ledger: &Ledger,
+    ds: &Dataset,
+    indices: &[usize],
+    run_seed: u64,
+    mut next_id: impl FnMut() -> u64,
+) -> Result<GatedLabels<'static>> {
+    let mut gated = GatedLabels::over(&[]);
+    if indices.is_empty() {
+        return Ok(gated);
+    }
+    let chunk = match service.ingest_chunk() {
+        0 => indices.len(),
+        c => c,
+    };
+    for slice in indices.chunks(chunk) {
+        let handle = place_order(service, ledger, ds, next_id(), slice.to_vec(), run_seed)?;
+        gated.push_order(handle);
+    }
+    Ok(gated)
 }
 
 impl<'e> LabelingEnv<'e> {
@@ -211,7 +267,9 @@ impl<'e> LabelingEnv<'e> {
             b_labels,
             pool,
             pending: None,
+            warm_pending: None,
             order_counter: 2,
+            warm_start: None,
             cost_obs: Vec::new(),
             profile_obs: Vec::new(),
             training_spend: 0.0,
@@ -220,6 +278,152 @@ impl<'e> LabelingEnv<'e> {
         env.profile_obs = profile_obs;
         env.retrain()?;
         Ok(env)
+    }
+
+    /// Capture this run as a resumable [`RunState`] snapshot: the
+    /// acquired set, the session's bit-exact state and PRNG cursors, the
+    /// ε_T / training-cost fit history, and the last measured profile.
+    /// Any in-flight purchase is settled first (the snapshot is taken at
+    /// a committed boundary). `rounds` records how many plan rounds the
+    /// captured run completed — the resume point's iteration offset.
+    ///
+    /// Errors before the first measure: a snapshot with no ε_T profile
+    /// has nothing for a resumed loop to plan from.
+    pub fn snapshot(&mut self, rounds: usize) -> Result<RunState> {
+        self.settle()?;
+        let last_profile = self
+            .profile_obs
+            .iter()
+            .map(|obs| {
+                obs.last().map(|&(_, e)| e).ok_or_else(|| {
+                    Error::Coordinator(
+                        "snapshot before the first measure — no ε_T profile to resume from"
+                            .into(),
+                    )
+                })
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        Ok(RunState {
+            arch: self.arch,
+            seed: self.params.seed,
+            rounds,
+            test_idx: self.test_idx.clone(),
+            b_idx: self.b_idx.clone(),
+            pool: self.pool.clone(),
+            session_state: self.session.state_host()?,
+            session_rng: self.session.rng_snapshot(),
+            steps_executed: self.session.steps_executed,
+            real_samples_trained: self.session.real_samples_trained,
+            rng: self.rng.clone(),
+            theta_grid: self.theta_grid.clone(),
+            cost_obs: self.cost_obs.clone(),
+            profile_obs: self.profile_obs.clone(),
+            last_profile,
+            training_spend: self.training_spend,
+            retrain_counter: self.retrain_counter,
+            order_counter: self.order_counter,
+        })
+    }
+
+    /// Rebuild a run from a [`RunState`] snapshot, on a fresh service and
+    /// ledger — the warm-start path.
+    ///
+    /// The captured run's human-labeled set (T then B) is re-bought on
+    /// `service` as **one streamed purchase** — submitted *before* the
+    /// model session below compiles, so the annotator fleet resolves it
+    /// while the engine warms up; the first [`LabelingEnv::settle`]
+    /// (reached via the first `acquire` or `measure`) is the gate. The
+    /// purchase is charged on `ledger` at submission like any other, its
+    /// orders id'd from the reserved [`WARM_ORDER_BASE`] space so the
+    /// resumed loop's own counter continues the captured sequence
+    /// unchanged for any `--ingest-chunk`. Training is *not* re-paid: the
+    /// session restores the captured weights bit-exactly, and the
+    /// captured training spend is inherited (it counts against this run's
+    /// exploration-tax allowance but is not re-charged — re-paying it is
+    /// precisely the cold-restart waste this path removes).
+    ///
+    /// `params.seed` is overridden by the snapshot's seed: a resume
+    /// *continues* the captured run's PRNG streams.
+    pub fn resume(
+        engine: &'e Engine,
+        manifest: &'e Manifest,
+        ds: &'e Dataset,
+        service: &'e dyn AnnotationService,
+        ledger: Arc<Ledger>,
+        classes_tag: &str,
+        mut params: RunParams,
+        state: RunState,
+    ) -> Result<Self> {
+        // Every cheap check runs BEFORE the re-buy is submitted: a
+        // purchase charges the real ledger at submission, so a resume
+        // that was never going to work must fail with no side effects
+        // (the same no-side-effects rule failed submits follow). Only
+        // environmental failures below (artifact IO, compilation) can
+        // still interrupt an already-charged resume — the same exposure
+        // any mid-purchase failure has.
+        state.validate(ds)?;
+        let model_name = state.arch.model_set(classes_tag);
+        let meta = manifest.model(&model_name)?;
+        if meta.classes != ds.num_classes {
+            return Err(Error::Coordinator(format!(
+                "model {model_name} has {} classes but dataset {} has {}",
+                meta.classes, ds.name, ds.num_classes
+            )));
+        }
+        if state.session_state.len() != 2 * meta.params {
+            return Err(Error::Coordinator(format!(
+                "run state carries {} floats of session state but model {model_name} \
+                 expects {} (2 × {} params)",
+                state.session_state.len(),
+                2 * meta.params,
+                meta.params
+            )));
+        }
+        params.seed = state.seed;
+        // Submit the re-buy before touching the engine: labels stream in
+        // while the session compiles and restores below.
+        let rebuy: Vec<usize> = state.test_idx.iter().chain(&state.b_idx).copied().collect();
+        let mut warm_ids = 0u64;
+        let gated = stream_orders(service, &ledger, ds, &rebuy, params.seed, || {
+            let id = WARM_ORDER_BASE | warm_ids;
+            warm_ids += 1;
+            id
+        })?;
+        let mut session = ModelSession::open(engine, manifest, &model_name, params.seed)?;
+        session.restore(&state.session_state, state.session_rng)?;
+        session.steps_executed = state.steps_executed;
+        session.real_samples_trained = state.real_samples_trained;
+        let warm = WarmStartReport {
+            rounds_skipped: state.rounds,
+            labels_rebought: rebuy.len(),
+            training_saved: state.training_spend,
+        };
+        Ok(LabelingEnv {
+            ds,
+            service,
+            ledger,
+            params,
+            arch: state.arch,
+            session,
+            engine,
+            manifest,
+            engine_pool: None,
+            rng: state.rng,
+            theta_grid: state.theta_grid,
+            test_idx: state.test_idx,
+            test_labels: Vec::new(),
+            b_idx: state.b_idx,
+            b_labels: Vec::new(),
+            pool: state.pool,
+            pending: None,
+            warm_pending: Some(gated),
+            order_counter: state.order_counter,
+            warm_start: Some(warm),
+            cost_obs: state.cost_obs,
+            profile_obs: state.profile_obs,
+            training_spend: state.training_spend,
+            retrain_counter: state.retrain_counter,
+        })
     }
 
     pub fn x_total(&self) -> usize {
@@ -249,10 +453,21 @@ impl<'e> LabelingEnv<'e> {
         Ok(())
     }
 
-    /// Commit any in-flight acquisition order: block until its labels have
-    /// all arrived and append them to `b_labels`. Idempotent; wall-clock
-    /// only (the committed labels do not depend on when this runs).
+    /// Commit any in-flight purchase: block until the warm-start re-buy
+    /// (if this run was resumed) and any pending acquisition order have
+    /// fully arrived, and append their labels to
+    /// `test_labels`/`b_labels`. Idempotent; wall-clock only (the
+    /// committed labels do not depend on when this runs).
     pub fn settle(&mut self) -> Result<()> {
+        if let Some(warm) = self.warm_pending.take() {
+            // The re-buy covers T then B, in that order (see
+            // `LabelingEnv::resume`).
+            let labels = warm.finish()?;
+            let (t, b) = labels.split_at(self.test_idx.len());
+            debug_assert!(self.test_labels.is_empty() && self.b_labels.is_empty());
+            self.test_labels.extend_from_slice(t);
+            self.b_labels.extend_from_slice(b);
+        }
         if let Some(handle) = self.pending.take() {
             let labels = handle.drain()?;
             self.b_labels.extend_from_slice(&labels);
@@ -339,23 +554,13 @@ impl<'e> LabelingEnv<'e> {
     /// bit-identical however many orders carry the purchase. An empty
     /// purchase places no order and has no side effects.
     pub fn buy_streamed(&mut self, indices: &[usize]) -> Result<GatedLabels<'static>> {
-        let mut gated = GatedLabels::over(&[]);
-        if indices.is_empty() {
-            return Ok(gated);
-        }
-        let chunk = match self.service.ingest_chunk() {
-            0 => indices.len(),
-            c => c,
-        };
         let seed = self.params.seed;
-        for slice in indices.chunks(chunk) {
-            let id = self.order_counter;
-            self.order_counter += 1;
-            let handle =
-                place_order(self.service, &self.ledger, self.ds, id, slice.to_vec(), seed)?;
-            gated.push_order(handle);
-        }
-        Ok(gated)
+        let ctr = &mut self.order_counter;
+        stream_orders(self.service, &self.ledger, self.ds, indices, seed, || {
+            let id = *ctr;
+            *ctr += 1;
+            id
+        })
     }
 
     /// Retrain from scratch on the current B; charges the simulated rig
@@ -469,15 +674,19 @@ impl<'e> LabelingEnv<'e> {
     /// the observations for the power-law fits. Returns the profile.
     ///
     /// This is the streaming barrier: Alg. 1 reads ε_T for the *full*
-    /// batch S^θ, so any still-pending acquisition order is committed
-    /// first (normally a no-op — [`LabelingEnv::retrain`] already
-    /// consumed the order while training).
+    /// batch S^θ, so any still-pending purchase is committed before the
+    /// profile is read (normally a no-op — [`LabelingEnv::retrain`]
+    /// already consumed the acquisition order while training). Scoring
+    /// runs *before* the barrier: prediction needs no labels, so on a
+    /// warm-started run the re-bought T labels keep streaming in while
+    /// the test set is scored — ordering that, like every other overlap
+    /// here, moves wall-clock only, never a result bit.
     pub fn measure(&mut self) -> Result<Vec<f64>> {
-        self.settle()?;
         let test_idx = std::mem::take(&mut self.test_idx);
         let scores = self.predict_indices(&test_idx);
         self.test_idx = test_idx;
         let scores = scores?;
+        self.settle()?;
         let correct: Vec<bool> = scores
             .pred
             .iter()

@@ -57,6 +57,28 @@ pub enum StopReason {
     BudgetExhausted,
 }
 
+/// Provenance of a warm-started run: what the resume inherited from the
+/// winning arch-selection probe instead of re-buying and re-training it
+/// (see [`crate::coordinator::state`]). `None` on cold runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WarmStartReport {
+    /// Plan rounds the probe completed; the resumed loop's
+    /// [`IterationRecord::iter`] values continue from this offset.
+    pub rounds_skipped: usize,
+    /// Probe-acquired labels (|T| + |B| at resume) re-bought on the real
+    /// service as one streamed purchase. Its orders carry ids from the
+    /// reserved warm space ([`crate::coordinator::state::WARM_ORDER_BASE`])
+    /// and lead the order log; their *count* follows `--ingest-chunk`
+    /// (one order per chunk), their label/dollar totals never do.
+    pub labels_rebought: usize,
+    /// Probe training dollars the resume inherited instead of re-paying.
+    /// A cold restart re-trains from init through an equivalent
+    /// trajectory; this spend stays within the probe phase's
+    /// exploration-tax allowance and is not re-charged to the ledger,
+    /// but still counts against the resumed run's own tax allowance.
+    pub training_saved: f64,
+}
+
 /// Final outcome of one labeling run.
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -96,16 +118,26 @@ pub struct RunReport {
     pub human_only_cost: f64,
     pub stop_reason: StopReason,
     pub iterations: Vec<IterationRecord>,
-    /// Per-order purchase log (id, labels, dollars): order 0 is T, 1 is
-    /// B₀, then one order per acquisition, and finally the residual pass
-    /// as one order *per ingest chunk* (a monolithic service yields a
-    /// single trailing order; a chunked one yields
-    /// ⌈residual / chunk⌉ — the one documented place where the log's
-    /// *shape* follows the ingest config). Content per order is
-    /// deterministic, and every aggregate over the log (label total,
-    /// dollar total) is bit-identical across ingestion chunk sizes,
-    /// latencies, and `--jobs` values, like everything else here.
+    /// Per-order purchase log (id, labels, dollars). Cold runs: order 0
+    /// is T, 1 is B₀, then one order per acquisition, and finally the
+    /// residual pass as one order *per ingest chunk* (a monolithic
+    /// service yields a single trailing order; a chunked one yields
+    /// ⌈residual / chunk⌉). Warm-started runs instead *lead* with the
+    /// probe re-buy — one reserved-id order per chunk
+    /// ([`crate::coordinator::state::WARM_ORDER_BASE`]) — and then
+    /// continue the probe's sequential ids. Those two segments — the
+    /// warm prefix and the residual suffix — are the only places where
+    /// the log's *shape* follows the ingest config. Content per order is
+    /// deterministic, every aggregate over the log (label total, dollar
+    /// total) is bit-identical across ingestion chunk sizes, latencies,
+    /// and `--jobs` values, and every sequential id between the two
+    /// segments is chunk-invariant, like everything else here.
     pub orders: Vec<OrderRecord>,
+    /// Warm-start provenance: `Some` when this run was resumed from an
+    /// arch-selection probe's captured state (the default for auto-arch
+    /// runs; `--no-warm-start` re-runs the winner from scratch and leaves
+    /// this `None`, as do all single-arch runs).
+    pub warm_start: Option<WarmStartReport>,
     /// Wall-clock seconds of the whole run (simulation time, not rig time).
     pub wall_secs: f64,
 }
@@ -175,6 +207,7 @@ mod tests {
             stop_reason: StopReason::ReachedBOpt,
             iterations: vec![],
             orders: vec![],
+            warm_start: None,
             wall_secs: 1.0,
         }
     }

@@ -29,6 +29,7 @@ use crate::Result;
 use super::env::{LabelingEnv, RunParams};
 use super::events::{IterationRecord, RunReport, StopReason};
 use super::policy::{finish_run, machine_label_top, Decision, LabelingDriver, Policy};
+use super::state::RunState;
 
 /// Run MCAL for a single architecture on `driver`'s engine (and intra-run
 /// pool, if it carries one). See [`super::archselect`] for the
@@ -45,10 +46,35 @@ pub fn run_mcal(
     driver.run(ds, service, ledger, arch, classes_tag, params, McalPolicy::new())
 }
 
+/// Warm-start MCAL from a captured [`RunState`] — the arch-selection
+/// winner's path: the probe's acquired set is re-bought on `service` as
+/// one streamed purchase, the trained session is restored bit-exactly,
+/// and Alg. 1 resumes at the probe's iteration count with the probe's
+/// ε_T / cost fit history already in hand (see
+/// [`super::state`] and [`LabelingDriver::run_warm`]). The architecture
+/// and seed come from the snapshot; `params.seed` is overridden.
+pub fn run_mcal_warm(
+    driver: &LabelingDriver<'_>,
+    ds: &Dataset,
+    service: &dyn AnnotationService,
+    ledger: Arc<Ledger>,
+    classes_tag: &str,
+    params: RunParams,
+    state: RunState,
+) -> Result<RunReport> {
+    let policy = McalPolicy::resuming(state.rounds);
+    driver.run_warm(ds, service, ledger, classes_tag, params, state, policy)
+}
+
 /// Alg. 1 as a [`Policy`]: joint (B, θ) search, C*-stability tracking,
 /// δ adaptation, exploration tax, and the B_opt finalization pass.
 #[derive(Debug, Default)]
 pub struct McalPolicy {
+    /// Iteration offset of a resumed run (0 for cold runs): plan rounds
+    /// the captured probe already completed. Keeps `max_iters` and the
+    /// early-fit guards counting *total* rounds — probe rounds included,
+    /// since their fit observations ride along in the resumed env.
+    start_iter: usize,
     /// Current acquisition batch δ (δ₀ until the first adaptation).
     delta: usize,
     /// Last predicted C* (stability reference).
@@ -64,20 +90,29 @@ impl McalPolicy {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Alg. 1 resuming a run that already completed `start_iter` plan
+    /// rounds (a warm-started probe): iteration records continue from
+    /// that offset, and the C*-stability/δ-adaptation state rebuilds from
+    /// the fit history the resumed environment carries.
+    pub fn resuming(start_iter: usize) -> Self {
+        McalPolicy { start_iter, ..Self::default() }
+    }
 }
 
 impl Policy for McalPolicy {
     type Output = RunReport;
 
     fn plan(&mut self, env: &mut LabelingEnv<'_>, profile: &[f64]) -> Result<Decision> {
-        // One record per plan round; its length doubles as the iteration
-        // counter the pre-Policy loop kept.
-        let iter = self.records.len();
+        // One record per plan round; the record count (plus the resume
+        // offset of a warm-started run) doubles as the iteration counter
+        // the pre-Policy loop kept.
+        let iter = self.start_iter + self.records.len();
         if iter >= env.params.max_iters {
             return Ok(Decision::Stop(StopReason::MaxIters));
         }
         let delta0 = ((env.params.init_frac * env.x_total() as f64).round() as usize).max(1);
-        if iter == 0 {
+        if self.records.is_empty() {
             self.delta = delta0;
         }
         let delta = self.delta;
@@ -130,7 +165,8 @@ impl Policy for McalPolicy {
         // minimum number of fit points and minimum B growth before the
         // predictive termination paths may fire (Fig. 3: early-prefix fits
         // extrapolate poorly).
-        let explored_enough = self.records.len() >= 5 && env.b_idx.len() >= 3 * delta0.max(1);
+        let explored_enough =
+            self.start_iter + self.records.len() >= 5 && env.b_idx.len() >= 3 * delta0.max(1);
         // Exploration tax (§5.1 fn. 5): if we've sunk more than x% of the
         // all-human cost into training and the predicted optimum still
         // isn't (meaningfully) beating all-human labeling, cut losses and

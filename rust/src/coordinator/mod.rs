@@ -26,9 +26,16 @@
 //!   pool. Both are bit-identical to the serial/synchronous path for any
 //!   chunk size, latency, or `--jobs` (`tests/ingest_stream.rs`,
 //!   `tests/pool_parallel.rs`).
+//! - [`state`]: run state as a first-class value — [`state::RunState`]
+//!   snapshots a run (acquired set, bit-exact session weights, PRNG
+//!   cursors, fit history) and [`LabelingDriver::run_warm`] resumes it,
+//!   re-buying the captured labels as one streamed purchase. Arch
+//!   selection warm-starts its winner through this seam by default, so
+//!   the winner never re-pays its own probe.
 //! - [`events`]: per-iteration records and run reports (with per-run
-//!   provenance) consumed by the experiment drivers and the parallel
-//!   fleet ([`crate::experiments::fleet`]).
+//!   provenance, including warm-start provenance) consumed by the
+//!   experiment drivers and the parallel fleet
+//!   ([`crate::experiments::fleet`]).
 //!
 //! To add a new labeling strategy, implement [`Policy`] and hand it to
 //! [`LabelingDriver::run`] — the loop, environment and report plumbing are
@@ -41,11 +48,13 @@ pub mod env;
 pub mod events;
 pub mod mcal;
 pub mod policy;
+pub mod state;
 
 pub use albaseline::{run_al_trajectory, NaiveAlPolicy, PricedStop, TrajPoint, Trajectory};
-pub use archselect::{run_with_arch_selection, ProbeResult};
+pub use archselect::{run_with_arch_selection, ArchSelectConfig, ProbeResult};
 pub use budget::{run_budget, BudgetPolicy};
 pub use env::{LabelingEnv, RunParams};
-pub use events::{IterationRecord, RunReport, StopReason};
-pub use mcal::{run_mcal, McalPolicy};
+pub use events::{IterationRecord, RunReport, StopReason, WarmStartReport};
+pub use mcal::{run_mcal, run_mcal_warm, McalPolicy};
 pub use policy::{Decision, LabelingDriver, Policy};
+pub use state::{ProbeState, RunState};

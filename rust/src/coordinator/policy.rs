@@ -29,6 +29,13 @@
 //! monolithically or in latency-laden chunks, and produces bit-identical
 //! records either way.
 //!
+//! The loop can also *resume*: [`LabelingDriver::run_warm`] rebuilds an
+//! environment from a captured [`super::state::RunState`] (re-buying the
+//! snapshot's human-label set as one streamed purchase, restoring the
+//! session bit-exactly) and enters the same loop at the snapshot's last
+//! measured profile — the warm-start seam arch selection rides so the
+//! winning candidate never replays its own probe.
+//!
 //! Adding a new stopping rule or selection strategy is therefore a new
 //! `Policy` impl (typically < 100 lines), not a fourth copy of the loop.
 //! See [`super::mcal::McalPolicy`], [`super::budget::BudgetPolicy`] and
@@ -48,6 +55,7 @@ use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
 use super::events::{IterationRecord, RunReport, StopReason};
+use super::state::RunState;
 
 /// What a [`Policy`] wants the driver to do next.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -157,11 +165,62 @@ impl<'e> LabelingDriver<'e> {
         policy.finalize(env, stop, t0)
     }
 
+    /// Resume a labeling session from a captured [`RunState`] instead of
+    /// setting up fresh splits: the environment is rebuilt via
+    /// [`LabelingEnv::resume`] (which re-buys the captured T ∪ B as one
+    /// streamed purchase on `service` and restores the session weights
+    /// bit-exactly), the snapshot's last measured ε_T profile feeds the
+    /// policy's first `plan` round directly — the captured model has not
+    /// changed, so re-measuring would only duplicate fit observations —
+    /// and the loop then proceeds exactly as [`LabelingDriver::run`]'s.
+    ///
+    /// Policy-agnostic: any [`Policy`] can resume (a resuming policy is
+    /// responsible for its own iteration offset — see
+    /// [`super::mcal::McalPolicy::resuming`]). `params.seed` is overridden
+    /// by the snapshot's seed; see [`LabelingEnv::resume`].
+    pub fn run_warm<P: Policy>(
+        &self,
+        ds: &Dataset,
+        service: &dyn AnnotationService,
+        ledger: Arc<Ledger>,
+        classes_tag: &str,
+        params: RunParams,
+        state: RunState,
+        mut policy: P,
+    ) -> Result<P::Output> {
+        let t0 = Instant::now();
+        let profile = state.last_profile.clone();
+        let mut env = LabelingEnv::resume(
+            self.engine,
+            self.manifest,
+            ds,
+            service,
+            ledger,
+            classes_tag,
+            params,
+            state,
+        )?;
+        env.engine_pool = self.pool.map(EnginePool::intra);
+        let stop = Self::drive_loop(&mut env, &mut policy, profile)?;
+        policy.finalize(env, stop, t0)
+    }
+
     /// The shared loop over an already-constructed environment. Exposed so
     /// callers that build their own `LabelingEnv` (calibration, tests) can
     /// still drive it with a policy.
     pub fn drive<P: Policy>(env: &mut LabelingEnv<'_>, policy: &mut P) -> Result<StopReason> {
-        let mut profile = env.measure()?;
+        let profile = env.measure()?;
+        Self::drive_loop(env, policy, profile)
+    }
+
+    /// The loop body, fed its first ε_T profile by the caller: a cold
+    /// [`LabelingDriver::drive`] measures one, a warm
+    /// [`LabelingDriver::run_warm`] hands over the snapshot's.
+    fn drive_loop<P: Policy>(
+        env: &mut LabelingEnv<'_>,
+        policy: &mut P,
+        mut profile: Vec<f64>,
+    ) -> Result<StopReason> {
         // Policies bound their own iteration counts; this is only a safety
         // net against a policy that never stops.
         let hard_cap = policy.round_cap(&env.params);
@@ -244,6 +303,7 @@ pub(super) fn finish_run(
     // Submit first: the residual's labels stream in while the machine-label
     // evaluation below runs.
     let mut residual_labels = env.buy_streamed(&residual)?;
+    let warm_start = env.warm_start.take();
 
     // Evaluation vs groundtruth (not visible to the policies above).
     let machine_error = metrics::machine_error(env.ds, &s_indices, &s_preds);
@@ -270,6 +330,7 @@ pub(super) fn finish_run(
         stop_reason: stop,
         iterations,
         orders: env.ledger.order_log(),
+        warm_start,
         wall_secs: t0.elapsed().as_secs_f64(),
     })
 }

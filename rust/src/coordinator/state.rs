@@ -1,0 +1,330 @@
+//! Run state as a first-class, serializable value: snapshot a labeling
+//! run, resume it later — the warm-start seam between the arch-selection
+//! probe phase and the winner's real run.
+//!
+//! ## Why
+//!
+//! §4 of the paper charges every candidate's probing phase as exploration
+//! tax, but a naive implementation then restarts the winner from scratch:
+//! it re-buys the probe's label set and re-trains from init, paying the
+//! probe's training spend twice — exactly the classifier-cost waste MCAL
+//! exists to minimize. A [`RunState`] captures everything the probe
+//! already paid for — the acquired set (T and B), the model-session
+//! weights (bit-exact via the same host round-trip that backs
+//! [`crate::runtime::ChunkScorer`]), the PRNG stream cursors, the ε_T fit
+//! history, and the last measured profile — so the winner's real run
+//! resumes where the probe stopped instead of replaying it.
+//!
+//! ## How a resume spends money
+//!
+//! The probe bought its labels on a *shadow* service (shadow ledger — see
+//! docs/DESIGN.md §Algorithm-notes), so a resume re-buys the probe's
+//! exact label set on the **real** service: one streamed purchase through
+//! the [`crate::annotation::ingest`] path, submitted before the session
+//! even compiles so the annotator fleet resolves it while the engine
+//! warms up. The re-buy's orders live in a reserved id space
+//! ([`WARM_ORDER_BASE`]) so the resumed loop's own acquisition order ids
+//! continue the probe's counter unchanged — keeping every subsequent
+//! order id (and with it every per-order seed stream) invariant to the
+//! `--ingest-chunk` that shaped the re-buy. Probe *training* is not
+//! re-paid and not re-charged: it was spent inside the probe phase's
+//! exploration-tax allowance, and the resume inherits the trained weights
+//! outright (the inherited spend still counts against the resumed run's
+//! own tax allowance via `training_spend`). The saved double-pay is
+//! surfaced as [`crate::coordinator::WarmStartReport::training_saved`].
+//!
+//! ## Determinism contract
+//!
+//! A resumed run is a pure function of its [`RunState`] and run
+//! parameters: restored PRNG cursors continue the probe's streams
+//! bit-exactly, the session state round-trips bit-exactly, and the re-buy
+//! follows the ingest contract (per-slot label streams, charge-once
+//! integer-bucket accounting). Warm-started runs are therefore
+//! bit-identical for any `--jobs`, `--ingest-chunk`, and
+//! `--ingest-latency` — pinned end-to-end by `rust/tests/warmstart.rs`.
+//!
+//! One scoped carve-out, mirroring the residual purchase's (PR 4): with
+//! *injected annotator errors* (`SimServiceConfig::error_rate > 0` — a
+//! robustness knob; the paper assumes perfect human labels, §2 fn. 2),
+//! each re-buy order is an independent annotation job with its own
+//! per-slot flip stream, so the re-bought labels' error *realization*
+//! follows the order split — and since those labels feed the resumed
+//! training and measurement, the resumed trajectory then legitimately
+//! varies with `--ingest-chunk`. With the default perfect annotators
+//! (every run in the paper's evaluation), re-bought labels are
+//! groundtruth for every split and the bit-identity above is
+//! unconditional. Label *counts* and dollar totals are split-invariant
+//! either way.
+//!
+//! Capture with [`crate::coordinator::LabelingEnv::snapshot`], resume
+//! with [`crate::coordinator::LabelingDriver::run_warm`] (or the
+//! ready-made [`crate::coordinator::run_mcal_warm`]).
+
+#![deny(missing_docs)]
+
+use crate::annotation::OrderRecord;
+use crate::dataset::Dataset;
+use crate::model::ArchKind;
+use crate::prng::Pcg32;
+use crate::{Error, Result};
+
+/// Reserved order-id space for the warm-start re-buy.
+///
+/// The re-buy is split into one order per ingest chunk, so the *number*
+/// of orders it submits follows `--ingest-chunk`. Drawing those ids from
+/// the top half of the `u64` space (instead of the run's sequential
+/// counter) keeps every order id the resumed loop assigns afterwards —
+/// and every per-order seed stream derived from those ids — independent
+/// of how the re-buy was chunked. Loop counters start at 0 and advance by
+/// one per purchase; they can never reach this range.
+pub const WARM_ORDER_BASE: u64 = 1 << 63;
+
+/// Snapshot of one labeling run at a plan-round boundary: everything
+/// needed to resume the acquire → retrain → measure loop bit-exactly on a
+/// fresh engine, service, and ledger.
+///
+/// Captured by [`crate::coordinator::LabelingEnv::snapshot`]; consumed by
+/// [`crate::coordinator::LabelingDriver::run_warm`]. Plain data — it can
+/// cross threads (pool lanes capture probe states that the caller
+/// resumes) and outlive every borrow of the run that produced it.
+///
+/// ```
+/// use mcal::coordinator::state::{RunState, WARM_ORDER_BASE};
+/// use mcal::model::ArchKind;
+/// use mcal::prng::Pcg32;
+///
+/// let state = RunState {
+///     arch: ArchKind::Res18,
+///     seed: 7,
+///     rounds: 3,
+///     test_idx: vec![0, 1],
+///     b_idx: vec![2, 3, 4],
+///     pool: vec![5, 6, 7, 8, 9],
+///     session_state: vec![0.0; 16],
+///     session_rng: Pcg32::new(7, 0x5E55),
+///     steps_executed: 42,
+///     real_samples_trained: 1344,
+///     rng: Pcg32::new(7, 0xE417),
+///     theta_grid: vec![0.5, 1.0],
+///     cost_obs: vec![(3.0, 0.25)],
+///     profile_obs: vec![vec![(3.0, 0.4)], vec![(3.0, 0.6)]],
+///     last_profile: vec![0.4, 0.6],
+///     training_spend: 0.25,
+///     retrain_counter: 4,
+///     order_counter: 5,
+/// };
+/// // The snapshot partitions the whole dataset …
+/// assert_eq!(state.x_total(), 10);
+/// // … and a resume re-buys exactly the human-labeled part (T ∪ B).
+/// assert_eq!(state.labels_to_rebuy(), 5);
+/// // Re-buy order ids live above every sequential loop id.
+/// assert!(WARM_ORDER_BASE > state.order_counter);
+/// ```
+#[derive(Clone, Debug)]
+pub struct RunState {
+    /// Architecture the captured run was training.
+    pub arch: ArchKind,
+    /// The captured run's seed. A resume *continues* this run's PRNG
+    /// streams, so it overrides whatever seed the resume-time params
+    /// carry (for a probe this is the probe's `task_seed`-derived
+    /// stream, not the sweep cell's base seed).
+    pub seed: u64,
+    /// Plan rounds the captured run completed — the resumed loop's
+    /// iteration offset (see [`crate::coordinator::McalPolicy::resuming`]).
+    pub rounds: usize,
+    /// Human-labeled test set T (indices into the dataset).
+    pub test_idx: Vec<usize>,
+    /// Human-labeled training set B, in acquisition order.
+    pub b_idx: Vec<usize>,
+    /// Unlabeled pool X \ T \ B.
+    pub pool: Vec<usize>,
+    /// Host snapshot of the model-session state vector (flat params +
+    /// momentum). The f32 device round-trip is bit-exact, so a session
+    /// restored from it predicts and trains exactly like the captured one
+    /// (the same guarantee [`crate::runtime::ChunkScorer`] rides).
+    pub session_state: Vec<f32>,
+    /// The session's minibatch-PRNG cursor at capture.
+    pub session_rng: Pcg32,
+    /// Optimizer steps the captured session had executed (perf
+    /// accounting, carried for continuity).
+    pub steps_executed: u64,
+    /// Sample-passes the captured session had trained (perf accounting).
+    pub real_samples_trained: u64,
+    /// The run-level PRNG cursor (split sampling, pool subsampling) at
+    /// capture.
+    pub rng: Pcg32,
+    /// The θ grid the run measures over (authoritative for the resumed
+    /// run — `profile_obs` and `last_profile` are aligned with it).
+    pub theta_grid: Vec<f64>,
+    /// Observed (|B|, retrain dollars) pairs — the training-cost fit
+    /// history.
+    pub cost_obs: Vec<(f64, f64)>,
+    /// Per-θ observed (|B|, ε_T) pairs — the power-law fit history.
+    pub profile_obs: Vec<Vec<(f64, f64)>>,
+    /// The last measured ε_T(S^θ) profile. The resumed loop feeds this to
+    /// its first plan round instead of re-measuring — the captured model
+    /// has not changed, so a re-measure would only duplicate
+    /// `profile_obs` entries (and bend the fits).
+    pub last_profile: Vec<f64>,
+    /// Simulated training dollars the captured run spent. Inherited (not
+    /// re-charged) by a resume; still counts against the resumed run's
+    /// exploration-tax allowance.
+    pub training_spend: f64,
+    /// Retrains executed — continues the retrain-seed chain
+    /// (`seed + counter · φ`) exactly where the captured run left it.
+    pub retrain_counter: u64,
+    /// Next sequential acquisition-order id. Carried verbatim so resumed
+    /// purchases reuse the probe's id (and seed-stream) sequence; the
+    /// re-buy itself ids from [`WARM_ORDER_BASE`] instead.
+    pub order_counter: u64,
+}
+
+impl RunState {
+    /// |X| — the whole dataset the snapshot partitions.
+    pub fn x_total(&self) -> usize {
+        self.test_idx.len() + self.b_idx.len() + self.pool.len()
+    }
+
+    /// Labels a resume re-buys on the real service: the captured run's
+    /// full human-labeled set, |T| + |B|.
+    pub fn labels_to_rebuy(&self) -> usize {
+        self.test_idx.len() + self.b_idx.len()
+    }
+
+    /// Check the snapshot is resumable against `ds`: T ∪ B ∪ pool must
+    /// partition exactly the dataset's index range, and the fit history
+    /// must align with the θ grid.
+    pub fn validate(&self, ds: &Dataset) -> Result<()> {
+        let n = ds.len();
+        if self.x_total() != n {
+            return Err(Error::Coordinator(format!(
+                "run state partitions {} samples but dataset {} has {n}",
+                self.x_total(),
+                ds.name
+            )));
+        }
+        let mut seen = vec![false; n];
+        for &i in self.test_idx.iter().chain(&self.b_idx).chain(&self.pool) {
+            if i >= n {
+                return Err(Error::Coordinator(format!(
+                    "run state index {i} out of range for dataset {} ({n} samples)",
+                    ds.name
+                )));
+            }
+            if seen[i] {
+                return Err(Error::Coordinator(format!(
+                    "run state index {i} appears twice across T/B/pool"
+                )));
+            }
+            seen[i] = true;
+        }
+        if self.profile_obs.len() != self.theta_grid.len()
+            || self.last_profile.len() != self.theta_grid.len()
+        {
+            return Err(Error::Coordinator(format!(
+                "run state carries {} θ observation tracks and a {}-point profile \
+                 for a {}-point θ grid",
+                self.profile_obs.len(),
+                self.last_profile.len(),
+                self.theta_grid.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A finished probe, packaged for warm-starting: the probe's [`RunState`]
+/// plus its shadow-ledger provenance.
+///
+/// Produced by the arch-selection probe phase when warm-starting is
+/// enabled (see [`crate::coordinator::ArchSelectConfig`]); the winner's
+/// `ProbeState` feeds [`crate::coordinator::run_mcal_warm`], the losers'
+/// are dropped with their shadow ledgers.
+#[derive(Clone, Debug)]
+pub struct ProbeState {
+    /// The probe's resumable run state.
+    pub run: RunState,
+    /// The probe's shadow order log — what the probe "bought" during
+    /// probing. Pure provenance: these purchases were never charged to
+    /// the real ledger, and the resume re-buys the same label set for
+    /// real (as one streamed purchase, not order-by-order).
+    pub shadow_orders: Vec<OrderRecord>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_state(n_test: usize, n_b: usize, n_pool: usize) -> RunState {
+        let n = n_test + n_b + n_pool;
+        let idx: Vec<usize> = (0..n).collect();
+        RunState {
+            arch: ArchKind::Res18,
+            seed: 5,
+            rounds: 2,
+            test_idx: idx[..n_test].to_vec(),
+            b_idx: idx[n_test..n_test + n_b].to_vec(),
+            pool: idx[n_test + n_b..].to_vec(),
+            session_state: vec![0.0; 8],
+            session_rng: Pcg32::new(5, 0x5E55),
+            steps_executed: 0,
+            real_samples_trained: 0,
+            rng: Pcg32::new(5, 0xE417),
+            theta_grid: vec![0.5, 1.0],
+            cost_obs: Vec::new(),
+            profile_obs: vec![Vec::new(), Vec::new()],
+            last_profile: vec![0.3, 0.5],
+            training_spend: 0.0,
+            retrain_counter: 1,
+            order_counter: 2,
+        }
+    }
+
+    fn tiny_dataset(n: usize) -> Dataset {
+        Dataset::new("d", 2, 2, vec![0.0; 2 * n], vec![0; n]).unwrap()
+    }
+
+    #[test]
+    fn partition_accounting() {
+        let s = tiny_state(2, 3, 5);
+        assert_eq!(s.x_total(), 10);
+        assert_eq!(s.labels_to_rebuy(), 5);
+        s.validate(&tiny_dataset(10)).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_partitions() {
+        // Wrong total.
+        let s = tiny_state(2, 3, 5);
+        assert!(s.validate(&tiny_dataset(11)).is_err());
+
+        // Duplicate index across splits (lengths still partition-sized).
+        let mut dup = tiny_state(2, 3, 5);
+        dup.pool[0] = dup.test_idx[0];
+        let err = format!("{}", dup.validate(&tiny_dataset(10)).unwrap_err());
+        assert!(err.contains("twice"), "{err}");
+
+        // Out-of-range index.
+        let mut oob = tiny_state(2, 3, 5);
+        oob.pool[0] = 10;
+        assert!(oob.validate(&tiny_dataset(10)).is_err());
+
+        // Fit history misaligned with the θ grid.
+        let mut grid = tiny_state(2, 3, 5);
+        grid.last_profile.pop();
+        assert!(grid.validate(&tiny_dataset(10)).is_err());
+    }
+
+    /// The reserved warm id space is disjoint from any realistic loop
+    /// counter, and ids within it stay distinct per chunk.
+    #[test]
+    fn warm_order_ids_are_reserved_and_distinct() {
+        for i in 0..64u64 {
+            let id = WARM_ORDER_BASE | i;
+            assert!(id >= WARM_ORDER_BASE);
+            assert_ne!(id, i, "warm ids never collide with sequential ids");
+        }
+        // A run would need ~9e18 purchases to reach the reserved space.
+        assert_eq!(WARM_ORDER_BASE, u64::MAX / 2 + 1);
+    }
+}

@@ -4,7 +4,7 @@
 //! MCAL itself never looks at pixels — it consumes only (a) the learning
 //! curve ε(|B|) of the classifier and (b) the confidence ranking of pool
 //! samples. The synthetic Gaussian-mixture generator in [`synth`]
-//! reproduces both with controllable difficulty (see DESIGN.md
+//! reproduces both with controllable difficulty (see docs/DESIGN.md
 //! §Substitutions): class centers in 64-d feature space, multiple
 //! sub-clusters per class (slows the learning curve the way intra-class
 //! visual diversity does), and tunable within-cluster noise (sets the

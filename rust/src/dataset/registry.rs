@@ -1,6 +1,6 @@
 //! Preset registry: the paper's four benchmark datasets as synthetic analogs.
 //!
-//! Difficulty constants were calibrated (see EXPERIMENTS.md §Calibration) so
+//! Difficulty constants were calibrated (see docs/DESIGN.md §Substitutions) so
 //! the learned classifiers land in the paper's operating regimes:
 //!
 //! | preset        | paper dataset | target behaviour                                  |
@@ -86,7 +86,7 @@ pub fn preset(name: &str, seed: u64) -> Result<DatasetPreset> {
             classes_tag: "c100",
         }),
         // ImageNet: 1.28M images / 1000 classes in the paper; scaled to
-        // 200k / 300 classes (DESIGN.md §Substitutions) — still "hardest by
+        // 200k / 300 classes (docs/DESIGN.md §Substitutions) — still "hardest by
         // far", which is all MCAL's decision consumes (it declines to
         // machine-label and pays the exploration tax).
         "imagenet-syn" => Ok(DatasetPreset {

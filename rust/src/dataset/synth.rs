@@ -7,7 +7,7 @@
 //! - samples          = subcluster mean + N(0, noise^2 I)
 //! - finally, features are globally rescaled to ~unit per-dim variance.
 //!
-//! Difficulty knobs and what they reproduce (DESIGN.md §Substitutions):
+//! Difficulty knobs and what they reproduce (docs/DESIGN.md §Substitutions):
 //!
 //! - `noise` vs the typical inter-mode distance `√(2·d·(center²+spread²))`
 //!   sets the local Bayes error at confusable mode boundaries → the

@@ -7,7 +7,9 @@
 //!   exploration tax.
 
 use crate::annotation::Service;
-use crate::coordinator::{run_mcal, run_with_arch_selection, LabelingDriver, RunParams, StopReason};
+use crate::coordinator::{
+    run_mcal, run_with_arch_selection, ArchSelectConfig, LabelingDriver, RunParams, StopReason,
+};
 use crate::model::ArchKind;
 use crate::runtime::EnginePool;
 use crate::report::{dollars, pct, Table};
@@ -140,7 +142,7 @@ pub fn fig14_15(ctx: &Ctx, datasets: &[&str]) -> Result<Table> {
 }
 
 /// The ImageNet decision (§5.1 "MCAL on Imagenet").
-pub fn imagenet(ctx: &Ctx) -> Result<Table> {
+pub fn imagenet(ctx: &Ctx, arch_cfg: ArchSelectConfig) -> Result<Table> {
     let mut table = Table::new(
         "ImageNet — MCAL declines machine labeling",
         &[
@@ -163,7 +165,7 @@ pub fn imagenet(ctx: &Ctx) -> Result<Table> {
         &preset.candidate_archs,
         preset.classes_tag,
         params,
-        6,
+        arch_cfg,
     )?;
     log::info!("imagenet: {}", report.summary());
     let tax = (report.cost.total() - report.human_only_cost).max(0.0) / report.human_only_cost;

@@ -25,6 +25,14 @@
 //! lane's `inner` share, so `--jobs N` bounds engines *and* annotator
 //! threads together.
 //!
+//! Warm-starting lives *inside* a cell, not at fleet level: an auto-arch
+//! cell probes its candidates on its lane (and nested pool), then resumes
+//! the winner from the captured probe state
+//! ([`crate::coordinator::state`]) — the captured state never crosses
+//! lanes, so the fleet's scheduling stays irrelevant to results, and the
+//! cell simply finishes sooner (and reports less `training` spend) than a
+//! `--no-warm-start` run of the same grid.
+//!
 //! `jobs <= 1` degenerates to a serial loop on the context's warm engine.
 //! Results are returned in submission order regardless of the schedule;
 //! per-cell provenance (lane, wall-clock) is reported separately precisely

@@ -1,4 +1,4 @@
-//! Experiment drivers: one per paper table/figure (see DESIGN.md §4).
+//! Experiment drivers: one per paper table/figure (see docs/DESIGN.md §4).
 //!
 //! `mcal exp <id> [--scale full|bench|smoke] [--seed N] [--jobs N]` runs a
 //! driver, prints the resulting table(s) as markdown, and writes CSVs under
@@ -17,6 +17,9 @@
 //! annotator fleet shares the `--jobs` budget ([`fleet::ingest_workers`]).
 //! Result CSVs are byte-identical for any `--jobs` value, ingestion chunk
 //! size, and latency; scheduling details land in `results/provenance/`.
+//! Auto-arch drivers (table1, table3, imagenet) warm-start each cell's
+//! winner from its probe state by default; `--no-warm-start` restores the
+//! from-scratch re-run.
 
 pub mod common;
 pub mod fleet;
@@ -29,6 +32,7 @@ pub mod table3;
 
 use crate::annotation::Service;
 use crate::cli::Args;
+use crate::coordinator::ArchSelectConfig;
 use crate::report::Table;
 use crate::{Error, Result};
 use common::{Ctx, Scale};
@@ -65,15 +69,18 @@ pub fn dispatch(args: &Args) -> Result<()> {
 
 pub fn run_experiment(ctx: &Ctx, id: &str, args: &Args) -> Result<()> {
     let both = [Service::Amazon, Service::Satyam];
-    let probe_iters = 8;
+    let arch_cfg = ArchSelectConfig {
+        probe_iters: 8,
+        warm_start: args.on_off("warm-start", true)?,
+    };
     match id {
-        "table1" => print(&table1::run(ctx, &both, probe_iters)?),
+        "table1" => print(&table1::run(ctx, &both, arch_cfg)?),
         "table2" => {
             let datasets: Vec<&str> = table1::DATASETS.to_vec();
             let out = table2::run(ctx, &datasets, args.f64_or("epsilon", 0.05)?)?;
             print(&out.table2);
         }
-        "table3" => print(&table3::run(ctx, args.f64_or("epsilon", 0.10)?, probe_iters)?),
+        "table3" => print(&table3::run(ctx, args.f64_or("epsilon", 0.10)?, arch_cfg)?),
         "fig2" | "fig3" => {
             let (f2, f3) = figs_fit::fig2_fig3(ctx)?;
             print(&f2);
@@ -95,7 +102,9 @@ pub fn run_experiment(ctx: &Ctx, id: &str, args: &Args) -> Result<()> {
             print(&figs_scale::fig14_15(ctx, &datasets)?)
         }
         "fig22_27" => print(&figs_fit::fig22_27(ctx)?),
-        "imagenet" => print(&figs_scale::imagenet(ctx)?),
+        "imagenet" => {
+            print(&figs_scale::imagenet(ctx, ArchSelectConfig { probe_iters: 6, ..arch_cfg })?)
+        }
         "all" => {
             for sub in [
                 "table1", "table2", "table3", "fig2", "fig4", "fig5", "fig11",

@@ -7,7 +7,7 @@
 //! CSV is identical for any `--jobs` value.
 
 use crate::annotation::Service;
-use crate::coordinator::{run_with_arch_selection, LabelingDriver, RunParams};
+use crate::coordinator::{run_with_arch_selection, ArchSelectConfig, LabelingDriver, RunParams};
 use crate::dataset::{Dataset, DatasetPreset};
 use crate::report::{dollars, pct, Table};
 use crate::Result;
@@ -17,7 +17,7 @@ use super::fleet;
 
 pub const DATASETS: [&str; 3] = ["fashion-syn", "cifar10-syn", "cifar100-syn"];
 
-pub fn run(ctx: &Ctx, services: &[Service], probe_iters: usize) -> Result<Table> {
+pub fn run(ctx: &Ctx, services: &[Service], arch_cfg: ArchSelectConfig) -> Result<Table> {
     // Generate each dataset once; cells share them read-only.
     let mut loaded: Vec<(Dataset, DatasetPreset)> = Vec::new();
     for ds_name in DATASETS {
@@ -47,7 +47,7 @@ pub fn run(ctx: &Ctx, services: &[Service], probe_iters: usize) -> Result<Table>
             &preset.candidate_archs,
             preset.classes_tag,
             params,
-            probe_iters,
+            arch_cfg,
         )?;
         log::info!("table1: {}", report.summary());
         for p in &probes {

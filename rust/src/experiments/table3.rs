@@ -6,7 +6,7 @@
 //! One fleet cell per dataset.
 
 use crate::annotation::Service;
-use crate::coordinator::{run_with_arch_selection, LabelingDriver, RunParams};
+use crate::coordinator::{run_with_arch_selection, ArchSelectConfig, LabelingDriver, RunParams};
 use crate::dataset::{Dataset, DatasetPreset};
 use crate::report::{dollars, pct, Table};
 use crate::Result;
@@ -15,7 +15,7 @@ use super::common::Ctx;
 use super::fleet;
 use super::table1::DATASETS;
 
-pub fn run(ctx: &Ctx, epsilon: f64, probe_iters: usize) -> Result<Table> {
+pub fn run(ctx: &Ctx, epsilon: f64, arch_cfg: ArchSelectConfig) -> Result<Table> {
     let mut loaded: Vec<(Dataset, DatasetPreset)> = Vec::new();
     for ds_name in DATASETS {
         loaded.push(ctx.dataset(ds_name)?);
@@ -39,7 +39,7 @@ pub fn run(ctx: &Ctx, epsilon: f64, probe_iters: usize) -> Result<Table> {
             &preset.candidate_archs,
             preset.classes_tag,
             params,
-            probe_iters,
+            arch_cfg,
         )?;
         log::info!("table3: {}", report.summary());
         Ok(report)

@@ -5,7 +5,9 @@ use std::process::ExitCode;
 
 use mcal::annotation::{IngestConfig, Service};
 use mcal::cli::Args;
-use mcal::coordinator::{run_mcal, run_with_arch_selection, LabelingDriver, RunParams};
+use mcal::coordinator::{
+    run_mcal, run_with_arch_selection, ArchSelectConfig, LabelingDriver, RunParams, RunReport,
+};
 use mcal::experiments::common::{Ctx, Scale};
 use mcal::model::ArchKind;
 use mcal::runtime::EnginePool;
@@ -19,7 +21,16 @@ USAGE:
              [--epsilon 0.05] [--metric margin|entropy|leastconf|kcenter|random]
              [--scale full|bench|smoke] [--seed N] [--jobs N|auto]
              [--ingest-chunk N] [--ingest-latency MS]
-             [--probe-iters 8 (with --arch auto)] [--artifacts DIR] [--results DIR]
+             [--probe-iters 8 (with --arch auto)] [--warm-start | --no-warm-start]
+             [--artifacts DIR] [--results DIR]
+                                                         --warm-start (default, with --arch
+                                                         auto): resume the winning candidate
+                                                         from its probe state — weights and
+                                                         fit history inherited, probe labels
+                                                         re-bought as one streamed purchase,
+                                                         no training re-paid (reported as a
+                                                         warm-start line); --no-warm-start
+                                                         re-runs the winner from scratch
                                                          --ingest-chunk: stream human labels
                                                          back in N-label chunks (0 = whole
                                                          order at once); --ingest-latency:
@@ -32,10 +43,11 @@ USAGE:
                                                          results are identical for every
                                                          setting (the order *log* lists the
                                                          residual as its chunk count)
-    mcal arch-select <dataset> [--service ...] [--probe-iters 8] [--jobs N|auto] [...]
-                                                         probe every candidate architecture
+    mcal arch-select <dataset> [--service ...] [--probe-iters 8] [--jobs N|auto]
+             [--warm-start | --no-warm-start] [...]      probe every candidate architecture
                                                          (concurrently with --jobs > 1) and
-                                                         run MCAL on the winner; stdout is
+                                                         run MCAL on the winner — warm-started
+                                                         from its probe by default; stdout is
                                                          byte-identical for any --jobs
     mcal exp <id> [--scale full|bench|smoke] [--jobs N|auto] [...]
                                                          run a paper experiment driver
@@ -48,7 +60,7 @@ USAGE:
 
 Datasets: fashion-syn cifar10-syn cifar100-syn imagenet-syn
 Experiments: table1 table2 table3 fig2 fig3 fig4 fig5 fig6 fig8_10 fig11
-             fig13 fig14_15 fig22_27 imagenet (see DESIGN.md §4)
+             fig13 fig14_15 fig22_27 imagenet (see docs/DESIGN.md §4)
 ";
 
 fn main() -> ExitCode {
@@ -154,7 +166,7 @@ fn cmd_info(args: &Args) -> mcal::Result<()> {
 }
 
 /// Calibration helper: learning-curve probe for dataset difficulty tuning
-/// (EXPERIMENTS.md §Calibration). Trains on random subsets of the given
+/// (docs/DESIGN.md §Substitutions). Trains on random subsets of the given
 /// sizes and prints the test error profile at θ ∈ {0.5, 0.9, 1.0}.
 fn cmd_calib(args: &Args) -> mcal::Result<()> {
     use mcal::annotation::AnnotationService;
@@ -229,11 +241,11 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
 
     let arch_opt = args.opt_or("arch", "auto");
     let jobs = single_run_jobs(args, &ctx);
+    let arch_cfg = arch_select_config(args)?;
     // The simulated annotator fleet rides the same --jobs budget as the
     // engines (worker count is wall-clock only, never results).
     let (ledger, service) = ctx.view().service_with(svc, jobs);
     let report = if arch_opt == "auto" {
-        let probe_iters = args.usize_or("probe-iters", 8)?;
         let pool = EnginePool::for_budget(jobs, preset.candidate_archs.len())?;
         let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
         let (report, probes) = run_with_arch_selection(
@@ -244,7 +256,7 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
             &preset.candidate_archs,
             preset.classes_tag,
             params,
-            probe_iters,
+            arch_cfg,
         )?;
         for p in &probes {
             println!(
@@ -262,6 +274,7 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
     };
 
     println!("{}", report.summary());
+    print_warm_start(&report);
     let c = &report.cost;
     println!(
         "breakdown: human=${:.2} training=${:.2} exploration=${:.2} retrains={} wall={:.1}s",
@@ -273,6 +286,26 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
         report.orders.iter().map(|o| o.labels).sum::<u64>()
     );
     Ok(())
+}
+
+/// Shared `--probe-iters` / `--warm-start` / `--no-warm-start` parsing for
+/// the two auto-arch commands.
+fn arch_select_config(args: &Args) -> mcal::Result<ArchSelectConfig> {
+    Ok(ArchSelectConfig {
+        probe_iters: args.usize_or("probe-iters", 8)?,
+        warm_start: args.on_off("warm-start", true)?,
+    })
+}
+
+/// The documented warm-start provenance line (deterministic — safe for
+/// the byte-identical-stdout contract of `arch-select`).
+fn print_warm_start(report: &RunReport) {
+    if let Some(ws) = &report.warm_start {
+        println!(
+            "warm-start: resumed at round {} ({} probe labels re-bought, ${:.2} probe training inherited, not re-paid)",
+            ws.rounds_skipped, ws.labels_rebought, ws.training_saved
+        );
+    }
 }
 
 /// Architecture selection as a first-class command. Probes run
@@ -290,7 +323,7 @@ fn cmd_arch_select(args: &Args) -> mcal::Result<()> {
     let svc = Service::parse(args.opt_or("service", "amazon"))
         .ok_or_else(|| mcal::Error::Config("bad --service".into()))?;
     let params = single_run_params(args, &ctx)?;
-    let probe_iters = args.usize_or("probe-iters", 8)?;
+    let arch_cfg = arch_select_config(args)?;
 
     let jobs = single_run_jobs(args, &ctx);
     // Annotator fleet shares the --jobs budget (wall-clock only).
@@ -307,7 +340,7 @@ fn cmd_arch_select(args: &Args) -> mcal::Result<()> {
         &preset.candidate_archs,
         preset.classes_tag,
         params,
-        probe_iters,
+        arch_cfg,
     )?;
 
     let n_candidates = preset.candidate_archs.len();
@@ -323,6 +356,7 @@ fn cmd_arch_select(args: &Args) -> mcal::Result<()> {
         );
     }
     println!("winner {}", report.arch);
+    print_warm_start(&report);
     println!("{}", report.summary());
     eprintln!("wall {:.1}s (jobs={jobs})", t0.elapsed().as_secs_f64());
     Ok(())

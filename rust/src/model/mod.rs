@@ -49,7 +49,7 @@ impl ArchKind {
     /// Simulated-rig sustained training throughput, images/second, for the
     /// *paper's* architecture on a 4×K80 VM (the paper's testbed, §5).
     /// Calibrated so dollar magnitudes land in the paper's ranges
-    /// (EXPERIMENTS.md §Calibration); ratios follow real FLOP ratios
+    /// (docs/DESIGN.md §Substitutions); ratios follow real FLOP ratios
     /// (EfficientNet-B0 on 224² ImageNet is "60-200× res18" per the paper).
     pub fn rig_throughput(&self) -> f64 {
         match self {

@@ -4,7 +4,7 @@
 //! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
 //!
-//! Perf-critical design point (EXPERIMENTS.md §Perf): model state
+//! Perf-critical design point (docs/ARCHITECTURE.md, Layer 2): model state
 //! (params + momentum, one `2P` f32 vector) stays **device-resident** as a
 //! `PjRtBuffer` across the whole training loop — `train_chunk` executables
 //! are single-array-output precisely so their result buffer can be fed back

@@ -293,9 +293,39 @@ impl<'e> ModelSession<'e> {
 
     /// Host snapshot of the state vector (`[2P]` flat params + momentum).
     /// The f32 round-trip is bit-exact, so a [`ChunkScorer`] built from it
-    /// scores exactly like this session's own `predict`.
+    /// scores exactly like this session's own `predict` — and a session
+    /// [`restore`](ModelSession::restore)d from it trains exactly like
+    /// this one.
     pub fn state_host(&self) -> Result<Vec<f32>> {
         self.engine.read_f32(self.state()?)
+    }
+
+    /// Clone of the session's minibatch-PRNG cursor, for
+    /// [`crate::coordinator::RunState`] capture: restoring it (see
+    /// [`restore`](ModelSession::restore)) makes the resumed session's
+    /// minibatch stream continue the captured one bit-exactly.
+    pub fn rng_snapshot(&self) -> Pcg32 {
+        self.rng.clone()
+    }
+
+    /// Restore the session to a captured `(state, rng)` snapshot: upload
+    /// the host state vector (from [`state_host`](ModelSession::state_host)
+    /// — the f32 round-trip is bit-exact, the same guarantee
+    /// [`ChunkScorer`] rides) and resume the minibatch-PRNG cursor. After
+    /// a restore, `predict`/`features`/`train_epochs*` behave exactly as
+    /// they would have on the captured session.
+    pub fn restore(&mut self, state: &[f32], rng: Pcg32) -> Result<()> {
+        let expect = self.state_host()?.len();
+        if state.len() != expect {
+            return Err(Error::Coordinator(format!(
+                "state snapshot has {} floats but model {} expects {expect}",
+                state.len(),
+                self.meta.name
+            )));
+        }
+        self.state = Some(self.engine.buf_f32(state, &[state.len()])?);
+        self.rng = rng;
+        Ok(())
     }
 
     /// Penultimate-layer features for `indices` (row-major, hidden wide).

@@ -5,8 +5,8 @@ use std::sync::Arc;
 
 use mcal::annotation::{AnnotationService, Ledger, Service, SimService, SimServiceConfig};
 use mcal::coordinator::{
-    run_al_trajectory, run_budget, run_mcal, run_with_arch_selection, LabelingDriver, RunParams,
-    StopReason,
+    run_al_trajectory, run_budget, run_mcal, run_with_arch_selection, ArchSelectConfig,
+    LabelingDriver, RunParams, StopReason,
 };
 use mcal::dataset::preset;
 use mcal::model::ArchKind;
@@ -82,6 +82,7 @@ fn mcal_end_to_end_fashion_smoke() {
 
     // Accounting invariants.
     assert_eq!(report.x_total, ds.len());
+    assert!(report.warm_start.is_none(), "single-arch runs are cold");
     assert_eq!(
         report.test_size + report.b_size + report.s_size + report.residual_human,
         report.x_total,
@@ -235,7 +236,7 @@ fn arch_selection_returns_probes_and_viable_report() {
         &preset.candidate_archs,
         preset.classes_tag,
         params,
-        6,
+        ArchSelectConfig { probe_iters: 6, ..Default::default() },
     )
     .unwrap();
     assert_eq!(probes.len(), 3);
@@ -246,6 +247,13 @@ fn arch_selection_returns_probes_and_viable_report() {
     // Losers' probe training shows up as exploration spend.
     assert!(report.cost.exploration > 0.0);
     assert!((report.cost.total() - ledger.total()).abs() < 1e-9);
+    // Warm-start is the default: the winner resumed from its probe and
+    // says so — inheriting the probe's training spend instead of
+    // re-paying it, and re-buying its probe labels (T ∪ B at resume).
+    let ws = report.warm_start.as_ref().expect("auto-arch default is warm-start");
+    let winner_probe = probes.iter().find(|p| p.arch.as_str() == report.arch).unwrap();
+    assert!((ws.training_saved - winner_probe.training_spend).abs() < 1e-12);
+    assert!(ws.labels_rebought >= winner_probe.b_probed);
 }
 
 #[test]

@@ -9,7 +9,8 @@ use std::sync::Arc;
 
 use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
 use mcal::coordinator::{
-    run_with_arch_selection, LabelingDriver, LabelingEnv, ProbeResult, RunParams,
+    run_with_arch_selection, ArchSelectConfig, LabelingDriver, LabelingEnv, ProbeResult,
+    RunParams,
 };
 use mcal::dataset::preset;
 use mcal::model::ArchKind;
@@ -83,7 +84,10 @@ fn probe_rankings_and_winner_are_jobs_invariant() {
             &preset.candidate_archs,
             preset.classes_tag,
             params,
-            5,
+            // Warm-start default on: this pins the *resumed* winner run's
+            // --jobs invariance too (the probe state is captured on
+            // whichever lane probed the winner).
+            ArchSelectConfig { probe_iters: 5, ..Default::default() },
         )
         .unwrap();
         let keys: Vec<_> = probes.iter().map(ProbeResult::bit_key).collect();

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Docs-link checker: every repo-path reference in the docs must resolve.
+
+The gate that would have caught six source files citing a DESIGN.md that
+did not exist in the repo for four PRs. Two scan surfaces:
+
+1. **Markdown files** (curated set below): every `*.md`-suffixed token
+   and every relative markdown link target `[text](path)` must exist,
+   resolved against the repo root or the referencing file's directory.
+2. **Rust module docs** (`//!` lines under rust/ and examples/): every
+   `*.md`-suffixed token must exist the same way. Module docs are the
+   reference surface rustdoc renders; `//` and `///` comments are out of
+   scope (rustdoc's own `-D warnings` gate covers intra-doc links).
+
+Deliberately narrow: only `.md` tokens and explicit markdown links are
+checked, because prose legitimately names runtime paths (`results/`,
+`artifacts/`) and foreign files that a generic path regex would flag.
+Historical/external markdown (CHANGES.md, ISSUE.md, PAPER*.md,
+SNIPPETS.md) is excluded from scanning — but stays perfectly valid as a
+*target*.
+
+Exit 0 when clean; exit 1 listing every dangling reference.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Markdown files whose *content* is held to the no-dangling-paths rule.
+SCANNED_MARKDOWN = [
+    "README.md",
+    "ROADMAP.md",
+    "docs",
+    "rust",
+    "python/README.md",
+]
+
+# Markdown we do not scan: task specs and historical logs use shorthand
+# paths ("tests/foo.rs"), and PAPERS/SNIPPETS quote external material.
+EXCLUDED_MARKDOWN_NAMES = {"CHANGES.md", "ISSUE.md", "PAPER.md", "PAPERS.md", "SNIPPETS.md"}
+
+RUST_DOC_ROOTS = ["rust/src", "rust/tests", "rust/benches", "examples"]
+
+MD_TOKEN = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_\-./]*\.md\b")
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s#]+)\)")
+
+
+def generated(parts) -> bool:
+    """Build output and tool caches — present locally, never in the repo."""
+    return any(p == "target" or p == ".pytest_cache" or p.startswith(".") for p in parts[:-1])
+
+
+def iter_markdown():
+    for entry in SCANNED_MARKDOWN:
+        p = REPO / entry
+        if p.is_file():
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.md")):
+                if generated(f.relative_to(REPO).parts) or f.name in EXCLUDED_MARKDOWN_NAMES:
+                    continue
+                yield f
+
+
+def resolves(token: str, base: Path) -> bool:
+    token = token.strip("`'\"")
+    if token.startswith(("http://", "https://")):
+        return True
+    return (REPO / token).exists() or (base / token).exists()
+
+
+def check_file(path: Path, lines, module_docs_only: bool):
+    problems = []
+    for lineno, line in enumerate(lines, 1):
+        if module_docs_only and not line.lstrip().startswith("//!"):
+            continue
+        refs = set(MD_TOKEN.findall(line))
+        if not module_docs_only:
+            links = MD_LINK.findall(line)
+            refs.update(m for m in links if not m.startswith(("http://", "https://")))
+        for ref in sorted(refs):
+            if not resolves(ref, path.parent):
+                problems.append(f"{path.relative_to(REPO)}:{lineno}: dangling reference '{ref}'")
+    return problems
+
+
+def main() -> int:
+    problems = []
+    for md in iter_markdown():
+        problems += check_file(md, md.read_text(encoding="utf-8").splitlines(), False)
+    for root in RUST_DOC_ROOTS:
+        base = REPO / root
+        if not base.is_dir():
+            continue
+        for rs in sorted(base.rglob("*.rs")):
+            if generated(rs.relative_to(REPO).parts):
+                continue
+            problems += check_file(rs, rs.read_text(encoding="utf-8").splitlines(), True)
+    if problems:
+        print(f"{len(problems)} dangling doc reference(s):", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print("docs links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
