@@ -22,9 +22,15 @@ ride a single-output executable (see rust/src/runtime/):
   feats_{model}.hlo.txt    (state, x[512,64])                 -> feats[512,H]
   loss_{model}.hlo.txt     (state, x[512,64], y[512]i32)      -> loss[]
 
-plus one k-center kernel per distinct feature width:
+plus, per distinct feature width, the k-center relax kernels — the flat
+single-center one and the blocked variant (B = kernels.kcenter.CENTER_BLOCK
+centers folded per launch, exported as the manifest global `kcenter_block`)
+— and one width-independent pair reduce whose f32[2] output is the blocked
+driver's only per-chunk readback:
 
-  kcenter_h{H}.hlo.txt     (feats[512,H], center[H], dists[512]) -> dists'
+  kcenter_h{H}.hlo.txt        (feats[512,H], center[H], dists[512])     -> dists'
+  kcenter_block_h{H}.hlo.txt  (feats[512,H], centers[B,H], dists[512])  -> dists'
+  kcenter_pair.hlo.txt        (dists[512]) -> [max_d, argmax_i as f32]
 
 The manifest (artifacts/manifest.txt) is a line-oriented key/value format so
 the Rust side needs no JSON/serde dependency.
@@ -136,7 +142,27 @@ def build_kcenter(out_dir: str, hidden: int):
         os.path.join(out_dir, f"kcenter_h{hidden}.hlo.txt"),
         return_tuple=False,
     )
-    print(f"  kcenter_h{hidden}")
+    lower_and_write(
+        lambda f, c, d: kcenter.kcenter_block_update(f, c, d),
+        (
+            spec((model.EVAL_BS, hidden)),
+            spec((kcenter.CENTER_BLOCK, hidden)),
+            spec((model.EVAL_BS,)),
+        ),
+        os.path.join(out_dir, f"kcenter_block_h{hidden}.hlo.txt"),
+        return_tuple=False,
+    )
+    print(f"  kcenter_h{hidden} + kcenter_block_h{hidden}")
+
+
+def build_kcenter_pair(out_dir: str):
+    lower_and_write(
+        lambda d: kcenter.kcenter_pair(d),
+        (spec((model.EVAL_BS,)),),
+        os.path.join(out_dir, "kcenter_pair.hlo.txt"),
+        return_tuple=False,
+    )
+    print("  kcenter_pair")
 
 
 def main():
@@ -159,6 +185,7 @@ def main():
 
     for hidden in sorted({model.ARCHS[a].hidden for _, a, _ in sets}):
         build_kcenter(args.out, hidden)
+    build_kcenter_pair(args.out)
 
     manifest = os.path.join(args.out, "manifest.txt")
     with open(manifest, "w") as f:
@@ -169,6 +196,7 @@ def main():
         f.write(f"momentum {model.MOMENTUM}\n")
         f.write(f"weight_decay {model.WEIGHT_DECAY}\n")
         f.write(f"chunk_steps {model.CHUNK_STEPS}\n")
+        f.write(f"kcenter_block {kcenter.CENTER_BLOCK}\n")
         for r in rows:
             f.write(
                 "model {name} arch {arch} classes {classes} hidden {hidden} "

@@ -11,6 +11,17 @@ center:
 That relaxation over the whole pool is the hot loop (|pool| × h per chosen
 center) and is the kernel below. Grid over row-tiles of the feature matrix;
 the feature width h (96–384) stays resident in lanes.
+
+Two launch granularities are exported:
+
+- :func:`kcenter_update` — one center per launch (the original flat path,
+  kept for the before/after benchmark sections);
+- :func:`kcenter_block_update` — a *block* of ``CENTER_BLOCK`` centers per
+  launch, folded inside the kernel, paired with :func:`kcenter_pair` (a
+  max+argmax reduce) so the Rust driver reads back one ``(best_d, best_i)``
+  pair per chunk instead of the full distance vector. ``min`` is
+  idempotent, so short blocks are padded by *repeating* a real center —
+  padding never perturbs a distance.
 """
 
 import jax
@@ -18,6 +29,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 ROW_BLOCK = 256
+
+# Centers folded per kcenter_block_update launch. Baked into the AOT
+# artifact shapes and exported through the manifest (`kcenter_block`), so
+# the Rust driver pads its center blocks to exactly this many rows.
+CENTER_BLOCK = 16
 
 
 def _pick_rows(m: int, preferred: int = ROW_BLOCK) -> int:
@@ -58,3 +74,58 @@ def kcenter_update(feats, center, dists):
         out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
         interpret=True,
     )(feats, center, dists)
+
+
+def _kcenter_block_kernel(feats_ref, centers_ref, dists_ref, out_ref):
+    f = feats_ref[...]        # (bm, h)
+    cs = centers_ref[...]     # (B, h) — whole block resident per tile
+    d = dists_ref[...]        # (bm,)
+    # B is a static shape: the loop unrolls at trace time into B fused
+    # relaxations, one launch instead of B.
+    for j in range(cs.shape[0]):
+        diff = f - cs[j][None, :]
+        d = jnp.minimum(d, jnp.sum(diff * diff, axis=-1))
+    out_ref[...] = d
+
+
+@jax.jit
+def kcenter_block_update(feats, centers, dists):
+    """Relax min-squared-distances against a block of centers in one launch.
+
+    feats: (M, h), centers: (B, h), dists: (M,) -> (M,) updated dists.
+    Equivalent to folding :func:`kcenter_update` over the block's rows;
+    repeated rows are harmless (min is idempotent), which is how callers
+    pad blocks shorter than B.
+    """
+    m, h = feats.shape
+    b = centers.shape[0]
+    bm = _pick_rows(m)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _kcenter_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((b, h), lambda i: (0, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(feats, centers, dists)
+
+
+@jax.jit
+def kcenter_pair(dists):
+    """Per-chunk (max distance, argmax index) as one f32[2] array.
+
+    The only host readback of the blocked k-center driver: 2 floats per
+    chunk per round instead of the full distance vector. Ties take the
+    *first* (lowest-index) maximum — jnp.argmax's documented behavior —
+    which the Rust host ref mirrors with a strict `>` scan. The index is
+    exact in f32 (chunk rows ≪ 2^24). Single-array output on purpose: the
+    PJRT build feeds back / reads only untupled results (see aot.py).
+    """
+    return jnp.stack(
+        [jnp.max(dists), jnp.argmax(dists).astype(jnp.float32)]
+    )

@@ -40,3 +40,14 @@ def kcenter_update_ref(feats, center, dists):
     diff = feats - center[None, :]
     d2 = jnp.sum(diff * diff, axis=-1)
     return jnp.minimum(dists, d2)
+
+
+def kcenter_block_update_ref(feats, centers, dists):
+    """Fold of kcenter_update_ref over the block's rows."""
+    for j in range(centers.shape[0]):
+        dists = kcenter_update_ref(feats, centers[j], dists)
+    return dists
+
+
+def kcenter_pair_ref(dists):
+    return jnp.stack([jnp.max(dists), jnp.argmax(dists).astype(jnp.float32)])

@@ -64,8 +64,34 @@ def test_all_artifact_files_exist_and_are_hlo_text():
             assert "HloModule" in head, path
     hiddens = {int(kv["hidden"]) for kv in m["models"].values()}
     for h in hiddens:
-        path = os.path.join(ART, f"kcenter_h{h}.hlo.txt")
-        assert os.path.exists(path), path
+        for stem in (f"kcenter_h{h}", f"kcenter_block_h{h}"):
+            path = os.path.join(ART, f"{stem}.hlo.txt")
+            assert os.path.exists(path), path
+    assert os.path.exists(os.path.join(ART, "kcenter_pair.hlo.txt"))
+
+
+def test_manifest_kcenter_block_matches_kernel_constant():
+    from compile.kernels import kcenter
+
+    m = read_manifest()
+    assert int(m["kcenter_block"]) == kcenter.CENTER_BLOCK
+
+
+def test_kcenter_block_artifact_shapes():
+    """The blocked relax must stay single-array-output (its dists feed back
+    device-side) and carry the (EVAL_BS, h) / (CENTER_BLOCK, h) inputs the
+    Rust driver pads to."""
+    from compile.kernels import kcenter
+
+    m = read_manifest()
+    h = min(int(kv["hidden"]) for kv in m["models"].values())
+    text = open(os.path.join(ART, f"kcenter_block_h{h}.hlo.txt")).read()
+    assert f"f32[{kcenter.CENTER_BLOCK},{h}]" in text
+    root_lines = [l for l in text.splitlines() if "ROOT" in l and "ENTRY" not in l]
+    assert any(f"f32[{model.EVAL_BS}]" in l for l in root_lines)
+    pair = open(os.path.join(ART, "kcenter_pair.hlo.txt")).read()
+    pair_roots = [l for l in pair.splitlines() if "ROOT" in l and "ENTRY" not in l]
+    assert any("f32[2]" in l for l in pair_roots)
 
 
 def test_train_artifact_mentions_expected_shapes():

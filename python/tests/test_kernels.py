@@ -193,3 +193,58 @@ def test_kcenter_zero_distance_to_own_center():
     d = jnp.full((32,), 1e9, jnp.float32)
     d = kcenter.kcenter_update(f, f[7], d)
     assert float(d[7]) == pytest.approx(0.0, abs=1e-5)
+
+
+@SET
+@given(
+    m=st.sampled_from([1, 64, 500, 512]),
+    h=st.sampled_from([8, 96, 192, 384]),
+    b=st.sampled_from([1, 3, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kcenter_block_matches_ref(m, h, b, seed):
+    rng = np.random.default_rng(seed)
+    f = rand(rng, m, h)
+    cs = rand(rng, b, h)
+    d = jnp.abs(rand(rng, m, scale=50.0))
+    np.testing.assert_allclose(
+        kcenter.kcenter_block_update(f, cs, d),
+        ref.kcenter_block_update_ref(f, cs, d),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kcenter_block_padding_by_repetition_is_identity(seed):
+    """The driver pads short blocks by repeating a center: min is
+    idempotent, so the padded block must relax exactly like the short one."""
+    rng = np.random.default_rng(seed)
+    f = rand(rng, 128, 96)
+    cs = rand(rng, 3, 96)
+    padded = jnp.concatenate(
+        [cs, jnp.broadcast_to(cs[-1], (kcenter.CENTER_BLOCK - 3, 96))]
+    )
+    d = jnp.abs(rand(rng, 128, scale=50.0))
+    np.testing.assert_array_equal(
+        kcenter.kcenter_block_update(f, padded, d),
+        kcenter.kcenter_block_update(f, cs, d),
+    )
+
+
+@SET
+@given(m=st.sampled_from([1, 100, 512]), seed=st.integers(0, 2**31 - 1))
+def test_kcenter_pair_matches_ref(m, seed):
+    rng = np.random.default_rng(seed)
+    d = jnp.abs(rand(rng, m, scale=50.0))
+    got = np.asarray(kcenter.kcenter_pair(d))
+    want = np.asarray(ref.kcenter_pair_ref(d))
+    np.testing.assert_array_equal(got, want)
+    i = int(got[1])
+    assert float(got[0]) == float(d[i])
+
+
+def test_kcenter_pair_ties_take_first_index():
+    d = jnp.asarray([1.0, 7.0, 7.0, 0.0], jnp.float32)
+    pair = np.asarray(kcenter.kcenter_pair(d))
+    assert pair[0] == 7.0 and pair[1] == 1.0

@@ -26,7 +26,11 @@ use mcal::experiments::common::{Ctx, Scale};
 use mcal::experiments::{fleet, table2};
 use mcal::runtime::{Engine, EnginePool, Manifest};
 
-fn bench_cells() {
+#[path = "util/json.rs"]
+mod json;
+use json::BenchReport;
+
+fn bench_cells(report: &mut BenchReport) {
     let datasets = ["fashion-syn", "cifar10-syn", "cifar100-syn"];
     let cores = fleet::default_jobs();
 
@@ -46,6 +50,12 @@ fn bench_cells() {
         );
         csvs.push(out.table2.to_csv());
         secs.push(wall);
+        report.section_with(
+            &format!("cells jobs={jobs}"),
+            wall * 1e3,
+            1,
+            &[("trajectories", out.trajectories.len() as f64)],
+        );
     }
 
     assert_eq!(
@@ -58,9 +68,15 @@ fn bench_cells() {
         secs[0],
         secs[1]
     );
+    report.section_with(
+        "cells speedup",
+        0.0,
+        1,
+        &[("speedup", secs[0] / secs[1].max(1e-9)), ("cores", cores as f64)],
+    );
 }
 
-fn bench_probe_phase() {
+fn bench_probe_phase(report: &mut BenchReport) {
     let engine = Engine::cpu().unwrap();
     let manifest = Manifest::load("artifacts").unwrap();
     let p = preset("cifar10-syn", 77).unwrap();
@@ -137,6 +153,14 @@ fn bench_probe_phase() {
         serial_wall,
         par_wall
     );
+    report.section("arch-select serial", serial_wall * 1e3, 1);
+    report.section(&format!("arch-select jobs={lanes}"), par_wall * 1e3, 1);
+    report.section_with(
+        "arch-select speedup",
+        0.0,
+        1,
+        &[("speedup", serial_wall / par_wall.max(1e-9)), ("lanes", lanes as f64)],
+    );
 }
 
 fn main() {
@@ -144,6 +168,8 @@ fn main() {
         eprintln!("artifacts not built; run `make artifacts` first");
         std::process::exit(1);
     }
-    bench_cells();
-    bench_probe_phase();
+    let mut report = BenchReport::new("fleet");
+    bench_cells(&mut report);
+    bench_probe_phase(&mut report);
+    report.write("BENCH_fleet.json", None);
 }

@@ -3,6 +3,14 @@
 //! perf work on the runtime (docs/ARCHITECTURE.md, Layer 2) has stable
 //! numbers to diff against.
 //!
+//! Besides the stdout table, every section is written to
+//! `BENCH_hotpath.json` (per-section ms/iter + per-iter engine execute
+//! counts + final `engine.stats()` totals) so CI can archive the numbers
+//! as a machine-readable artifact and diffs don't depend on log scraping.
+//! The k-center sections are the gen-6 before/after pair: the flat
+//! one-center-per-launch path vs the production two-level blocked path on
+//! the same 50k-row pool.
+//!
 //! Run: `cargo bench --offline` (or `--bench bench_hotpath`).
 
 use std::sync::Arc;
@@ -14,9 +22,25 @@ use mcal::model::TrainSchedule;
 use mcal::powerlaw::fit_auto;
 use mcal::prng::Pcg32;
 use mcal::runtime::{Engine, Manifest, ModelSession, Scores};
+use mcal::sampling::kcenter::{self, KcenterKernels};
 use mcal::sampling::{rank_for_machine_labeling, select_for_training, Metric};
 
-fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+#[path = "util/json.rs"]
+mod json;
+use json::BenchReport;
+
+/// Time `f` (one warmup + `iters` timed runs), print the row, and record
+/// the section — with the exact per-iter engine execute count (the
+/// workload is deterministic, so delta/(iters+1) is exact) — into the
+/// JSON report.
+fn time<F: FnMut()>(
+    report: &mut BenchReport,
+    engine: &Engine,
+    name: &str,
+    iters: usize,
+    mut f: F,
+) -> f64 {
+    let exe0 = engine.stats().executes;
     // Warmup.
     f();
     let t0 = Instant::now();
@@ -24,8 +48,16 @@ fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
         f();
     }
     let per = t0.elapsed().as_secs_f64() / iters as f64;
-    println!("{name:<46} {:>12.3} ms/iter", per * 1e3);
+    let exe_per = (engine.stats().executes - exe0) as f64 / (iters + 1) as f64;
+    println!("{name:<46} {:>12.3} ms/iter {exe_per:>8.0} exec/iter", per * 1e3);
+    report.section_with(name, per * 1e3, iters, &[("executes", exe_per)]);
     per
+}
+
+/// 50k-row synthetic penultimate features for the k-center sections.
+fn kcenter_feats(n: usize, h: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed, seed);
+    (0..n * h).map(|_| rng.next_f32() * 4.0 - 2.0).collect()
 }
 
 fn main() {
@@ -35,6 +67,7 @@ fn main() {
     }
     let engine = Engine::cpu().unwrap();
     let manifest = Manifest::load("artifacts").unwrap();
+    let mut report = BenchReport::new("hotpath");
     let ds = SynthSpec {
         name: "bench".into(),
         num_classes: 10,
@@ -65,6 +98,12 @@ fn main() {
             steps as f64 / dt,
             steps as f64 * manifest.train_bs as f64 / dt
         );
+        report.section_with(
+            &format!("train[{arch}] 4 epochs x 4096"),
+            dt * 1e3,
+            1,
+            &[("steps_per_sec", steps as f64 / dt)],
+        );
     }
 
     // --- pool scoring throughput -----------------------------------------
@@ -80,6 +119,49 @@ fn main() {
             ds.len(),
             ds.len() as f64 / dt
         );
+        report.section_with(
+            &format!("predict[{arch}] full pool"),
+            dt * 1e3,
+            1,
+            &[("samples_per_sec", ds.len() as f64 / dt)],
+        );
+    }
+
+    // --- k-center selection: flat (before) vs two-level (after) -----------
+    // Same 50k-row pool, 64 labeled init centers, k=16 — the gen-6
+    // before/after pair. The execute counters are the point: flat launches
+    // one relax per (center × chunk), two-level O(pool/chunk) block
+    // launches plus a 2-float readback per local round.
+    {
+        let h = manifest.models["cnn18_c10"].hidden;
+        let (kn, kk) = (50_000usize, 16usize);
+        let pool_f = kcenter_feats(kn, h, 9);
+        let lab_f = kcenter_feats(64, h, 10);
+        let flat_exe = engine.load(manifest.kcenter_artifact(h)).unwrap();
+        let block = engine.load(manifest.kcenter_block_artifact(h)).unwrap();
+        let pair = engine.load(manifest.kcenter_pair_artifact()).unwrap();
+        let kernels =
+            KcenterKernels { block: &block, pair: &pair, block_b: manifest.kcenter_block };
+
+        time(&mut report, &engine, "kcenter flat n=50k k=16 [before]", 2, || {
+            let picks = kcenter::select_flat(
+                &engine,
+                &flat_exe,
+                manifest.eval_bs,
+                h,
+                &pool_f,
+                &lab_f,
+                kk,
+            )
+            .unwrap();
+            assert_eq!(picks.len(), kk);
+        });
+        time(&mut report, &engine, "kcenter two-level n=50k k=16 [after]", 2, || {
+            let picks =
+                kcenter::select(&engine, &kernels, manifest.eval_bs, h, &pool_f, &lab_f, kk)
+                    .unwrap();
+            assert_eq!(picks.len(), kk);
+        });
     }
 
     // --- selection / ranking ----------------------------------------------
@@ -91,12 +173,12 @@ fn main() {
         maxprob: (0..n).map(|_| rng.next_f32()).collect(),
         pred: (0..n).map(|_| rng.below(10)).collect(),
     };
-    time("select_for_training(margin, k=2000, n=200k)", 20, || {
+    time(&mut report, &engine, "select_for_training(margin, k=2000, n=200k)", 20, || {
         let mut r = Pcg32::new(3, 3);
         let sel = select_for_training(Metric::Margin, &scores, 2000, &mut r);
         assert_eq!(sel.len(), 2000);
     });
-    time("rank_for_machine_labeling(n=200k)", 10, || {
+    time(&mut report, &engine, "rank_for_machine_labeling(n=200k)", 10, || {
         let r = rank_for_machine_labeling(&scores);
         assert_eq!(r.len(), n);
     });
@@ -108,7 +190,7 @@ fn main() {
             (b, (2.0 * b.powf(-0.4) * (-b / 30_000.0).exp()).max(1e-6))
         })
         .collect();
-    time("powerlaw fit_auto (40 pts) x 20 thetas", 50, || {
+    time(&mut report, &engine, "powerlaw fit_auto (40 pts) x 20 thetas", 50, || {
         for _ in 0..20 {
             let _ = fit_auto(&pts, None).unwrap();
         }
@@ -119,7 +201,7 @@ fn main() {
     let law = mcal::powerlaw::PowerLaw { ln_alpha: 0.5f64.ln(), gamma: 0.4, inv_k: 1.0 / 30_000.0 };
     let fits: Vec<Option<mcal::powerlaw::PowerLaw>> = grid.iter().map(|_| Some(law)).collect();
     let cm = mcal::cost::FittedCostModel { a: 0.001, b: 0.5 };
-    time("search_min_cost (60 B x 20 theta grid)", 200, || {
+    time(&mut report, &engine, "search_min_cost (60 B x 20 theta grid)", 200, || {
         let r = mcal::cost::search_min_cost(&mcal::cost::SearchInputs {
             x_total: 60_000,
             test_size: 3_000,
@@ -142,7 +224,7 @@ fn main() {
         ledger,
     );
     let idx: Vec<usize> = (0..10_000).collect();
-    time("annotation label_batch (10k labels, 4 workers)", 10, || {
+    time(&mut report, &engine, "annotation label_batch (10k labels, 4 workers)", 10, || {
         use mcal::annotation::AnnotationService;
         let l = svc.label_batch(&ds, &idx).unwrap();
         assert_eq!(l.len(), 10_000);
@@ -157,4 +239,5 @@ fn main() {
         st.compile_secs,
         st.h2d_bytes as f64 / 1e6
     );
+    report.write("BENCH_hotpath.json", Some(&st));
 }

@@ -1,0 +1,133 @@
+//! Minimal hand-rolled JSON emitter for the bench harnesses (serde is not
+//! in the offline vendor set). Shared by `bench_hotpath` and `bench_fleet`
+//! via `#[path]` — this file lives in a subdirectory so Cargo never infers
+//! it as a bench target of its own.
+//!
+//! Output shape (consumed by CI, uploaded as a workflow artifact):
+//!
+//! ```json
+//! {
+//!   "bench": "hotpath",
+//!   "sections": [
+//!     {"name": "...", "ms_per_iter": 1.5, "iters": 20,
+//!      "counters": {"executes": 7429.0}},
+//!     ...
+//!   ],
+//!   "engine": {"compiles": 12, "compile_secs": 3.1, "executes": 99,
+//!              "execute_secs": 8.2, "h2d_bytes": 123456}
+//! }
+//! ```
+
+use mcal::runtime::EngineStats;
+
+pub struct Section {
+    name: String,
+    ms_per_iter: f64,
+    iters: usize,
+    counters: Vec<(String, f64)>,
+}
+
+pub struct BenchReport {
+    bench: String,
+    sections: Vec<Section>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), sections: Vec::new() }
+    }
+
+    // Not every bench uses every emitter (this module compiles once per
+    // bench target).
+    #[allow(dead_code)]
+    pub fn section(&mut self, name: &str, ms_per_iter: f64, iters: usize) {
+        self.section_with(name, ms_per_iter, iters, &[]);
+    }
+
+    pub fn section_with(
+        &mut self,
+        name: &str,
+        ms_per_iter: f64,
+        iters: usize,
+        counters: &[(&str, f64)],
+    ) {
+        self.sections.push(Section {
+            name: name.to_string(),
+            ms_per_iter,
+            iters,
+            counters: counters.iter().map(|&(k, v)| (k.to_string(), v)).collect(),
+        });
+    }
+
+    pub fn to_json(&self, engine: Option<&EngineStats>) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{{\n  \"bench\": {},\n  \"sections\": [", str_lit(&self.bench)));
+        for (i, s) in self.sections.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"name\": {}, \"ms_per_iter\": {}, \"iters\": {}",
+                str_lit(&s.name),
+                num(s.ms_per_iter),
+                s.iters
+            ));
+            if !s.counters.is_empty() {
+                out.push_str(", \"counters\": {");
+                for (j, (k, v)) in s.counters.iter().enumerate() {
+                    if j > 0 {
+                        out.push_str(", ");
+                    }
+                    out.push_str(&format!("{}: {}", str_lit(k), num(*v)));
+                }
+                out.push('}');
+            }
+            out.push('}');
+        }
+        out.push_str("\n  ]");
+        if let Some(st) = engine {
+            out.push_str(&format!(
+                ",\n  \"engine\": {{\"compiles\": {}, \"compile_secs\": {}, \
+                 \"executes\": {}, \"execute_secs\": {}, \"h2d_bytes\": {}}}",
+                st.compiles,
+                num(st.compile_secs),
+                st.executes,
+                num(st.execute_secs),
+                st.h2d_bytes
+            ));
+        }
+        out.push_str("\n}\n");
+        out
+    }
+
+    /// Serialize and write to `path`, then announce the artifact on stdout.
+    pub fn write(&self, path: &str, engine: Option<&EngineStats>) {
+        std::fs::write(path, self.to_json(engine)).unwrap();
+        println!("wrote {path}");
+    }
+}
+
+fn str_lit(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Finite f64 → JSON number (JSON has no NaN/Inf; clamp those to 0).
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}

@@ -50,7 +50,6 @@ use crate::dataset::Dataset;
 use crate::metrics;
 use crate::model::ArchKind;
 use crate::runtime::{Engine, EnginePool, Manifest, WorkerScope};
-use crate::sampling;
 use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
@@ -245,29 +244,14 @@ impl<'e> LabelingDriver<'e> {
 
 /// Machine-label the `take` most confident pool samples under the current
 /// model (the paper's L(.) ranking). Returns (dataset indices, predicted
-/// labels), aligned. `take == 0` performs no inference.
+/// labels), aligned. Thin alias for [`LabelingEnv::machine_label_top`]
+/// (which streams the full-pool scoring and caches the result) so the
+/// policy modules keep their historical call site.
 pub(super) fn machine_label_top(
     env: &mut LabelingEnv<'_>,
     take: usize,
 ) -> Result<(Vec<usize>, Vec<u32>)> {
-    if take == 0 || env.pool.is_empty() {
-        return Ok((Vec::new(), Vec::new()));
-    }
-    // Full-pool scoring is the single biggest batch of a run; shard it
-    // across the env's pool lanes when one is attached.
-    let pool_idx = std::mem::take(&mut env.pool);
-    let scores = env.predict_indices(&pool_idx);
-    env.pool = pool_idx;
-    let scores = scores?;
-    let ranked = sampling::rank_for_machine_labeling(&scores);
-    let take = take.min(ranked.len());
-    let mut idx = Vec::with_capacity(take);
-    let mut preds = Vec::with_capacity(take);
-    for &p in &ranked[..take] {
-        idx.push(env.pool[p]);
-        preds.push(scores.pred[p]);
-    }
-    Ok((idx, preds))
+    env.machine_label_top(take)
 }
 
 /// Shared tail of every report-producing run: human-label everything not

@@ -43,6 +43,10 @@ pub struct Manifest {
     pub weight_decay: f32,
     /// Minibatches per train_chunk execute (K in the artifact shapes).
     pub chunk_steps: usize,
+    /// Centers folded per `kcenter_block_h{H}` launch (B in the artifact
+    /// shapes). Defaults to 16 when the global is absent (pre-gen-6
+    /// manifests).
+    pub kcenter_block: usize,
     pub models: HashMap<String, ModelMeta>,
 }
 
@@ -132,6 +136,10 @@ impl Manifest {
             chunk_steps: get("chunk_steps")?
                 .parse()
                 .map_err(|_| Error::Manifest("chunk_steps".into()))?,
+            kcenter_block: match globals.get("kcenter_block") {
+                Some(v) => v.parse().map_err(|_| Error::Manifest("kcenter_block".into()))?,
+                None => 16,
+            },
             models,
         })
     }
@@ -152,6 +160,14 @@ impl Manifest {
 
     pub fn kcenter_artifact(&self, hidden: usize) -> PathBuf {
         self.dir.join(format!("kcenter_h{hidden}.hlo.txt"))
+    }
+
+    pub fn kcenter_block_artifact(&self, hidden: usize) -> PathBuf {
+        self.dir.join(format!("kcenter_block_h{hidden}.hlo.txt"))
+    }
+
+    pub fn kcenter_pair_artifact(&self) -> PathBuf {
+        self.dir.join("kcenter_pair.hlo.txt")
     }
 }
 
@@ -192,6 +208,20 @@ model cnn18_c10 arch cnn18 classes 10 hidden 96 depth 3 residual 0 params 35146 
             PathBuf::from("/arts/train_res18_c10.hlo.txt")
         );
         assert_eq!(m.kcenter_artifact(192), PathBuf::from("/arts/kcenter_h192.hlo.txt"));
+        assert_eq!(
+            m.kcenter_block_artifact(96),
+            PathBuf::from("/arts/kcenter_block_h96.hlo.txt")
+        );
+        assert_eq!(m.kcenter_pair_artifact(), PathBuf::from("/arts/kcenter_pair.hlo.txt"));
+    }
+
+    #[test]
+    fn kcenter_block_defaults_without_global_and_parses_with() {
+        let m = Manifest::parse(SAMPLE, PathBuf::new()).unwrap();
+        assert_eq!(m.kcenter_block, 16);
+        let with = format!("{SAMPLE}kcenter_block 32\n");
+        let m = Manifest::parse(&with, PathBuf::new()).unwrap();
+        assert_eq!(m.kcenter_block, 32);
     }
 
     #[test]

@@ -14,10 +14,12 @@
 pub mod manifest;
 pub mod pool;
 pub mod session;
+pub mod sink;
 
 pub use manifest::{Manifest, ModelMeta};
 pub use pool::{EnginePool, TaskReport, WorkerScope};
 pub use session::{ChunkScorer, ModelSession, Scores};
+pub use sink::{ScoreKey, ScoreSink, TopK};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -14,6 +14,7 @@ use crate::prng::Pcg32;
 use crate::{Error, Result};
 
 use super::manifest::{Manifest, ModelMeta};
+use super::sink::ScoreSink;
 use super::Engine;
 
 /// Per-sample uncertainty scores, aligned with the query index order.
@@ -262,33 +263,38 @@ impl<'e> ModelSession<'e> {
             maxprob: Vec::with_capacity(indices.len()),
             pred: Vec::with_capacity(indices.len()),
         };
-        let state = self.state.take().ok_or_else(|| {
-            Error::Coordinator("session state uninitialized".into())
-        })?;
-        let result = self.predict_inner(&state, ds, indices, &mut scores);
-        self.state = Some(state);
-        result?;
+        self.predict_into(ds, indices, 0, &mut scores)?;
         Ok(scores)
     }
 
-    fn predict_inner(
+    /// Streaming variant of [`predict`](ModelSession::predict): fold score
+    /// chunks into `sink` without materializing a query-sized [`Scores`].
+    /// `base` is added to every position handed to the sink (the query's
+    /// offset when scoring one shard of a larger index list).
+    pub fn predict_into(
         &mut self,
-        state: &xla::PjRtBuffer,
         ds: &Dataset,
         indices: &[usize],
-        scores: &mut Scores,
+        base: usize,
+        sink: &mut dyn ScoreSink,
     ) -> Result<()> {
-        score_chunks(
+        let state = self.state.take().ok_or_else(|| {
+            Error::Coordinator("session state uninitialized".into())
+        })?;
+        let result = score_chunks(
             self.engine,
             &self.predict_exe,
-            state,
+            &state,
             ds,
             indices,
             self.eval_bs,
             self.feat_dim,
             &mut self.eval_host,
-            scores,
-        )
+            base,
+            sink,
+        );
+        self.state = Some(state);
+        result
     }
 
     /// Host snapshot of the state vector (`[2P]` flat params + momentum).
@@ -392,10 +398,10 @@ impl<'e> ModelSession<'e> {
 
 /// The shared scoring loop of [`ModelSession::predict`] and
 /// [`ChunkScorer::score`]: run `indices` through the predict executable in
-/// `eval_bs`-sized padded batches against `state`, appending to `scores`.
-/// Both callers walk identical batch boundaries, which is what makes
-/// pool-sharded scoring bit-identical to the serial path (see
-/// [`crate::runtime::pool`]).
+/// `eval_bs`-sized padded batches against `state`, streaming each batch
+/// into `sink` (positions offset by `base`). Both callers walk identical
+/// batch boundaries, which is what makes pool-sharded scoring bit-identical
+/// to the serial path (see [`crate::runtime::pool`]).
 #[allow(clippy::too_many_arguments)]
 fn score_chunks(
     engine: &Engine,
@@ -406,8 +412,10 @@ fn score_chunks(
     eval_bs: usize,
     feat_dim: usize,
     host: &mut [f32],
-    scores: &mut Scores,
+    base: usize,
+    sink: &mut dyn ScoreSink,
 ) -> Result<()> {
+    let mut offset = 0usize;
     for chunk in indices.chunks(eval_bs) {
         let real = ds.gather_padded(chunk, eval_bs, host);
         let x = engine.buf_f32(host, &[eval_bs, feat_dim])?;
@@ -423,11 +431,20 @@ fn score_chunks(
         let margin = parts[1].to_vec::<f32>()?;
         let entropy = parts[2].to_vec::<f32>()?;
         let maxprob = parts[3].to_vec::<f32>()?;
-        let pred = parts[4].to_vec::<i32>()?;
-        scores.margin.extend_from_slice(&margin[..real]);
-        scores.entropy.extend_from_slice(&entropy[..real]);
-        scores.maxprob.extend_from_slice(&maxprob[..real]);
-        scores.pred.extend(pred[..real].iter().map(|&p| p as u32));
+        let pred: Vec<u32> = parts[4]
+            .to_vec::<i32>()?
+            .iter()
+            .take(real)
+            .map(|&p| p as u32)
+            .collect();
+        sink.chunk(
+            base + offset,
+            &margin[..real],
+            &entropy[..real],
+            &maxprob[..real],
+            &pred,
+        );
+        offset += real;
     }
     Ok(())
 }
@@ -477,6 +494,21 @@ impl<'e> ChunkScorer<'e> {
             maxprob: Vec::with_capacity(indices.len()),
             pred: Vec::with_capacity(indices.len()),
         };
+        self.score_into(ds, indices, 0, &mut scores)?;
+        Ok(scores)
+    }
+
+    /// Streaming variant of [`score`](ChunkScorer::score): fold chunks into
+    /// `sink`, positions offset by `base`. Pool lanes scoring disjoint
+    /// shards of one query pass the shard's global offset so the merged
+    /// sink ranks true query positions.
+    pub fn score_into(
+        &mut self,
+        ds: &Dataset,
+        indices: &[usize],
+        base: usize,
+        sink: &mut dyn ScoreSink,
+    ) -> Result<()> {
         score_chunks(
             self.engine,
             &self.exe,
@@ -486,8 +518,8 @@ impl<'e> ChunkScorer<'e> {
             self.eval_bs,
             self.feat_dim,
             &mut self.host,
-            &mut scores,
-        )?;
-        Ok(scores)
+            base,
+            sink,
+        )
     }
 }

@@ -1,0 +1,323 @@
+//! Streaming score consumers for the chunked predict path.
+//!
+//! `score_chunks` (the shared loop behind [`super::ModelSession::predict`]
+//! and [`super::ChunkScorer::score`]) walks a query in `eval_bs`-sized
+//! batches. A [`ScoreSink`] receives each batch as it lands, so consumers
+//! that only need an aggregate — the acquisition top-k, the
+//! machine-labeling prefix — fold over the stream in O(k) memory instead of
+//! materializing a pool-sized [`Scores`].
+//!
+//! Determinism: a sink sees `(base, slices)` pairs whose `base` is the
+//! chunk's offset into the *query* order, never a lane id or arrival time.
+//! [`TopK`] keeps a total order on `(key, position)` (positions are
+//! distinct), so folding a query shard-by-shard and [`TopK::absorb`]ing the
+//! shard sinks in any order yields the same winners as one serial fold —
+//! the same bit-identical-across-`--jobs` contract the rest of the runtime
+//! holds.
+
+use std::collections::BinaryHeap;
+
+use super::session::Scores;
+use crate::sampling::Metric;
+
+/// Consumer of score chunks. `base` is the chunk's starting position in the
+/// query index order; all slices share one length (the chunk's real rows).
+pub trait ScoreSink {
+    fn chunk(
+        &mut self,
+        base: usize,
+        margin: &[f32],
+        entropy: &[f32],
+        maxprob: &[f32],
+        pred: &[u32],
+    );
+}
+
+/// The materializing sink: appends every chunk, reproducing the classic
+/// pool-sized [`Scores`] (positions implicit in append order, so chunks
+/// must arrive in query order — which `score_chunks` guarantees).
+impl ScoreSink for Scores {
+    fn chunk(
+        &mut self,
+        _base: usize,
+        margin: &[f32],
+        entropy: &[f32],
+        maxprob: &[f32],
+        pred: &[u32],
+    ) {
+        self.margin.extend_from_slice(margin);
+        self.entropy.extend_from_slice(entropy);
+        self.maxprob.extend_from_slice(maxprob);
+        self.pred.extend_from_slice(pred);
+    }
+}
+
+/// Ranking key a [`TopK`] folds under. Keys are oriented so *ascending*
+/// `(key, position)` order reproduces the corresponding materialized
+/// ranking exactly:
+///
+/// - the acquisition keys match [`crate::sampling::select_for_training`]'s
+///   `smallest_k` orders (margin / −entropy / maxprob ascending);
+/// - [`ScoreKey::NegMargin`] matches
+///   [`crate::sampling::rank_for_machine_labeling`] (margin descending) —
+///   negation is order-reversing and IEEE-equality-preserving (−0.0 == 0.0),
+///   so ties still resolve by position exactly as the sort does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreKey {
+    Margin,
+    NegEntropy,
+    Maxprob,
+    /// Margin descending — the machine-labeling confidence ranking.
+    NegMargin,
+}
+
+impl ScoreKey {
+    /// Key for an acquisition metric; `None` for metrics that do not rank
+    /// by per-sample score (random, k-center).
+    pub fn for_metric(metric: Metric) -> Option<ScoreKey> {
+        match metric {
+            Metric::Margin => Some(ScoreKey::Margin),
+            Metric::Entropy => Some(ScoreKey::NegEntropy),
+            Metric::LeastConfidence => Some(ScoreKey::Maxprob),
+            Metric::Random | Metric::KCenter => None,
+        }
+    }
+
+    fn eval(self, margin: f32, entropy: f32, maxprob: f32) -> f32 {
+        match self {
+            ScoreKey::Margin => margin,
+            ScoreKey::NegEntropy => -entropy,
+            ScoreKey::Maxprob => maxprob,
+            ScoreKey::NegMargin => -margin,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    key: f32,
+    pos: usize,
+    pred: u32,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key
+            .partial_cmp(&other.key)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.pos.cmp(&other.pos))
+    }
+}
+
+/// Streaming top-k: keeps the `k` smallest `(key, position)` entries seen
+/// so far (a size-k max-heap), in O(k) memory for any query length.
+#[derive(Debug)]
+pub struct TopK {
+    k: usize,
+    key: ScoreKey,
+    heap: BinaryHeap<Entry>,
+}
+
+impl TopK {
+    pub fn new(k: usize, key: ScoreKey) -> TopK {
+        TopK {
+            k,
+            key,
+            heap: BinaryHeap::with_capacity(k + 1),
+        }
+    }
+
+    /// Fold another sink (e.g. one lane's shard fold) into this one. Keys
+    /// must match; positions are assumed distinct across the two.
+    pub fn absorb(&mut self, other: TopK) {
+        debug_assert_eq!(self.key, other.key);
+        for e in other.heap {
+            self.push(e);
+        }
+    }
+
+    fn push(&mut self, e: Entry) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(e);
+        } else if e < *self.heap.peek().expect("non-empty at capacity") {
+            self.heap.push(e);
+            self.heap.pop();
+        }
+    }
+
+    /// Winners as `(position, pred)` ascending in `(key, position)` — the
+    /// same order the materialized ranking would list its first k entries.
+    pub fn into_sorted(self) -> Vec<(usize, u32)> {
+        let mut v = self.heap.into_vec();
+        v.sort_unstable();
+        v.into_iter().map(|e| (e.pos, e.pred)).collect()
+    }
+}
+
+impl ScoreSink for TopK {
+    fn chunk(
+        &mut self,
+        base: usize,
+        margin: &[f32],
+        entropy: &[f32],
+        maxprob: &[f32],
+        pred: &[u32],
+    ) {
+        for i in 0..pred.len() {
+            self.push(Entry {
+                key: self.key.eval(margin[i], entropy[i], maxprob[i]),
+                pos: base + i,
+                pred: pred[i],
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::{rank_for_machine_labeling, select_for_training};
+
+    fn feed(sink: &mut TopK, s: &Scores, base: usize, chunk: usize) {
+        let n = s.len();
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            sink.chunk(
+                base + lo,
+                &s.margin[lo..hi],
+                &s.entropy[lo..hi],
+                &s.maxprob[lo..hi],
+                &s.pred[lo..hi],
+            );
+            lo = hi;
+        }
+    }
+
+    fn synth(n: usize, seed: u64) -> Scores {
+        let mut rng = crate::prng::Pcg32::new(seed, 77);
+        let mut s = Scores::default();
+        for i in 0..n {
+            // Coarse quantization forces plenty of exact ties.
+            s.margin.push((rng.below(50) as f32) / 50.0);
+            s.entropy.push((rng.below(40) as f32) / 10.0);
+            s.maxprob.push((rng.below(50) as f32) / 50.0);
+            s.pred.push((i % 10) as u32);
+        }
+        s
+    }
+
+    #[test]
+    fn topk_matches_select_for_training_orders() {
+        let s = synth(500, 3);
+        let mut rng = crate::prng::Pcg32::new(0, 0);
+        for (metric, key) in [
+            (Metric::Margin, ScoreKey::Margin),
+            (Metric::Entropy, ScoreKey::NegEntropy),
+            (Metric::LeastConfidence, ScoreKey::Maxprob),
+        ] {
+            let want = select_for_training(metric, &s, 32, &mut rng);
+            let mut sink = TopK::new(32, key);
+            feed(&mut sink, &s, 0, 128);
+            let got: Vec<usize> = sink.into_sorted().iter().map(|&(p, _)| p).collect();
+            assert_eq!(got, want, "{metric:?}");
+        }
+    }
+
+    #[test]
+    fn topk_negmargin_matches_machine_ranking_prefix() {
+        let s = synth(400, 9);
+        let want: Vec<usize> = rank_for_machine_labeling(&s)[..25].to_vec();
+        let mut sink = TopK::new(25, ScoreKey::NegMargin);
+        feed(&mut sink, &s, 0, 97);
+        let got: Vec<usize> = sink.into_sorted().iter().map(|&(p, _)| p).collect();
+        assert_eq!(got, want);
+        // Preds ride along with their positions.
+        let mut sink = TopK::new(25, ScoreKey::NegMargin);
+        feed(&mut sink, &s, 0, 97);
+        for (p, pred) in sink.into_sorted() {
+            assert_eq!(pred, s.pred[p]);
+        }
+    }
+
+    #[test]
+    fn absorb_in_any_lane_order_matches_serial_fold() {
+        let s = synth(600, 11);
+        let mut serial = TopK::new(40, ScoreKey::Margin);
+        feed(&mut serial, &s, 0, 64);
+        let want = serial.into_sorted();
+
+        // Split into three uneven shards, fold each, merge out of order.
+        let cuts = [(0usize, 250usize), (250, 470), (470, 600)];
+        let mut shards: Vec<TopK> = cuts
+            .iter()
+            .map(|&(lo, hi)| {
+                let mut t = TopK::new(40, ScoreKey::Margin);
+                let sub = Scores {
+                    margin: s.margin[lo..hi].to_vec(),
+                    entropy: s.entropy[lo..hi].to_vec(),
+                    maxprob: s.maxprob[lo..hi].to_vec(),
+                    pred: s.pred[lo..hi].to_vec(),
+                };
+                feed(&mut t, &sub, lo, 53);
+                t
+            })
+            .collect();
+        let mut merged = shards.remove(2);
+        merged.absorb(shards.remove(0));
+        merged.absorb(shards.remove(0));
+        assert_eq!(merged.into_sorted(), want);
+    }
+
+    #[test]
+    fn topk_keeps_ties_by_position_and_handles_small_k() {
+        let s = Scores {
+            margin: vec![0.5, 0.5, 0.5, 0.1],
+            entropy: vec![1.0; 4],
+            maxprob: vec![0.5; 4],
+            pred: vec![7, 8, 9, 1],
+        };
+        let mut sink = TopK::new(2, ScoreKey::Margin);
+        feed(&mut sink, &s, 0, 2);
+        assert_eq!(sink.into_sorted(), vec![(3, 1), (0, 7)]);
+        let mut zero = TopK::new(0, ScoreKey::Margin);
+        feed(&mut zero, &s, 0, 4);
+        assert!(zero.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn scores_sink_appends_in_order() {
+        let s = synth(100, 5);
+        let mut out = Scores::default();
+        let n = s.len();
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + 33).min(n);
+            ScoreSink::chunk(
+                &mut out,
+                lo,
+                &s.margin[lo..hi],
+                &s.entropy[lo..hi],
+                &s.maxprob[lo..hi],
+                &s.pred[lo..hi],
+            );
+            lo = hi;
+        }
+        assert_eq!(out.margin, s.margin);
+        assert_eq!(out.pred, s.pred);
+    }
+}

@@ -2,10 +2,35 @@
 //!
 //! Greedy 2-approximation of the k-center problem in penultimate-feature
 //! space: repeatedly pick the pool point farthest from all chosen centers.
-//! The hot loop — relaxing every pool point's min-distance against the new
-//! center — runs on the L1 Pallas kernel (`kcenter_h{H}.hlo.txt`), with the
-//! pool's feature chunks uploaded to the device once and the per-chunk
-//! distance vectors kept device-resident across rounds.
+//!
+//! Two device paths are kept:
+//!
+//! - [`select`] — the production *two-level* path (gen 6). The pool is cut
+//!   into fixed-width logical shards of `chunk_rows` rows (the artifact chunk
+//!   width, an algorithm constant — NOT the lane count). Each shard is
+//!   uploaded once, relaxed against a block of init centers per launch
+//!   (`kcenter_block_h{H}` folds `block_b` centers device-side), then runs a
+//!   short *local* greedy whose only readback is one `(best_d, best_i)` f32
+//!   pair per round (`kcenter_pair`). The union of per-shard candidates is
+//!   then refined by an exact host-side greedy. Launches scale as
+//!   O(n/c · (q + L/b)) — linear in the pool, no n·k term — and shards are
+//!   processed one at a time, so device residency is one shard's features
+//!   regardless of pool size (out-of-core).
+//! - [`select_flat`] — the original flat path (one center per launch, full
+//!   distance-vector readback per chunk per round), kept for the
+//!   before/after benchmark sections in `benches/bench_hotpath.rs`.
+//!
+//! Determinism contract (gen 6): results depend only on
+//! `(chunk_rows, block_b, pool_feats, labeled_feats, k)` — never on lane
+//! count or launch interleaving. All argmax ties resolve to the smallest
+//! global pool index ([`kcenter_pair`'s first-occurrence `jnp.argmax`
+//! locally, and a strict `>` ascending scan in the host refine). Picks are
+//! *distinct*: selection stops early once the farthest remaining point has
+//! distance 0 (zero added coverage), so duplicate positions can never be
+//! emitted — callers may receive fewer than `k` picks on degenerate pools.
+//! [`select_ref`] runs the identical two-level algorithm pure-host and is
+//! pick-for-pick interchangeable on well-separated data (device and host
+//! differ only in f32 reduction order).
 //!
 //! Initialization uses (a subsample of) the already-labeled set as existing
 //! centers, so new picks cover regions the labeled set misses.
@@ -17,12 +42,260 @@ use crate::{Error, Result};
 /// O(|B|·|pool|·h); a subsample preserves coverage at bounded cost).
 const MAX_INIT_CENTERS: usize = 256;
 
-/// Greedy k-center selection.
+/// Large finite sentinel instead of +inf to stay safe in f32 kernel
+/// arithmetic. Shared by the device path, the host refine, and
+/// [`select_ref`] so the three agree bit-for-bit on uninitialized
+/// distances.
+const BIG: f32 = 1e30;
+
+/// Cap on the per-shard local greedy length when `k / n_shards` is small.
+const MAX_LOCAL_ROUNDS: usize = 8;
+
+/// The two executables of the blocked k-center path plus the block width
+/// their shapes were lowered with (manifest global `kcenter_block`).
+pub struct KcenterKernels<'a> {
+    /// `kcenter_block_h{H}`: (feats[c,h], centers[b,h], dists[c]) -> dists'.
+    pub block: &'a xla::PjRtLoadedExecutable,
+    /// `kcenter_pair`: (dists[c]) -> [max_d, argmax_i as f32].
+    pub pair: &'a xla::PjRtLoadedExecutable,
+    /// Centers folded per block launch (b in the artifact shapes).
+    pub block_b: usize,
+}
+
+/// Rounds of local greedy per shard: enough that the candidate union can
+/// carry `k` picks even if they all fall in one shard's worth of shards,
+/// but never more than `k` and never a long tail when shards are many.
+fn local_rounds(k: usize, n_shards: usize) -> usize {
+    k.div_ceil(n_shards.max(1)).max(k.min(MAX_LOCAL_ROUNDS))
+}
+
+/// Stride-subsampled indices into the labeled set used as init centers.
+fn init_indices(labeled_n: usize) -> Vec<usize> {
+    if labeled_n == 0 {
+        return Vec::new();
+    }
+    let stride = labeled_n.div_ceil(MAX_INIT_CENTERS);
+    (0..labeled_n).step_by(stride).collect()
+}
+
+fn d2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+fn check_shapes(h: usize, pool_feats: &[f32], labeled_feats: &[f32]) -> Result<()> {
+    if h == 0 || pool_feats.len() % h != 0 || labeled_feats.len() % h != 0 {
+        return Err(Error::Coordinator("kcenter: bad feature shapes".into()));
+    }
+    Ok(())
+}
+
+/// Exact host-side greedy over the candidate union (level 2).
+///
+/// `candidates` must be sorted ascending by global pool index so the strict
+/// `>` scan resolves ties to the smallest index — the same rule the device
+/// pair kernel applies within a shard. Returns up to `k` *distinct* picks;
+/// stops once the best remaining distance is 0.
+fn refine(
+    h: usize,
+    pool_feats: &[f32],
+    labeled_feats: &[f32],
+    init_idx: &[usize],
+    candidates: &[usize],
+    k: usize,
+) -> Vec<usize> {
+    let mut dists = vec![BIG; candidates.len()];
+    for &ci in init_idx {
+        let c = &labeled_feats[ci * h..(ci + 1) * h];
+        for (d, &p) in dists.iter_mut().zip(candidates) {
+            *d = d.min(d2(&pool_feats[p * h..(p + 1) * h], c));
+        }
+    }
+    let mut picks = Vec::with_capacity(k.min(candidates.len()));
+    for _ in 0..k.min(candidates.len()) {
+        let (mut bi, mut bd) = (usize::MAX, f32::NEG_INFINITY);
+        for (i, &d) in dists.iter().enumerate() {
+            if d > bd {
+                bd = d;
+                bi = i;
+            }
+        }
+        if bi == usize::MAX || bd <= 0.0 {
+            break;
+        }
+        let pick = candidates[bi];
+        picks.push(pick);
+        let c = &pool_feats[pick * h..(pick + 1) * h];
+        for (d, &p) in dists.iter_mut().zip(candidates) {
+            *d = d.min(d2(&pool_feats[p * h..(p + 1) * h], c));
+        }
+    }
+    picks
+}
+
+/// Two-level greedy k-center selection (device path).
 ///
 /// - `pool_feats`: row-major `pool_n × h` features of the *unlabeled* pool;
 /// - `labeled_feats`: row-major features of the labeled set (may be empty);
-/// - returns `k` positions into the pool, in pick order.
+/// - returns up to `k` distinct positions into the pool, in pick order.
 pub fn select(
+    engine: &Engine,
+    kernels: &KcenterKernels,
+    chunk_rows: usize,
+    h: usize,
+    pool_feats: &[f32],
+    labeled_feats: &[f32],
+    k: usize,
+) -> Result<Vec<usize>> {
+    check_shapes(h, pool_feats, labeled_feats)?;
+    let b = kernels.block_b;
+    if b == 0 || chunk_rows == 0 {
+        return Err(Error::Coordinator("kcenter: zero block/chunk width".into()));
+    }
+    let pool_n = pool_feats.len() / h;
+    let k = k.min(pool_n);
+    if k == 0 {
+        return Ok(Vec::new());
+    }
+
+    let labeled_n = labeled_feats.len() / h;
+    let init_idx = init_indices(labeled_n);
+    // Init-center blocks are shard-independent: stage them once. Short
+    // blocks are padded by repeating the last real center (min is
+    // idempotent, so repetition never perturbs a distance).
+    let mut init_blocks: Vec<Vec<f32>> = Vec::with_capacity(init_idx.len().div_ceil(b));
+    for chunk in init_idx.chunks(b) {
+        let mut block = Vec::with_capacity(b * h);
+        for &ci in chunk {
+            block.extend_from_slice(&labeled_feats[ci * h..(ci + 1) * h]);
+        }
+        while block.len() < b * h {
+            let last = block.len() - h;
+            block.extend_from_within(last..last + h);
+        }
+        init_blocks.push(block);
+    }
+
+    let n_shards = pool_n.div_ceil(chunk_rows);
+    let q = local_rounds(k, n_shards);
+    let mut candidates: Vec<usize> = Vec::with_capacity(n_shards * q);
+    let mut feat_staging = vec![0.0f32; chunk_rows * h];
+    let mut dist_staging = vec![0.0f32; chunk_rows];
+    let mut center_block = vec![0.0f32; b * h];
+
+    // One shard at a time: upload its features + distances, relax, run the
+    // local greedy, then drop both buffers before the next shard.
+    for s in 0..n_shards {
+        let lo = s * chunk_rows;
+        let hi = ((s + 1) * chunk_rows).min(pool_n);
+        let real = hi - lo;
+        feat_staging.fill(0.0);
+        feat_staging[..real * h].copy_from_slice(&pool_feats[lo * h..hi * h]);
+        let feat_buf = engine.buf_f32(&feat_staging, &[chunk_rows, h])?;
+        // Padding rows pinned to 0 so they never win the argmax.
+        dist_staging.fill(0.0);
+        dist_staging[..real].fill(BIG);
+        let mut dist_buf = engine.buf_f32(&dist_staging, &[chunk_rows])?;
+
+        for block in &init_blocks {
+            let c_buf = engine.buf_f32(block, &[b, h])?;
+            let mut out = engine.run_b(kernels.block, &[&feat_buf, &c_buf, &dist_buf])?;
+            dist_buf = out.remove(0);
+        }
+
+        for r in 0..q {
+            let out = engine.run_b(kernels.pair, &[&dist_buf])?;
+            let pair = engine.read_f32(&out[0])?;
+            let (best_d, best_i) = (pair[0], pair[1] as usize);
+            if best_d <= 0.0 || best_i >= real {
+                break;
+            }
+            candidates.push(lo + best_i);
+            if r + 1 < q {
+                // Relax against the local pick: one block launch with the
+                // center repeated to the block width.
+                let c = &pool_feats[(lo + best_i) * h..(lo + best_i + 1) * h];
+                for j in 0..b {
+                    center_block[j * h..(j + 1) * h].copy_from_slice(c);
+                }
+                let c_buf = engine.buf_f32(&center_block, &[b, h])?;
+                let mut out = engine.run_b(kernels.block, &[&feat_buf, &c_buf, &dist_buf])?;
+                dist_buf = out.remove(0);
+            }
+        }
+    }
+
+    // Candidates are already sorted: shards ascend and local picks carry
+    // their shard's base offset — but local pick order within a shard is by
+    // distance, not index, so sort for the tie rule.
+    candidates.sort_unstable();
+    candidates.dedup();
+    Ok(refine(h, pool_feats, labeled_feats, &init_idx, &candidates, k))
+}
+
+/// Pure-Rust reference for [`select`]: the identical two-level algorithm
+/// (same shard width, same local-round count, same tie rules, same BIG
+/// sentinel) without the device. Interchangeable pick-for-pick with
+/// [`select`] up to f32 reduction-order effects.
+pub fn select_ref(
+    chunk_rows: usize,
+    h: usize,
+    pool_feats: &[f32],
+    labeled_feats: &[f32],
+    k: usize,
+) -> Vec<usize> {
+    if h == 0 || chunk_rows == 0 || pool_feats.len() % h != 0 {
+        return Vec::new();
+    }
+    let pool_n = pool_feats.len() / h;
+    let k = k.min(pool_n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let labeled_n = labeled_feats.len() / h;
+    let init_idx = init_indices(labeled_n);
+
+    let n_shards = pool_n.div_ceil(chunk_rows);
+    let q = local_rounds(k, n_shards);
+    let mut candidates: Vec<usize> = Vec::with_capacity(n_shards * q);
+    for s in 0..n_shards {
+        let lo = s * chunk_rows;
+        let hi = ((s + 1) * chunk_rows).min(pool_n);
+        let mut dists = vec![BIG; hi - lo];
+        for &ci in &init_idx {
+            let c = &labeled_feats[ci * h..(ci + 1) * h];
+            for (j, d) in dists.iter_mut().enumerate() {
+                *d = d.min(d2(&pool_feats[(lo + j) * h..(lo + j + 1) * h], c));
+            }
+        }
+        for _ in 0..q {
+            let (mut bi, mut bd) = (usize::MAX, f32::NEG_INFINITY);
+            for (j, &d) in dists.iter().enumerate() {
+                if d > bd {
+                    bd = d;
+                    bi = j;
+                }
+            }
+            if bi == usize::MAX || bd <= 0.0 {
+                break;
+            }
+            candidates.push(lo + bi);
+            let c = &pool_feats[(lo + bi) * h..(lo + bi + 1) * h];
+            for (j, d) in dists.iter_mut().enumerate() {
+                *d = d.min(d2(&pool_feats[(lo + j) * h..(lo + j + 1) * h], c));
+            }
+        }
+    }
+
+    candidates.sort_unstable();
+    candidates.dedup();
+    refine(h, pool_feats, labeled_feats, &init_idx, &candidates, k)
+}
+
+/// Flat greedy selection (device path, pre-gen-6): one center relax per
+/// launch, full distance-vector readback per chunk per round. Kept only for
+/// the before/after sections of `bench_hotpath` — production callers use
+/// [`select`].
+pub fn select_flat(
     engine: &Engine,
     kcenter_exe: &xla::PjRtLoadedExecutable,
     chunk_rows: usize,
@@ -31,9 +304,7 @@ pub fn select(
     labeled_feats: &[f32],
     k: usize,
 ) -> Result<Vec<usize>> {
-    if h == 0 || pool_feats.len() % h != 0 || labeled_feats.len() % h != 0 {
-        return Err(Error::Coordinator("kcenter: bad feature shapes".into()));
-    }
+    check_shapes(h, pool_feats, labeled_feats)?;
     let pool_n = pool_feats.len() / h;
     let k = k.min(pool_n);
     if k == 0 {
@@ -53,9 +324,7 @@ pub fn select(
     }
 
     // Host mirror of min-distances (padding rows pinned to 0 so they never
-    // win the argmax) + device-resident distance chunks. Large finite
-    // sentinel instead of +inf to stay safe in f32 kernel arithmetic.
-    const BIG: f32 = 1e30;
+    // win the argmax) + device-resident distance chunks.
     let mut dists = vec![BIG; n_chunks * chunk_rows];
     for d in dists.iter_mut().skip(pool_n) {
         *d = 0.0;
@@ -88,11 +357,8 @@ pub fn select(
 
     // Initialize against (a stride-subsampled view of) the labeled set.
     let labeled_n = labeled_feats.len() / h;
-    if labeled_n > 0 {
-        let stride = labeled_n.div_ceil(MAX_INIT_CENTERS);
-        for i in (0..labeled_n).step_by(stride) {
-            relax(&labeled_feats[i * h..(i + 1) * h], &mut dist_bufs, &mut dists)?;
-        }
+    for &i in &init_indices(labeled_n) {
+        relax(&labeled_feats[i * h..(i + 1) * h], &mut dist_bufs, &mut dists)?;
     }
 
     let mut picks = Vec::with_capacity(k);
@@ -107,13 +373,13 @@ pub fn select(
                 best_i = i;
             }
         }
-        if best_i == usize::MAX {
+        if best_i == usize::MAX || best_d <= 0.0 {
             break;
         }
         picks.push(best_i);
         if round + 1 < k {
             relax(
-                &pool_feats[best_i * h..(best_i + 1) * h].to_vec(),
+                &pool_feats[best_i * h..(best_i + 1) * h],
                 &mut dist_bufs,
                 &mut dists,
             )?;
@@ -122,49 +388,23 @@ pub fn select(
     Ok(picks)
 }
 
-/// Pure-Rust reference (tests + tiny pools): identical algorithm without
-/// the device path.
-pub fn select_ref(
-    h: usize,
-    pool_feats: &[f32],
-    labeled_feats: &[f32],
+/// Device launches [`select`] will issue for a given problem shape — the
+/// budget `tests/kcenter_scale.rs` pins via `engine.stats().executes`.
+/// Assumes no shard early-stops (well-separated data, `q` < rows/shard).
+pub fn expected_launches(
+    pool_n: usize,
+    labeled_n: usize,
+    chunk_rows: usize,
+    block_b: usize,
     k: usize,
-) -> Vec<usize> {
-    let pool_n = pool_feats.len() / h;
-    let k = k.min(pool_n);
-    let mut dists = vec![f32::MAX; pool_n];
-    let labeled_n = labeled_feats.len() / h;
-    let d2 = |a: &[f32], b: &[f32]| -> f32 {
-        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
-    };
-    if labeled_n > 0 {
-        let stride = labeled_n.div_ceil(MAX_INIT_CENTERS);
-        for i in (0..labeled_n).step_by(stride) {
-            let c = &labeled_feats[i * h..(i + 1) * h];
-            for (p, d) in dists.iter_mut().enumerate() {
-                *d = d.min(d2(&pool_feats[p * h..(p + 1) * h], c));
-            }
-        }
+) -> u64 {
+    if pool_n == 0 || k == 0 {
+        return 0;
     }
-    let mut picks = Vec::with_capacity(k);
-    for _ in 0..k {
-        let (mut bi, mut bd) = (usize::MAX, f32::NEG_INFINITY);
-        for (i, &d) in dists.iter().enumerate() {
-            if d > bd {
-                bd = d;
-                bi = i;
-            }
-        }
-        if bi == usize::MAX {
-            break;
-        }
-        picks.push(bi);
-        let c: Vec<f32> = pool_feats[bi * h..(bi + 1) * h].to_vec();
-        for (p, d) in dists.iter_mut().enumerate() {
-            *d = d.min(d2(&pool_feats[p * h..(p + 1) * h], &c));
-        }
-    }
-    picks
+    let n_shards = pool_n.div_ceil(chunk_rows);
+    let q = local_rounds(k.min(pool_n), n_shards);
+    let init_blocks = init_indices(labeled_n).len().div_ceil(block_b);
+    (n_shards * (init_blocks + q + (q - 1))) as u64
 }
 
 #[cfg(test)]
@@ -182,10 +422,30 @@ mod tests {
                 pool.push(cy);
             }
         }
-        let picks = select_ref(h, &pool, &[], 3);
+        let picks = select_ref(512, h, &pool, &[], 3);
         assert_eq!(picks.len(), 3);
         let cluster = |i: usize| i / 5;
         let mut cs: Vec<usize> = picks.iter().map(|&p| cluster(p)).collect();
+        cs.sort_unstable();
+        cs.dedup();
+        assert_eq!(cs.len(), 3, "picks {picks:?}");
+    }
+
+    #[test]
+    fn ref_covers_clusters_across_shards() {
+        // Shard width 4 splits the pool mid-cluster; level 2 must still
+        // cover all three clusters.
+        let h = 2;
+        let mut pool = Vec::new();
+        for (cx, cy) in [(0.0f32, 0.0f32), (10.0, 0.0), (0.0, 10.0)] {
+            for j in 0..5 {
+                pool.push(cx + 0.01 * j as f32);
+                pool.push(cy);
+            }
+        }
+        let picks = select_ref(4, h, &pool, &[], 3);
+        assert_eq!(picks.len(), 3);
+        let mut cs: Vec<usize> = picks.iter().map(|&p| p / 5).collect();
         cs.sort_unstable();
         cs.dedup();
         assert_eq!(cs.len(), 3, "picks {picks:?}");
@@ -203,14 +463,41 @@ mod tests {
             }
         }
         let labeled = vec![0.0f32, 0.0];
-        let picks = select_ref(h, &pool, &labeled, 1);
+        let picks = select_ref(512, h, &pool, &labeled, 1);
         assert!(picks[0] >= 4, "picks {picks:?}");
     }
 
     #[test]
-    fn ref_k_zero_and_oversized() {
+    fn ref_k_zero_and_degenerate_pool_yields_distinct_picks_only() {
+        // Five identical points: after the first pick every distance is 0,
+        // so the distinct-picks contract stops at one pick (the old flat
+        // path would emit the same position five times).
         let pool = vec![0.0f32; 10];
-        assert!(select_ref(2, &pool, &[], 0).is_empty());
-        assert_eq!(select_ref(2, &pool, &[], 99).len(), 5);
+        assert!(select_ref(512, 2, &pool, &[], 0).is_empty());
+        assert_eq!(select_ref(512, 2, &pool, &[], 99), vec![0]);
+    }
+
+    #[test]
+    fn ref_ties_resolve_to_smallest_global_index() {
+        // Points 3 and 7 are identical and far from the origin cluster;
+        // after pick 0 they tie exactly — the smaller index must win.
+        let h = 2;
+        let mut pool = vec![0.0f32; 2 * 8];
+        for idx in [3usize, 7] {
+            pool[idx * 2] = 50.0;
+            pool[idx * 2 + 1] = 50.0;
+        }
+        let picks = select_ref(512, h, &pool, &[], 2);
+        assert_eq!(picks, vec![0, 3]);
+    }
+
+    #[test]
+    fn launch_budget_formula() {
+        // 200k pool, 512-wide shards → 391 shards; 64 init centers in
+        // blocks of 16 → 4 block launches; k=32 over 391 shards → q=8
+        // local rounds → 8 pairs + 7 relaxes. 391 × 19 = 7429.
+        assert_eq!(expected_launches(200_000, 64, 512, 16, 32), 7429);
+        assert_eq!(expected_launches(0, 64, 512, 16, 32), 0);
+        assert_eq!(expected_launches(100, 0, 512, 16, 5), 5 + 4);
     }
 }

@@ -1,0 +1,135 @@
+//! Scale acceptance for the gen-6 two-level k-center path: on a 200k-row
+//! synthetic pool the launch count must land exactly on the
+//! [`expected_launches`] budget (sub-quadratic — no n·k term), and the
+//! picks must equal the pure-host reference. Requires `make artifacts`
+//! (skipped with a message otherwise).
+//!
+//! The synthetic features put all the signal in the first two dimensions
+//! and exact zeros everywhere else. Adding 0.0 is an identity in f32, so
+//! the device tree-reduce and the host sequential fold compute
+//! bit-identical squared distances — `select` == `select_ref` is then an
+//! exact contract here, not merely "up to reduction order".
+
+use mcal::runtime::{Engine, Manifest};
+use mcal::sampling::kcenter::{expected_launches, select, select_ref, KcenterKernels};
+
+fn setup() -> Option<(Engine, Manifest)> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some((Engine::cpu().unwrap(), Manifest::load("artifacts").unwrap()))
+}
+
+/// Row `i` (global id `offset + i`) = (pseudo-random integer, global id,
+/// 0, 0, …). All rows are pairwise distinct (dim 1 is injective), every
+/// coordinate is an exactly representable f32 integer, and only two
+/// dimensions are nonzero (see module doc).
+fn synth_feats(n: usize, h: usize, offset: usize) -> Vec<f32> {
+    assert!(h >= 2);
+    let mut f = vec![0.0f32; n * h];
+    for i in 0..n {
+        let g = offset + i;
+        f[i * h] = (g.wrapping_mul(48_271) % 65_521) as f32;
+        f[i * h + 1] = g as f32;
+    }
+    f
+}
+
+#[test]
+fn launch_count_is_sub_quadratic_on_200k_pool() {
+    let Some((engine, manifest)) = setup() else { return };
+    let h = manifest.models["cnn18_c10"].hidden;
+    let block = engine.load(manifest.kcenter_block_artifact(h)).unwrap();
+    let pair = engine.load(manifest.kcenter_pair_artifact()).unwrap();
+    let kernels = KcenterKernels {
+        block: &block,
+        pair: &pair,
+        block_b: manifest.kcenter_block,
+    };
+
+    let (pool_n, labeled_n, k) = (200_000usize, 64usize, 32usize);
+    let pool_f = synth_feats(pool_n, h, 0);
+    let lab_f = synth_feats(labeled_n, h, pool_n);
+
+    let before = engine.stats().executes;
+    let picks = select(&engine, &kernels, manifest.eval_bs, h, &pool_f, &lab_f, k).unwrap();
+    let delta = engine.stats().executes - before;
+
+    // All rows are distinct, so no shard early-stops and the budget is
+    // exact: at the default shapes (eval_bs 512, block 16) this is
+    // 391 shards × (4 init blocks + 8 pairs + 7 relaxes) = 7 429.
+    let budget = expected_launches(pool_n, labeled_n, manifest.eval_bs, manifest.kcenter_block, k);
+    assert_eq!(delta, budget, "two-level launch count off budget");
+
+    // The flat path relaxes once per (init center + non-final pick) per
+    // chunk: (64 + 31) × 391 = 37 145 at the default shapes.
+    let n_chunks = pool_n.div_ceil(manifest.eval_bs) as u64;
+    let flat = (labeled_n as u64 + k as u64 - 1) * n_chunks;
+    assert!(
+        delta * 4 < flat,
+        "two-level ({delta} launches) must beat flat ({flat}) by >4x"
+    );
+
+    assert_eq!(picks.len(), k);
+    let want = select_ref(manifest.eval_bs, h, &pool_f, &lab_f, k);
+    assert_eq!(picks, want, "device picks must match the host reference");
+}
+
+#[test]
+fn device_matches_ref_on_edge_cases() {
+    let Some((engine, manifest)) = setup() else { return };
+    let h = manifest.models["cnn18_c10"].hidden;
+    let block = engine.load(manifest.kcenter_block_artifact(h)).unwrap();
+    let pair = engine.load(manifest.kcenter_pair_artifact()).unwrap();
+    let kernels = KcenterKernels {
+        block: &block,
+        pair: &pair,
+        block_b: manifest.kcenter_block,
+    };
+
+    // (pool_n, labeled_n, k): empty labeled set across shards; k larger
+    // than the pool; empty pool; k = 0; a partial last init block
+    // (300 labeled → 150 init centers = 9×16 + 6, padded by repetition)
+    // over a ragged multi-shard pool.
+    let cases = [
+        (1_300usize, 0usize, 10usize),
+        (40, 7, 100),
+        (0, 5, 4),
+        (700, 33, 0),
+        (1_025, 300, 17),
+    ];
+    for (pool_n, labeled_n, k) in cases {
+        let pool_f = synth_feats(pool_n, h, 0);
+        let lab_f = synth_feats(labeled_n, h, pool_n);
+        let got = select(&engine, &kernels, manifest.eval_bs, h, &pool_f, &lab_f, k).unwrap();
+        let want = select_ref(manifest.eval_bs, h, &pool_f, &lab_f, k);
+        assert_eq!(got, want, "case (n={pool_n}, |B|={labeled_n}, k={k})");
+        assert_eq!(got.len(), k.min(pool_n), "distinct data must yield k picks");
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), got.len(), "picks must be distinct");
+    }
+}
+
+#[test]
+fn device_degenerate_pool_stops_at_one_distinct_pick() {
+    let Some((engine, manifest)) = setup() else { return };
+    let h = manifest.models["cnn18_c10"].hidden;
+    let block = engine.load(manifest.kcenter_block_artifact(h)).unwrap();
+    let pair = engine.load(manifest.kcenter_pair_artifact()).unwrap();
+    let kernels = KcenterKernels {
+        block: &block,
+        pair: &pair,
+        block_b: manifest.kcenter_block,
+    };
+
+    // 600 identical points across two shards: after the first pick every
+    // distance is exactly 0, so both levels stop — one pick, never k
+    // duplicates.
+    let pool_f = vec![1.5f32; 600 * h];
+    let got = select(&engine, &kernels, manifest.eval_bs, h, &pool_f, &[], 8).unwrap();
+    assert_eq!(got, vec![0]);
+    assert_eq!(got, select_ref(manifest.eval_bs, h, &pool_f, &[], 8));
+}

@@ -174,4 +174,26 @@ fn measure_profiles_and_pool_scores_are_jobs_invariant() {
     assert_eq!(bits32(&s1.margin), bits32(&s2.margin));
     assert_eq!(bits32(&s1.entropy), bits32(&s2.entropy));
     assert_eq!(bits32(&s1.maxprob), bits32(&s2.maxprob));
+
+    // Gen-6 machine-label ranking: the per-lane TopK folds merge to the
+    // same winners the serial fold produces.
+    let (mi1, mp1) = serial.machine_label_top(64).unwrap();
+    let (mi2, mp2) = sharded.machine_label_top(64).unwrap();
+    assert_eq!(mi1, mi2, "machine-label winners must be lane-invariant");
+    assert_eq!(mp1, mp2);
+
+    // Cached path: with no retrain/acquire in between, a repeat measure is
+    // served from the score cache — zero new executes on the session
+    // engine (and a cache hit never reaches the lanes at all) — and the
+    // profile is bit-identical on both envs.
+    let before = f.engine.stats().executes;
+    let p1b = serial.measure().unwrap();
+    let p2b = sharded.measure().unwrap();
+    assert_eq!(
+        f.engine.stats().executes,
+        before,
+        "repeat measure must hit the score cache"
+    );
+    assert_eq!(bits64(&p1b), bits64(&p1));
+    assert_eq!(bits64(&p2b), bits64(&p1));
 }

@@ -44,7 +44,10 @@ fn manifest_matches_artifacts_on_disk() {
     }
     for m in manifest.models.values() {
         assert!(manifest.kcenter_artifact(m.hidden).exists());
+        assert!(manifest.kcenter_block_artifact(m.hidden).exists());
     }
+    assert!(manifest.kcenter_pair_artifact().exists());
+    assert!(manifest.kcenter_block > 0);
 }
 
 #[test]
@@ -148,10 +151,16 @@ fn kcenter_device_matches_ref() {
     let lab_f = s.features(&ds, &labeled).unwrap();
     let h = s.meta.hidden;
 
-    let exe = engine.load(manifest.kcenter_artifact(h)).unwrap();
+    let block = engine.load(manifest.kcenter_block_artifact(h)).unwrap();
+    let pair = engine.load(manifest.kcenter_pair_artifact()).unwrap();
+    let kernels = mcal::sampling::kcenter::KcenterKernels {
+        block: &block,
+        pair: &pair,
+        block_b: manifest.kcenter_block,
+    };
     let got = mcal::sampling::kcenter::select(
         &engine,
-        &exe,
+        &kernels,
         manifest.eval_bs,
         h,
         &pool_f,
@@ -159,8 +168,26 @@ fn kcenter_device_matches_ref() {
         12,
     )
     .unwrap();
-    let want = mcal::sampling::kcenter::select_ref(h, &pool_f, &lab_f, 12);
+    let want = mcal::sampling::kcenter::select_ref(manifest.eval_bs, h, &pool_f, &lab_f, 12);
     assert_eq!(got, want);
+
+    // On a single-shard pool (≤ eval_bs rows) the two-level algorithm
+    // degenerates to plain greedy, so the flat (pre-gen-6) device path
+    // must agree with select_ref there.
+    let small = &pool_f[..500 * h];
+    let flat_exe = engine.load(manifest.kcenter_artifact(h)).unwrap();
+    let flat = mcal::sampling::kcenter::select_flat(
+        &engine,
+        &flat_exe,
+        manifest.eval_bs,
+        h,
+        small,
+        &lab_f,
+        12,
+    )
+    .unwrap();
+    let small_want = mcal::sampling::kcenter::select_ref(manifest.eval_bs, h, small, &lab_f, 12);
+    assert_eq!(flat, small_want);
 }
 
 #[test]

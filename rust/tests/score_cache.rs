@@ -1,0 +1,110 @@
+//! Score-cache integration: repeat scoring between train commits must be
+//! free. A second `measure()` (or `machine_label_top()` with the same
+//! `take`) without an intervening retrain/acquire issues **zero** new
+//! engine executes and returns bit-identical results; any commit that can
+//! change scores — a retrain (model changed) or an acquire (pool changed)
+//! — invalidates every cached entry. Requires `make artifacts` (skipped
+//! with a message otherwise).
+
+use std::sync::Arc;
+
+use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
+use mcal::coordinator::{LabelingEnv, RunParams};
+use mcal::dataset::preset;
+use mcal::model::ArchKind;
+use mcal::runtime::{Engine, Manifest};
+
+fn bits64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn score_cache_serves_repeats_and_invalidates_on_commits() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+
+    let p = preset("fashion-syn", 11).unwrap();
+    let spec = p.spec.scaled(0.1);
+    let mut ds = spec.generate().unwrap();
+    ds.name = "fashion-syn".to_string();
+    let ledger = Arc::new(Ledger::new());
+    let svc = SimService::new(
+        SimServiceConfig { service: Service::Amazon, seed: 11, ..Default::default() },
+        ledger.clone(),
+    );
+    let mut env = LabelingEnv::new(
+        &engine,
+        &manifest,
+        &ds,
+        &svc,
+        ledger,
+        ArchKind::Cnn18,
+        p.classes_tag,
+        RunParams { seed: 11, ..Default::default() },
+        mcal::cost::theta_grid(),
+    )
+    .unwrap();
+
+    // (1) Repeat measure without a retrain: served from the score cache —
+    // zero new executes, bit-identical profile.
+    let p1 = env.measure().unwrap();
+    let before = engine.stats().executes;
+    let p2 = env.measure().unwrap();
+    assert_eq!(
+        engine.stats().executes,
+        before,
+        "repeat measure must not re-score the test set"
+    );
+    assert_eq!(bits64(&p1), bits64(&p2));
+
+    // (2) Repeat machine-label ranking with the same take: cached.
+    let (i1, l1) = env.machine_label_top(32).unwrap();
+    assert_eq!(i1.len(), 32);
+    let before = engine.stats().executes;
+    let (i2, l2) = env.machine_label_top(32).unwrap();
+    assert_eq!(
+        engine.stats().executes,
+        before,
+        "repeat machine_label_top must not re-score the pool"
+    );
+    assert_eq!(i1, i2);
+    assert_eq!(l1, l2);
+
+    // A different take misses the label cache — but its winners are a
+    // prefix of the larger ranking (same total order).
+    let before = engine.stats().executes;
+    let (i3, _) = env.machine_label_top(16).unwrap();
+    assert!(engine.stats().executes > before, "take change must re-rank");
+    assert_eq!(i3.as_slice(), &i1[..16]);
+
+    // (3) A retrain commit changes the model: the next measure must
+    // re-score.
+    env.retrain().unwrap();
+    let before = engine.stats().executes;
+    env.measure().unwrap();
+    assert!(
+        engine.stats().executes > before,
+        "retrain must invalidate the score cache"
+    );
+
+    // (4) An acquire mutates the pool: the next ranking must re-score
+    // over the shrunk pool.
+    let (i4, _) = env.machine_label_top(32).unwrap();
+    assert_eq!(i4.len(), 32);
+    let got = env.acquire(8).unwrap();
+    assert_eq!(got, 8);
+    let before = engine.stats().executes;
+    let (i5, _) = env.machine_label_top(32).unwrap();
+    assert!(
+        engine.stats().executes > before,
+        "acquire must invalidate the label cache"
+    );
+    assert_eq!(i5.len(), 32);
+
+    // Drain the in-flight acquisition order before dropping the env.
+    env.settle().unwrap();
+}

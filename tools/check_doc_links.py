@@ -4,13 +4,17 @@
 The gate that would have caught six source files citing a DESIGN.md that
 did not exist in the repo for four PRs. Two scan surfaces:
 
-1. **Markdown files** (curated set below): every `*.md`-suffixed token
-   and every relative markdown link target `[text](path)` must exist,
-   resolved against the repo root or the referencing file's directory.
+1. **Markdown files** (curated set below): every `*.md`-suffixed token,
+   every `*.rs`-suffixed token, and every relative markdown link target
+   `[text](path)` must exist, resolved against the repo root, the
+   referencing file's directory, or `rust/` (docs cite Rust sources
+   package-relative: `tests/pool_parallel.rs`, `src/lib.rs`, ...).
 2. **Rust module docs** (`//!` lines under rust/ and examples/): every
    `*.md`-suffixed token must exist the same way. Module docs are the
    reference surface rustdoc renders; `//` and `///` comments are out of
-   scope (rustdoc's own `-D warnings` gate covers intra-doc links).
+   scope (rustdoc's own `-D warnings` gate covers intra-doc links), and
+   so are their `.rs` mentions (they routinely name files in shorthand
+   that rustdoc never links).
 
 Deliberately narrow: only `.md` tokens and explicit markdown links are
 checked, because prose legitimately names runtime paths (`results/`,
@@ -46,6 +50,7 @@ EXCLUDED_MARKDOWN_NAMES = {"CHANGES.md", "ISSUE.md", "PAPER.md", "PAPERS.md", "S
 RUST_DOC_ROOTS = ["rust/src", "rust/tests", "rust/benches", "examples"]
 
 MD_TOKEN = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_\-./]*\.md\b")
+RS_TOKEN = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_\-./]*\.rs\b")
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s#]+)\)")
 
 
@@ -70,7 +75,11 @@ def resolves(token: str, base: Path) -> bool:
     token = token.strip("`'\"")
     if token.startswith(("http://", "https://")):
         return True
-    return (REPO / token).exists() or (base / token).exists()
+    return (
+        (REPO / token).exists()
+        or (base / token).exists()
+        or (REPO / "rust" / token).exists()
+    )
 
 
 def check_file(path: Path, lines, module_docs_only: bool):
@@ -80,6 +89,7 @@ def check_file(path: Path, lines, module_docs_only: bool):
             continue
         refs = set(MD_TOKEN.findall(line))
         if not module_docs_only:
+            refs.update(RS_TOKEN.findall(line))
             links = MD_LINK.findall(line)
             refs.update(m for m in links if not m.startswith(("http://", "https://")))
         for ref in sorted(refs):
