@@ -14,12 +14,20 @@
 //! number is the end-to-end intra-run win. Record the printed numbers in
 //! CHANGES.md when they move.
 //!
+//! Phase 3 — tier market: the streamed order path through a single-tier
+//! market vs a routed cheap-consensus + expert market, printing resolved
+//! labels, billed passes (consensus bills every vote) and the per-tier
+//! dollar split.
+//!
 //! Run: `cargo bench --offline --bench bench_fleet`
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
+use mcal::annotation::{
+    AnnotationService, LabelOrder, Ledger, OrderId, Service, SimService, SimServiceConfig,
+    TierMarket, TierRoute, TierSpec,
+};
 use mcal::coordinator::{run_with_arch_selection, ArchSelectConfig, LabelingDriver, RunParams};
 use mcal::dataset::preset;
 use mcal::experiments::common::{Ctx, Scale};
@@ -94,7 +102,7 @@ fn bench_probe_phase(report: &mut BenchReport) {
         warm_ds.name = "cifar10-syn".into();
         let ledger = Arc::new(Ledger::new());
         let service = SimService::new(
-            SimServiceConfig { service: Service::Amazon, seed: 1, ..Default::default() },
+            SimServiceConfig::preset(Service::Amazon).with_seed(1),
             ledger.clone(),
         );
         let driver = LabelingDriver::new(&engine, &manifest);
@@ -114,7 +122,7 @@ fn bench_probe_phase(report: &mut BenchReport) {
     let run = |pool: Option<&EnginePool>, tag: &str| {
         let ledger = Arc::new(Ledger::new());
         let service = SimService::new(
-            SimServiceConfig { service: Service::Amazon, seed: 77, ..Default::default() },
+            SimServiceConfig::preset(Service::Amazon).with_seed(77),
             ledger.clone(),
         );
         let driver = LabelingDriver::new(&engine, &manifest).with_pool(pool);
@@ -163,6 +171,69 @@ fn bench_probe_phase(report: &mut BenchReport) {
     );
 }
 
+/// Phase 3: the streamed order path through tier markets. No engine work —
+/// this times the annotation layer alone (submit → per-tier fleets →
+/// chunked ingest → drain), single-tier vs routed cheap-consensus.
+fn bench_tier_market(report: &mut BenchReport) {
+    let p = preset("fashion-syn", 99).unwrap();
+    let mut ds = p.spec.scaled(0.1).generate().unwrap();
+    ds.name = "fashion-syn".into();
+    let workers = fleet::default_jobs().min(8);
+    let orders = 16;
+    let per = ds.len() / orders;
+
+    let mut resolved = Vec::new();
+    for (tag, specs) in [
+        ("expert-only", vec![TierSpec::new("expert", 0.04).with_workers(workers)]),
+        (
+            "cheap3+expert",
+            vec![
+                TierSpec::new("cheap", 0.003)
+                    .with_error(0.3)
+                    .with_votes(3)
+                    .with_workers(workers),
+                TierSpec::new("expert", 0.04).with_workers(workers),
+            ],
+        ),
+    ] {
+        let ledger = Arc::new(Ledger::new());
+        let routes = specs.len();
+        let market = TierMarket::new(specs, 64, 99, ledger.clone()).unwrap();
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..orders)
+            .map(|k| {
+                let route = TierRoute::new(k % routes);
+                let idx: Vec<usize> = (k * per..(k + 1) * per).collect();
+                let order = LabelOrder::routed(OrderId::new(k as u64), route, idx, 99);
+                market.submit(&ds, order).unwrap()
+            })
+            .collect();
+        let labels: usize = handles.into_iter().map(|h| h.drain().unwrap().len()).sum();
+        let wall = t0.elapsed().as_secs_f64();
+        let billed = market.labels_purchased();
+        println!(
+            "bench_fleet: tier-market {tag:<14} {:>7.3}s  ({labels} labels, {billed} billed, ${:.2})",
+            wall,
+            ledger.total()
+        );
+        report.section_with(
+            &format!("tier-market {tag}"),
+            wall * 1e3,
+            1,
+            &[
+                ("labels", labels as f64),
+                ("billed", billed as f64),
+                ("dollars", ledger.total()),
+            ],
+        );
+        resolved.push(labels);
+    }
+    assert_eq!(
+        resolved[0], resolved[1],
+        "both markets must resolve one label per requested sample"
+    );
+}
+
 fn main() {
     if !std::path::Path::new("artifacts/manifest.txt").exists() {
         eprintln!("artifacts not built; run `make artifacts` first");
@@ -171,5 +242,6 @@ fn main() {
     let mut report = BenchReport::new("fleet");
     bench_cells(&mut report);
     bench_probe_phase(&mut report);
+    bench_tier_market(&mut report);
     report.write("BENCH_fleet.json", None);
 }

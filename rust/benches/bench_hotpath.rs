@@ -220,7 +220,7 @@ fn main() {
     // --- annotation service round trip ---------------------------------------
     let ledger = Arc::new(Ledger::new());
     let svc = SimService::new(
-        SimServiceConfig { service: Service::Amazon, workers: 4, ..Default::default() },
+        SimServiceConfig::preset(Service::Amazon).with_workers(4),
         ledger,
     );
     let idx: Vec<usize> = (0..10_000).collect();

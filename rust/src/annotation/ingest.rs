@@ -66,6 +66,88 @@ use crate::{Error, Result};
 /// worker-pool task streams derived from the same run seed.
 const ORDER_STREAM_SALT: u64 = 0x1A6E_57A7_0D3E_11B5;
 
+/// Reserved order-id space for the warm-start re-buy.
+///
+/// The re-buy is split into one order per ingest chunk, so the *number*
+/// of orders it submits follows `--ingest-chunk`. Drawing those ids from
+/// the top half of the `u64` space (instead of the run's sequential
+/// counter) keeps every order id the resumed loop assigns afterwards —
+/// and every per-order seed stream derived from those ids — independent
+/// of how the re-buy was chunked. Loop counters start at 0 and advance by
+/// one per purchase; they can never reach this range.
+pub const WARM_ORDER_BASE: u64 = 1 << 63;
+
+/// Typed identity of one acquisition order.
+///
+/// Wraps the raw `u64` the per-order seed stream derives from
+/// ([`order_seed`]), so sequential loop counters and the reserved
+/// warm-resume space ([`WARM_ORDER_BASE`]) cannot be confused with plain
+/// integers (or with tier routes) at a call site. Displays as the raw id,
+/// which is what error messages and provenance logs show.
+///
+/// ```
+/// use mcal::annotation::ingest::OrderId;
+/// assert_eq!(OrderId::new(5).raw(), 5);
+/// assert!(OrderId::warm(0).is_warm());
+/// assert!(!OrderId::new(5).is_warm());
+/// assert_eq!(format!("{}", OrderId::new(7)), "7");
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct OrderId(u64);
+
+impl OrderId {
+    /// An id from a run's sequential counter (0 = T, 1 = B₀, 2… = loop
+    /// acquisitions and the finalize residual).
+    pub const fn new(raw: u64) -> OrderId {
+        OrderId(raw)
+    }
+
+    /// The `k`-th order of a warm-start re-buy, drawn from the reserved
+    /// [`WARM_ORDER_BASE`] top half of the id space.
+    pub const fn warm(k: u64) -> OrderId {
+        OrderId(WARM_ORDER_BASE | k)
+    }
+
+    /// The raw id — the value [`order_seed`] derives the order's seed
+    /// stream from.
+    pub const fn raw(self) -> u64 {
+        self.0
+    }
+
+    /// Whether the id lives in the reserved warm-resume space.
+    pub const fn is_warm(self) -> bool {
+        self.0 >= WARM_ORDER_BASE
+    }
+}
+
+impl std::fmt::Display for OrderId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Which annotator tier resolves an order: an index into the routing
+/// service's tier table (see [`super::market::TierMarket`]).
+///
+/// Single-tier services have exactly one route, `TierRoute::default()`.
+/// A route is *delivery* metadata only — it never enters the order's seed
+/// stream, so the same order resolves to the same labels whichever tier
+/// spec happens to sit behind its route index.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct TierRoute(usize);
+
+impl TierRoute {
+    /// Route to the tier at `index` in the service's tier table.
+    pub const fn new(index: usize) -> TierRoute {
+        TierRoute(index)
+    }
+
+    /// The tier-table index this route points at.
+    pub const fn index(self) -> usize {
+        self.0
+    }
+}
+
 /// Derive the seed stream for one acquisition order of a seeded run.
 ///
 /// Depends only on the run seed and the order's stable id — never on
@@ -112,6 +194,65 @@ pub fn resolve_label(
     }
 }
 
+/// One annotation pass of a consensus re-label: vote `vote` on a slot
+/// whose per-slot stream seed is `slot_seed`. Same draw procedure as
+/// [`resolve_label`], one PRNG stream per `(slot, vote)`.
+fn vote_label(slot_seed: u64, vote: u64, truth: u32, classes: u32, error_rate: f64) -> u32 {
+    let mut rng = Pcg32::new(stream_seed(slot_seed, vote), 0xA770);
+    if rng.next_f64() < error_rate {
+        let mut wrong = rng.below(classes);
+        if wrong == truth {
+            wrong = (wrong + 1) % classes;
+        }
+        wrong
+    } else {
+        truth
+    }
+}
+
+/// Consensus quality control for noisy tiers: re-label one order slot
+/// `votes` times and majority-vote the result. Each vote is an
+/// independent annotation pass drawn from its own
+/// `(order seed, slot, vote)` PRNG stream, so — exactly like
+/// [`resolve_label`] — the consensus outcome is a pure function of the
+/// order and the tier's error knobs, bit-identical across worker counts,
+/// chunk sizes, latencies, and `--jobs`.
+///
+/// Ties are broken toward the earliest-drawn of the tied labels (vote
+/// order is deterministic, so the tie-break is too). `votes <= 1`
+/// delegates to [`resolve_label`] unchanged — the single-shot path keeps
+/// its exact historical streams.
+pub fn resolve_label_voted(
+    order_seed: u64,
+    slot: usize,
+    truth: u32,
+    classes: u32,
+    error_rate: f64,
+    votes: usize,
+) -> u32 {
+    if votes <= 1 || error_rate <= 0.0 || classes <= 1 {
+        return resolve_label(order_seed, slot, truth, classes, error_rate);
+    }
+    let slot_seed = stream_seed(order_seed, slot as u64);
+    // (label, count) in first-drawn order; ≤ `votes` distinct labels.
+    let mut counts: Vec<(u32, u32)> = Vec::with_capacity(votes);
+    for v in 0..votes {
+        let label = vote_label(slot_seed, v as u64, truth, classes, error_rate);
+        match counts.iter_mut().find(|(l, _)| *l == label) {
+            Some(entry) => entry.1 += 1,
+            None => counts.push((label, 1)),
+        }
+    }
+    // Strictly-greater keeps the earliest-drawn label on ties.
+    let mut best = counts[0];
+    for &(label, count) in &counts[1..] {
+        if count > best.1 {
+            best = (label, count);
+        }
+    }
+    best.0
+}
+
 /// Knobs for streaming ingestion, surfaced on the CLI as `--ingest-chunk`
 /// and `--ingest-latency` and applied to every simulated service a run
 /// builds. Pure wall-clock knobs: results are bit-identical for every
@@ -127,12 +268,16 @@ pub struct IngestConfig {
 }
 
 /// One acquisition order: a batch of dataset indices submitted to an
-/// annotation service as a unit, with a stable id and its own seed stream.
+/// annotation service as a unit, with a stable id, a tier route, and its
+/// own seed stream.
 #[derive(Clone, Debug)]
 pub struct LabelOrder {
     /// Order id, unique within a run (assigned sequentially by the
     /// coordinator); provenance key for the ledger's per-order accounting.
-    pub id: u64,
+    pub id: OrderId,
+    /// Which annotator tier resolves the order. Delivery metadata only:
+    /// the seed stream derives from `id` alone, never the route.
+    pub route: TierRoute,
     /// Dataset indices to label; chunk offsets and result slots are
     /// positions into this list.
     pub indices: Vec<usize>,
@@ -142,9 +287,20 @@ pub struct LabelOrder {
 
 impl LabelOrder {
     /// Build order `id` over `indices` for a run seeded with `run_seed`,
-    /// deriving the order's seed stream with [`order_seed`].
-    pub fn new(id: u64, indices: Vec<usize>, run_seed: u64) -> LabelOrder {
-        LabelOrder { id, indices, seed: order_seed(run_seed, id) }
+    /// deriving the order's seed stream with [`order_seed`] and routing it
+    /// to the default tier.
+    pub fn new(id: OrderId, indices: Vec<usize>, run_seed: u64) -> LabelOrder {
+        LabelOrder::routed(id, TierRoute::default(), indices, run_seed)
+    }
+
+    /// [`LabelOrder::new`] with an explicit tier route.
+    pub fn routed(
+        id: OrderId,
+        route: TierRoute,
+        indices: Vec<usize>,
+        run_seed: u64,
+    ) -> LabelOrder {
+        LabelOrder { id, route, indices, seed: order_seed(run_seed, id.raw()) }
     }
 
     /// Number of labels the order asks for.
@@ -178,7 +334,7 @@ pub struct LabelChunk {
 ///
 /// ```
 /// use std::sync::mpsc::channel;
-/// use mcal::annotation::ingest::{IngestHandle, LabelChunk};
+/// use mcal::annotation::ingest::{IngestHandle, LabelChunk, OrderId};
 ///
 /// let (tx, rx) = channel();
 /// // Chunks may arrive out of order; the handle commits them in order.
@@ -186,7 +342,7 @@ pub struct LabelChunk {
 /// tx.send(LabelChunk { offset: 0, labels: vec![10, 20] }).unwrap();
 /// drop(tx);
 ///
-/// let mut h = IngestHandle::streaming(7, 4, rx);
+/// let mut h = IngestHandle::streaming(OrderId::new(7), 4, rx);
 /// assert_eq!(h.ready(), 0);
 /// assert_eq!(h.wait_slot(0).unwrap(), 10);
 /// assert_eq!(h.ready(), 4); // absorbing chunk 0 also commits buffered chunk 2
@@ -194,7 +350,7 @@ pub struct LabelChunk {
 /// ```
 #[derive(Debug)]
 pub struct IngestHandle {
-    order_id: u64,
+    order_id: OrderId,
     expect: usize,
     rx: Option<Receiver<LabelChunk>>,
     committed: Vec<u32>,
@@ -204,7 +360,7 @@ pub struct IngestHandle {
 
 impl IngestHandle {
     /// Handle over a live chunk stream for an order of `expect` labels.
-    pub fn streaming(order_id: u64, expect: usize, rx: Receiver<LabelChunk>) -> IngestHandle {
+    pub fn streaming(order_id: OrderId, expect: usize, rx: Receiver<LabelChunk>) -> IngestHandle {
         IngestHandle {
             order_id,
             expect,
@@ -217,7 +373,7 @@ impl IngestHandle {
 
     /// Handle over an already-resolved order (the synchronous degenerate
     /// case — e.g. [`super::AnnotationService`]'s default `submit`).
-    pub fn resolved(order_id: u64, labels: Vec<u32>) -> IngestHandle {
+    pub fn resolved(order_id: OrderId, labels: Vec<u32>) -> IngestHandle {
         IngestHandle {
             order_id,
             expect: labels.len(),
@@ -229,7 +385,7 @@ impl IngestHandle {
     }
 
     /// Id of the order this handle tracks.
-    pub fn order_id(&self) -> u64 {
+    pub fn order_id(&self) -> OrderId {
         self.order_id
     }
 
@@ -359,14 +515,14 @@ impl IngestHandle {
 ///
 /// ```
 /// use std::sync::mpsc::channel;
-/// use mcal::annotation::ingest::{GatedLabels, IngestHandle, LabelChunk};
+/// use mcal::annotation::ingest::{GatedLabels, IngestHandle, LabelChunk, OrderId};
 ///
 /// let committed = vec![1, 2];
 /// let (tx, rx) = channel();
 /// tx.send(LabelChunk { offset: 0, labels: vec![3, 4] }).unwrap();
 /// drop(tx);
 /// let mut g = GatedLabels::over(&committed);
-/// g.push_order(IngestHandle::streaming(7, 2, rx));
+/// g.push_order(IngestHandle::streaming(OrderId::new(7), 2, rx));
 /// assert_eq!(g.len(), 4);
 /// assert_eq!(g.get(1).unwrap(), 2); // committed prefix: no gating
 /// assert_eq!(g.get(3).unwrap(), 4); // gated on the in-flight order
@@ -507,13 +663,52 @@ mod tests {
     }
 
     #[test]
+    fn order_ids_partition_sequential_and_warm_spaces() {
+        for i in 0..64u64 {
+            assert!(OrderId::warm(i).is_warm());
+            assert!(!OrderId::new(i).is_warm());
+            assert_ne!(OrderId::warm(i), OrderId::new(i));
+        }
+        // A run would need ~9e18 purchases to reach the reserved space.
+        assert_eq!(WARM_ORDER_BASE, u64::MAX / 2 + 1);
+    }
+
+    #[test]
+    fn consensus_votes_are_deterministic_and_reduce_error() {
+        let seed = order_seed(7, 2);
+        // votes <= 1 is exactly the single-shot resolver.
+        for slot in 0..64 {
+            assert_eq!(
+                resolve_label_voted(seed, slot, 2, 5, 0.4, 1),
+                resolve_label(seed, slot, 2, 5, 0.4),
+            );
+            assert_eq!(
+                resolve_label_voted(seed, slot, 2, 5, 0.4, 3),
+                resolve_label_voted(seed, slot, 2, 5, 0.4, 3),
+            );
+            // Zero error rate needs no votes at all.
+            assert_eq!(resolve_label_voted(seed, slot, 2, 5, 0.0, 3), 2);
+        }
+        // 3-way majority vote beats single-shot on realized error
+        // (p = 0.3, 5 classes: ≈ 0.17 consensus vs 0.30 single-shot).
+        let n = 2000usize;
+        let single =
+            (0..n).filter(|&s| resolve_label_voted(seed, s, 1, 5, 0.3, 1) != 1).count();
+        let voted =
+            (0..n).filter(|&s| resolve_label_voted(seed, s, 1, 5, 0.3, 3) != 1).count();
+        assert!(voted < single, "consensus must lower error: {voted} vs {single}");
+        // All outcomes stay valid classes.
+        assert!((0..200).all(|s| resolve_label_voted(seed, s, 1, 5, 0.9, 5) < 5));
+    }
+
+    #[test]
     fn out_of_order_chunks_commit_in_order() {
         let (tx, rx) = channel();
         tx.send(LabelChunk { offset: 4, labels: vec![4, 5] }).unwrap();
         tx.send(LabelChunk { offset: 2, labels: vec![2, 3] }).unwrap();
         tx.send(LabelChunk { offset: 0, labels: vec![0, 1] }).unwrap();
         drop(tx);
-        let mut h = IngestHandle::streaming(1, 6, rx);
+        let mut h = IngestHandle::streaming(OrderId::new(1), 6, rx);
         assert_eq!(h.wait_slot(5).unwrap(), 5);
         assert_eq!(h.chunks_received(), 3);
         assert_eq!(h.drain().unwrap(), vec![0, 1, 2, 3, 4, 5]);
@@ -526,7 +721,7 @@ mod tests {
             std::thread::sleep(Duration::from_millis(20));
             tx.send(LabelChunk { offset: 0, labels: vec![11, 22] }).unwrap();
         });
-        let mut h = IngestHandle::streaming(2, 2, rx);
+        let mut h = IngestHandle::streaming(OrderId::new(2), 2, rx);
         assert_eq!(h.wait_slot(1).unwrap(), 22);
         t.join().unwrap();
     }
@@ -535,24 +730,27 @@ mod tests {
     fn closed_stream_is_a_clean_error() {
         let (tx, rx) = channel::<LabelChunk>();
         drop(tx);
-        let mut h = IngestHandle::streaming(5, 3, rx);
+        let mut h = IngestHandle::streaming(OrderId::new(5), 3, rx);
         let msg = format!("{}", h.wait_slot(0).unwrap_err());
         assert!(msg.contains("order 5") && msg.contains("closed early"), "{msg}");
     }
 
     #[test]
     fn resolved_handle_needs_no_stream() {
-        let h = IngestHandle::resolved(0, vec![9, 8, 7]);
+        let h = IngestHandle::resolved(OrderId::new(0), vec![9, 8, 7]);
         assert_eq!(h.ready(), 3);
         assert_eq!(h.len(), 3);
         assert_eq!(h.drain().unwrap(), vec![9, 8, 7]);
         // Empty orders drain immediately too.
-        assert!(IngestHandle::resolved(1, Vec::new()).drain().unwrap().is_empty());
+        assert!(IngestHandle::resolved(OrderId::new(1), Vec::new())
+            .drain()
+            .unwrap()
+            .is_empty());
     }
 
     #[test]
     fn wait_slot_out_of_range_is_error() {
-        let mut h = IngestHandle::resolved(2, vec![1]);
+        let mut h = IngestHandle::resolved(OrderId::new(2), vec![1]);
         assert!(h.wait_slot(1).is_err());
     }
 
@@ -560,9 +758,9 @@ mod tests {
     fn gated_labels_spans_prefix_and_orders() {
         let committed = vec![10, 11];
         let mut g = GatedLabels::over(&committed);
-        g.push_order(IngestHandle::resolved(0, vec![20, 21, 22]));
-        g.push_order(IngestHandle::resolved(1, Vec::new())); // dropped
-        g.push_order(IngestHandle::resolved(2, vec![30]));
+        g.push_order(IngestHandle::resolved(OrderId::new(0), vec![20, 21, 22]));
+        g.push_order(IngestHandle::resolved(OrderId::new(1), Vec::new())); // dropped
+        g.push_order(IngestHandle::resolved(OrderId::new(2), vec![30]));
         assert_eq!(g.len(), 6);
         // Out-of-order access across segment boundaries.
         assert_eq!(g.get(5).unwrap(), 30);
@@ -585,8 +783,8 @@ mod tests {
             tx_a.send(LabelChunk { offset: 0, labels: vec![5, 6] }).unwrap();
         });
         let mut g = GatedLabels::over(&committed);
-        g.push_order(IngestHandle::streaming(0, 2, rx_a));
-        g.push_order(IngestHandle::streaming(1, 1, rx_b));
+        g.push_order(IngestHandle::streaming(OrderId::new(0), 2, rx_a));
+        g.push_order(IngestHandle::streaming(OrderId::new(1), 1, rx_b));
         assert_eq!(g.get(3).unwrap(), 9, "slot 3 waits for order A to commit first");
         assert_eq!(g.get(1).unwrap(), 5);
         t.join().unwrap();
@@ -598,7 +796,7 @@ mod tests {
         let (tx, rx) = channel::<LabelChunk>();
         drop(tx);
         let mut g = GatedLabels::over(&[]);
-        g.push_order(IngestHandle::streaming(4, 2, rx));
+        g.push_order(IngestHandle::streaming(OrderId::new(4), 2, rx));
         let msg = format!("{}", g.get(0).unwrap_err());
         assert!(msg.contains("order 4"), "{msg}");
         // An empty view needs no orders at all.

@@ -20,6 +20,8 @@
 
 use std::sync::Mutex;
 
+use super::ingest::OrderId;
+
 /// Provenance for one submitted acquisition order: what was bought as a
 /// unit and what it cost. Surfaced in
 /// [`crate::coordinator::RunReport::orders`].
@@ -28,13 +30,12 @@ pub struct OrderRecord {
     /// Order id (see [`super::ingest::LabelOrder::id`]): sequential
     /// within a run, except the warm-start re-buy, whose orders id from
     /// the reserved top-half space
-    /// ([`crate::coordinator::state::WARM_ORDER_BASE`]) so the resumed
-    /// loop's sequential ids stay invariant to how the re-buy was
-    /// chunked.
-    pub id: u64,
-    /// Labels the order purchased.
+    /// ([`super::ingest::WARM_ORDER_BASE`]) so the resumed loop's
+    /// sequential ids stay invariant to how the re-buy was chunked.
+    pub id: OrderId,
+    /// Annotation passes the order billed (consensus votes included).
     pub labels: u64,
-    /// Dollars charged for the order (labels × price).
+    /// Dollars charged for the order (billed passes × tier price).
     pub dollars: f64,
 }
 
@@ -128,13 +129,21 @@ impl Ledger {
 
     /// Log one submitted acquisition order (provenance; totals are charged
     /// separately via [`Ledger::charge_labels`]).
-    pub fn record_order(&self, id: u64, labels: u64, dollars: f64) {
+    pub fn record_order(&self, id: OrderId, labels: u64, dollars: f64) {
         self.orders.lock().unwrap().push(OrderRecord { id, labels, dollars });
     }
 
     /// The per-order log, in submission order.
     pub fn order_log(&self) -> Vec<OrderRecord> {
         self.orders.lock().unwrap().clone()
+    }
+
+    /// The raw `(price, labels)` buckets in first-charge order — one
+    /// bucket per distinct label price. In a tier market every tier has
+    /// its own price, so these are exactly the per-tier purchase totals,
+    /// split-invariant by construction.
+    pub fn label_buckets(&self) -> Vec<(f64, u64)> {
+        self.inner.lock().unwrap().label_buckets.clone()
     }
 
     pub fn snapshot(&self) -> CostBreakdown {
@@ -179,12 +188,12 @@ mod tests {
     #[test]
     fn order_log_preserves_submission_order() {
         let l = Ledger::new();
-        l.record_order(0, 50, 2.0);
-        l.record_order(1, 10, 0.4);
+        l.record_order(OrderId::new(0), 50, 2.0);
+        l.record_order(OrderId::new(1), 10, 0.4);
         let log = l.order_log();
         assert_eq!(log.len(), 2);
-        assert_eq!(log[0], OrderRecord { id: 0, labels: 50, dollars: 2.0 });
-        assert_eq!(log[1].id, 1);
+        assert_eq!(log[0], OrderRecord { id: OrderId::new(0), labels: 50, dollars: 2.0 });
+        assert_eq!(log[1].id, OrderId::new(1));
     }
 
     /// The split-invariance the streamed finalize pass relies on: charging
@@ -212,6 +221,7 @@ mod tests {
         let s = mixed.snapshot();
         assert_eq!(s.labels_purchased, 35);
         assert!((s.human_labeling - (15.0 * 0.04 + 20.0 * 0.003)).abs() < 1e-12);
+        assert_eq!(mixed.label_buckets(), vec![(0.04, 15), (0.003, 20)]);
     }
 
     #[test]

@@ -1,0 +1,522 @@
+//! Multi-tier annotator market: tier descriptors and the routing service
+//! that owns one simulated fleet per tier.
+//!
+//! ## Model
+//!
+//! The paper prices every human label at a single service rate (Amazon
+//! \$0.04, Satyam \$0.003), but real labeling economics are a market: a
+//! cheap noisy tier (LLM or low-pay crowd), a mid-price crowd tier, an
+//! expensive expert tier — each with its own price, latency, error rate,
+//! and quality control. This module generalizes the annotation layer to
+//! that market:
+//!
+//! - a [`TierSpec`] is the single pricing descriptor of one tier — name,
+//!   price per label, simulated latency, per-pass error rate, fleet
+//!   width, and a consensus factor (`votes`): noisy tiers re-label every
+//!   slot `votes` times and majority-vote the result
+//!   ([`super::ingest::resolve_label_voted`]), billing every pass;
+//! - a [`TierMarket`] owns one [`SimService`] fleet per tier behind the
+//!   object-safe [`AnnotationService`] submit/ingest path and dispatches
+//!   each [`super::ingest::LabelOrder`] by its
+//!   [`TierRoute`](super::ingest::TierRoute).
+//!
+//! ## Determinism and accounting
+//!
+//! A route is delivery metadata: order seed streams derive from order
+//! ids alone, so a routed order's labels — consensus votes included —
+//! are bit-identical across worker counts, chunk sizes, latencies, and
+//! `--jobs`, exactly like single-tier orders. All fleets charge one
+//! shared [`Ledger`]; because the ledger accumulates label purchases as
+//! integer `(price, count)` buckets, per-tier dollar totals are
+//! split-invariant for free — one bucket per tier price, bit-identical
+//! however each tier's purchases were chunked into orders
+//! ([`TierMarket::tier_usage`] surfaces them).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::ingest::{IngestHandle, LabelOrder, TierRoute};
+use super::ledger::Ledger;
+use super::sim::{SimService, SimServiceConfig};
+use super::AnnotationService;
+use crate::dataset::Dataset;
+use crate::prng::stream_seed;
+use crate::{Error, Result};
+
+/// One annotator tier: the single pricing descriptor of the annotation
+/// layer. Presets ([`TierSpec::amazon`], [`TierSpec::satyam`]) mirror the
+/// paper's services; the CLI `--tiers` knob parses custom tier tables
+/// with [`TierSpec::parse_list`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierSpec {
+    /// Human-readable tier name (unique within a market).
+    pub name: String,
+    /// Dollars billed per annotation pass (a `votes`-way consensus tier
+    /// bills `votes` passes per requested label).
+    pub price_per_label: f64,
+    /// Simulated annotator turnaround per pass (0 = instant).
+    pub latency: Duration,
+    /// Probability one annotation pass is wrong (paper: 0).
+    pub error_rate: f64,
+    /// Annotator fleet width for this tier.
+    pub workers: usize,
+    /// Consensus factor: each slot is labeled `votes` times and resolved
+    /// by majority vote; every pass is billed. `1` = single-shot.
+    pub votes: usize,
+}
+
+impl TierSpec {
+    /// A perfect single-shot tier named `name` at `price` dollars per
+    /// label, with the default fleet width.
+    pub fn new(name: &str, price: f64) -> TierSpec {
+        TierSpec {
+            name: name.into(),
+            price_per_label: price,
+            latency: Duration::ZERO,
+            error_rate: 0.0,
+            workers: 4,
+            votes: 1,
+        }
+    }
+
+    /// Amazon SageMaker GT preset: $0.04 / label, perfect annotators.
+    pub fn amazon() -> TierSpec {
+        TierSpec::new("amazon", 0.04)
+    }
+
+    /// Satyam preset: $0.003 / label, perfect annotators.
+    pub fn satyam() -> TierSpec {
+        TierSpec::new("satyam", 0.003)
+    }
+
+    /// A custom-priced perfect tier (the `--service <price>` path).
+    pub fn custom(price: f64) -> TierSpec {
+        TierSpec::new(&format!("custom({price})"), price)
+    }
+
+    /// Replace the fleet width.
+    pub fn with_workers(mut self, workers: usize) -> TierSpec {
+        self.workers = workers;
+        self
+    }
+
+    /// Replace the per-pass turnaround latency.
+    pub fn with_latency(mut self, latency: Duration) -> TierSpec {
+        self.latency = latency;
+        self
+    }
+
+    /// Replace the per-pass error rate.
+    pub fn with_error(mut self, error_rate: f64) -> TierSpec {
+        self.error_rate = error_rate;
+        self
+    }
+
+    /// Replace the consensus factor (clamped to ≥ 1).
+    pub fn with_votes(mut self, votes: usize) -> TierSpec {
+        self.votes = votes.max(1);
+        self
+    }
+
+    /// Annotation passes billed for an `n`-label order on this tier.
+    pub fn billed(&self, n: u64) -> u64 {
+        n * self.votes as u64
+    }
+
+    /// Effective dollars per *requested* label — price × votes; what a
+    /// cost comparison against a single-shot tier should use.
+    pub fn effective_price(&self) -> f64 {
+        self.price_per_label * self.votes as f64
+    }
+
+    /// Check the spec is usable: non-empty name, finite positive price
+    /// (non-finite or non-positive prices would poison the ledger's
+    /// price-bucket matching), error rate in `[0, 1)`, and at least one
+    /// worker and one vote.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(Error::Config("tier spec has an empty name".into()));
+        }
+        if !self.price_per_label.is_finite() || self.price_per_label <= 0.0 {
+            return Err(Error::Config(format!(
+                "tier {:?}: price per label must be finite and positive, got {}",
+                self.name, self.price_per_label
+            )));
+        }
+        if !self.error_rate.is_finite() || !(0.0..1.0).contains(&self.error_rate) {
+            return Err(Error::Config(format!(
+                "tier {:?}: error rate must be in [0, 1), got {}",
+                self.name, self.error_rate
+            )));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config(format!("tier {:?}: needs at least one worker", self.name)));
+        }
+        if self.votes == 0 {
+            return Err(Error::Config(format!("tier {:?}: needs at least one vote", self.name)));
+        }
+        Ok(())
+    }
+
+    /// Parse one `name:price[:error[:votes]]` tier spec (the CLI
+    /// `--tiers` element syntax, e.g. `cheap:0.003:0.3:3`).
+    pub fn parse(s: &str) -> Result<TierSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if !(2..=4).contains(&parts.len()) {
+            return Err(Error::Config(format!(
+                "bad tier spec {s:?}: expected name:price[:error[:votes]]"
+            )));
+        }
+        let price: f64 = parts[1]
+            .parse()
+            .map_err(|_| Error::Config(format!("bad tier spec {s:?}: price {:?}", parts[1])))?;
+        let mut tier = TierSpec::new(parts[0], price);
+        if let Some(e) = parts.get(2) {
+            tier.error_rate = e
+                .parse()
+                .map_err(|_| Error::Config(format!("bad tier spec {s:?}: error rate {e:?}")))?;
+        }
+        if let Some(v) = parts.get(3) {
+            tier.votes = v
+                .parse()
+                .map_err(|_| Error::Config(format!("bad tier spec {s:?}: votes {v:?}")))?;
+        }
+        tier.validate()?;
+        Ok(tier)
+    }
+
+    /// Parse a comma-separated tier table (the full `--tiers` value, e.g.
+    /// `cheap:0.003:0.3:3,expert:0.04:0.0`).
+    pub fn parse_list(s: &str) -> Result<Vec<TierSpec>> {
+        let specs = s
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| TierSpec::parse(t.trim()))
+            .collect::<Result<Vec<TierSpec>>>()?;
+        if specs.is_empty() {
+            return Err(Error::Config("empty tier table".into()));
+        }
+        Ok(specs)
+    }
+}
+
+/// Per-tier spend surfaced by [`TierMarket::tier_usage`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierUsage {
+    /// The tier's name.
+    pub name: String,
+    /// Annotation passes billed on the tier so far (consensus votes
+    /// included).
+    pub labels: u64,
+    /// Dollars those passes cost (labels × the tier's price).
+    pub dollars: f64,
+}
+
+/// Routing annotation service over a table of tiers: one [`SimService`]
+/// fleet per [`TierSpec`], all charging one shared [`Ledger`], orders
+/// dispatched by [`LabelOrder::route`].
+///
+/// The default route is the most *expensive* tier — the market's expert /
+/// reference tier: unrouted work (T/B₀ setup, the finalize residual, any
+/// policy that never routes) lands there, and
+/// [`AnnotationService::reference_price`] prices cost models off it, so a
+/// single-tier market behaves exactly like a plain [`SimService`].
+pub struct TierMarket {
+    specs: Vec<TierSpec>,
+    fleets: Vec<SimService>,
+    default_route: TierRoute,
+}
+
+impl TierMarket {
+    /// Build one fleet per tier. `chunk_size` is the shared streaming
+    /// granularity (`--ingest-chunk`); each tier's fleet draws its
+    /// synchronous-batch seed stream from `stream_seed(seed, tier index)`
+    /// so tiers never share label-flip streams. Rejects invalid specs and
+    /// duplicate tier names or prices (price buckets are how per-tier
+    /// dollars stay separable in the shared ledger).
+    pub fn new(
+        specs: Vec<TierSpec>,
+        chunk_size: usize,
+        seed: u64,
+        ledger: Arc<Ledger>,
+    ) -> Result<TierMarket> {
+        if specs.is_empty() {
+            return Err(Error::Config("tier market needs at least one tier".into()));
+        }
+        for (i, spec) in specs.iter().enumerate() {
+            spec.validate()?;
+            for other in &specs[..i] {
+                if other.name == spec.name {
+                    return Err(Error::Config(format!("duplicate tier name {:?}", spec.name)));
+                }
+                if other.price_per_label.to_bits() == spec.price_per_label.to_bits() {
+                    return Err(Error::Config(format!(
+                        "tiers {:?} and {:?} share price {} — per-tier dollars would \
+                         merge in the ledger's price buckets",
+                        other.name, spec.name, spec.price_per_label
+                    )));
+                }
+            }
+        }
+        let fleets = specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                SimService::new(
+                    SimServiceConfig {
+                        tier: spec.clone(),
+                        chunk_size,
+                        seed: stream_seed(seed, i as u64),
+                        ..Default::default()
+                    },
+                    ledger.clone(),
+                )
+            })
+            .collect();
+        let default_route = specs
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| {
+                a.price_per_label
+                    .partial_cmp(&b.price_per_label)
+                    .expect("validated tier prices are finite")
+            })
+            .map(|(i, _)| TierRoute::new(i))
+            .expect("non-empty tier table");
+        Ok(TierMarket { specs, fleets, default_route })
+    }
+
+    /// The tier table, route-indexed.
+    pub fn specs(&self) -> &[TierSpec] {
+        &self.specs
+    }
+
+    /// The spec behind a route.
+    ///
+    /// # Panics
+    /// On a route `>= tiers()` — routes are constructed from this
+    /// market's own table.
+    pub fn spec(&self, route: TierRoute) -> &TierSpec {
+        &self.specs[route.index()]
+    }
+
+    /// Route of the tier named `name`, if present.
+    pub fn route_of(&self, name: &str) -> Option<TierRoute> {
+        self.specs.iter().position(|t| t.name == name).map(TierRoute::new)
+    }
+
+    /// Route of the cheapest tier by *effective* price (price × votes) —
+    /// the natural low-margin route for a tiered policy.
+    pub fn cheapest_route(&self) -> TierRoute {
+        self.specs
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.effective_price()
+                    .partial_cmp(&b.effective_price())
+                    .expect("validated tier prices are finite")
+            })
+            .map(|(i, _)| TierRoute::new(i))
+            .expect("non-empty tier table")
+    }
+
+    /// Per-tier spend so far: billed passes and dollars, in tier-table
+    /// order. Deterministic (each fleet's purchase counter is charged on
+    /// the submitting thread) and split-invariant (integer pass counts ×
+    /// the tier price — the same arithmetic as the ledger's buckets).
+    pub fn tier_usage(&self) -> Vec<TierUsage> {
+        self.specs
+            .iter()
+            .zip(&self.fleets)
+            .map(|(spec, fleet)| {
+                let labels = fleet.labels_purchased();
+                TierUsage {
+                    name: spec.name.clone(),
+                    labels,
+                    dollars: labels as f64 * spec.price_per_label,
+                }
+            })
+            .collect()
+    }
+}
+
+impl AnnotationService for TierMarket {
+    fn price_per_label(&self, route: TierRoute) -> f64 {
+        self.specs[route.index()].price_per_label
+    }
+
+    fn tiers(&self) -> usize {
+        self.specs.len()
+    }
+
+    fn default_route(&self) -> TierRoute {
+        self.default_route
+    }
+
+    fn billed_labels(&self, n: u64, route: TierRoute) -> u64 {
+        self.specs[route.index()].billed(n)
+    }
+
+    fn label_batch(&self, ds: &Dataset, indices: &[usize]) -> Result<Vec<u32>> {
+        self.fleets[self.default_route.index()].label_batch(ds, indices)
+    }
+
+    fn submit(&self, ds: &Dataset, order: LabelOrder) -> Result<IngestHandle> {
+        let i = order.route.index();
+        if i >= self.fleets.len() {
+            return Err(Error::Annotation(format!(
+                "order {}: route {} out of range ({} tiers)",
+                order.id,
+                i,
+                self.fleets.len()
+            )));
+        }
+        self.fleets[i].submit(ds, order)
+    }
+
+    fn ingest_chunk(&self) -> usize {
+        self.fleets[0].ingest_chunk()
+    }
+
+    fn labels_purchased(&self) -> u64 {
+        self.fleets.iter().map(|f| f.labels_purchased()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::annotation::ingest::OrderId;
+    use crate::dataset::SynthSpec;
+
+    fn ds() -> Dataset {
+        SynthSpec {
+            name: "t".into(),
+            num_classes: 5,
+            per_class: 40,
+            feat_dim: 4,
+            subclusters: 1,
+            center_scale: 1.0,
+            spread: 0.1,
+            noise: 0.1,
+            seed: 3,
+        }
+        .generate()
+        .unwrap()
+    }
+
+    fn cheap_expert() -> Vec<TierSpec> {
+        vec![
+            TierSpec::new("cheap", 0.003).with_error(0.3).with_votes(3),
+            TierSpec::new("expert", 0.04),
+        ]
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_syntax() {
+        let tiers = TierSpec::parse_list("cheap:0.003:0.3:3,expert:0.04:0.0").unwrap();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].name, "cheap");
+        assert_eq!(tiers[0].price_per_label, 0.003);
+        assert_eq!(tiers[0].error_rate, 0.3);
+        assert_eq!(tiers[0].votes, 3);
+        assert_eq!(tiers[1].name, "expert");
+        assert_eq!(tiers[1].votes, 1);
+        // Effective price includes the consensus factor.
+        assert!((tiers[0].effective_price() - 0.009).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_and_poisonous_specs() {
+        assert!(TierSpec::parse("noprice").is_err());
+        assert!(TierSpec::parse("a:b:c:d:e").is_err());
+        assert!(TierSpec::parse("t:nan").is_err(), "NaN would poison ledger buckets");
+        assert!(TierSpec::parse("t:-0.01").is_err());
+        assert!(TierSpec::parse("t:0").is_err());
+        assert!(TierSpec::parse("t:0.01:1.5").is_err());
+        assert!(TierSpec::parse("t:0.01:0.2:0").is_err());
+        assert!(TierSpec::parse(":0.01").is_err());
+        assert!(TierSpec::parse_list("").is_err());
+        // Duplicate names or prices are rejected at market construction.
+        let dup_name = vec![TierSpec::new("a", 0.01), TierSpec::new("a", 0.02)];
+        assert!(TierMarket::new(dup_name, 0, 1, Arc::new(Ledger::new())).is_err());
+        let dup_price = vec![TierSpec::new("a", 0.01), TierSpec::new("b", 0.01)];
+        assert!(TierMarket::new(dup_price, 0, 1, Arc::new(Ledger::new())).is_err());
+    }
+
+    #[test]
+    fn routes_orders_to_their_tier_and_splits_ledger_buckets() {
+        let ds = ds();
+        let ledger = Arc::new(Ledger::new());
+        let market = TierMarket::new(cheap_expert(), 0, 9, ledger.clone()).unwrap();
+        assert_eq!(market.tiers(), 2);
+        // Default route is the expensive (expert) tier; cheapest is cheap
+        // even though it bills 3 votes (0.009 < 0.04).
+        assert_eq!(market.default_route(), TierRoute::new(1));
+        assert_eq!(market.cheapest_route(), TierRoute::new(0));
+        assert_eq!(market.route_of("cheap"), Some(TierRoute::new(0)));
+        assert_eq!(market.route_of("nope"), None);
+
+        let cheap = LabelOrder::routed(OrderId::new(0), TierRoute::new(0), (0..40).collect(), 5);
+        let expert = LabelOrder::routed(OrderId::new(1), TierRoute::new(1), (40..70).collect(), 5);
+        market.submit(&ds, cheap).unwrap().drain().unwrap();
+        let expert_labels = market.submit(&ds, expert).unwrap().drain().unwrap();
+        // The perfect expert tier returns groundtruth.
+        for (i, &l) in (40..70).zip(expert_labels.iter()) {
+            assert_eq!(l, ds.groundtruth(i));
+        }
+        // 40 requested × 3 votes on cheap, 30 single-shot on expert.
+        let usage = market.tier_usage();
+        assert_eq!(usage[0].labels, 120);
+        assert_eq!(usage[1].labels, 30);
+        assert!((usage[0].dollars - 120.0 * 0.003).abs() < 1e-12);
+        assert!((usage[1].dollars - 30.0 * 0.04).abs() < 1e-12);
+        assert_eq!(market.labels_purchased(), 150);
+        // The shared ledger keeps one bucket per tier price.
+        let buckets = ledger.label_buckets();
+        assert_eq!(buckets, vec![(0.003, 120), (0.04, 30)]);
+        // An out-of-range route is a clean error, not a misprice.
+        let bad = LabelOrder::routed(OrderId::new(2), TierRoute::new(7), vec![0], 5);
+        assert!(market.submit(&ds, bad).is_err());
+    }
+
+    /// Consensus outcomes are bit-identical across worker counts and
+    /// chunk sizes (the market half of the gen-7 determinism contract),
+    /// and per-tier dollars are split-invariant.
+    #[test]
+    fn routed_consensus_is_chunk_and_worker_invariant() {
+        let ds = ds();
+        let configs = [(0usize, 1usize, 0u64), (1, 4, 0), (7, 3, 0), (64, 2, 120)];
+        let mut runs: Vec<(Vec<u32>, Vec<(u64, u64)>)> = Vec::new();
+        for &(chunk, workers, latency_us) in &configs {
+            let ledger = Arc::new(Ledger::new());
+            let specs = vec![
+                TierSpec::new("cheap", 0.003)
+                    .with_error(0.3)
+                    .with_votes(3)
+                    .with_workers(workers)
+                    .with_latency(Duration::from_micros(latency_us)),
+                TierSpec::new("expert", 0.04).with_workers(workers),
+            ];
+            let market = TierMarket::new(specs, chunk, 17, ledger.clone()).unwrap();
+            let order =
+                LabelOrder::routed(OrderId::new(3), TierRoute::new(0), (0..60).collect(), 17);
+            let labels = market.submit(&ds, order).unwrap().drain().unwrap();
+            let buckets: Vec<(u64, u64)> = ledger
+                .label_buckets()
+                .into_iter()
+                .map(|(p, c)| (p.to_bits(), c))
+                .collect();
+            runs.push((labels, buckets));
+        }
+        for r in &runs[1..] {
+            assert_eq!(r.0, runs[0].0, "consensus labels must not depend on fleet shape");
+            assert_eq!(r.1, runs[0].1, "per-tier dollars must not depend on fleet shape");
+        }
+        // The noisy tier really is noisy, and consensus bounds it below
+        // the single-shot rate.
+        let wrong = runs[0].0.iter().enumerate().filter(|&(i, &l)| l != ds.groundtruth(i)).count();
+        assert!(wrong > 0, "error knob must fire");
+        assert!(wrong < 60 * 3 / 10, "3-way consensus must beat the 0.3 single-shot rate");
+    }
+}

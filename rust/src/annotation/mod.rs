@@ -6,26 +6,35 @@
 //! from dataset groundtruth (the paper's evaluation assumes perfect human
 //! labels, §2 fn. 2 — an error-rate knob exists for robustness studies),
 //! a streaming [`ingest`] layer that resolves acquisition orders in
-//! chunks so labeling can overlap training, and a thread-safe dollar
-//! [`Ledger`] (with per-order accounting) that every cost in the system
-//! flows through (human labels, simulated GPU training, exploration tax).
+//! chunks so labeling can overlap training, a multi-tier annotator
+//! [`market`] that routes orders across priced tiers with consensus
+//! quality control, and a thread-safe dollar [`Ledger`] (with per-order
+//! accounting) that every cost in the system flows through (human
+//! labels, simulated GPU training, exploration tax).
 //!
 //! Determinism contract: label values derive from per-order seed streams
-//! ([`ingest::order_seed`] + [`ingest::resolve_label`]) and charges apply
+//! ([`ingest::order_seed`] + [`ingest::resolve_label`], and for
+//! consensus tiers [`ingest::resolve_label_voted`]) and charges apply
 //! once per order on the submitting thread, so everything a run observes
 //! through this module is bit-identical across worker counts, ingestion
-//! chunk sizes, simulated latencies, and `--jobs` values.
+//! chunk sizes, simulated latencies, and `--jobs` values. A
+//! [`TierRoute`](ingest::TierRoute) is delivery metadata only — it never
+//! enters a seed stream.
 
 pub mod ingest;
 pub mod ledger;
+pub mod market;
 pub mod sim;
 
-pub use ingest::{GatedLabels, IngestConfig, IngestHandle, LabelChunk, LabelOrder};
+pub use ingest::{
+    GatedLabels, IngestConfig, IngestHandle, LabelChunk, LabelOrder, OrderId, TierRoute,
+};
 pub use ledger::{CostBreakdown, Ledger, OrderRecord};
+pub use market::{TierMarket, TierSpec, TierUsage};
 pub use sim::{SimService, SimServiceConfig};
 
 use crate::dataset::Dataset;
-use crate::Result;
+use crate::{Error, Result};
 
 /// Pricing presets from the paper (§5).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -55,19 +64,76 @@ impl Service {
         }
     }
 
-    pub fn parse(s: &str) -> Option<Service> {
+    /// The preset as a single-tier [`TierSpec`] (perfect annotators,
+    /// default fleet width) — the bridge from the paper's flat-price
+    /// services into the tier market.
+    pub fn tier(&self) -> TierSpec {
+        match self {
+            Service::Amazon => TierSpec::amazon(),
+            Service::Satyam => TierSpec::satyam(),
+            Service::Custom(p) => TierSpec::custom(*p),
+        }
+    }
+
+    /// Parse a service name (`amazon`, `satyam`) or a custom price.
+    /// Rejects non-finite and non-positive prices — `Custom(NaN)` would
+    /// poison the ledger's price-bucket matching.
+    pub fn parse(s: &str) -> Result<Service> {
         match s {
-            "amazon" => Some(Service::Amazon),
-            "satyam" => Some(Service::Satyam),
-            other => other.parse::<f64>().ok().map(Service::Custom),
+            "amazon" => Ok(Service::Amazon),
+            "satyam" => Ok(Service::Satyam),
+            other => {
+                let p: f64 = other.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "bad service {other:?}: expected amazon, satyam, or a price per label"
+                    ))
+                })?;
+                if !p.is_finite() || p <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "bad service price {p}: must be finite and positive"
+                    )));
+                }
+                Ok(Service::Custom(p))
+            }
         }
     }
 }
 
 /// Anything that can produce human labels for dataset samples.
+///
+/// A service is a market of one or more priced tiers ([`TierSpec`]).
+/// Single-tier implementations ([`SimService`], the default trait
+/// methods) ignore routes; [`TierMarket`] dispatches each order to its
+/// routed tier's fleet.
 pub trait AnnotationService: Send + Sync {
-    /// Dollar price for a single label.
-    fn price_per_label(&self) -> f64;
+    /// Dollar price for a single annotation pass on the routed tier.
+    fn price_per_label(&self, route: TierRoute) -> f64;
+
+    /// Number of tiers this service routes across.
+    fn tiers(&self) -> usize {
+        1
+    }
+
+    /// The route unrouted work lands on — for a market, its most
+    /// expensive (expert / reference) tier.
+    fn default_route(&self) -> TierRoute {
+        TierRoute::default()
+    }
+
+    /// The default-route price: what flat-price cost models (human-only
+    /// baseline, budget search, stop rule) price a human label at.
+    fn reference_price(&self) -> f64 {
+        self.price_per_label(self.default_route())
+    }
+
+    /// Annotation passes billed for an `n`-label order on `route` — a
+    /// consensus tier bills `votes` passes per requested label. The
+    /// coordinator uses this to write [`OrderRecord`]s that match what
+    /// the service charges.
+    fn billed_labels(&self, n: u64, route: TierRoute) -> u64 {
+        let _ = route;
+        n
+    }
 
     /// Obtain human labels for `indices`, charging the ledger. Output is
     /// aligned with `indices`.
@@ -82,7 +148,8 @@ pub trait AnnotationService: Send + Sync {
     /// The default resolves the order synchronously via
     /// [`AnnotationService::label_batch`] (a pre-committed handle), so any
     /// service is streamable; [`SimService`] overrides it to resolve
-    /// orders in configurable chunks on its worker fleet.
+    /// orders in configurable chunks on its worker fleet, and
+    /// [`TierMarket`] dispatches by [`LabelOrder::route`].
     fn submit(&self, ds: &Dataset, order: LabelOrder) -> Result<IngestHandle> {
         let labels = self.label_batch(ds, &order.indices)?;
         Ok(IngestHandle::resolved(order.id, labels))
@@ -102,7 +169,8 @@ pub trait AnnotationService: Send + Sync {
         0
     }
 
-    /// Number of labels purchased so far.
+    /// Number of labels purchased so far (annotation passes, summed over
+    /// tiers).
     fn labels_purchased(&self) -> u64;
 }
 
@@ -114,13 +182,19 @@ mod tests {
     fn paper_prices() {
         assert_eq!(Service::Amazon.price_per_label(), 0.04);
         assert_eq!(Service::Satyam.price_per_label(), 0.003);
+        assert_eq!(Service::Amazon.tier().price_per_label, 0.04);
+        assert_eq!(Service::Satyam.tier().name, "satyam");
     }
 
     #[test]
     fn parse_services() {
-        assert_eq!(Service::parse("amazon"), Some(Service::Amazon));
-        assert_eq!(Service::parse("satyam"), Some(Service::Satyam));
-        assert_eq!(Service::parse("0.01"), Some(Service::Custom(0.01)));
-        assert_eq!(Service::parse("bogus"), None);
+        assert_eq!(Service::parse("amazon").unwrap(), Service::Amazon);
+        assert_eq!(Service::parse("satyam").unwrap(), Service::Satyam);
+        assert_eq!(Service::parse("0.01").unwrap(), Service::Custom(0.01));
+        assert!(Service::parse("bogus").is_err());
+        assert!(Service::parse("nan").is_err(), "NaN prices would poison ledger buckets");
+        assert!(Service::parse("inf").is_err());
+        assert!(Service::parse("-0.5").is_err());
+        assert!(Service::parse("0").is_err());
     }
 }

@@ -9,10 +9,17 @@
 //! - `workers` threads pull from a bounded request queue (`sync_channel`,
 //!   capacity `queue_cap`) — a full queue blocks the submitter, which is
 //!   exactly the backpressure a metered external service applies;
-//! - optional per-label `latency` models annotator turnaround;
+//! - optional per-pass `latency` models annotator turnaround;
 //! - optional `error_rate` flips labels uniformly (the paper assumes
-//!   perfect human labels; the knob exists for robustness studies);
-//! - every completed label charges the shared [`Ledger`].
+//!   perfect human labels; the knob exists for robustness studies), and a
+//!   consensus factor (`votes`) re-labels each slot and majority-votes
+//!   the result ([`super::ingest::resolve_label_voted`]);
+//! - every completed annotation pass charges the shared [`Ledger`].
+//!
+//! One fleet simulates one annotator *tier*: its price, latency, error
+//! rate, width, and consensus factor all come from the [`TierSpec`]
+//! embedded in [`SimServiceConfig`]. A multi-tier market
+//! ([`super::market::TierMarket`]) is a routing table of these fleets.
 //!
 //! Two request shapes ride the same worker fleet: the synchronous
 //! [`AnnotationService::label_batch`] (submit, block, collect), and the
@@ -32,8 +39,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::ingest::{resolve_label, IngestHandle, LabelChunk, LabelOrder};
+use super::ingest::{resolve_label_voted, IngestHandle, LabelChunk, LabelOrder, TierRoute};
 use super::ledger::Ledger;
+use super::market::TierSpec;
 use super::{AnnotationService, Service};
 use crate::dataset::Dataset;
 use crate::prng::stream_seed;
@@ -43,34 +51,71 @@ use crate::{Error, Result};
 /// never collide with order streams derived from the same seed.
 const BATCH_STREAM_SALT: u64 = 0xBA7C_45A1_7E11_0AB5;
 
-/// Simulator tuning.
+/// Simulator tuning. The annotator tier itself — price, latency, error
+/// rate, fleet width, consensus factor — is the embedded [`TierSpec`];
+/// the remaining fields tune the simulation plumbing around it.
 #[derive(Clone, Debug)]
 pub struct SimServiceConfig {
-    pub service: Service,
-    pub workers: usize,
+    /// The tier this fleet simulates (single pricing descriptor).
+    pub tier: TierSpec,
     pub queue_cap: usize,
-    /// Simulated annotator turnaround per label (0 = instant).
-    pub latency: Duration,
     /// Labels per streamed [`LabelChunk`] when resolving a submitted
     /// order; `0` resolves each order as a single chunk. Wall-clock only —
     /// results are bit-identical for every value.
     pub chunk_size: usize,
-    /// Probability a human label is wrong (paper: 0).
-    pub error_rate: f64,
     pub seed: u64,
 }
 
 impl Default for SimServiceConfig {
     fn default() -> Self {
         SimServiceConfig {
-            service: Service::Amazon,
-            workers: 4,
+            tier: TierSpec::amazon(),
             queue_cap: 1024,
-            latency: Duration::ZERO,
             chunk_size: 0,
-            error_rate: 0.0,
             seed: 0,
         }
+    }
+}
+
+impl SimServiceConfig {
+    /// A config simulating `tier` with default plumbing.
+    pub fn for_tier(tier: TierSpec) -> SimServiceConfig {
+        SimServiceConfig { tier, ..Default::default() }
+    }
+
+    /// A config for one of the paper's pricing presets.
+    pub fn preset(service: Service) -> SimServiceConfig {
+        SimServiceConfig::for_tier(service.tier())
+    }
+
+    /// Replace the seed the fleet's flip streams derive from.
+    pub fn with_seed(mut self, seed: u64) -> SimServiceConfig {
+        self.seed = seed;
+        self
+    }
+
+    /// Replace the streamed-chunk granularity.
+    pub fn with_chunk(mut self, chunk_size: usize) -> SimServiceConfig {
+        self.chunk_size = chunk_size;
+        self
+    }
+
+    /// Replace the tier's fleet width.
+    pub fn with_workers(mut self, workers: usize) -> SimServiceConfig {
+        self.tier.workers = workers;
+        self
+    }
+
+    /// Replace the tier's per-pass turnaround latency.
+    pub fn with_latency(mut self, latency: Duration) -> SimServiceConfig {
+        self.tier.latency = latency;
+        self
+    }
+
+    /// Replace the tier's per-pass error rate.
+    pub fn with_error(mut self, error_rate: f64) -> SimServiceConfig {
+        self.tier.error_rate = error_rate;
+        self
     }
 }
 
@@ -128,31 +173,40 @@ impl SimService {
         let (tx, rx) = sync_channel::<Job>(self.cfg.queue_cap);
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::new();
-        for _ in 0..self.cfg.workers.max(1) {
+        for _ in 0..self.cfg.tier.workers.max(1) {
             let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
             let results = self.results.clone();
-            let latency = self.cfg.latency;
-            let error_rate = self.cfg.error_rate;
+            let latency = self.cfg.tier.latency;
+            let error_rate = self.cfg.tier.error_rate;
+            let votes = self.cfg.tier.votes.max(1);
             handles.push(std::thread::spawn(move || loop {
                 let job = { rx.lock().unwrap().recv() };
                 match job {
                     Ok(Job::Label(slot, truth, classes, seed)) => {
                         if !latency.is_zero() {
-                            std::thread::sleep(latency);
+                            std::thread::sleep(latency * votes as u32);
                         }
-                        let label = resolve_label(seed, slot, truth, classes, error_rate);
+                        let label =
+                            resolve_label_voted(seed, slot, truth, classes, error_rate, votes);
                         results.lock().unwrap().push((slot, label));
                     }
                     Ok(Job::Chunk { offset, truths, classes, order_seed, tx }) => {
                         if !latency.is_zero() {
-                            // One annotator works the chunk label by label.
-                            std::thread::sleep(latency * truths.len() as u32);
+                            // One annotator works the chunk pass by pass.
+                            std::thread::sleep(latency * (truths.len() * votes) as u32);
                         }
                         let labels: Vec<u32> = truths
                             .iter()
                             .enumerate()
                             .map(|(i, &truth)| {
-                                resolve_label(order_seed, offset + i, truth, classes, error_rate)
+                                resolve_label_voted(
+                                    order_seed,
+                                    offset + i,
+                                    truth,
+                                    classes,
+                                    error_rate,
+                                    votes,
+                                )
                             })
                             .collect();
                         // A dropped handle (abandoned run) just discards
@@ -188,8 +242,13 @@ impl SimService {
 }
 
 impl AnnotationService for SimService {
-    fn price_per_label(&self) -> f64 {
-        self.cfg.service.price_per_label()
+    /// Single-tier fleet: every route prices at the configured tier.
+    fn price_per_label(&self, _route: TierRoute) -> f64 {
+        self.cfg.tier.price_per_label
+    }
+
+    fn billed_labels(&self, n: u64, _route: TierRoute) -> u64 {
+        self.cfg.tier.billed(n)
     }
 
     fn label_batch(&self, ds: &Dataset, indices: &[usize]) -> Result<Vec<u32>> {
@@ -232,10 +291,9 @@ impl AnnotationService for SimService {
             }
         }
 
-        self.purchased
-            .fetch_add(indices.len() as u64, Ordering::Relaxed);
-        self.ledger
-            .charge_labels(indices.len() as u64, self.price_per_label());
+        let billed = self.cfg.tier.billed(indices.len() as u64);
+        self.purchased.fetch_add(billed, Ordering::Relaxed);
+        self.ledger.charge_labels(billed, self.cfg.tier.price_per_label);
         Ok(out)
     }
 
@@ -272,9 +330,11 @@ impl AnnotationService for SimService {
                 .map_err(|_| Error::Annotation("worker pool hung up".into()))?;
         }
         // Charge only once the whole order is accepted — a failed submit
-        // must have no side effects, exactly like label_batch.
-        self.purchased.fetch_add(n as u64, Ordering::Relaxed);
-        self.ledger.charge_labels(n as u64, self.price_per_label());
+        // must have no side effects, exactly like label_batch. A
+        // consensus tier bills every annotation pass (n × votes).
+        let billed = self.cfg.tier.billed(n as u64);
+        self.purchased.fetch_add(billed, Ordering::Relaxed);
+        self.ledger.charge_labels(billed, self.cfg.tier.price_per_label);
         Ok(IngestHandle::streaming(order.id, n, rx))
     }
 
@@ -306,6 +366,7 @@ impl Drop for SimService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::annotation::ingest::OrderId;
     use crate::dataset::SynthSpec;
 
     fn ds() -> Dataset {
@@ -340,13 +401,7 @@ mod tests {
     fn charges_ledger_at_service_price() {
         let ds = ds();
         let ledger = Arc::new(Ledger::new());
-        let svc = SimService::new(
-            SimServiceConfig {
-                service: Service::Satyam,
-                ..Default::default()
-            },
-            ledger.clone(),
-        );
+        let svc = SimService::new(SimServiceConfig::preset(Service::Satyam), ledger.clone());
         svc.label_batch(&ds, &(0..100).collect::<Vec<_>>()).unwrap();
         assert!((ledger.snapshot().human_labeling - 0.3).abs() < 1e-9);
     }
@@ -355,11 +410,7 @@ mod tests {
     fn error_rate_injects_wrong_labels() {
         let ds = ds();
         let svc = SimService::new(
-            SimServiceConfig {
-                error_rate: 0.5,
-                seed: 9,
-                ..Default::default()
-            },
+            SimServiceConfig::default().with_error(0.5).with_seed(9),
             Arc::new(Ledger::new()),
         );
         let idx: Vec<usize> = (0..200).collect();
@@ -395,16 +446,11 @@ mod tests {
         let ds = ds();
         let ledger = Arc::new(Ledger::new());
         let svc = SimService::new(
-            SimServiceConfig {
-                service: Service::Satyam,
-                chunk_size: 7,
-                workers: 3,
-                ..Default::default()
-            },
+            SimServiceConfig::preset(Service::Satyam).with_chunk(7).with_workers(3),
             ledger.clone(),
         );
         let idx: Vec<usize> = (0..60).collect();
-        let order = LabelOrder::new(0, idx.clone(), 42);
+        let order = LabelOrder::new(OrderId::new(0), idx.clone(), 42);
         let labels = svc.submit(&ds, order).unwrap().drain().unwrap();
         for (&i, &l) in idx.iter().zip(labels.iter()) {
             assert_eq!(l, ds.groundtruth(i));
@@ -434,17 +480,15 @@ mod tests {
         for &(chunk_size, workers, latency_us) in &configs {
             let ledger = Arc::new(Ledger::new());
             let svc = SimService::new(
-                SimServiceConfig {
-                    chunk_size,
-                    workers,
-                    latency: Duration::from_micros(latency_us),
-                    error_rate: 0.35,
-                    seed: 11,
-                    ..Default::default()
-                },
+                SimServiceConfig::default()
+                    .with_chunk(chunk_size)
+                    .with_workers(workers)
+                    .with_latency(Duration::from_micros(latency_us))
+                    .with_error(0.35)
+                    .with_seed(11),
                 ledger.clone(),
             );
-            let order = LabelOrder::new(3, (0..50).collect(), 11);
+            let order = LabelOrder::new(OrderId::new(3), (0..50).collect(), 11);
             let labels = svc.submit(&ds, order).unwrap().drain().unwrap();
             runs.push((labels, ledger.snapshot().human_labeling.to_bits()));
         }
@@ -472,7 +516,7 @@ mod tests {
         let mut runs: Vec<Vec<u32>> = Vec::new();
         for workers in [1usize, 4] {
             let svc = SimService::new(
-                SimServiceConfig { workers, error_rate: 0.5, seed: 9, ..Default::default() },
+                SimServiceConfig::default().with_workers(workers).with_error(0.5).with_seed(9),
                 Arc::new(Ledger::new()),
             );
             // Two calls: streams must advance per batch, not per label slot.
@@ -489,7 +533,7 @@ mod tests {
         let ds = ds();
         let ledger = Arc::new(Ledger::new());
         let svc = SimService::new(SimServiceConfig::default(), ledger.clone());
-        let order = LabelOrder::new(0, vec![ds.len()], 1);
+        let order = LabelOrder::new(OrderId::new(0), vec![ds.len()], 1);
         assert!(svc.submit(&ds, order).is_err());
         assert_eq!(ledger.snapshot().labels_purchased, 0);
         assert!(ledger.order_log().is_empty());
@@ -499,11 +543,12 @@ mod tests {
     fn sync_and_streamed_requests_share_one_pool() {
         let ds = ds();
         let svc = SimService::new(
-            SimServiceConfig { workers: 2, chunk_size: 5, ..Default::default() },
+            SimServiceConfig::default().with_workers(2).with_chunk(5),
             Arc::new(Ledger::new()),
         );
         // Interleave order submission with a synchronous batch.
-        let handle = svc.submit(&ds, LabelOrder::new(0, (0..20).collect(), 9)).unwrap();
+        let handle =
+            svc.submit(&ds, LabelOrder::new(OrderId::new(0), (0..20).collect(), 9)).unwrap();
         let sync = svc.label_batch(&ds, &(20..40).collect::<Vec<_>>()).unwrap();
         assert_eq!(sync.len(), 20);
         let streamed = handle.drain().unwrap();
@@ -514,14 +559,33 @@ mod tests {
         assert_eq!(svc.labels_purchased(), 40);
     }
 
+    /// A consensus tier bills every annotation pass: n × votes passes
+    /// purchased and charged, while still returning one label per
+    /// requested index.
+    #[test]
+    fn consensus_tier_bills_every_pass() {
+        let ds = ds();
+        let ledger = Arc::new(Ledger::new());
+        let tier = TierSpec::new("cheap", 0.003).with_error(0.3).with_votes(3);
+        let svc = SimService::new(SimServiceConfig::for_tier(tier), ledger.clone());
+        assert_eq!(svc.billed_labels(10, TierRoute::default()), 30);
+        assert_eq!(svc.price_per_label(TierRoute::default()), 0.003);
+        let order = LabelOrder::new(OrderId::new(0), (0..40).collect(), 7);
+        let labels = svc.submit(&ds, order).unwrap().drain().unwrap();
+        assert_eq!(labels.len(), 40);
+        assert_eq!(svc.labels_purchased(), 120);
+        let snap = ledger.snapshot();
+        assert_eq!(snap.labels_purchased, 120);
+        assert!((snap.human_labeling - 120.0 * 0.003).abs() < 1e-12);
+    }
+
     #[test]
     fn many_batches_across_pool_reuse() {
         let ds = ds();
         let svc = SimService::new(
             SimServiceConfig {
-                workers: 3,
                 queue_cap: 8, // force backpressure
-                ..Default::default()
+                ..SimServiceConfig::default().with_workers(3)
             },
             Arc::new(Ledger::new()),
         );

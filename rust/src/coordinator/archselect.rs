@@ -220,11 +220,7 @@ fn probe(
 ) -> Result<(ProbeResult, Option<ProbeState>)> {
     let shadow_ledger = Arc::new(Ledger::new());
     let shadow_service = SimService::new(
-        SimServiceConfig {
-            service: Service::Custom(price),
-            seed: params.seed,
-            ..Default::default()
-        },
+        SimServiceConfig::preset(Service::Custom(price)).with_seed(params.seed),
         shadow_ledger.clone(),
     );
     driver.run(
@@ -287,7 +283,7 @@ pub fn run_with_arch_selection(
         let report = run_mcal(driver, ds, service, ledger, candidates[0], classes_tag, params)?;
         return Ok((report, Vec::new()));
     }
-    let price = service.price_per_label();
+    let price = service.reference_price();
     let manifest = driver.manifest;
     // One probe per candidate. The seed derives from the stable arch id —
     // not the schedule slot — so the ranking is identical however many

@@ -70,7 +70,7 @@ impl Policy for BudgetPolicy {
         if self.iter >= env.params.max_iters {
             return Ok(Decision::Stop(StopReason::MaxIters));
         }
-        let c_h = env.service.price_per_label();
+        let c_h = env.service.reference_price();
         let delta0 = ((env.params.init_frac * env.x_total() as f64).round() as usize).max(1);
         if self.iter == 0 {
             self.delta = delta0;
@@ -131,7 +131,7 @@ impl Policy for BudgetPolicy {
         stop: StopReason,
         t0: Instant,
     ) -> Result<RunReport> {
-        let c_h = env.service.price_per_label();
+        let c_h = env.service.reference_price();
         let spent = env.ledger.total();
         let remaining = (self.budget - spent).max(0.0);
         let affordable_human = (remaining / c_h).floor() as usize;

@@ -29,7 +29,9 @@
 
 use std::sync::Arc;
 
-use crate::annotation::{AnnotationService, GatedLabels, IngestHandle, LabelOrder, Ledger};
+use crate::annotation::{
+    AnnotationService, GatedLabels, IngestHandle, LabelOrder, Ledger, OrderId, TierRoute,
+};
 use crate::cost::RigModel;
 use crate::dataset::Dataset;
 use crate::metrics;
@@ -42,7 +44,50 @@ use crate::sampling::{self, Metric};
 use crate::{Error, Result};
 
 use super::events::WarmStartReport;
-use super::state::{RunState, WARM_ORDER_BASE};
+use super::state::RunState;
+
+/// How an acquisition batch splits across a service's tiers.
+///
+/// The policy owns the plan ([`super::tiered::TieredPolicy`] installs
+/// one; everything else leaves the default): the `low_frac` *most
+/// uncertain* samples of each acquired batch route to `low` (the cheap
+/// consensus tier — redundancy is what makes a noisy tier usable there),
+/// the rest to `high` (the expert tier). A single-route plan is
+/// bit-identical to the pre-market acquisition path: one order per
+/// batch, same id, same seed stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoutePlan {
+    /// Route for the most uncertain (lowest-margin) share of the batch.
+    pub low: TierRoute,
+    /// Route for the rest of the batch.
+    pub high: TierRoute,
+    /// Fraction of each batch routed to `low`, in `[0, 1]`.
+    pub low_frac: f64,
+}
+
+impl RoutePlan {
+    /// Route everything through `route` (the pre-market behavior).
+    pub fn single(route: TierRoute) -> RoutePlan {
+        RoutePlan { low: route, high: route, low_frac: 0.0 }
+    }
+
+    /// Split each batch: the `low_frac` most uncertain samples to `low`,
+    /// the rest to `high`. `low_frac` is clamped to `[0, 1]`.
+    pub fn split(low: TierRoute, high: TierRoute, low_frac: f64) -> RoutePlan {
+        RoutePlan { low, high, low_frac: low_frac.clamp(0.0, 1.0) }
+    }
+
+    /// Whether the plan degenerates to one order per batch.
+    pub fn is_single(&self) -> bool {
+        self.low == self.high || self.low_frac <= 0.0
+    }
+}
+
+impl Default for RoutePlan {
+    fn default() -> Self {
+        RoutePlan::single(TierRoute::default())
+    }
+}
 
 /// Knobs shared by every run type (paper defaults in `Default`).
 #[derive(Clone, Debug)]
@@ -128,8 +173,17 @@ pub struct LabelingEnv<'e> {
     pub b_labels: Vec<u32>,
     /// Unlabeled pool X \ T \ B.
     pub pool: Vec<usize>,
-    /// In-flight acquisition order (labels streaming in), if any.
-    pending: Option<IngestHandle>,
+    /// How acquisition batches route across the service's tiers. Owned
+    /// by the policy ([`super::tiered::TieredPolicy`] installs a split
+    /// plan); defaults to a single-route plan on the service's default
+    /// (reference) tier, which reproduces the pre-market acquisition
+    /// path bit-for-bit.
+    pub route_plan: RoutePlan,
+    /// In-flight acquisition orders (labels streaming in), in submission
+    /// order — one per batch on a single-route plan, one per routed
+    /// sub-batch on a split plan. `b_idx` extends in the same order, so
+    /// draining these in order keeps labels aligned.
+    pending: Vec<IngestHandle>,
     /// The warm-start re-buy (T ∪ B labels re-purchased on the real
     /// service) still streaming in, if this run was resumed from a
     /// [`RunState`]. Drained by [`LabelingEnv::settle`] into
@@ -137,7 +191,7 @@ pub struct LabelingEnv<'e> {
     warm_pending: Option<GatedLabels<'static>>,
     /// Next acquisition-order id (0 = T, 1 = B₀, 2.. = iterations; a
     /// resumed run continues the captured run's counter, and its re-buy
-    /// ids from the reserved [`WARM_ORDER_BASE`] space instead).
+    /// ids from the reserved [`OrderId::warm`] space instead).
     order_counter: u64,
     /// Warm-start provenance when this run was resumed from a
     /// [`RunState`] (surfaced as
@@ -185,13 +239,17 @@ fn place_order(
     service: &dyn AnnotationService,
     ledger: &Ledger,
     ds: &Dataset,
-    id: u64,
+    id: OrderId,
+    route: TierRoute,
     indices: Vec<usize>,
     run_seed: u64,
 ) -> Result<IngestHandle> {
     let n = indices.len();
-    let handle = service.submit(ds, LabelOrder::new(id, indices, run_seed))?;
-    ledger.record_order(id, n as u64, n as f64 * service.price_per_label());
+    let handle = service.submit(ds, LabelOrder::routed(id, route, indices, run_seed))?;
+    // Record what the routed tier actually bills: a consensus tier bills
+    // every annotation pass (n × votes), at the tier's own price.
+    let billed = service.billed_labels(n as u64, route);
+    ledger.record_order(id, billed, billed as f64 * service.price_per_label(route));
     Ok(handle)
 }
 
@@ -204,14 +262,15 @@ fn place_order(
 ///
 /// The shared submission path of [`LabelingEnv::buy_streamed`] (the
 /// finalize pass's residual, sequential ids) and the warm-start re-buy in
-/// [`LabelingEnv::resume`] (reserved [`WARM_ORDER_BASE`] ids).
+/// [`LabelingEnv::resume`] (reserved [`OrderId::warm`] ids).
 fn stream_orders(
     service: &dyn AnnotationService,
     ledger: &Ledger,
     ds: &Dataset,
     indices: &[usize],
+    route: TierRoute,
     run_seed: u64,
-    mut next_id: impl FnMut() -> u64,
+    mut next_id: impl FnMut() -> OrderId,
 ) -> Result<GatedLabels<'static>> {
     let mut gated = GatedLabels::over(&[]);
     if indices.is_empty() {
@@ -222,7 +281,8 @@ fn stream_orders(
         c => c,
     };
     for slice in indices.chunks(chunk) {
-        let handle = place_order(service, ledger, ds, next_id(), slice.to_vec(), run_seed)?;
+        let handle =
+            place_order(service, ledger, ds, next_id(), route, slice.to_vec(), run_seed)?;
         gated.push_order(handle);
     }
     Ok(gated)
@@ -265,10 +325,17 @@ impl<'e> LabelingEnv<'e> {
         let pool: Vec<usize> = order[test_n + init_n..].to_vec();
 
         // Setup purchases are orders too (ids 0 and 1), drained on the
-        // spot: there is nothing to overlap before the first train.
+        // spot: there is nothing to overlap before the first train. They
+        // always buy on the reference tier — T in particular must be
+        // expert-grade, it is what ε_T is measured against.
+        let route = service.default_route();
+        let seed = params.seed;
         let test_labels =
-            place_order(service, &ledger, ds, 0, test_idx.clone(), params.seed)?.drain()?;
-        let b_labels = place_order(service, &ledger, ds, 1, b_idx.clone(), params.seed)?.drain()?;
+            place_order(service, &ledger, ds, OrderId::new(0), route, test_idx.clone(), seed)?
+                .drain()?;
+        let b_labels =
+            place_order(service, &ledger, ds, OrderId::new(1), route, b_idx.clone(), seed)?
+                .drain()?;
 
         let profile_obs = vec![Vec::new(); theta_grid.len()];
         let mut env = LabelingEnv {
@@ -288,7 +355,8 @@ impl<'e> LabelingEnv<'e> {
             b_idx,
             b_labels,
             pool,
-            pending: None,
+            route_plan: RoutePlan::single(route),
+            pending: Vec::new(),
             warm_pending: None,
             order_counter: 2,
             warm_start: None,
@@ -359,7 +427,7 @@ impl<'e> LabelingEnv<'e> {
     /// while the engine warms up; the first [`LabelingEnv::settle`]
     /// (reached via the first `acquire` or `measure`) is the gate. The
     /// purchase is charged on `ledger` at submission like any other, its
-    /// orders id'd from the reserved [`WARM_ORDER_BASE`] space so the
+    /// orders id'd from the reserved [`OrderId::warm`] space so the
     /// resumed loop's own counter continues the captured sequence
     /// unchanged for any `--ingest-chunk`. Training is *not* re-paid: the
     /// session restores the captured weights bit-exactly, and the
@@ -408,9 +476,10 @@ impl<'e> LabelingEnv<'e> {
         // Submit the re-buy before touching the engine: labels stream in
         // while the session compiles and restores below.
         let rebuy: Vec<usize> = state.test_idx.iter().chain(&state.b_idx).copied().collect();
+        let route = service.default_route();
         let mut warm_ids = 0u64;
-        let gated = stream_orders(service, &ledger, ds, &rebuy, params.seed, || {
-            let id = WARM_ORDER_BASE | warm_ids;
+        let gated = stream_orders(service, &ledger, ds, &rebuy, route, params.seed, || {
+            let id = OrderId::warm(warm_ids);
             warm_ids += 1;
             id
         })?;
@@ -440,7 +509,8 @@ impl<'e> LabelingEnv<'e> {
             b_idx: state.b_idx,
             b_labels: Vec::new(),
             pool: state.pool,
-            pending: None,
+            route_plan: RoutePlan::single(route),
+            pending: Vec::new(),
             warm_pending: Some(gated),
             order_counter: state.order_counter,
             warm_start: Some(warm),
@@ -464,20 +534,28 @@ impl<'e> LabelingEnv<'e> {
         (self.params.b_cap_frac * non_test as f64) as usize
     }
 
-    /// All-human reference cost: |X| · C_h.
+    /// All-human reference cost: |X| · C_h, priced at the service's
+    /// reference (default-route) tier.
     pub fn human_only_cost(&self) -> f64 {
-        self.ds.len() as f64 * self.service.price_per_label()
+        self.ds.len() as f64 * self.service.reference_price()
     }
 
-    /// Submit the next acquisition order: `indices` leave the pool, join
-    /// `b_idx`, and their labels start streaming in as the new pending
-    /// order. Charged (once, as a unit) at submission.
-    fn submit_order(&mut self, indices: Vec<usize>) -> Result<()> {
-        let id = self.order_counter;
+    /// Submit the next acquisition order on `route`: `indices` leave the
+    /// pool, join `b_idx`, and their labels start streaming in as a new
+    /// pending order. Charged (once, as a unit) at submission.
+    fn submit_order(&mut self, indices: Vec<usize>, route: TierRoute) -> Result<()> {
+        let id = OrderId::new(self.order_counter);
         self.order_counter += 1;
-        let handle =
-            place_order(self.service, &self.ledger, self.ds, id, indices, self.params.seed)?;
-        self.pending = Some(handle);
+        let handle = place_order(
+            self.service,
+            &self.ledger,
+            self.ds,
+            id,
+            route,
+            indices,
+            self.params.seed,
+        )?;
+        self.pending.push(handle);
         Ok(())
     }
 
@@ -496,7 +574,9 @@ impl<'e> LabelingEnv<'e> {
             self.test_labels.extend_from_slice(t);
             self.b_labels.extend_from_slice(b);
         }
-        if let Some(handle) = self.pending.take() {
+        // Drain pending orders in submission order — `b_idx` extended in
+        // the same order, so labels line up (see `acquire`).
+        for handle in std::mem::take(&mut self.pending) {
             let labels = handle.drain()?;
             self.b_labels.extend_from_slice(&labels);
         }
@@ -505,9 +585,13 @@ impl<'e> LabelingEnv<'e> {
     }
 
     /// Acquire `k` pool samples by `M(.)` and submit them for human
-    /// labeling as one order. Returns as soon as the order is submitted —
-    /// the labels stream in while the caller proceeds to
-    /// [`LabelingEnv::retrain`], which trains through the in-flight order.
+    /// labeling — as one order on a single-route [`RoutePlan`] (the
+    /// default; bit-identical to the pre-market path), or as one order
+    /// per routed sub-batch on a split plan (the most uncertain
+    /// `low_frac` share to the plan's `low` tier, the rest to `high`).
+    /// Returns as soon as the orders are submitted — the labels stream in
+    /// while the caller proceeds to [`LabelingEnv::retrain`], which
+    /// trains through the in-flight orders.
     pub fn acquire(&mut self, k: usize) -> Result<usize> {
         // A back-to-back acquire (no retrain between) must observe the
         // previous order's labels before selecting on top of them.
@@ -565,19 +649,43 @@ impl<'e> LabelingEnv<'e> {
                 topk.into_sorted().into_iter().map(|(p, _)| view[p]).collect()
             }
         };
-        // Map positions → dataset indices; remove from pool (descending
-        // positions so swap_remove stays valid). k-center may pick fewer
-        // than k on degenerate pools (distinct-picks contract).
-        let mut positions = positions;
-        positions.sort_unstable_by(|a, b| b.cmp(a));
-        let mut new_idx = Vec::with_capacity(positions.len());
-        for p in positions {
-            new_idx.push(self.pool.swap_remove(p));
+        // Snapshot the picks in *selection* order (the metric's ranking —
+        // most uncertain first for uncertainty metrics) before mutating
+        // the pool, then remove by descending position so swap_remove
+        // stays valid. k-center may pick fewer than k on degenerate pools
+        // (distinct-picks contract).
+        let selected: Vec<usize> = positions.iter().map(|&p| self.pool[p]).collect();
+        let mut by_pos = positions;
+        by_pos.sort_unstable_by(|a, b| b.cmp(a));
+        // Descending-position order: exactly the sequence the historical
+        // swap_remove loop pushed — the single-route path below must keep
+        // extending b_idx in this order to stay bit-identical to the
+        // pre-market acquisition path.
+        let by_pos_idx: Vec<usize> = by_pos.iter().map(|&p| self.pool[p]).collect();
+        for p in by_pos {
+            self.pool.swap_remove(p);
         }
-        let acquired = new_idx.len();
-        self.b_idx.extend_from_slice(&new_idx);
-        if acquired > 0 {
-            self.submit_order(new_idx)?;
+        let acquired = selected.len();
+        let plan = self.route_plan;
+        if plan.is_single() {
+            self.b_idx.extend_from_slice(&by_pos_idx);
+            if acquired > 0 {
+                self.submit_order(by_pos_idx, plan.high)?;
+            }
+        } else {
+            // Split in selection order: the low_frac most uncertain
+            // samples go to the cheap consensus tier. b_idx extends in
+            // submission order so the drained labels line up in settle().
+            let cut = ((plan.low_frac * acquired as f64).round() as usize).min(acquired);
+            let (low, high) = selected.split_at(cut);
+            self.b_idx.extend_from_slice(low);
+            self.b_idx.extend_from_slice(high);
+            if !low.is_empty() {
+                self.submit_order(low.to_vec(), plan.low)?;
+            }
+            if !high.is_empty() {
+                self.submit_order(high.to_vec(), plan.high)?;
+            }
         }
         // The pool changed: machine-label rankings over it are stale.
         self.scores_epoch += 1;
@@ -600,9 +708,12 @@ impl<'e> LabelingEnv<'e> {
     /// purchase places no order and has no side effects.
     pub fn buy_streamed(&mut self, indices: &[usize]) -> Result<GatedLabels<'static>> {
         let seed = self.params.seed;
+        // The residual is the report's final human purchase — it buys on
+        // the reference (expert) tier regardless of the acquisition plan.
+        let route = self.service.default_route();
         let ctr = &mut self.order_counter;
-        stream_orders(self.service, &self.ledger, self.ds, indices, seed, || {
-            let id = *ctr;
+        stream_orders(self.service, &self.ledger, self.ds, indices, route, seed, || {
+            let id = OrderId::new(*ctr);
             *ctr += 1;
             id
         })
@@ -640,7 +751,7 @@ impl<'e> LabelingEnv<'e> {
             // in-flight order) — the same implementation the finalize
             // pass streams the residual through.
             let mut gated = GatedLabels::over(&self.b_labels);
-            if let Some(handle) = self.pending.take() {
+            for handle in std::mem::take(&mut self.pending) {
                 gated.push_order(handle);
             }
             if self.b_idx.len() != gated.len() {
@@ -877,7 +988,7 @@ impl<'e> LabelingEnv<'e> {
     pub fn stop_now(&self, profile: &[f64]) -> (f64, f64, f64) {
         let pool_n = self.pool.len();
         let x = self.ds.len() as f64;
-        let c_h = self.service.price_per_label();
+        let c_h = self.service.reference_price();
         let spent = self.ledger.total();
         let mut best = (0.0, spent + pool_n as f64 * c_h, 0.0);
         for (ti, &theta) in self.theta_grid.iter().enumerate() {

@@ -126,7 +126,7 @@ impl Policy for McalPolicy {
                 test_size: env.test_idx.len(),
                 b_cur: env.b_idx.len(),
                 delta,
-                price_per_label: env.service.price_per_label(),
+                price_per_label: env.service.reference_price(),
                 spent: env.ledger.total(),
                 epsilon: env.params.epsilon,
                 theta_grid: &env.theta_grid,

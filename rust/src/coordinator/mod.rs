@@ -26,6 +26,11 @@
 //!   pool. Both are bit-identical to the serial/synchronous path for any
 //!   chunk size, latency, or `--jobs` (`tests/ingest_stream.rs`,
 //!   `tests/pool_parallel.rs`).
+//! - [`tiered`]: [`TieredPolicy`], a wrapper that routes each acquired
+//!   batch across a multi-tier annotator market
+//!   ([`crate::annotation::TierMarket`]) by installing a
+//!   [`env::RoutePlan`] — cheap consensus tier for the uncertain share,
+//!   expert tier for the rest — while the wrapped policy runs unchanged.
 //! - [`state`]: run state as a first-class value — [`state::RunState`]
 //!   snapshots a run (acquired set, bit-exact session weights, PRNG
 //!   cursors, fit history) and [`LabelingDriver::run_warm`] resumes it,
@@ -49,12 +54,14 @@ pub mod events;
 pub mod mcal;
 pub mod policy;
 pub mod state;
+pub mod tiered;
 
 pub use albaseline::{run_al_trajectory, NaiveAlPolicy, PricedStop, TrajPoint, Trajectory};
 pub use archselect::{run_with_arch_selection, ArchSelectConfig, ProbeResult};
 pub use budget::{run_budget, BudgetPolicy};
-pub use env::{LabelingEnv, RunParams};
+pub use env::{LabelingEnv, RoutePlan, RunParams};
 pub use events::{IterationRecord, RunReport, StopReason, WarmStartReport};
 pub use mcal::{run_mcal, run_mcal_warm, McalPolicy};
 pub use policy::{Decision, LabelingDriver, Policy};
 pub use state::{ProbeState, RunState};
+pub use tiered::TieredPolicy;

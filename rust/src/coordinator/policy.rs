@@ -298,7 +298,7 @@ pub(super) fn finish_run(
     Ok(RunReport {
         dataset: env.ds.name.clone(),
         arch: env.arch.as_str().into(),
-        service: format!("{:.4}", env.service.price_per_label()),
+        service: format!("{:.4}", env.service.reference_price()),
         epsilon: env.params.epsilon,
         seed: env.params.seed,
         x_total: env.x_total(),

@@ -68,16 +68,10 @@ use crate::model::ArchKind;
 use crate::prng::Pcg32;
 use crate::{Error, Result};
 
-/// Reserved order-id space for the warm-start re-buy.
-///
-/// The re-buy is split into one order per ingest chunk, so the *number*
-/// of orders it submits follows `--ingest-chunk`. Drawing those ids from
-/// the top half of the `u64` space (instead of the run's sequential
-/// counter) keeps every order id the resumed loop assigns afterwards —
-/// and every per-order seed stream derived from those ids — independent
-/// of how the re-buy was chunked. Loop counters start at 0 and advance by
-/// one per purchase; they can never reach this range.
-pub const WARM_ORDER_BASE: u64 = 1 << 63;
+// The reserved warm-start id space moved next to the OrderId newtype it
+// partitions; re-exported here so existing `state::WARM_ORDER_BASE`
+// paths keep working.
+pub use crate::annotation::ingest::WARM_ORDER_BASE;
 
 /// Snapshot of one labeling run at a plan-round boundary: everything
 /// needed to resume the acquire → retrain → measure loop bit-exactly on a

@@ -1,0 +1,68 @@
+//! Tier-aware policy wrapper: route acquisition batches across an
+//! annotator market.
+//!
+//! [`TieredPolicy`] wraps any [`Policy`] and installs a [`RoutePlan`] on
+//! the environment before every plan round: the `low_frac` most
+//! uncertain samples of each acquired batch go to the plan's `low` tier
+//! (typically the market's cheapest tier, made usable by k-way consensus
+//! — see [`crate::annotation::TierSpec::votes`]), the rest to the `high`
+//! (expert) tier. Everything else — the acquire → retrain → measure
+//! loop, the wrapped policy's δ planning, its finalize pass — runs
+//! unchanged through [`super::policy::LabelingDriver`].
+//!
+//! The routing intuition mirrors the consensus economics (docs/DESIGN.md
+//! §Algorithm-notes): a sample the model is *uncertain* about sits near
+//! a decision boundary the next retrain must move anyway — redundant
+//! cheap passes resolve it at a fraction of the expert price — while the
+//! certain share of the batch mostly confirms what the model already
+//! knows, so the plan keeps the expert tier for it (and for everything
+//! structural: T, B₀, the finalize residual, which always buy on the
+//! reference tier regardless of the plan).
+//!
+//! Determinism: a route is delivery metadata (it never enters a seed
+//! stream), so a tier-routed run is bit-identical across worker counts,
+//! chunk sizes, latencies, and `--jobs` exactly like a single-tier run —
+//! and with `RoutePlan::is_single` the wrapper reproduces the unwrapped
+//! policy's run bit-for-bit.
+
+use std::time::Instant;
+
+use crate::Result;
+
+use super::env::{LabelingEnv, RoutePlan, RunParams};
+use super::events::StopReason;
+use super::policy::{Decision, Policy};
+
+/// A [`Policy`] wrapper that installs a tier [`RoutePlan`] on the
+/// environment and otherwise delegates every decision to `inner`.
+pub struct TieredPolicy<P> {
+    inner: P,
+    plan: RoutePlan,
+}
+
+impl<P> TieredPolicy<P> {
+    /// Wrap `inner` so its acquisitions follow `plan`.
+    pub fn new(inner: P, plan: RoutePlan) -> TieredPolicy<P> {
+        TieredPolicy { inner, plan }
+    }
+}
+
+impl<P: Policy> Policy for TieredPolicy<P> {
+    type Output = P::Output;
+
+    fn plan(&mut self, env: &mut LabelingEnv<'_>, profile: &[f64]) -> Result<Decision> {
+        // Re-installed every round: the plan is driver-visible state the
+        // env resets on construction, and re-asserting it keeps wrapped
+        // policies free to build fresh environments mid-run.
+        env.route_plan = self.plan;
+        self.inner.plan(env, profile)
+    }
+
+    fn finalize(self, env: LabelingEnv<'_>, stop: StopReason, t0: Instant) -> Result<Self::Output> {
+        self.inner.finalize(env, stop, t0)
+    }
+
+    fn round_cap(&self, params: &RunParams) -> usize {
+        self.inner.round_cap(params)
+    }
+}

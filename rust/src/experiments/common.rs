@@ -4,7 +4,9 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::annotation::{IngestConfig, Ledger, Service, SimService, SimServiceConfig};
+use crate::annotation::{
+    IngestConfig, Ledger, Service, SimService, SimServiceConfig, TierMarket, TierSpec,
+};
 use crate::dataset::{preset, Dataset, DatasetPreset};
 use crate::runtime::{Engine, Manifest};
 use crate::Result;
@@ -158,16 +160,32 @@ impl CtxView<'_> {
     pub fn service_with(&self, svc: Service, workers: usize) -> (Arc<Ledger>, SimService) {
         let ledger = Arc::new(Ledger::new());
         let service = SimService::new(
-            SimServiceConfig {
-                service: svc,
-                seed: self.seed,
-                workers: workers.max(1),
-                chunk_size: self.ingest.chunk_size,
-                latency: self.ingest.latency,
-                ..Default::default()
-            },
+            SimServiceConfig::for_tier(
+                svc.tier().with_workers(workers.max(1)).with_latency(self.ingest.latency),
+            )
+            .with_chunk(self.ingest.chunk_size)
+            .with_seed(self.seed),
             ledger.clone(),
         );
         (ledger, service)
+    }
+
+    /// Fresh (ledger, market) pair for one tier-routed run: one simulated
+    /// fleet per tier, sharing one ledger and the context's ingestion
+    /// knobs. The context's latency and the `workers` budget apply to
+    /// every tier (each tier's fleet gets the full width — annotator
+    /// threads are wall-clock only, never results).
+    pub fn market_with(
+        &self,
+        specs: Vec<TierSpec>,
+        workers: usize,
+    ) -> Result<(Arc<Ledger>, TierMarket)> {
+        let ledger = Arc::new(Ledger::new());
+        let specs = specs
+            .into_iter()
+            .map(|t| t.with_workers(workers.max(1)).with_latency(self.ingest.latency))
+            .collect();
+        let market = TierMarket::new(specs, self.ingest.chunk_size, self.seed, ledger.clone())?;
+        Ok((ledger, market))
     }
 }

@@ -29,6 +29,7 @@ pub mod figs_scale;
 pub mod table1;
 pub mod table2;
 pub mod table3;
+pub mod tiermarket;
 
 use crate::annotation::Service;
 use crate::cli::Args;
@@ -44,7 +45,7 @@ fn print(t: &Table) {
 pub fn experiment_ids() -> &'static [&'static str] {
     &[
         "table1", "table2", "table3", "fig2", "fig4", "fig5", "fig11",
-        "fig13", "fig14_15", "fig22_27", "imagenet", "all",
+        "fig13", "fig14_15", "fig22_27", "imagenet", "tiermarket", "all",
     ]
 }
 
@@ -105,10 +106,13 @@ pub fn run_experiment(ctx: &Ctx, id: &str, args: &Args) -> Result<()> {
         "imagenet" => {
             print(&figs_scale::imagenet(ctx, ArchSelectConfig { probe_iters: 6, ..arch_cfg })?)
         }
+        "tiermarket" => {
+            print(&tiermarket::run(ctx, args.opt_or("dataset", "cifar10-syn"))?)
+        }
         "all" => {
             for sub in [
                 "table1", "table2", "table3", "fig2", "fig4", "fig5", "fig11",
-                "fig13", "fig14_15", "fig22_27", "imagenet",
+                "fig13", "fig14_15", "fig22_27", "imagenet", "tiermarket",
             ] {
                 println!("==> {sub}");
                 run_experiment(ctx, sub, args)?;

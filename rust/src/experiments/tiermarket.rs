@@ -1,0 +1,102 @@
+//! Tier-market cost sweep: expert-only labeling vs routing the uncertain
+//! share of each acquisition to a cheap consensus tier.
+//!
+//! Cells share one dataset and architecture; each cell runs MCAL through a
+//! [`TierMarket`] with a different [`RoutePlan`]. The baseline cell is a
+//! single expert tier (bit-identical to the plain single-service path); the
+//! routed cells send the `low_frac` most-uncertain slice of every acquired
+//! batch to a cheap noisy tier with 3-way consensus and the rest to the
+//! expert tier. The report surfaces per-tier labels and dollars straight
+//! from the shared ledger's price buckets, so the split is auditable.
+
+use crate::annotation::{AnnotationService, TierSpec};
+use crate::coordinator::{LabelingDriver, McalPolicy, RoutePlan, RunParams, TieredPolicy};
+use crate::model::ArchKind;
+use crate::report::{dollars, pct, Table};
+use crate::Result;
+
+use super::common::Ctx;
+use super::fleet;
+
+/// Cheap-tier price per label (3-way consensus bills 3× this per sample).
+const CHEAP_PRICE: f64 = 0.003;
+/// Cheap-tier single-annotator error rate.
+const CHEAP_ERROR: f64 = 0.3;
+/// Consensus width on the cheap tier.
+const CHEAP_VOTES: usize = 3;
+/// Expert-tier price per label (the reference price for cost savings).
+const EXPERT_PRICE: f64 = 0.04;
+
+pub fn run(ctx: &Ctx, ds_name: &str) -> Result<Table> {
+    let low_fracs = [0.0, 0.25, 0.5, 0.75];
+    let labels: Vec<String> = low_fracs
+        .iter()
+        .map(|f| {
+            if *f <= 0.0 {
+                format!("{ds_name}/expert-only")
+            } else {
+                format!("{ds_name}/low{f:.2}")
+            }
+        })
+        .collect();
+    let (ds, preset) = ctx.dataset(ds_name)?;
+    let view = ctx.view();
+    let (rows, cell_reports) = fleet::run_sweep(ctx, &labels, |i, scope| {
+        let low_frac = low_fracs[i];
+        let specs = if low_frac <= 0.0 {
+            vec![TierSpec::new("expert", EXPERT_PRICE)]
+        } else {
+            vec![
+                TierSpec::new("cheap", CHEAP_PRICE)
+                    .with_error(CHEAP_ERROR)
+                    .with_votes(CHEAP_VOTES),
+                TierSpec::new("expert", EXPERT_PRICE),
+            ]
+        };
+        let (ledger, market) = view.market_with(specs, fleet::ingest_workers(scope))?;
+        let plan = if low_frac <= 0.0 {
+            RoutePlan::default()
+        } else {
+            RoutePlan::split(market.cheapest_route(), market.default_route(), low_frac)
+        };
+        let params = RunParams { seed: view.seed, ..Default::default() };
+        let report = LabelingDriver::for_scope(scope, view.manifest).run(
+            &ds,
+            &market,
+            ledger,
+            ArchKind::Res18,
+            preset.classes_tag,
+            params,
+            TieredPolicy::new(McalPolicy::new(), plan),
+        )?;
+        log::info!("tiermarket {}: {}", labels[i], report.summary());
+        Ok((report, market.tier_usage()))
+    })?;
+    ctx.write_provenance("tiermarket_cells", "Tier market fleet cells", &cell_reports)?;
+
+    let mut table = Table::new(
+        "Tier market — consensus routing cost sweep (res18)",
+        &[
+            "config", "total_cost", "savings", "machine_frac", "error",
+            "cheap_labels", "cheap_dollars", "expert_labels", "expert_dollars",
+        ],
+    );
+    for (label, (report, usage)) in labels.iter().zip(rows.iter()) {
+        let find = |name: &str| usage.iter().find(|u| u.name == name);
+        let cheap = find("cheap");
+        let expert = find("expert");
+        table.push_row([
+            label.clone(),
+            dollars(report.cost.total()),
+            pct(report.savings()),
+            pct(report.machine_frac()),
+            pct(report.overall_error),
+            cheap.map(|u| u.labels).unwrap_or(0).to_string(),
+            dollars(cheap.map(|u| u.dollars).unwrap_or(0.0)),
+            expert.map(|u| u.labels).unwrap_or(0).to_string(),
+            dollars(expert.map(|u| u.dollars).unwrap_or(0.0)),
+        ]);
+    }
+    table.write_csv(&ctx.results_dir, "tiermarket_cost_sweep")?;
+    Ok(table)
+}

@@ -3,10 +3,11 @@
 
 use std::process::ExitCode;
 
-use mcal::annotation::{IngestConfig, Service};
+use mcal::annotation::{AnnotationService, IngestConfig, Service, TierSpec};
 use mcal::cli::Args;
 use mcal::coordinator::{
-    run_mcal, run_with_arch_selection, ArchSelectConfig, LabelingDriver, RunParams, RunReport,
+    run_mcal, run_with_arch_selection, ArchSelectConfig, LabelingDriver, McalPolicy, RoutePlan,
+    RunParams, RunReport, TieredPolicy,
 };
 use mcal::experiments::common::{Ctx, Scale};
 use mcal::model::ArchKind;
@@ -21,6 +22,7 @@ USAGE:
              [--epsilon 0.05] [--metric margin|entropy|leastconf|kcenter|random]
              [--scale full|bench|smoke] [--seed N] [--jobs N|auto]
              [--ingest-chunk N] [--ingest-latency MS]
+             [--tiers cheap:0.003:0.3:3,expert:0.04] [--tier-low-frac 0.5]
              [--probe-iters 8 (with --arch auto)] [--warm-start | --no-warm-start]
              [--artifacts DIR] [--results DIR]
                                                          --warm-start (default, with --arch
@@ -43,6 +45,18 @@ USAGE:
                                                          results are identical for every
                                                          setting (the order *log* lists the
                                                          residual as its chunk count)
+                                                         --tiers (with an explicit --arch):
+                                                         run against a multi-tier annotator
+                                                         market, name:price[:error[:votes]]
+                                                         per tier. Each acquired batch
+                                                         splits: the --tier-low-frac most-
+                                                         uncertain share goes to the
+                                                         cheapest tier (noisy tiers re-label
+                                                         `votes` times and majority-vote;
+                                                         every pass is billed), the rest to
+                                                         the priciest (reference) tier.
+                                                         Per-tier labels and dollars print
+                                                         after the run summary
     mcal arch-select <dataset> [--service ...] [--probe-iters 8] [--jobs N|auto]
              [--warm-start | --no-warm-start] [...]      probe every candidate architecture
                                                          (concurrently with --jobs > 1) and
@@ -60,7 +74,7 @@ USAGE:
 
 Datasets: fashion-syn cifar10-syn cifar100-syn imagenet-syn
 Experiments: table1 table2 table3 fig2 fig3 fig4 fig5 fig6 fig8_10 fig11
-             fig13 fig14_15 fig22_27 imagenet (see docs/DESIGN.md §4)
+             fig13 fig14_15 fig22_27 imagenet tiermarket (see docs/DESIGN.md §4)
 ";
 
 fn main() -> ExitCode {
@@ -235,17 +249,53 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
     let ctx = ctx_from(args)?;
     let (ds, preset) = ctx.dataset(&dataset_name)?;
 
-    let svc = Service::parse(args.opt_or("service", "amazon"))
-        .ok_or_else(|| mcal::Error::Config("bad --service".into()))?;
+    let svc = Service::parse(args.opt_or("service", "amazon"))?;
     let params = single_run_params(args, &ctx)?;
 
     let arch_opt = args.opt_or("arch", "auto");
     let jobs = single_run_jobs(args, &ctx);
     let arch_cfg = arch_select_config(args)?;
-    // The simulated annotator fleet rides the same --jobs budget as the
-    // engines (worker count is wall-clock only, never results).
-    let (ledger, service) = ctx.view().service_with(svc, jobs);
-    let report = if arch_opt == "auto" {
+    // Lines printed after the summary (per-tier usage on the --tiers path).
+    let mut tier_lines: Vec<String> = Vec::new();
+    let report = if let Some(spec_list) = args.opt("tiers") {
+        // Multi-tier market: one simulated fleet per tier, batches routed
+        // by a RoutePlan the TieredPolicy installs each round.
+        if arch_opt == "auto" {
+            return Err(mcal::Error::Config(
+                "--tiers needs an explicit --arch (arch selection probes single-tier)".into(),
+            ));
+        }
+        let arch = ArchKind::parse(arch_opt)
+            .ok_or_else(|| mcal::Error::Config(format!("bad --arch '{arch_opt}'")))?;
+        let specs = TierSpec::parse_list(spec_list)?;
+        // The per-tier annotator fleets ride the same --jobs budget as the
+        // engines (worker count is wall-clock only, never results).
+        let (ledger, market) = ctx.view().market_with(specs, jobs)?;
+        let low_frac = args.f64_or("tier-low-frac", 0.5)?;
+        let plan = if market.tiers() == 1 || low_frac <= 0.0 {
+            RoutePlan::default()
+        } else {
+            RoutePlan::split(market.cheapest_route(), market.default_route(), low_frac)
+        };
+        let pool = EnginePool::new(jobs.saturating_sub(1))?;
+        let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
+        let report = driver.run(
+            &ds,
+            &market,
+            ledger,
+            arch,
+            preset.classes_tag,
+            params,
+            TieredPolicy::new(McalPolicy::new(), plan),
+        )?;
+        for u in market.tier_usage() {
+            tier_lines.push(format!("tier {}: {} labels ${:.2}", u.name, u.labels, u.dollars));
+        }
+        report
+    } else if arch_opt == "auto" {
+        // The simulated annotator fleet rides the same --jobs budget as
+        // the engines (worker count is wall-clock only, never results).
+        let (ledger, service) = ctx.view().service_with(svc, jobs);
         let pool = EnginePool::for_budget(jobs, preset.candidate_archs.len())?;
         let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
         let (report, probes) = run_with_arch_selection(
@@ -268,12 +318,16 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
     } else {
         let arch = ArchKind::parse(arch_opt)
             .ok_or_else(|| mcal::Error::Config(format!("bad --arch '{arch_opt}'")))?;
+        let (ledger, service) = ctx.view().service_with(svc, jobs);
         let pool = EnginePool::new(jobs.saturating_sub(1))?;
         let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
         run_mcal(&driver, &ds, &service, ledger, arch, preset.classes_tag, params)?
     };
 
     println!("{}", report.summary());
+    for line in &tier_lines {
+        println!("{line}");
+    }
     print_warm_start(&report);
     let c = &report.cost;
     println!(
@@ -320,8 +374,7 @@ fn cmd_arch_select(args: &Args) -> mcal::Result<()> {
         .clone();
     let ctx = ctx_from(args)?;
     let (ds, preset) = ctx.dataset(&dataset_name)?;
-    let svc = Service::parse(args.opt_or("service", "amazon"))
-        .ok_or_else(|| mcal::Error::Config("bad --service".into()))?;
+    let svc = Service::parse(args.opt_or("service", "amazon"))?;
     let params = single_run_params(args, &ctx)?;
     let arch_cfg = arch_select_config(args)?;
 

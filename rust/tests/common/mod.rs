@@ -42,17 +42,15 @@ pub fn smoke_dataset(name: &str, seed: u64) -> (Dataset, DatasetPreset) {
 /// chunks on a narrow fleet — 4 points across chunk size × latency ×
 /// worker count.
 pub fn ingest_configs(seed: u64) -> Vec<SimServiceConfig> {
-    let base = SimServiceConfig { service: Service::Amazon, seed, ..Default::default() };
+    let base = SimServiceConfig::preset(Service::Amazon).with_seed(seed);
     vec![
-        SimServiceConfig { chunk_size: 0, workers: 1, ..base.clone() },
-        SimServiceConfig { chunk_size: 1, workers: 4, ..base.clone() },
-        SimServiceConfig {
-            chunk_size: 7,
-            workers: 3,
-            latency: Duration::from_micros(50),
-            ..base.clone()
-        },
-        SimServiceConfig { chunk_size: 16, workers: 2, ..base },
+        base.clone().with_chunk(0).with_workers(1),
+        base.clone().with_chunk(1).with_workers(4),
+        base.clone()
+            .with_chunk(7)
+            .with_workers(3)
+            .with_latency(Duration::from_micros(50)),
+        base.with_chunk(16).with_workers(2),
     ]
 }
 

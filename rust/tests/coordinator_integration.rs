@@ -44,10 +44,7 @@ fn smoke_dataset(name: &str, seed: u64) -> (mcal::dataset::Dataset, mcal::datase
 
 fn service(price: Service, seed: u64) -> (Arc<Ledger>, SimService) {
     let ledger = Arc::new(Ledger::new());
-    let svc = SimService::new(
-        SimServiceConfig { service: price, seed, ..Default::default() },
-        ledger.clone(),
-    );
+    let svc = SimService::new(SimServiceConfig::preset(price).with_seed(seed), ledger.clone());
     (ledger, svc)
 }
 
@@ -326,12 +323,7 @@ fn error_injection_still_within_relaxed_bound() {
     let (ds, preset) = smoke_dataset("fashion-syn", 19);
     let ledger = Arc::new(Ledger::new());
     let svc = SimService::new(
-        SimServiceConfig {
-            service: Service::Amazon,
-            error_rate: 0.02,
-            seed: 19,
-            ..Default::default()
-        },
+        SimServiceConfig::preset(Service::Amazon).with_seed(19).with_error(0.02),
         ledger.clone(),
     );
     let params = RunParams { seed: 19, ..Default::default() };

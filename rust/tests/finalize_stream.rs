@@ -17,7 +17,7 @@
 
 use std::sync::Arc;
 
-use mcal::annotation::{Ledger, SimService, SimServiceConfig};
+use mcal::annotation::{Ledger, OrderId, SimService, SimServiceConfig};
 use mcal::coordinator::{run_al_trajectory, run_mcal, LabelingDriver, RunParams, RunReport};
 use mcal::model::ArchKind;
 
@@ -85,7 +85,7 @@ fn full_key(r: &RunReport) -> String {
 fn run_one(f: &Fixture, cfg: SimServiceConfig, seed: u64, error_rate: f64) -> RunReport {
     let (ds, preset) = smoke_dataset("fashion-syn", seed);
     let ledger = Arc::new(Ledger::new());
-    let svc = SimService::new(SimServiceConfig { error_rate, ..cfg }, ledger.clone());
+    let svc = SimService::new(cfg.with_error(error_rate), ledger.clone());
     let params = RunParams { seed, ..Default::default() };
     run_mcal(
         &LabelingDriver::new(&f.engine, &f.manifest),
@@ -155,7 +155,7 @@ fn mcal_finalize_is_bit_identical_across_ingest_configs() {
         );
         // Ids stay coordinator-authored and sequential through the split.
         for (i, o) in r.orders.iter().enumerate() {
-            assert_eq!(o.id, i as u64, "order ids are sequential");
+            assert_eq!(o.id, OrderId::new(i as u64), "order ids are sequential");
         }
     }
 

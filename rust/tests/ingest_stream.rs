@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use mcal::annotation::{Ledger, SimService};
+use mcal::annotation::{Ledger, OrderId, SimService};
 use mcal::coordinator::{run_al_trajectory, run_mcal, LabelingDriver, RunParams, RunReport};
 use mcal::model::ArchKind;
 
@@ -104,7 +104,7 @@ fn mcal_runs_are_bit_identical_across_ingest_configs() {
         assert_eq!(tail as usize, r.residual_human);
     }
     for (i, o) in r.orders.iter().enumerate() {
-        assert_eq!(o.id, i as u64, "order ids are sequential");
+        assert_eq!(o.id, OrderId::new(i as u64), "order ids are sequential");
     }
     let bought: u64 = r.orders.iter().map(|o| o.labels).sum();
     assert_eq!(bought, r.cost.labels_purchased, "order log covers every purchased label");

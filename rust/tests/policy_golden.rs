@@ -53,10 +53,7 @@ fn smoke_dataset(name: &str, seed: u64) -> (mcal::dataset::Dataset, mcal::datase
 
 fn service(price: Service, seed: u64) -> (Arc<Ledger>, SimService) {
     let ledger = Arc::new(Ledger::new());
-    let svc = SimService::new(
-        SimServiceConfig { service: price, seed, ..Default::default() },
-        ledger.clone(),
-    );
+    let svc = SimService::new(SimServiceConfig::preset(price).with_seed(seed), ledger.clone());
     (ledger, svc)
 }
 

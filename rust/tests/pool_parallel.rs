@@ -47,7 +47,7 @@ fn scaled_dataset(
 fn service(seed: u64) -> (Arc<Ledger>, SimService) {
     let ledger = Arc::new(Ledger::new());
     let svc = SimService::new(
-        SimServiceConfig { service: Service::Amazon, seed, ..Default::default() },
+        SimServiceConfig::preset(Service::Amazon).with_seed(seed),
         ledger.clone(),
     );
     (ledger, svc)

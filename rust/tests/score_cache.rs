@@ -33,7 +33,7 @@ fn score_cache_serves_repeats_and_invalidates_on_commits() {
     ds.name = "fashion-syn".to_string();
     let ledger = Arc::new(Ledger::new());
     let svc = SimService::new(
-        SimServiceConfig { service: Service::Amazon, seed: 11, ..Default::default() },
+        SimServiceConfig::preset(Service::Amazon).with_seed(11),
         ledger.clone(),
     );
     let mut env = LabelingEnv::new(

@@ -1,0 +1,225 @@
+//! Multi-tier market determinism and consensus quality, end to end.
+//!
+//! Pinned here (the gen-7 contract):
+//!
+//! - a tier-routed consensus MCAL run — uncertain share to a cheap noisy
+//!   3-vote tier, rest to the expert tier — is *bit-identical* across
+//!   ingest chunk size × annotator-fleet width × latency × engine-pool
+//!   width: reports, iteration records, order logs (route is delivery
+//!   metadata, never a seed input), and the ledger's per-tier integer
+//!   `(price, labels)` buckets;
+//! - per-tier dollars stay split-invariant and auditable: the cheap
+//!   bucket bills every consensus pass (labels divisible by `votes`),
+//!   bucket dollars reconcile with the run's human-labeling total;
+//! - 3-way consensus on an error_rate > 0 tier produces strictly fewer
+//!   wrong labels than single-shot annotation on the same tier (and
+//!   bills 3× the passes) — the economics the routing policy trades on.
+//!
+//! The MCAL runs are artifact-gated like the other integration suites;
+//! the consensus-vs-single-shot check needs no artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mcal::annotation::{AnnotationService, Ledger, TierMarket, TierSpec};
+use mcal::coordinator::{
+    LabelingDriver, McalPolicy, RoutePlan, RunParams, RunReport, TieredPolicy,
+};
+use mcal::model::ArchKind;
+use mcal::runtime::EnginePool;
+
+mod common;
+use common::{residual_cut, setup, smoke_dataset};
+
+/// (chunk, workers, latency µs) grid mirroring `common::ingest_configs`:
+/// monolithic/serial, per-label chunks on a wide fleet, odd laggy chunks
+/// on a narrow fleet, mid-size chunks.
+const CONFIGS: [(usize, usize, u64); 4] = [(0, 1, 0), (1, 4, 0), (7, 3, 50), (16, 2, 0)];
+
+fn market(seed: u64, chunk: usize, workers: usize, latency_us: u64) -> (Arc<Ledger>, TierMarket) {
+    let lat = Duration::from_micros(latency_us);
+    let ledger = Arc::new(Ledger::new());
+    let specs = vec![
+        TierSpec::new("cheap", 0.003)
+            .with_error(0.3)
+            .with_votes(3)
+            .with_workers(workers)
+            .with_latency(lat),
+        TierSpec::new("expert", 0.04).with_workers(workers).with_latency(lat),
+    ];
+    let market = TierMarket::new(specs, chunk, seed, ledger.clone()).unwrap();
+    (ledger, market)
+}
+
+/// Everything deterministic a tier-routed run exposes, floats as raw
+/// bits, with the residual order suffix collapsed to its label total and
+/// the ledger's per-tier `(price, labels)` buckets appended.
+fn full_key(r: &RunReport, buckets: &[(f64, u64)]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "b={} s={} residual={} err_bits={}/{}/{} cost_bits={} stop={:?}",
+        r.b_size,
+        r.s_size,
+        r.residual_human,
+        r.overall_error.to_bits(),
+        r.machine_error.to_bits(),
+        r.residual_label_error.to_bits(),
+        r.cost.total().to_bits(),
+        r.stop_reason,
+    );
+    for it in &r.iterations {
+        let profile: Vec<u64> = it.eps_profile.iter().map(|e| e.to_bits()).collect();
+        let _ = writeln!(
+            s,
+            "iter={} b={} delta={} ledger_bits={} c_star_bits={:?} stable={} profile={profile:?}",
+            it.iter,
+            it.b_size,
+            it.delta,
+            it.ledger_total.to_bits(),
+            it.c_star.map(f64::to_bits),
+            it.stable,
+        );
+    }
+    let cut = residual_cut(r);
+    for o in &r.orders[..cut] {
+        let _ = writeln!(
+            s,
+            "order={} labels={} dollars_bits={}",
+            o.id,
+            o.labels,
+            o.dollars.to_bits()
+        );
+    }
+    let _ = writeln!(s, "residual labels={}", r.residual_human);
+    for (price, labels) in buckets {
+        let _ = writeln!(s, "bucket price_bits={} labels={}", price.to_bits(), labels);
+    }
+    s
+}
+
+fn tiered_run(
+    f: &common::Fixture,
+    seed: u64,
+    chunk: usize,
+    workers: usize,
+    latency_us: u64,
+    pool: Option<&EnginePool>,
+) -> (RunReport, Arc<Ledger>, Vec<(String, u64, f64)>) {
+    let (ds, preset) = smoke_dataset("fashion-syn", seed);
+    let (ledger, market) = market(seed, chunk, workers, latency_us);
+    let plan = RoutePlan::split(market.cheapest_route(), market.default_route(), 0.5);
+    let params = RunParams { seed, ..Default::default() };
+    let report = LabelingDriver::new(&f.engine, &f.manifest)
+        .with_pool(pool)
+        .run(
+            &ds,
+            &market,
+            ledger.clone(),
+            ArchKind::Res18,
+            preset.classes_tag,
+            params,
+            TieredPolicy::new(McalPolicy::new(), plan),
+        )
+        .unwrap();
+    let usage = market
+        .tier_usage()
+        .into_iter()
+        .map(|u| (u.name, u.labels, u.dollars))
+        .collect();
+    (report, ledger, usage)
+}
+
+#[test]
+fn tiered_consensus_mcal_is_bit_identical_across_ingest_and_jobs() {
+    let Some(f) = setup() else { return };
+    let mut keys = Vec::new();
+    let mut usages = Vec::new();
+    for (chunk, workers, lat) in CONFIGS {
+        let (report, ledger, usage) = tiered_run(&f, 53, chunk, workers, lat, None);
+        keys.push(full_key(&report, &ledger.label_buckets()));
+        usages.push(usage);
+    }
+    for (i, k) in keys.iter().enumerate().skip(1) {
+        assert_eq!(
+            k, &keys[0],
+            "tier-routed run drifted under ingest config #{i} — routing and \
+             consensus must be pure wall-clock knobs"
+        );
+    }
+    assert!(
+        usages[1..].iter().all(|u| u == &usages[0]),
+        "per-tier usage drifted across ingest configs: {usages:?}"
+    );
+
+    // And across engine-pool widths, with the laggiest chunked config.
+    let pool = EnginePool::new(2).unwrap();
+    let (report, ledger, _) = tiered_run(&f, 53, 7, 3, 50, Some(&pool));
+    assert_eq!(
+        full_key(&report, &ledger.label_buckets()),
+        keys[0],
+        "tier-routed run drifted under a 3-lane pool"
+    );
+}
+
+#[test]
+fn per_tier_dollars_split_invariantly_and_bill_every_consensus_pass() {
+    let Some(f) = setup() else { return };
+    let (report, ledger, usage) = tiered_run(&f, 59, 7, 3, 0, None);
+
+    // Both tiers were actually used, and the cheap tier billed every
+    // consensus pass: its label count is a multiple of the vote width.
+    let cheap = usage.iter().find(|(n, _, _)| n == "cheap").unwrap();
+    let expert = usage.iter().find(|(n, _, _)| n == "expert").unwrap();
+    assert!(cheap.1 > 0 && expert.1 > 0, "both tiers must see traffic: {usage:?}");
+    assert_eq!(cheap.1 % 3, 0, "cheap consensus labels must come in 3-vote passes");
+
+    // The ledger's integer buckets keep the tiers separable: one bucket
+    // per tier price, counts matching the fleets' own purchase counters,
+    // dollars reconciling with the run's human-labeling total.
+    let buckets = ledger.label_buckets();
+    assert_eq!(buckets.len(), 2, "one bucket per tier price: {buckets:?}");
+    assert!(buckets.contains(&(0.003, cheap.1)), "cheap bucket missing: {buckets:?}");
+    assert!(buckets.contains(&(0.04, expert.1)), "expert bucket missing: {buckets:?}");
+    assert!((cheap.2 - 0.003 * cheap.1 as f64).abs() < 1e-9);
+    assert!((expert.2 - 0.04 * expert.1 as f64).abs() < 1e-9);
+    let bucket_dollars: f64 = buckets.iter().map(|(p, c)| p * *c as f64).sum();
+    assert!((bucket_dollars - report.cost.human_labeling).abs() < 1e-9);
+    assert_eq!(
+        report.cost.labels_purchased,
+        usage.iter().map(|(_, l, _)| l).sum::<u64>(),
+        "ledger label count must equal the sum of per-tier purchases"
+    );
+}
+
+/// The consensus economics, end to end through the market's submit path:
+/// 3-way majority vote on a 30%-error tier produces strictly fewer wrong
+/// labels than single-shot annotation — while billing 3× the passes.
+/// Needs no artifacts (pure annotation layer).
+#[test]
+fn three_way_consensus_beats_single_shot_end_to_end() {
+    let (ds, _) = smoke_dataset("fashion-syn", 61);
+    let n = 600.min(ds.len());
+    let idx: Vec<usize> = (0..n).collect();
+    let wrong_with = |votes: usize| {
+        let ledger = Arc::new(Ledger::new());
+        let spec = TierSpec::new("cheap", 0.003).with_error(0.3).with_votes(votes);
+        let market = TierMarket::new(vec![spec], 0, 61, ledger.clone()).unwrap();
+        let labels = market.label_batch(&ds, &idx).unwrap();
+        assert_eq!(labels.len(), n, "one resolved label per requested sample");
+        assert_eq!(
+            ledger.snapshot().labels_purchased,
+            (n * votes) as u64,
+            "every consensus pass must be billed"
+        );
+        idx.iter().zip(&labels).filter(|&(&i, &l)| ds.groundtruth(i) != l).count()
+    };
+    let single = wrong_with(1);
+    let consensus = wrong_with(3);
+    assert!(single > 0, "error_rate 0.3 must corrupt some single-shot labels");
+    assert!(
+        consensus < single,
+        "3-way consensus ({consensus} wrong of {n}) must beat single-shot ({single} wrong)"
+    );
+}

@@ -28,7 +28,6 @@
 use std::sync::Arc;
 
 use mcal::annotation::{AnnotationService, Ledger, SimService, SimServiceConfig};
-use mcal::coordinator::state::WARM_ORDER_BASE;
 use mcal::coordinator::{
     run_with_arch_selection, ArchSelectConfig, LabelingDriver, LabelingEnv, ProbeResult,
     RunParams, RunReport,
@@ -112,10 +111,7 @@ fn resumed_run_matches_never_paused_run_and_saves_the_training_dollars() {
     // Never-paused reference run: setup + 3 rounds, snapshot point, then
     // 2 more rounds.
     let ledger1 = Arc::new(Ledger::new());
-    let svc1 = SimService::new(
-        SimServiceConfig { seed: 29, ..Default::default() },
-        ledger1.clone(),
-    );
+    let svc1 = SimService::new(SimServiceConfig::default().with_seed(29), ledger1.clone());
     let mut cold = LabelingEnv::new(
         &f.engine,
         &f.manifest,
@@ -142,13 +138,11 @@ fn resumed_run_matches_never_paused_run_and_saves_the_training_dollars() {
     // service — the re-buy streams, the trajectory must not move.
     let ledger2 = Arc::new(Ledger::new());
     let svc2 = SimService::new(
-        SimServiceConfig {
-            seed: 29,
-            chunk_size: 7,
-            workers: 3,
-            latency: std::time::Duration::from_micros(50),
-            ..Default::default()
-        },
+        SimServiceConfig::default()
+            .with_seed(29)
+            .with_chunk(7)
+            .with_workers(3)
+            .with_latency(std::time::Duration::from_micros(50)),
         ledger2.clone(),
     );
     let mut warm = LabelingEnv::resume(
@@ -213,9 +207,9 @@ fn resumed_run_matches_never_paused_run_and_saves_the_training_dollars() {
 /// the reserved warm id space is what keeps those ids chunk-invariant.
 fn warm_key(r: &RunReport) -> String {
     use std::fmt::Write as _;
-    let warm_n = r.orders.iter().filter(|o| o.id >= WARM_ORDER_BASE).count();
+    let warm_n = r.orders.iter().filter(|o| o.id.is_warm()).count();
     assert!(
-        r.orders[..warm_n].iter().all(|o| o.id >= WARM_ORDER_BASE),
+        r.orders[..warm_n].iter().all(|o| o.id.is_warm()),
         "warm re-buy orders must lead the log"
     );
     let ws = r.warm_start.as_ref().expect("warm run must carry provenance");
