@@ -333,6 +333,14 @@ pub fn run_with_arch_selection(
         .iter_mut()
         .find(|(r, _)| r.arch == winner)
         .and_then(|(_, s)| s.take());
+    // Durability: the winning probe is itself a resumable artifact —
+    // persist it beside the run's round checkpoints so a crash between
+    // selection and the warm run can `mcal resume` without re-probing
+    // (the probe's shadow orders ride along for audit).
+    if let (Some(c), Some(ps)) = (&driver.checkpoint, &winner_state) {
+        let ckpt = super::persist::Checkpoint::Probe { meta: c.meta.clone(), state: ps.clone() };
+        super::persist::save(&c.probe_path(winner), &ckpt)?;
+    }
     let report = match winner_state {
         // Warm start: resume the winning probe — its state carries the
         // probe's own seed stream, so the real run continues the probe's

@@ -81,6 +81,16 @@ impl RoutePlan {
     pub fn is_single(&self) -> bool {
         self.low == self.high || self.low_frac <= 0.0
     }
+
+    /// How many of `acquired` selection-ordered samples route to `low`
+    /// on a split plan: `round(low_frac · acquired)`, clamped to the
+    /// batch. The degenerate edges collapse to a single order — 0.0
+    /// routes the whole batch to `high` (via [`RoutePlan::is_single`]),
+    /// 1.0 cuts at `acquired`, and a batch of one rounds to whichever
+    /// tier `low_frac ≥ 0.5` names (`tests` below pin these).
+    pub fn low_cut(&self, acquired: usize) -> usize {
+        ((self.low_frac * acquired as f64).round() as usize).min(acquired)
+    }
 }
 
 impl Default for RoutePlan {
@@ -676,7 +686,7 @@ impl<'e> LabelingEnv<'e> {
             // Split in selection order: the low_frac most uncertain
             // samples go to the cheap consensus tier. b_idx extends in
             // submission order so the drained labels line up in settle().
-            let cut = ((plan.low_frac * acquired as f64).round() as usize).min(acquired);
+            let cut = plan.low_cut(acquired);
             let (low, high) = selected.split_at(cut);
             self.b_idx.extend_from_slice(low);
             self.b_idx.extend_from_slice(high);
@@ -1002,5 +1012,52 @@ impl<'e> LabelingEnv<'e> {
             }
         }
         best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The split arithmetic behind tier routing, pinned at its edges:
+    /// every degenerate plan routes the whole batch to exactly one tier
+    /// (one order — the path `tests/tier_market.rs` proves bit-identical
+    /// to an unwrapped policy).
+    #[test]
+    fn route_plan_degenerate_splits_collapse_to_one_tier() {
+        let cheap = TierRoute::new(0);
+        let expert = TierRoute::new(1);
+
+        // low_frac 0.0: single-route by definition — everything to high.
+        let p = RoutePlan::split(cheap, expert, 0.0);
+        assert!(p.is_single());
+        assert_eq!(p.low_cut(17), 0);
+
+        // low_frac 1.0: split-path, but the cut swallows the whole batch.
+        let p = RoutePlan::split(cheap, expert, 1.0);
+        assert!(!p.is_single());
+        for n in [0, 1, 2, 17] {
+            assert_eq!(p.low_cut(n), n, "low_frac 1.0 must route all {n} to low");
+        }
+
+        // Same-route "splits" are single however large the fraction.
+        assert!(RoutePlan::split(expert, expert, 0.7).is_single());
+        assert!(RoutePlan::single(cheap).is_single());
+
+        // A batch of one rounds to whichever tier low_frac >= 0.5 names.
+        let half = RoutePlan::split(cheap, expert, 0.5);
+        assert_eq!(half.low_cut(1), 1);
+        assert_eq!(RoutePlan::split(cheap, expert, 0.49).low_cut(1), 0);
+
+        // Batch smaller than the "split" still cuts inside the batch.
+        assert_eq!(half.low_cut(0), 0);
+        let p = RoutePlan::split(cheap, expert, 0.9);
+        for n in 0..=5 {
+            assert!(p.low_cut(n) <= n, "cut past the batch at n={n}");
+        }
+
+        // Out-of-range fractions clamp at construction.
+        assert_eq!(RoutePlan::split(cheap, expert, 7.5).low_cut(10), 10);
+        assert!(RoutePlan::split(cheap, expert, -3.0).is_single());
     }
 }

@@ -37,6 +37,14 @@
 //!   re-buying the captured labels as one streamed purchase. Arch
 //!   selection warm-starts its winner through this seam by default, so
 //!   the winner never re-pays its own probe.
+//! - [`persist`]: the durable half of the state seam — a versioned,
+//!   CRC-checked binary codec for [`state::RunState`] /
+//!   [`state::ProbeState`] written crash-safely (tmp + fsync + atomic
+//!   rename, fault-injection matrix in-tree via [`persist::FaultFs`]).
+//!   The driver checkpoints through an optional
+//!   [`persist::CheckpointPolicy`] and `mcal resume <ckpt>` continues a
+//!   run from disk through the same warm path, so resume-from-disk
+//!   inherits the in-process bit-identity contract.
 //! - [`events`]: per-iteration records and run reports (with per-run
 //!   provenance, including warm-start provenance) consumed by the
 //!   experiment drivers and the parallel fleet
@@ -52,6 +60,7 @@ pub mod budget;
 pub mod env;
 pub mod events;
 pub mod mcal;
+pub mod persist;
 pub mod policy;
 pub mod state;
 pub mod tiered;
@@ -62,6 +71,7 @@ pub use budget::{run_budget, BudgetPolicy};
 pub use env::{LabelingEnv, RoutePlan, RunParams};
 pub use events::{IterationRecord, RunReport, StopReason, WarmStartReport};
 pub use mcal::{run_mcal, run_mcal_warm, McalPolicy};
+pub use persist::{Checkpoint, CheckpointMeta, CheckpointPolicy};
 pub use policy::{Decision, LabelingDriver, Policy};
 pub use state::{ProbeState, RunState};
 pub use tiered::TieredPolicy;

@@ -1,0 +1,1150 @@
+//! Durable run checkpoints: a crash-safe, versioned, dependency-free
+//! binary codec for [`RunState`] / [`ProbeState`] — the disk half of the
+//! ROADMAP's "durable state + `mcal serve`" seam.
+//!
+//! ## Why hand-rolled
+//!
+//! The offline vendor set has no serde, so the format is explicit
+//! little-endian field encoding behind a tiny writer/reader pair
+//! ([`Enc`]/[`Dec`]) — every field appended in a fixed order, every read
+//! bounds-checked, every variable-length vector length-prefixed and
+//! capped by the bytes that could actually back it (a corrupt length can
+//! never drive an allocation past the file's own size).
+//!
+//! ## File format (version 1)
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"MCALCKPT"
+//! 8       2     format version (u16 LE) = 1
+//! 10      1     kind: 1 = Run checkpoint, 2 = Probe checkpoint
+//! 11      8     payload length (u64 LE)
+//! 19      n     payload: CheckpointMeta, then RunState [, shadow orders]
+//! 19+n    4     CRC32 (u32 LE) over bytes [0, 19+n) — header included
+//! ```
+//!
+//! Floats are stored as raw IEEE bits (`to_bits`/`from_bits`), PRNG
+//! cursors as their raw `(state, inc)` words
+//! ([`crate::prng::Pcg32::raw_parts`]), so an encode → decode round-trip
+//! is *bit-identity*, not approximation — the property that lets a
+//! resumed-from-disk run inherit the gen-5 warm-start contract unchanged
+//! (`tests/checkpoint_resume.rs`, `tests/properties.rs`).
+//!
+//! ## Defensive decode
+//!
+//! [`decode`] never panics and never returns a silently wrong state:
+//! truncation (any prefix), bit-flips (any single-byte corruption —
+//! CRC32 detects every error burst ≤ 32 bits), version mismatch, and
+//! unknown kinds/architectures all return a typed
+//! [`Error::Persist`](crate::Error). Semantic validation against the
+//! resume-time dataset (partition, θ-grid, model shape) stays where it
+//! was: [`RunState::validate`] and [`LabelingEnv::resume`]'s checks run
+//! before a resume charges anything
+//! ([`LabelingEnv::resume`](super::env::LabelingEnv::resume)).
+//!
+//! ## Crash-safe save
+//!
+//! [`save`] writes `<path>.tmp` in bounded chunks, fsyncs, then
+//! atomically renames onto `<path>` — a crash at *any* boundary leaves
+//! either the old checkpoint or the new one fully intact, never a torn
+//! file, and `*.tmp` residue is ignored by [`load`]/[`list_checkpoints`]
+//! and overwritten by the next save. The write path runs through the
+//! [`CkptFs`] seam so the in-memory [`FaultFs`] shim can inject a
+//! deterministic crash (clean failure, torn write, or duplicated write)
+//! at the Nth operation — the recovery matrix is pinned in-tree, not
+//! hoped for (see the unit tests below).
+
+#![deny(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::annotation::{OrderId, OrderRecord};
+use crate::model::ArchKind;
+use crate::prng::Pcg32;
+use crate::{Error, Result};
+
+use super::state::{ProbeState, RunState};
+
+/// First 8 bytes of every checkpoint file.
+pub const MAGIC: [u8; 8] = *b"MCALCKPT";
+/// Current format version; bump on any layout change.
+pub const FORMAT_VERSION: u16 = 1;
+/// Bytes before the payload: magic + version + kind + payload length.
+const HEADER_LEN: usize = 8 + 2 + 1 + 8;
+/// CRC32 trailer size.
+const TRAILER_LEN: usize = 4;
+/// Chunk size for the crash-safe write path — every `append` boundary is
+/// a fault-injection point.
+const WRITE_CHUNK: usize = 64 * 1024;
+
+const KIND_RUN: u8 = 1;
+const KIND_PROBE: u8 = 2;
+
+fn perr(msg: impl Into<String>) -> Error {
+    Error::Persist(msg.into())
+}
+
+/// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the standard
+/// zlib/PNG checksum, hand-rolled bitwise since no crc crate ships in the
+/// vendor set. Detects every single-byte error (any burst ≤ 32 bits),
+/// which is exactly the adversarial-decode property `tests/properties.rs`
+/// leans on.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------------------
+// Writer / reader
+// ---------------------------------------------------------------------------
+
+/// Little-endian field writer.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn vec_usize(&mut self, v: &[usize]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u64(x as u64);
+        }
+    }
+
+    fn vec_f32_bits(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u32(x.to_bits());
+        }
+    }
+
+    fn vec_f64(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    fn vec_pairs(&mut self, v: &[(f64, f64)]) {
+        self.u64(v.len() as u64);
+        for &(a, b) in v {
+            self.f64(a);
+            self.f64(b);
+        }
+    }
+
+    fn rng(&mut self, rng: &Pcg32) {
+        let (state, inc) = rng.raw_parts();
+        self.u64(state);
+        self.u64(inc);
+    }
+}
+
+/// Bounds-checked little-endian reader. Every `take_*` returns a typed
+/// error on underrun; length prefixes are capped by the bytes that could
+/// back the elements, so no corrupt length can drive a huge allocation.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(perr(format!(
+                "truncated payload: wanted {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length prefix for elements of `elem_size` bytes: rejected unless
+    /// the remaining buffer could actually hold that many elements.
+    fn len(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let cap = (self.remaining() / elem_size.max(1)) as u64;
+        if n > cap {
+            return Err(perr(format!(
+                "corrupt length {n} at offset {}: only {cap} elements of {elem_size} bytes \
+                 remain",
+                self.pos
+            )));
+        }
+        Ok(n as usize)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| perr("corrupt string: invalid UTF-8"))
+    }
+
+    fn vec_usize(&mut self) -> Result<Vec<usize>> {
+        let n = self.len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = self.u64()?;
+            v.push(usize::try_from(x).map_err(|_| perr(format!("index {x} overflows usize")))?);
+        }
+        Ok(v)
+    }
+
+    fn vec_f32_bits(&mut self) -> Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_bits(self.u32()?));
+        }
+        Ok(v)
+    }
+
+    fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let n = self.len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    fn vec_pairs(&mut self) -> Result<Vec<(f64, f64)>> {
+        let n = self.len(16)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push((self.f64()?, self.f64()?));
+        }
+        Ok(v)
+    }
+
+    fn rng(&mut self) -> Result<Pcg32> {
+        let state = self.u64()?;
+        let inc = self.u64()?;
+        Ok(Pcg32::from_raw_parts(state, inc))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint value
+// ---------------------------------------------------------------------------
+
+/// Everything a checkpoint needs beyond the [`RunState`] to make a resume
+/// *self-contained*: how to regenerate the exact dataset the state
+/// partitions. `mcal resume <ckpt>` rebuilds the dataset from this recipe
+/// (preset name + generation seed + scale factor — the same recipe
+/// [`crate::experiments::common::CtxView::dataset`] cooks from) and then
+/// lets [`RunState::validate`] plus the resume-path model checks confirm
+/// the reconstruction before any label is charged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    /// Dataset preset name (`fashion-syn`, `cifar10-syn`, …).
+    pub dataset: String,
+    /// Seed the dataset was generated with (the run context's seed — not
+    /// necessarily the run's own PRNG seed, which lives in the state).
+    pub dataset_seed: u64,
+    /// Dataset scale factor (`1.0` = the preset's full size; smaller
+    /// values regenerate through `spec.scaled(factor)`).
+    pub scale_factor: f64,
+    /// Class-count tag (`c10` / `c100` / …) naming the model set the run
+    /// trains; cross-checked against the preset at resume.
+    pub classes_tag: String,
+}
+
+/// A decoded checkpoint file: the self-containment meta plus the captured
+/// state, as either of the two kinds the coordinator persists.
+#[derive(Clone, Debug)]
+pub enum Checkpoint {
+    /// A labeling run mid-loop ([`super::policy::LabelingDriver`]'s
+    /// per-round snapshots).
+    Run {
+        /// Dataset-reconstruction recipe.
+        meta: CheckpointMeta,
+        /// The captured run.
+        state: RunState,
+    },
+    /// An arch-selection probe ([`super::archselect`] persists the
+    /// winner's [`ProbeState`] alongside the run checkpoints).
+    Probe {
+        /// Dataset-reconstruction recipe.
+        meta: CheckpointMeta,
+        /// The captured probe (run state + shadow order log).
+        state: ProbeState,
+    },
+}
+
+impl Checkpoint {
+    /// The dataset-reconstruction recipe, whichever the kind.
+    pub fn meta(&self) -> &CheckpointMeta {
+        match self {
+            Checkpoint::Run { meta, .. } | Checkpoint::Probe { meta, .. } => meta,
+        }
+    }
+
+    /// The resumable [`RunState`], whichever the kind (a probe resumes
+    /// through its embedded run state exactly like the arch-selection
+    /// winner does).
+    pub fn run_state(&self) -> &RunState {
+        match self {
+            Checkpoint::Run { state, .. } => state,
+            Checkpoint::Probe { state, .. } => &state.run,
+        }
+    }
+}
+
+fn encode_meta(e: &mut Enc, m: &CheckpointMeta) {
+    e.str(&m.dataset);
+    e.u64(m.dataset_seed);
+    e.f64(m.scale_factor);
+    e.str(&m.classes_tag);
+}
+
+fn decode_meta(d: &mut Dec<'_>) -> Result<CheckpointMeta> {
+    Ok(CheckpointMeta {
+        dataset: d.str()?,
+        dataset_seed: d.u64()?,
+        scale_factor: d.f64()?,
+        classes_tag: d.str()?,
+    })
+}
+
+fn encode_run_state(e: &mut Enc, s: &RunState) {
+    e.str(s.arch.as_str());
+    e.u64(s.seed);
+    e.u64(s.rounds as u64);
+    e.vec_usize(&s.test_idx);
+    e.vec_usize(&s.b_idx);
+    e.vec_usize(&s.pool);
+    e.vec_f32_bits(&s.session_state);
+    e.rng(&s.session_rng);
+    e.u64(s.steps_executed);
+    e.u64(s.real_samples_trained);
+    e.rng(&s.rng);
+    e.vec_f64(&s.theta_grid);
+    e.vec_pairs(&s.cost_obs);
+    e.u64(s.profile_obs.len() as u64);
+    for obs in &s.profile_obs {
+        e.vec_pairs(obs);
+    }
+    e.vec_f64(&s.last_profile);
+    e.f64(s.training_spend);
+    e.u64(s.retrain_counter);
+    e.u64(s.order_counter);
+}
+
+fn decode_run_state(d: &mut Dec<'_>) -> Result<RunState> {
+    let arch_name = d.str()?;
+    let arch = ArchKind::parse(&arch_name)
+        .ok_or_else(|| perr(format!("unknown architecture '{arch_name}'")))?;
+    let seed = d.u64()?;
+    let rounds = d.u64()? as usize;
+    let test_idx = d.vec_usize()?;
+    let b_idx = d.vec_usize()?;
+    let pool = d.vec_usize()?;
+    let session_state = d.vec_f32_bits()?;
+    let session_rng = d.rng()?;
+    let steps_executed = d.u64()?;
+    let real_samples_trained = d.u64()?;
+    let rng = d.rng()?;
+    let theta_grid = d.vec_f64()?;
+    let cost_obs = d.vec_pairs()?;
+    // Each θ track needs at least its own 8-byte length prefix.
+    let tracks = d.len(8)?;
+    let mut profile_obs = Vec::with_capacity(tracks);
+    for _ in 0..tracks {
+        profile_obs.push(d.vec_pairs()?);
+    }
+    Ok(RunState {
+        arch,
+        seed,
+        rounds,
+        test_idx,
+        b_idx,
+        pool,
+        session_state,
+        session_rng,
+        steps_executed,
+        real_samples_trained,
+        rng,
+        theta_grid,
+        cost_obs,
+        profile_obs,
+        last_profile: d.vec_f64()?,
+        training_spend: d.f64()?,
+        retrain_counter: d.u64()?,
+        order_counter: d.u64()?,
+    })
+}
+
+fn encode_orders(e: &mut Enc, orders: &[OrderRecord]) {
+    e.u64(orders.len() as u64);
+    for o in orders {
+        e.u64(o.id.raw());
+        e.u64(o.labels);
+        e.f64(o.dollars);
+    }
+}
+
+fn decode_orders(d: &mut Dec<'_>) -> Result<Vec<OrderRecord>> {
+    let n = d.len(24)?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(OrderRecord {
+            id: OrderId::new(d.u64()?),
+            labels: d.u64()?,
+            dollars: d.f64()?,
+        });
+    }
+    Ok(v)
+}
+
+/// Encode a checkpoint to its complete on-disk byte image (header,
+/// payload, CRC32 trailer).
+pub fn encode(ckpt: &Checkpoint) -> Vec<u8> {
+    let mut payload = Enc::new();
+    let kind = match ckpt {
+        Checkpoint::Run { meta, state } => {
+            encode_meta(&mut payload, meta);
+            encode_run_state(&mut payload, state);
+            KIND_RUN
+        }
+        Checkpoint::Probe { meta, state } => {
+            encode_meta(&mut payload, meta);
+            encode_run_state(&mut payload, &state.run);
+            encode_orders(&mut payload, &state.shadow_orders);
+            KIND_PROBE
+        }
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.buf.len() + TRAILER_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&(payload.buf.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload.buf);
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Decode a checkpoint byte image, defensively: truncation, corruption
+/// (CRC or structural), version mismatch, and unknown kinds all return a
+/// typed error — never a panic, never a silently wrong state.
+pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+    if bytes.len() < HEADER_LEN + TRAILER_LEN {
+        return Err(perr(format!(
+            "truncated checkpoint: {} bytes, header + trailer need {}",
+            bytes.len(),
+            HEADER_LEN + TRAILER_LEN
+        )));
+    }
+    if bytes[..8] != MAGIC {
+        return Err(perr("not a checkpoint file (bad magic)"));
+    }
+    let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        return Err(perr(format!(
+            "format version {version} (this build reads version {FORMAT_VERSION})"
+        )));
+    }
+    let kind = bytes[10];
+    let payload_len = u64::from_le_bytes(bytes[11..HEADER_LEN].try_into().unwrap());
+    let expect = (HEADER_LEN + TRAILER_LEN) as u64 + payload_len;
+    if expect != bytes.len() as u64 {
+        return Err(perr(format!(
+            "length mismatch: header says {expect} bytes, file has {}",
+            bytes.len()
+        )));
+    }
+    let body = &bytes[..bytes.len() - TRAILER_LEN];
+    let stored = u32::from_le_bytes(bytes[bytes.len() - TRAILER_LEN..].try_into().unwrap());
+    let computed = crc32(body);
+    if stored != computed {
+        return Err(perr(format!(
+            "CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"
+        )));
+    }
+    let mut d = Dec::new(&body[HEADER_LEN..]);
+    let ckpt = match kind {
+        KIND_RUN => {
+            let meta = decode_meta(&mut d)?;
+            let state = decode_run_state(&mut d)?;
+            Checkpoint::Run { meta, state }
+        }
+        KIND_PROBE => {
+            let meta = decode_meta(&mut d)?;
+            let run = decode_run_state(&mut d)?;
+            let shadow_orders = decode_orders(&mut d)?;
+            Checkpoint::Probe { meta, state: ProbeState { run, shadow_orders } }
+        }
+        other => return Err(perr(format!("unknown checkpoint kind {other}"))),
+    };
+    if d.remaining() != 0 {
+        return Err(perr(format!("{} trailing payload bytes after decode", d.remaining())));
+    }
+    Ok(ckpt)
+}
+
+// ---------------------------------------------------------------------------
+// Crash-safe save path
+// ---------------------------------------------------------------------------
+
+/// The write seam the crash-safe save drives: create the temp file, append
+/// chunks, fsync-and-close, rename. The real implementation is
+/// [`RealFs`]; [`FaultFs`] injects deterministic crashes at any boundary.
+pub trait CkptFs {
+    /// Create (truncating) the file at `path` and hold it open.
+    fn create(&mut self, path: &Path) -> Result<()>;
+    /// Append `data` to the open file.
+    fn append(&mut self, data: &[u8]) -> Result<()>;
+    /// Flush the open file to stable storage and close it.
+    fn sync_close(&mut self) -> Result<()>;
+    /// Atomically rename `from` onto `to`.
+    fn rename(&mut self, from: &Path, to: &Path) -> Result<()>;
+}
+
+/// `<path>.tmp` — the staging name every save writes before renaming.
+/// Deterministic, so residue from a crashed save is overwritten (and thus
+/// cleaned) by the next save of the same checkpoint.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Crash-safe byte write through a [`CkptFs`]: stage at [`tmp_path`],
+/// append in [`WRITE_CHUNK`]-sized pieces, fsync, rename. A failure at
+/// any operation leaves the destination either untouched or fully
+/// renamed — never torn (pinned per boundary by the [`FaultFs`] matrix
+/// in this module's tests).
+pub fn save_bytes(fs: &mut dyn CkptFs, path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_path(path);
+    fs.create(&tmp)?;
+    for chunk in bytes.chunks(WRITE_CHUNK) {
+        fs.append(chunk)?;
+    }
+    fs.sync_close()?;
+    fs.rename(&tmp, path)
+}
+
+/// Encode and crash-safely write `ckpt` to `path` on the real filesystem.
+pub fn save(path: &Path, ckpt: &Checkpoint) -> Result<()> {
+    save_bytes(&mut RealFs::default(), path, &encode(ckpt))
+}
+
+/// Read and decode the checkpoint at `path`.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| perr(format!("read {}: {e}", path.display())))?;
+    decode(&bytes)
+}
+
+/// Checkpoint files in `dir` (`*.ckpt`, sorted by name — round files sort
+/// chronologically by construction). `*.tmp` staging residue from a
+/// crashed save is ignored here and overwritten by the next save.
+pub fn list_checkpoints(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .map_err(|e| perr(format!("read dir {}: {e}", dir.display())))?
+    {
+        let path = entry.map_err(|e| perr(format!("read dir entry: {e}")))?.path();
+        if path.extension().is_some_and(|x| x == "ckpt") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// The real write path: a held [`std::fs::File`] for the staging file,
+/// `sync_all` for the fsync, [`std::fs::rename`] for the atomic commit.
+#[derive(Default)]
+pub struct RealFs {
+    open: Option<std::fs::File>,
+}
+
+impl CkptFs for RealFs {
+    fn create(&mut self, path: &Path) -> Result<()> {
+        self.open = Some(
+            std::fs::File::create(path)
+                .map_err(|e| perr(format!("create {}: {e}", path.display())))?,
+        );
+        Ok(())
+    }
+
+    fn append(&mut self, data: &[u8]) -> Result<()> {
+        use std::io::Write as _;
+        self.open
+            .as_mut()
+            .ok_or_else(|| perr("append with no staged file"))?
+            .write_all(data)
+            .map_err(|e| perr(format!("write: {e}")))
+    }
+
+    fn sync_close(&mut self) -> Result<()> {
+        let f = self.open.take().ok_or_else(|| perr("sync with no staged file"))?;
+        f.sync_all().map_err(|e| perr(format!("fsync: {e}")))
+    }
+
+    fn rename(&mut self, from: &Path, to: &Path) -> Result<()> {
+        std::fs::rename(from, to)
+            .map_err(|e| perr(format!("rename {} -> {}: {e}", from.display(), to.display())))
+    }
+}
+
+/// What the injected crash does to the operation it fires on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// The operation fails cleanly with no effect (a full-disk error, a
+    /// process kill between syscalls).
+    Fail,
+    /// The operation applies *half* its effect, then fails — a torn write
+    /// (power loss mid-page). Renames never tear (they are atomic on the
+    /// real filesystem too): under this mode they fail with no effect.
+    Torn,
+    /// The operation applies its effect *twice*, then reports failure — a
+    /// buggy retry layer. On a rename the effect applies once and the
+    /// failure is spurious ("crashed after commit"): the new checkpoint
+    /// is fully in place even though the save reported an error.
+    Duplicate,
+}
+
+/// Deterministic fault-injection filesystem: an in-memory [`CkptFs`] that
+/// crashes at the Nth operation in the chosen [`FaultMode`]. Drive
+/// [`save_bytes`] through it to pin that a crash at *every* write/rename
+/// boundary leaves the destination checkpoint old-or-new, never torn.
+pub struct FaultFs {
+    files: BTreeMap<PathBuf, Vec<u8>>,
+    open: Option<PathBuf>,
+    ops: usize,
+    crash_at: Option<usize>,
+    mode: FaultMode,
+}
+
+impl Default for FaultFs {
+    fn default() -> Self {
+        FaultFs::new()
+    }
+}
+
+impl FaultFs {
+    /// A fault-free in-memory filesystem (faults armed via
+    /// [`FaultFs::crash_at`]).
+    pub fn new() -> FaultFs {
+        FaultFs {
+            files: BTreeMap::new(),
+            open: None,
+            ops: 0,
+            crash_at: None,
+            mode: FaultMode::Fail,
+        }
+    }
+
+    /// Arm a crash at the `op`-th operation (0-based, counted across
+    /// create/append/sync/rename) in the given mode. The counter
+    /// persists across saves, so `op` indexes the whole session's
+    /// operation stream.
+    pub fn crash_at(mut self, op: usize, mode: FaultMode) -> FaultFs {
+        self.crash_at = Some(op);
+        self.mode = mode;
+        self
+    }
+
+    /// Operations executed so far (crashed one included).
+    pub fn ops_used(&self) -> usize {
+        self.ops
+    }
+
+    /// Bytes at `path`, if present.
+    pub fn read(&self, path: &Path) -> Option<&[u8]> {
+        self.files.get(path).map(|v| v.as_slice())
+    }
+
+    /// Whether `path` exists.
+    pub fn exists(&self, path: &Path) -> bool {
+        self.files.contains_key(path)
+    }
+
+    /// All paths present, sorted.
+    pub fn paths(&self) -> Vec<PathBuf> {
+        self.files.keys().cloned().collect()
+    }
+
+    /// True if the current op is the armed crash point (and counts it).
+    fn tick(&mut self) -> bool {
+        let fire = self.crash_at == Some(self.ops);
+        self.ops += 1;
+        fire
+    }
+
+    fn injected(&self) -> Error {
+        perr(format!("injected {:?} fault at op {}", self.mode, self.ops - 1))
+    }
+}
+
+impl CkptFs for FaultFs {
+    fn create(&mut self, path: &Path) -> Result<()> {
+        if self.tick() {
+            if self.mode != FaultMode::Fail {
+                // The file was created (truncating) before the crash.
+                self.files.insert(path.to_path_buf(), Vec::new());
+            }
+            return Err(self.injected());
+        }
+        self.files.insert(path.to_path_buf(), Vec::new());
+        self.open = Some(path.to_path_buf());
+        Ok(())
+    }
+
+    fn append(&mut self, data: &[u8]) -> Result<()> {
+        let path = self.open.clone().ok_or_else(|| perr("append with no staged file"))?;
+        if self.tick() {
+            let buf = self.files.get_mut(&path).expect("staged file exists");
+            match self.mode {
+                FaultMode::Fail => {}
+                FaultMode::Torn => buf.extend_from_slice(&data[..data.len() / 2]),
+                FaultMode::Duplicate => {
+                    buf.extend_from_slice(data);
+                    buf.extend_from_slice(data);
+                }
+            }
+            return Err(self.injected());
+        }
+        self.files.get_mut(&path).expect("staged file exists").extend_from_slice(data);
+        Ok(())
+    }
+
+    fn sync_close(&mut self) -> Result<()> {
+        self.open = None;
+        if self.tick() {
+            return Err(self.injected());
+        }
+        Ok(())
+    }
+
+    fn rename(&mut self, from: &Path, to: &Path) -> Result<()> {
+        if self.tick() {
+            if self.mode == FaultMode::Duplicate {
+                // "Crashed after commit": the rename took effect, the
+                // caller still sees an error.
+                if let Some(bytes) = self.files.remove(from) {
+                    self.files.insert(to.to_path_buf(), bytes);
+                }
+            }
+            return Err(self.injected());
+        }
+        let bytes = self
+            .files
+            .remove(from)
+            .ok_or_else(|| perr(format!("rename source {} missing", from.display())))?;
+        self.files.insert(to.to_path_buf(), bytes);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint policy (driver-facing)
+// ---------------------------------------------------------------------------
+
+/// Where and how often [`super::policy::LabelingDriver`] persists
+/// snapshots: after every `every`-th completed plan round, the current
+/// [`RunState`] is captured via
+/// [`LabelingEnv::snapshot`](super::env::LabelingEnv::snapshot) and
+/// crash-safely written to `dir/round_NNNN.ckpt`; arch selection
+/// additionally writes its winner's probe to `dir/probe_<arch>.ckpt`.
+/// Checkpointing is observation-only: it never changes a single result
+/// bit of the run it snapshots (pinned by `tests/checkpoint_resume.rs`).
+#[derive(Clone, Debug)]
+pub struct CheckpointPolicy {
+    /// Directory the checkpoint files land in (created by the CLI before
+    /// the run starts).
+    pub dir: PathBuf,
+    /// Snapshot cadence in completed plan rounds (≥ 1).
+    pub every: usize,
+    /// Self-containment recipe embedded in every file this policy writes.
+    pub meta: CheckpointMeta,
+}
+
+impl CheckpointPolicy {
+    /// A policy checkpointing into `dir` every `every` rounds. Errors on
+    /// `every == 0` — a cadence of "never" should be expressed by not
+    /// attaching a policy at all.
+    pub fn new(dir: impl Into<PathBuf>, every: usize, meta: CheckpointMeta) -> Result<Self> {
+        if every == 0 {
+            return Err(perr("checkpoint cadence must be >= 1 round"));
+        }
+        Ok(CheckpointPolicy { dir: dir.into(), every, meta })
+    }
+
+    /// Whether a snapshot is due after `rounds` completed plan rounds.
+    pub fn due(&self, rounds: usize) -> bool {
+        rounds > 0 && rounds % self.every == 0
+    }
+
+    /// File path for the snapshot taken after `rounds` completed rounds.
+    pub fn round_path(&self, rounds: usize) -> PathBuf {
+        self.dir.join(format!("round_{rounds:04}.ckpt"))
+    }
+
+    /// File path for a persisted arch-selection probe.
+    pub fn probe_path(&self, arch: ArchKind) -> PathBuf {
+        self.dir.join(format!("probe_{}.ckpt", arch.as_str()))
+    }
+
+    /// Capture-and-save used by the driver loop: wrap `state` with this
+    /// policy's meta and write it crash-safely to [`round_path`][Self::round_path].
+    pub fn save_round(&self, rounds: usize, state: RunState) -> Result<()> {
+        let ckpt = Checkpoint::Run { meta: self.meta.clone(), state };
+        save(&self.round_path(rounds), &ckpt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> CheckpointMeta {
+        CheckpointMeta {
+            dataset: "fashion-syn".into(),
+            dataset_seed: 29,
+            scale_factor: 0.05,
+            classes_tag: "c10".into(),
+        }
+    }
+
+    fn state(n_test: usize, n_b: usize, n_pool: usize) -> RunState {
+        let n = n_test + n_b + n_pool;
+        let idx: Vec<usize> = (0..n).collect();
+        let mut session_rng = Pcg32::new(5, 0x5E55);
+        session_rng.next_u32();
+        RunState {
+            arch: ArchKind::Res18,
+            seed: 5,
+            rounds: 2,
+            test_idx: idx[..n_test].to_vec(),
+            b_idx: idx[n_test..n_test + n_b].to_vec(),
+            pool: idx[n_test + n_b..].to_vec(),
+            session_state: vec![0.25, -1.5, f32::MIN_POSITIVE, 0.0],
+            session_rng,
+            steps_executed: 42,
+            real_samples_trained: 1344,
+            rng: Pcg32::new(5, 0xE417),
+            theta_grid: vec![0.5, 1.0],
+            cost_obs: vec![(3.0, 0.25), (6.0, 0.5)],
+            profile_obs: vec![vec![(3.0, 0.4)], vec![(3.0, 0.6), (6.0, 0.5)]],
+            last_profile: vec![0.4, 0.5],
+            training_spend: 0.75,
+            retrain_counter: 4,
+            order_counter: 5,
+        }
+    }
+
+    fn assert_states_bit_equal(a: &RunState, b: &RunState) {
+        assert_eq!(a.arch, b.arch);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.test_idx, b.test_idx);
+        assert_eq!(a.b_idx, b.b_idx);
+        assert_eq!(a.pool, b.pool);
+        let bits32 = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let bits64 = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let pair_bits = |v: &[(f64, f64)]| {
+            v.iter().map(|&(x, y)| (x.to_bits(), y.to_bits())).collect::<Vec<_>>()
+        };
+        assert_eq!(bits32(&a.session_state), bits32(&b.session_state));
+        assert_eq!(a.session_rng.raw_parts(), b.session_rng.raw_parts());
+        assert_eq!(a.steps_executed, b.steps_executed);
+        assert_eq!(a.real_samples_trained, b.real_samples_trained);
+        assert_eq!(a.rng.raw_parts(), b.rng.raw_parts());
+        assert_eq!(bits64(&a.theta_grid), bits64(&b.theta_grid));
+        assert_eq!(pair_bits(&a.cost_obs), pair_bits(&b.cost_obs));
+        assert_eq!(a.profile_obs.len(), b.profile_obs.len());
+        for (x, y) in a.profile_obs.iter().zip(&b.profile_obs) {
+            assert_eq!(pair_bits(x), pair_bits(y));
+        }
+        assert_eq!(bits64(&a.last_profile), bits64(&b.last_profile));
+        assert_eq!(a.training_spend.to_bits(), b.training_spend.to_bits());
+        assert_eq!(a.retrain_counter, b.retrain_counter);
+        assert_eq!(a.order_counter, b.order_counter);
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The zlib/PNG reference values.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn run_checkpoint_roundtrip_is_bit_identity() {
+        let ckpt = Checkpoint::Run { meta: meta(), state: state(2, 3, 5) };
+        let bytes = encode(&ckpt);
+        match decode(&bytes).unwrap() {
+            Checkpoint::Run { meta: m, state: s } => {
+                assert_eq!(m, meta());
+                assert_states_bit_equal(&s, &state(2, 3, 5));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // Encoding is deterministic (same value, same bytes).
+        assert_eq!(bytes, encode(&ckpt));
+    }
+
+    #[test]
+    fn probe_checkpoint_roundtrips_shadow_orders() {
+        let probe = ProbeState {
+            run: state(2, 3, 5),
+            shadow_orders: vec![
+                OrderRecord { id: OrderId::new(0), labels: 10, dollars: 0.4 },
+                OrderRecord { id: OrderId::warm(1), labels: 7, dollars: 0.28 },
+            ],
+        };
+        let bytes = encode(&Checkpoint::Probe { meta: meta(), state: probe.clone() });
+        match decode(&bytes).unwrap() {
+            Checkpoint::Probe { state: s, .. } => {
+                assert_states_bit_equal(&s.run, &probe.run);
+                assert_eq!(s.shadow_orders.len(), 2);
+                assert_eq!(s.shadow_orders[0].id, OrderId::new(0));
+                assert!(s.shadow_orders[1].id.is_warm());
+                assert_eq!(
+                    s.shadow_orders[1].dollars.to_bits(),
+                    probe.shadow_orders[1].dollars.to_bits()
+                );
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_magic_version_kind_and_length() {
+        let good = encode(&Checkpoint::Run { meta: meta(), state: state(2, 3, 5) });
+
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        let e = decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("magic"), "{e}");
+
+        let mut bad = good.clone();
+        bad[8] = 99; // version — checked before the CRC
+        let e = decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+
+        let mut bad = good.clone();
+        bad[10] = 7; // kind — caught by the CRC before the kind match
+        assert!(decode(&bad).is_err());
+
+        let mut bad = good.clone();
+        bad[11] ^= 0x01; // payload length
+        let e = decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("length"), "{e}");
+
+        // Trailing garbage is a length mismatch, not a silent accept.
+        let mut long = good.clone();
+        long.push(0);
+        assert!(decode(&long).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_every_prefix_truncation() {
+        let good = encode(&Checkpoint::Run { meta: meta(), state: state(2, 3, 5) });
+        for cut in 0..good.len() {
+            assert!(
+                decode(&good[..cut]).is_err(),
+                "decode accepted a {cut}-byte prefix of a {}-byte checkpoint",
+                good.len()
+            );
+        }
+    }
+
+    #[test]
+    fn decode_rejects_every_single_byte_corruption() {
+        let good = encode(&Checkpoint::Run { meta: meta(), state: state(2, 3, 5) });
+        for i in 0..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x40;
+            assert!(decode(&bad).is_err(), "flip at byte {i} decoded Ok");
+        }
+    }
+
+    #[test]
+    fn corrupt_length_prefixes_cannot_drive_allocations() {
+        // A payload that *claims* a huge vector must fail on the length
+        // cap, not attempt the allocation. Build a syntactically valid
+        // file whose first vector length is absurd, with a correct CRC so
+        // the structural check is what fires.
+        let mut payload = Enc::new();
+        encode_meta(&mut payload, &meta());
+        payload.str(ArchKind::Res18.as_str());
+        payload.u64(5); // seed
+        payload.u64(2); // rounds
+        payload.u64(u64::MAX); // test_idx length: absurd
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.push(KIND_RUN);
+        out.extend_from_slice(&(payload.buf.len() as u64).to_le_bytes());
+        out.extend_from_slice(&payload.buf);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        let e = decode(&out).unwrap_err().to_string();
+        assert!(e.contains("corrupt length"), "{e}");
+    }
+
+    /// The recovery matrix: a crash at EVERY write/rename boundary, in
+    /// every fault mode, leaves the destination either the old checkpoint
+    /// or the new one — decodable, bit-exact, never torn.
+    #[test]
+    fn crash_at_every_boundary_leaves_old_or_new_intact() {
+        let dest = Path::new("ckpt/round_0003.ckpt");
+        let old_bytes = encode(&Checkpoint::Run { meta: meta(), state: state(2, 3, 5) });
+        let new_bytes = encode(&Checkpoint::Run { meta: meta(), state: state(3, 4, 3) });
+        assert_ne!(old_bytes, new_bytes);
+
+        // Fault-free baseline: count the ops one save takes.
+        let mut fs = FaultFs::new();
+        save_bytes(&mut fs, dest, &old_bytes).unwrap();
+        let ops_per_save = fs.ops_used();
+        assert!(ops_per_save >= 4, "create + append + sync + rename");
+
+        for mode in [FaultMode::Fail, FaultMode::Torn, FaultMode::Duplicate] {
+            for crash_op in 0..ops_per_save {
+                // Save the old checkpoint cleanly, then crash the save of
+                // the new one at boundary `crash_op`.
+                let mut fs = FaultFs::new().crash_at(ops_per_save + crash_op, mode);
+                save_bytes(&mut fs, dest, &old_bytes).unwrap();
+                let crashed = save_bytes(&mut fs, dest, &new_bytes);
+
+                let on_disk = fs.read(dest).expect("destination never disappears");
+                let intact = on_disk == old_bytes.as_slice() || on_disk == new_bytes.as_slice();
+                assert!(
+                    intact,
+                    "{mode:?} crash at op {crash_op} tore the destination \
+                     ({} bytes, old {} / new {})",
+                    on_disk.len(),
+                    old_bytes.len(),
+                    new_bytes.len()
+                );
+                decode(on_disk).expect("destination stays decodable through any crash");
+                if crashed.is_ok() {
+                    assert_eq!(on_disk, new_bytes.as_slice());
+                }
+
+                // Whatever tmp residue the crash left decodes to Err or is
+                // the staged-but-uncommitted new image — never mistaken
+                // for a checkpoint (different extension), and overwritten
+                // by the recovery save below.
+                let recovered_fs = {
+                    let mut fs = fs;
+                    save_bytes(&mut fs, dest, &new_bytes).unwrap();
+                    fs
+                };
+                assert_eq!(recovered_fs.read(dest).unwrap(), new_bytes.as_slice());
+                assert!(
+                    !recovered_fs.exists(&tmp_path(dest)),
+                    "recovery save must clean the staging file"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_policy_paths_and_cadence() {
+        let p = CheckpointPolicy::new("ckpts", 2, meta()).unwrap();
+        assert!(!p.due(0));
+        assert!(!p.due(1));
+        assert!(p.due(2));
+        assert!(!p.due(3));
+        assert!(p.due(4));
+        assert_eq!(p.round_path(3), Path::new("ckpts").join("round_0003.ckpt"));
+        assert_eq!(p.probe_path(ArchKind::EffB0), Path::new("ckpts").join("probe_effb0.ckpt"));
+        assert!(CheckpointPolicy::new("ckpts", 0, meta()).is_err());
+
+        let every1 = CheckpointPolicy::new("ckpts", 1, meta()).unwrap();
+        assert!(!every1.due(0));
+        assert!(every1.due(1));
+    }
+
+    #[test]
+    fn real_fs_save_load_roundtrip_and_tmp_cleanup() {
+        let dir =
+            std::env::temp_dir().join(format!("mcal_persist_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("round_0001.ckpt");
+        // Stale tmp residue from a "crashed" earlier save:
+        std::fs::write(tmp_path(&path), b"torn garbage").unwrap();
+
+        let ckpt = Checkpoint::Run { meta: meta(), state: state(2, 3, 5) };
+        save(&path, &ckpt).unwrap();
+        assert!(!tmp_path(&path).exists(), "save must consume its staging file");
+        match load(&path).unwrap() {
+            Checkpoint::Run { state: s, .. } => assert_states_bit_equal(&s, &state(2, 3, 5)),
+            other => panic!("wrong kind: {other:?}"),
+        }
+
+        // Listing sees the checkpoint and ignores tmp residue.
+        std::fs::write(tmp_path(&path), b"fresh residue").unwrap();
+        let listed = list_checkpoints(&dir).unwrap();
+        assert_eq!(listed, vec![path.clone()]);
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -54,6 +54,7 @@ use crate::Result;
 
 use super::env::{LabelingEnv, RunParams};
 use super::events::{IterationRecord, RunReport, StopReason};
+use super::persist::CheckpointPolicy;
 use super::state::RunState;
 
 /// What a [`Policy`] wants the driver to do next.
@@ -110,11 +111,16 @@ pub struct LabelingDriver<'e> {
     pub engine: &'e Engine,
     pub manifest: &'e Manifest,
     pub pool: Option<&'e EnginePool>,
+    /// Optional durability: when set, the driver crash-safely persists a
+    /// [`RunState`] snapshot to disk after every qualifying plan round
+    /// (see [`CheckpointPolicy`]). Checkpointing is observation-only —
+    /// it never changes a result bit of the run it snapshots.
+    pub checkpoint: Option<CheckpointPolicy>,
 }
 
 impl<'e> LabelingDriver<'e> {
     pub fn new(engine: &'e Engine, manifest: &'e Manifest) -> Self {
-        LabelingDriver { engine, manifest, pool: None }
+        LabelingDriver { engine, manifest, pool: None, checkpoint: None }
     }
 
     /// Attach (or detach) an intra-run worker pool.
@@ -123,11 +129,19 @@ impl<'e> LabelingDriver<'e> {
         self
     }
 
+    /// Attach (or detach) a durable checkpoint policy.
+    pub fn with_checkpoints(mut self, checkpoint: Option<CheckpointPolicy>) -> Self {
+        self.checkpoint = checkpoint;
+        self
+    }
+
     /// Driver for one pool lane: the lane's engine plus its nested pool.
     /// This is how fleet cells and arch-selection probes build their
     /// drivers — never from the pool that is running them (deadlock).
+    /// Lane drivers never inherit a checkpoint policy: probes are cheap
+    /// shadow runs, and the fleet checkpoints per-cell if at all.
     pub fn for_scope(scope: &WorkerScope<'e>, manifest: &'e Manifest) -> Self {
-        LabelingDriver { engine: scope.engine, manifest, pool: scope.inner }
+        LabelingDriver { engine: scope.engine, manifest, pool: scope.inner, checkpoint: None }
     }
 
     /// Run one labeling session end to end: set up the splits (T, B₀,
@@ -160,7 +174,9 @@ impl<'e> LabelingDriver<'e> {
         // nested pool (an `outer = 1` budget split) delegates to it, so a
         // single-candidate arch selection still shards its measurements.
         env.engine_pool = self.pool.map(EnginePool::intra);
-        let stop = Self::drive(&mut env, &mut policy)?;
+        let profile = env.measure()?;
+        let ckpt = self.checkpoint.as_ref().map(|c| (c, 0));
+        let stop = Self::drive_loop(&mut env, &mut policy, profile, ckpt)?;
         policy.finalize(env, stop, t0)
     }
 
@@ -189,6 +205,7 @@ impl<'e> LabelingDriver<'e> {
     ) -> Result<P::Output> {
         let t0 = Instant::now();
         let profile = state.last_profile.clone();
+        let start_round = state.rounds;
         let mut env = LabelingEnv::resume(
             self.engine,
             self.manifest,
@@ -200,7 +217,8 @@ impl<'e> LabelingDriver<'e> {
             state,
         )?;
         env.engine_pool = self.pool.map(EnginePool::intra);
-        let stop = Self::drive_loop(&mut env, &mut policy, profile)?;
+        let ckpt = self.checkpoint.as_ref().map(|c| (c, start_round));
+        let stop = Self::drive_loop(&mut env, &mut policy, profile, ckpt)?;
         policy.finalize(env, stop, t0)
     }
 
@@ -209,20 +227,30 @@ impl<'e> LabelingDriver<'e> {
     /// still drive it with a policy.
     pub fn drive<P: Policy>(env: &mut LabelingEnv<'_>, policy: &mut P) -> Result<StopReason> {
         let profile = env.measure()?;
-        Self::drive_loop(env, policy, profile)
+        Self::drive_loop(env, policy, profile, None)
     }
 
     /// The loop body, fed its first ε_T profile by the caller: a cold
-    /// [`LabelingDriver::drive`] measures one, a warm
-    /// [`LabelingDriver::run_warm`] hands over the snapshot's.
+    /// [`LabelingDriver::run`] measures one, a warm
+    /// [`LabelingDriver::run_warm`] hands over the snapshot's. When a
+    /// checkpoint policy rides along, `(policy, start_round)` counts
+    /// completed plan rounds from the resumed snapshot's offset and a
+    /// qualifying round is snapshotted *after* its re-measure — exactly
+    /// the boundary [`LabelingEnv::snapshot`] captures and
+    /// [`LabelingDriver::run_warm`] re-enters, so a resume from any
+    /// checkpoint file replays the remaining rounds bit-identically.
+    /// A failed save propagates: a run asked to be durable must not
+    /// silently continue undurable.
     fn drive_loop<P: Policy>(
         env: &mut LabelingEnv<'_>,
         policy: &mut P,
         mut profile: Vec<f64>,
+        checkpoint: Option<(&CheckpointPolicy, usize)>,
     ) -> Result<StopReason> {
         // Policies bound their own iteration counts; this is only a safety
         // net against a policy that never stops.
         let hard_cap = policy.round_cap(&env.params);
+        let mut completed = checkpoint.map_or(0, |(_, start)| start);
         for _ in 0..=hard_cap {
             match policy.plan(env, &profile)? {
                 Decision::Stop(stop) => return Ok(stop),
@@ -235,6 +263,12 @@ impl<'e> LabelingDriver<'e> {
                     }
                     env.retrain()?;
                     profile = env.measure()?;
+                    completed += 1;
+                    if let Some((c, _)) = checkpoint {
+                        if c.due(completed) {
+                            c.save_round(completed, env.snapshot(completed)?)?;
+                        }
+                    }
                 }
             }
         }

@@ -37,6 +37,11 @@ pub enum Error {
     #[error("pool: {0}")]
     Pool(String),
 
+    /// Checkpoint persistence failures (corrupt/truncated/mismatched
+    /// checkpoint files, crash-interrupted saves).
+    #[error("persist: {0}")]
+    Persist(String),
+
     #[error("io: {0}")]
     Io(#[from] std::io::Error),
 }

@@ -1,13 +1,15 @@
 //! `mcal` — CLI launcher for the MCAL labeling pipeline and the paper's
 //! experiment drivers.
 
+use std::path::Path;
 use std::process::ExitCode;
 
 use mcal::annotation::{AnnotationService, IngestConfig, Service, TierSpec};
 use mcal::cli::Args;
 use mcal::coordinator::{
-    run_mcal, run_with_arch_selection, ArchSelectConfig, LabelingDriver, McalPolicy, RoutePlan,
-    RunParams, RunReport, TieredPolicy,
+    persist, run_mcal, run_mcal_warm, run_with_arch_selection, ArchSelectConfig, Checkpoint,
+    CheckpointMeta, CheckpointPolicy, LabelingDriver, McalPolicy, RoutePlan, RunParams, RunReport,
+    TieredPolicy,
 };
 use mcal::experiments::common::{Ctx, Scale};
 use mcal::model::ArchKind;
@@ -24,6 +26,7 @@ USAGE:
              [--ingest-chunk N] [--ingest-latency MS]
              [--tiers cheap:0.003:0.3:3,expert:0.04] [--tier-low-frac 0.5]
              [--probe-iters 8 (with --arch auto)] [--warm-start | --no-warm-start]
+             [--checkpoint-dir DIR [--checkpoint-every N]]
              [--artifacts DIR] [--results DIR]
                                                          --warm-start (default, with --arch
                                                          auto): resume the winning candidate
@@ -57,6 +60,31 @@ USAGE:
                                                          the priciest (reference) tier.
                                                          Per-tier labels and dollars print
                                                          after the run summary
+                                                         --checkpoint-dir: crash-safely
+                                                         persist the run's RunState to
+                                                         DIR/round_NNNN.ckpt after every
+                                                         --checkpoint-every-th round
+                                                         (default 1); with --arch auto the
+                                                         winning probe also lands as
+                                                         DIR/probe_<arch>.ckpt. Writes are
+                                                         tmp + fsync + atomic rename — a
+                                                         crash never leaves a torn file —
+                                                         and checkpointing never changes a
+                                                         result bit
+    mcal resume <checkpoint.ckpt> [--service ...] [--jobs N|auto] [--ingest-* ...]
+             [--checkpoint-dir DIR [--checkpoint-every N]]
+                                                         continue a checkpointed run from
+                                                         disk: the dataset is regenerated
+                                                         from the recorded recipe, the
+                                                         captured T∪B re-bought as one
+                                                         streamed warm purchase (training
+                                                         spend inherited, not re-paid), and
+                                                         the loop re-entered at the saved
+                                                         round — bit-identical from there to
+                                                         a never-paused run. Pass the same
+                                                         --service/--epsilon/... as the
+                                                         original run; pass --checkpoint-dir
+                                                         again to keep checkpointing
     mcal arch-select <dataset> [--service ...] [--probe-iters 8] [--jobs N|auto]
              [--warm-start | --no-warm-start] [...]      probe every candidate architecture
                                                          (concurrently with --jobs > 1) and
@@ -102,6 +130,7 @@ fn dispatch(args: &Args) -> mcal::Result<()> {
         }
         "info" => cmd_info(args),
         "run" => cmd_run(args),
+        "resume" => cmd_resume(args),
         "arch-select" => cmd_arch_select(args),
         "calib" => cmd_calib(args),
         "exp" => mcal::experiments::dispatch(args),
@@ -240,6 +269,25 @@ fn cmd_calib(args: &Args) -> mcal::Result<()> {
     Ok(())
 }
 
+/// Shared `--checkpoint-dir` / `--checkpoint-every` parsing. `meta` is the
+/// dataset-reconstruction recipe the policy embeds in every file it
+/// writes (a fresh run derives it from its context; `resume` re-uses the
+/// loaded checkpoint's). Creates the directory up front so the run fails
+/// before spending a dollar if the destination is unwritable.
+fn checkpoint_policy(args: &Args, meta: CheckpointMeta) -> mcal::Result<Option<CheckpointPolicy>> {
+    let Some(dir) = args.opt("checkpoint-dir") else {
+        if args.opt("checkpoint-every").is_some() {
+            return Err(mcal::Error::Config(
+                "--checkpoint-every needs --checkpoint-dir".into(),
+            ));
+        }
+        return Ok(None);
+    };
+    let every = args.usize_or("checkpoint-every", 1)?;
+    std::fs::create_dir_all(dir)?;
+    Ok(Some(CheckpointPolicy::new(dir, every, meta)?))
+}
+
 fn cmd_run(args: &Args) -> mcal::Result<()> {
     let dataset_name = args
         .positionals
@@ -251,6 +299,15 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
 
     let svc = Service::parse(args.opt_or("service", "amazon"))?;
     let params = single_run_params(args, &ctx)?;
+    let ckpt = checkpoint_policy(
+        args,
+        CheckpointMeta {
+            dataset: dataset_name.clone(),
+            dataset_seed: ctx.seed,
+            scale_factor: ctx.scale.dataset_factor(),
+            classes_tag: preset.classes_tag.to_string(),
+        },
+    )?;
 
     let arch_opt = args.opt_or("arch", "auto");
     let jobs = single_run_jobs(args, &ctx);
@@ -278,7 +335,9 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
             RoutePlan::split(market.cheapest_route(), market.default_route(), low_frac)
         };
         let pool = EnginePool::new(jobs.saturating_sub(1))?;
-        let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
+        let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest)
+            .with_pool(Some(&pool))
+            .with_checkpoints(ckpt.clone());
         let report = driver.run(
             &ds,
             &market,
@@ -297,7 +356,9 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
         // the engines (worker count is wall-clock only, never results).
         let (ledger, service) = ctx.view().service_with(svc, jobs);
         let pool = EnginePool::for_budget(jobs, preset.candidate_archs.len())?;
-        let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
+        let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest)
+            .with_pool(Some(&pool))
+            .with_checkpoints(ckpt.clone());
         let (report, probes) = run_with_arch_selection(
             &driver,
             &ds,
@@ -320,7 +381,9 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
             .ok_or_else(|| mcal::Error::Config(format!("bad --arch '{arch_opt}'")))?;
         let (ledger, service) = ctx.view().service_with(svc, jobs);
         let pool = EnginePool::new(jobs.saturating_sub(1))?;
-        let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
+        let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest)
+            .with_pool(Some(&pool))
+            .with_checkpoints(ckpt.clone());
         run_mcal(&driver, &ds, &service, ledger, arch, preset.classes_tag, params)?
     };
 
@@ -328,6 +391,90 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
     for line in &tier_lines {
         println!("{line}");
     }
+    print_warm_start(&report);
+    let c = &report.cost;
+    println!(
+        "breakdown: human=${:.2} training=${:.2} exploration=${:.2} retrains={} wall={:.1}s",
+        c.human_labeling, c.training, c.exploration, c.retrains, report.wall_secs
+    );
+    println!(
+        "orders: {} submitted ({} labels streamed)",
+        report.orders.len(),
+        report.orders.iter().map(|o| o.labels).sum::<u64>()
+    );
+    Ok(())
+}
+
+/// Continue a checkpointed run from disk. The checkpoint is
+/// self-contained on the *state* side (splits, bit-exact weights, PRNG
+/// cursors, fit history, plus the dataset-regeneration recipe); the
+/// *pricing* side — `--service`, `--epsilon`, `--metric`, … — is not
+/// recorded, so pass the same flags as the original run. The loaded
+/// state is validated against the regenerated dataset and the manifest
+/// before the warm re-buy submits, so a mismatched checkpoint fails
+/// before a single label is charged.
+fn cmd_resume(args: &Args) -> mcal::Result<()> {
+    let path = args
+        .positionals
+        .first()
+        .ok_or_else(|| mcal::Error::Config("resume: missing <checkpoint.ckpt>".into()))?
+        .clone();
+    let loaded = persist::load(Path::new(&path))?;
+    let meta = loaded.meta().clone();
+
+    // Rebuild the context at the checkpoint's recorded seed. Dataset
+    // geometry comes from the recorded recipe, never from --scale.
+    let ctx = Ctx::new(
+        args.opt_or("artifacts", "artifacts"),
+        args.opt_or("results", "results"),
+        Scale::Full,
+        meta.dataset_seed,
+    )?
+    .with_jobs(args.jobs()?)
+    .with_ingest(IngestConfig {
+        chunk_size: args.usize_or("ingest-chunk", 0)?,
+        latency: args.duration_ms_or("ingest-latency", 0.0)?,
+    });
+    let jobs = single_run_jobs(args, &ctx);
+
+    let p = mcal::dataset::preset(&meta.dataset, meta.dataset_seed)?;
+    if p.classes_tag != meta.classes_tag {
+        return Err(mcal::Error::Persist(format!(
+            "checkpoint was recorded against classes_tag '{}' but preset '{}' now has '{}'",
+            meta.classes_tag, meta.dataset, p.classes_tag
+        )));
+    }
+    let spec = if meta.scale_factor == 1.0 {
+        p.spec.clone()
+    } else {
+        p.spec.scaled(meta.scale_factor)
+    };
+    let mut ds = spec.generate()?;
+    ds.name = meta.dataset.clone();
+
+    let svc = Service::parse(args.opt_or("service", "amazon"))?;
+    let params = single_run_params(args, &ctx)?;
+    let (ledger, service) = ctx.view().service_with(svc, jobs);
+    let renewed = checkpoint_policy(args, meta)?;
+    let pool = EnginePool::new(jobs.saturating_sub(1))?;
+    let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest)
+        .with_pool(Some(&pool))
+        .with_checkpoints(renewed);
+
+    let state = match loaded {
+        Checkpoint::Run { state, .. } => state,
+        Checkpoint::Probe { state, .. } => state.run,
+    };
+    println!(
+        "resume {path}: {} @ round {} (|T|={} |B|={} pool={})",
+        state.arch,
+        state.rounds,
+        state.test_idx.len(),
+        state.b_idx.len(),
+        state.pool.len()
+    );
+    let report = run_mcal_warm(&driver, &ds, &service, ledger, p.classes_tag, params, state)?;
+    println!("{}", report.summary());
     print_warm_start(&report);
     let c = &report.cost;
     println!(
@@ -381,8 +528,19 @@ fn cmd_arch_select(args: &Args) -> mcal::Result<()> {
     let jobs = single_run_jobs(args, &ctx);
     // Annotator fleet shares the --jobs budget (wall-clock only).
     let (ledger, service) = ctx.view().service_with(svc, jobs);
+    let ckpt = checkpoint_policy(
+        args,
+        CheckpointMeta {
+            dataset: dataset_name.clone(),
+            dataset_seed: ctx.seed,
+            scale_factor: ctx.scale.dataset_factor(),
+            classes_tag: preset.classes_tag.to_string(),
+        },
+    )?;
     let pool = EnginePool::for_budget(jobs, preset.candidate_archs.len())?;
-    let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest).with_pool(Some(&pool));
+    let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest)
+        .with_pool(Some(&pool))
+        .with_checkpoints(ckpt);
 
     let t0 = std::time::Instant::now();
     let (report, probes) = run_with_arch_selection(

@@ -51,6 +51,22 @@ impl Pcg32 {
         rng
     }
 
+    /// The generator's raw `(state, inc)` cursor — the exact two words a
+    /// serializer must persist to continue this stream bit-for-bit (see
+    /// [`crate::coordinator::persist`]). Deliberately *not* `pub` fields:
+    /// the only legitimate uses are snapshot/restore pairs.
+    pub fn raw_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg32::raw_parts`] output. The stream
+    /// continues exactly where the captured generator stood; `inc` is
+    /// forced odd (a PCG invariant every constructor maintains), so no
+    /// byte pattern can produce a degenerate generator.
+    pub fn from_raw_parts(state: u64, inc: u64) -> Pcg32 {
+        Pcg32 { state, inc: inc | 1 }
+    }
+
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -236,6 +252,21 @@ mod tests {
         sorted.dedup();
         assert_eq!(sorted.len(), 20);
         assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn raw_parts_roundtrip_continues_the_stream() {
+        let mut a = Pcg32::new(42, 7);
+        for _ in 0..13 {
+            a.next_u32();
+        }
+        let (state, inc) = a.raw_parts();
+        let mut b = Pcg32::from_raw_parts(state, inc);
+        for _ in 0..64 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        // inc is forced odd whatever the input bytes were.
+        assert_eq!(Pcg32::from_raw_parts(0, 2).raw_parts().1 & 1, 1);
     }
 
     #[test]

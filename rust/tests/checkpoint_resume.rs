@@ -1,0 +1,456 @@
+//! Durable checkpoints end to end: the gen-8 contract.
+//!
+//! Pinned here:
+//!
+//! - **crash matrix**: a run checkpointed to disk after every round and
+//!   reloaded from *any* of those files continues bit-identically to the
+//!   never-paused run — ε_T profiles, acquisition picks, labels, fit
+//!   observations, and the session weights themselves — including across
+//!   ingest configs (monolithic and chunked+laggy re-buys land on the
+//!   same bits), with the warm ledger total differing from cold by
+//!   exactly the inherited pre-snapshot training spend;
+//! - **observation-only**: attaching `--checkpoint-dir` to a driver run
+//!   changes no result bit — the with-checkpoints report equals the
+//!   plain report — and every file it writes decodes and re-encodes to
+//!   its own bytes;
+//! - **disk-resume invariance**: `run_mcal_warm` from the same
+//!   checkpoint file is bit-identical across ingest configs (the
+//!   chunk/latency/worker knobs stay pure wall-clock through a disk
+//!   round-trip), for plain MCAL *and* for a tier-routed run — where the
+//!   resumed ledgers' per-tier `(price, labels)` buckets and tier usage
+//!   must match too;
+//! - **probe persistence**: auto-arch selection with checkpoints leaves
+//!   the winner's `ProbeState` on disk as `probe_<arch>.ckpt`.
+//!
+//! Scope (documented in docs/ARCHITECTURE.md gen 8): resumed-vs-cold
+//! *full-policy* trajectories legitimately differ in `ledger_total`/`C*`
+//! because inherited training is not re-charged to the resumed ledger —
+//! the crash matrix therefore pins the env-level cadence (which has no
+//! ledger feedback), and the driver-level tests pin warm-vs-warm
+//! equality, mirroring the gen-5 warmstart suite. All runs use the
+//! paper's perfect annotators (the gen-5 carve-out).
+//!
+//! Artifact-gated: skips when `artifacts/` is absent.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mcal::annotation::{
+    AnnotationService, Ledger, SimService, SimServiceConfig, TierMarket, TierSpec,
+};
+use mcal::coordinator::persist::{self, Checkpoint, CheckpointMeta, CheckpointPolicy};
+use mcal::coordinator::{
+    run_mcal, run_mcal_warm, run_with_arch_selection, ArchSelectConfig, LabelingDriver,
+    LabelingEnv, McalPolicy, RoutePlan, RunParams, RunReport, TieredPolicy,
+};
+use mcal::model::ArchKind;
+
+mod common;
+use common::{residual_cut, setup, smoke_dataset};
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mcal_ckpt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn meta_for(dataset: &str, seed: u64, classes_tag: &str) -> CheckpointMeta {
+    CheckpointMeta {
+        dataset: dataset.to_string(),
+        dataset_seed: seed,
+        scale_factor: 0.05, // smoke_dataset's scale
+        classes_tag: classes_tag.to_string(),
+    }
+}
+
+/// One acquire → retrain → measure round; returns the profile's bits.
+fn round(env: &mut LabelingEnv<'_>, delta: usize) -> Vec<u64> {
+    assert!(env.acquire(delta).unwrap() > 0);
+    env.retrain().unwrap();
+    bits64(&env.measure().unwrap())
+}
+
+/// Deterministic key over a report, warm or cold: everything
+/// bit-compared, with the two documented config-shaped order-log
+/// segments collapsed to their invariant label totals (the warm re-buy
+/// prefix in the reserved id space, and the residual suffix).
+fn report_key(r: &RunReport) -> String {
+    use std::fmt::Write as _;
+    let warm_n = r.orders.iter().filter(|o| o.id.is_warm()).count();
+    assert!(
+        r.orders[..warm_n].iter().all(|o| o.id.is_warm()),
+        "warm re-buy orders must lead the log"
+    );
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "seed={} arch={} b={} s={} residual={} err_bits={}/{}/{} cost_bits={} \
+         human_only_bits={} stop={:?}",
+        r.seed,
+        r.arch,
+        r.b_size,
+        r.s_size,
+        r.residual_human,
+        r.overall_error.to_bits(),
+        r.machine_error.to_bits(),
+        r.residual_label_error.to_bits(),
+        r.cost.total().to_bits(),
+        r.human_only_cost.to_bits(),
+        r.stop_reason,
+    );
+    match &r.warm_start {
+        Some(ws) => {
+            let warm_labels: u64 = r.orders[..warm_n].iter().map(|o| o.labels).sum();
+            assert_eq!(warm_labels as usize, ws.labels_rebought);
+            let _ = writeln!(
+                s,
+                "warm rounds={} labels={} saved_bits={}",
+                ws.rounds_skipped,
+                ws.labels_rebought,
+                ws.training_saved.to_bits()
+            );
+        }
+        None => assert_eq!(warm_n, 0, "cold runs must not carry warm orders"),
+    }
+    for it in &r.iterations {
+        let profile: Vec<u64> = it.eps_profile.iter().map(|e| e.to_bits()).collect();
+        let _ = writeln!(
+            s,
+            "iter={} b={} delta={} ledger_bits={} c_star_bits={:?} stable={} profile={profile:?}",
+            it.iter,
+            it.b_size,
+            it.delta,
+            it.ledger_total.to_bits(),
+            it.c_star.map(f64::to_bits),
+            it.stable,
+        );
+    }
+    let cut = residual_cut(r);
+    assert!(cut >= warm_n);
+    for o in &r.orders[warm_n..cut] {
+        let _ = writeln!(
+            s,
+            "order={} labels={} dollars_bits={}",
+            o.id,
+            o.labels,
+            o.dollars.to_bits()
+        );
+    }
+    let _ = writeln!(s, "residual labels={}", r.residual_human);
+    s
+}
+
+/// The crash matrix: checkpoint a run to disk after every round, then —
+/// for every checkpointed round — reload the file and resume, asserting
+/// the resumed trajectory is bit-identical to the never-paused one. The
+/// round-2 file is additionally resumed under a second ingest config
+/// (monolithic vs chunked+laggy), pinning that resume-from-disk stays
+/// ingest-invariant at the env level too.
+#[test]
+fn resume_from_disk_matches_never_paused_at_every_checkpointed_round() {
+    let Some(f) = setup() else { return };
+    let dir = temp_dir("matrix");
+    let (ds, preset) = smoke_dataset("fashion-syn", 29);
+    let params = RunParams { seed: 29, ..Default::default() };
+    let delta = ds.len() / 25;
+    let meta = meta_for("fashion-syn", 29, preset.classes_tag);
+    const TOTAL: usize = 5; // never-paused rounds
+    const SAVED: usize = 3; // rounds with a checkpoint on disk
+
+    // Never-paused reference run, checkpointing as it goes.
+    let ledger1 = Arc::new(Ledger::new());
+    let svc1 = SimService::new(SimServiceConfig::default().with_seed(29), ledger1.clone());
+    let mut cold = LabelingEnv::new(
+        &f.engine,
+        &f.manifest,
+        &ds,
+        &svc1 as &dyn AnnotationService,
+        ledger1.clone(),
+        ArchKind::Res18,
+        preset.classes_tag,
+        params.clone(),
+        mcal::cost::theta_grid(),
+    )
+    .unwrap();
+    cold.measure().unwrap();
+    let mut cold_profiles: Vec<Vec<u64>> = Vec::new();
+    for r in 1..=TOTAL {
+        cold_profiles.push(round(&mut cold, delta));
+        if r <= SAVED {
+            let state = cold.snapshot(r).unwrap();
+            let ckpt = Checkpoint::Run { meta: meta.clone(), state };
+            persist::save(&dir.join(format!("round_{r:04}.ckpt")), &ckpt).unwrap();
+        }
+    }
+    let cold_b = cold.b_idx.clone();
+    let cold_weights = bits32(&cold.session.state_host().unwrap());
+    let cold_cost = ledger1.snapshot();
+
+    let listed = persist::list_checkpoints(&dir).unwrap();
+    assert_eq!(listed.len(), SAVED, "one .ckpt per saved round: {listed:?}");
+
+    for r in 1..=SAVED {
+        let path = dir.join(format!("round_{r:04}.ckpt"));
+        // Decoded state re-encodes to the file's exact bytes — the disk
+        // round-trip is bit-identity, not approximation.
+        let loaded = persist::load(&path).unwrap();
+        assert_eq!(loaded.meta(), &meta);
+        assert_eq!(persist::encode(&loaded), std::fs::read(&path).unwrap());
+
+        // Chunked+laggy always; the r == 2 file also monolithic.
+        let configs: &[(usize, usize, u64)] =
+            if r == 2 { &[(7, 3, 50), (0, 1, 0)] } else { &[(7, 3, 50)] };
+        for &(chunk, workers, lat) in configs {
+            let Checkpoint::Run { state, .. } = persist::load(&path).unwrap() else {
+                panic!("round file must hold a Run checkpoint")
+            };
+            assert_eq!(state.rounds, r);
+            let pre_training = state.training_spend;
+            let ledger2 = Arc::new(Ledger::new());
+            let svc2 = SimService::new(
+                SimServiceConfig::default()
+                    .with_seed(29)
+                    .with_chunk(chunk)
+                    .with_workers(workers)
+                    .with_latency(Duration::from_micros(lat)),
+                ledger2.clone(),
+            );
+            let mut warm = LabelingEnv::resume(
+                &f.engine,
+                &f.manifest,
+                &ds,
+                &svc2 as &dyn AnnotationService,
+                ledger2.clone(),
+                preset.classes_tag,
+                params.clone(),
+                state,
+            )
+            .unwrap();
+            let tail: Vec<Vec<u64>> = (r..TOTAL).map(|_| round(&mut warm, delta)).collect();
+            assert_eq!(
+                tail[..],
+                cold_profiles[r..],
+                "resume from round {r} under chunk={chunk} drifted from never-paused"
+            );
+            assert_eq!(warm.b_idx, cold_b, "acquisition picks drifted (round {r})");
+            assert_eq!(
+                bits32(&warm.session.state_host().unwrap()),
+                cold_weights,
+                "resumed weights drifted (round {r})"
+            );
+            // Ledger identity: same labels to the bit; total short by
+            // exactly the inherited pre-snapshot training.
+            let warm_cost = ledger2.snapshot();
+            assert_eq!(cold_cost.human_labeling.to_bits(), warm_cost.human_labeling.to_bits());
+            assert_eq!(cold_cost.labels_purchased, warm_cost.labels_purchased);
+            assert!(
+                (ledger1.total() - ledger2.total() - pre_training).abs() < 1e-9,
+                "round {r}: warm total must equal cold minus inherited training"
+            );
+        }
+    }
+}
+
+/// Attaching a checkpoint policy must not move a single result bit, and
+/// resuming the files it wrote must be ingest-invariant.
+#[test]
+fn driver_checkpoints_are_observation_only_and_disk_resume_is_ingest_invariant() {
+    let Some(f) = setup() else { return };
+    let dir = temp_dir("driver");
+    let (ds, preset) = smoke_dataset("fashion-syn", 37);
+    let params = RunParams { seed: 37, ..Default::default() };
+
+    let run_once = |ckpt: Option<CheckpointPolicy>| -> RunReport {
+        let ledger = Arc::new(Ledger::new());
+        let svc = SimService::new(SimServiceConfig::default().with_seed(37), ledger.clone());
+        let driver = LabelingDriver::new(&f.engine, &f.manifest).with_checkpoints(ckpt);
+        run_mcal(&driver, &ds, &svc, ledger, ArchKind::Res18, preset.classes_tag, params.clone())
+            .unwrap()
+    };
+    let plain = run_once(None);
+    let meta = meta_for("fashion-syn", 37, preset.classes_tag);
+    let with_ckpt = run_once(Some(CheckpointPolicy::new(&dir, 1, meta.clone()).unwrap()));
+    assert_eq!(
+        report_key(&plain),
+        report_key(&with_ckpt),
+        "checkpointing must be observation-only"
+    );
+
+    // Every file decodes, is a Run checkpoint carrying our meta, and
+    // covers rounds 1..=n contiguously (cadence 1).
+    let files = persist::list_checkpoints(&dir).unwrap();
+    assert!(!files.is_empty(), "an MCAL smoke run must complete at least one round");
+    for (i, file) in files.iter().enumerate() {
+        assert_eq!(
+            file.file_name().unwrap().to_str().unwrap(),
+            format!("round_{:04}.ckpt", i + 1)
+        );
+        let loaded = persist::load(file).unwrap();
+        assert!(matches!(loaded, Checkpoint::Run { .. }));
+        assert_eq!(loaded.meta(), &meta);
+    }
+
+    // Resume the first checkpoint under two ingest configs: the disk
+    // round-trip must keep chunk/latency/workers pure wall-clock knobs.
+    let mut keys = Vec::new();
+    for (chunk, workers, lat) in [(0usize, 1usize, 0u64), (7, 3, 50)] {
+        let Checkpoint::Run { state, .. } = persist::load(&files[0]).unwrap() else {
+            panic!("round file must hold a Run checkpoint")
+        };
+        let ledger = Arc::new(Ledger::new());
+        let svc = SimService::new(
+            SimServiceConfig::default()
+                .with_seed(37)
+                .with_chunk(chunk)
+                .with_workers(workers)
+                .with_latency(Duration::from_micros(lat)),
+            ledger.clone(),
+        );
+        let driver = LabelingDriver::new(&f.engine, &f.manifest);
+        let report =
+            run_mcal_warm(&driver, &ds, &svc, ledger, preset.classes_tag, params.clone(), state)
+                .unwrap();
+        assert!(report.warm_start.is_some(), "disk resume must carry warm provenance");
+        keys.push(report_key(&report));
+    }
+    assert_eq!(keys[0], keys[1], "disk resume drifted across ingest configs");
+}
+
+/// Tier-routed runs checkpoint and resume too: the resumed reports AND
+/// the resumed ledgers' per-tier `(price, labels)` buckets and tier
+/// usage are bit-identical across ingest configs.
+#[test]
+fn tier_routed_disk_resume_keeps_buckets_ingest_invariant() {
+    let Some(f) = setup() else { return };
+    let dir = temp_dir("tiered");
+    let (ds, preset) = smoke_dataset("fashion-syn", 53);
+    let params = RunParams { seed: 53, ..Default::default() };
+    let market = |chunk: usize, workers: usize, lat: u64| -> (Arc<Ledger>, TierMarket) {
+        let ledger = Arc::new(Ledger::new());
+        let specs = vec![
+            TierSpec::new("cheap", 0.003)
+                .with_error(0.3)
+                .with_votes(3)
+                .with_workers(workers)
+                .with_latency(Duration::from_micros(lat)),
+            TierSpec::new("expert", 0.04)
+                .with_workers(workers)
+                .with_latency(Duration::from_micros(lat)),
+        ];
+        let m = TierMarket::new(specs, chunk, 53, ledger.clone()).unwrap();
+        (ledger, m)
+    };
+
+    // Golden tier-routed run, checkpointing every round.
+    let meta = meta_for("fashion-syn", 53, preset.classes_tag);
+    let (ledger, m) = market(0, 1, 0);
+    let plan = RoutePlan::split(m.cheapest_route(), m.default_route(), 0.5);
+    let driver = LabelingDriver::new(&f.engine, &f.manifest)
+        .with_checkpoints(Some(CheckpointPolicy::new(&dir, 1, meta).unwrap()));
+    driver
+        .run(
+            &ds,
+            &m,
+            ledger,
+            ArchKind::Res18,
+            preset.classes_tag,
+            params.clone(),
+            TieredPolicy::new(McalPolicy::new(), plan),
+        )
+        .unwrap();
+    let files = persist::list_checkpoints(&dir).unwrap();
+    assert!(!files.is_empty(), "tier-routed run must checkpoint its rounds");
+    let resume_from = &files[files.len() / 2];
+
+    let mut keys = Vec::new();
+    let mut buckets = Vec::new();
+    let mut usages = Vec::new();
+    for (chunk, workers, lat) in [(0usize, 1usize, 0u64), (7, 3, 50)] {
+        let Checkpoint::Run { state, .. } = persist::load(resume_from).unwrap() else {
+            panic!("round file must hold a Run checkpoint")
+        };
+        let rounds = state.rounds;
+        let (ledger2, m2) = market(chunk, workers, lat);
+        let plan2 = RoutePlan::split(m2.cheapest_route(), m2.default_route(), 0.5);
+        let driver2 = LabelingDriver::new(&f.engine, &f.manifest);
+        let report = driver2
+            .run_warm(
+                &ds,
+                &m2,
+                ledger2.clone(),
+                preset.classes_tag,
+                params.clone(),
+                state,
+                TieredPolicy::new(McalPolicy::resuming(rounds), plan2),
+            )
+            .unwrap();
+        keys.push(report_key(&report));
+        let bk: Vec<(u64, u64)> =
+            ledger2.label_buckets().iter().map(|&(p, c)| (p.to_bits(), c)).collect();
+        buckets.push(bk);
+        let usage: Vec<(String, u64, u64)> =
+            m2.tier_usage().into_iter().map(|u| (u.name, u.labels, u.dollars.to_bits())).collect();
+        usages.push(usage);
+    }
+    assert_eq!(keys[0], keys[1], "tier-routed disk resume drifted across ingest configs");
+    assert_eq!(buckets[0], buckets[1], "per-tier price buckets drifted");
+    assert_eq!(usages[0], usages[1], "per-tier usage drifted");
+    assert!(
+        buckets[0].len() >= 2,
+        "a resumed split-plan run must keep billing both tiers: {:?}",
+        buckets[0]
+    );
+}
+
+/// Auto-arch selection with a checkpoint policy persists the winning
+/// probe as `probe_<arch>.ckpt` beside the run's round files.
+#[test]
+fn arch_selection_persists_the_winning_probe_checkpoint() {
+    let Some(f) = setup() else { return };
+    let dir = temp_dir("probe");
+    let (ds, preset) = smoke_dataset("cifar10-syn", 33);
+    let params = RunParams { seed: 33, ..Default::default() };
+    let ledger = Arc::new(Ledger::new());
+    let svc = SimService::new(SimServiceConfig::default().with_seed(33), ledger.clone());
+    let meta = meta_for("cifar10-syn", 33, preset.classes_tag);
+    let driver = LabelingDriver::new(&f.engine, &f.manifest)
+        .with_checkpoints(Some(CheckpointPolicy::new(&dir, 1, meta).unwrap()));
+    let (report, probes) = run_with_arch_selection(
+        &driver,
+        &ds,
+        &svc,
+        ledger,
+        &preset.candidate_archs,
+        preset.classes_tag,
+        params,
+        ArchSelectConfig { probe_iters: 5, warm_start: true },
+    )
+    .unwrap();
+    assert!(!probes.is_empty());
+
+    let probe_path = dir.join(format!("probe_{}.ckpt", report.arch));
+    let Checkpoint::Probe { state, .. } = persist::load(&probe_path).unwrap() else {
+        panic!("probe file must hold a Probe checkpoint")
+    };
+    assert_eq!(state.run.arch.as_str(), report.arch, "persisted probe must be the winner");
+    assert!(
+        !state.shadow_orders.is_empty(),
+        "the probe's shadow order log rides along for audit"
+    );
+    // The winner's warm run numbers its round files from the probe's
+    // resume offset — every .ckpt in the directory decodes.
+    for file in persist::list_checkpoints(&dir).unwrap() {
+        persist::load(&file).unwrap();
+    }
+}

@@ -268,3 +268,141 @@ fn prop_error_profile_bounds_and_coverage() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Checkpoint codec properties (coordinator::persist)
+// ---------------------------------------------------------------------------
+
+use mcal::annotation::{OrderId, OrderRecord};
+use mcal::coordinator::persist::{decode, encode, Checkpoint, CheckpointMeta};
+use mcal::coordinator::{ProbeState, RunState};
+use mcal::model::ArchKind;
+
+/// A structurally arbitrary `RunState` — not a *valid* one (no dataset
+/// constrains it here): the codec must round-trip any state bit-exactly
+/// and reject any corrupted image, validity being the resume path's job.
+fn random_run_state(g: &mut Gen) -> RunState {
+    fn idx(g: &mut Gen, cap: usize) -> Vec<usize> {
+        let n = g.usize_in(0, cap);
+        (0..n).map(|_| g.usize_in(0, 1 << 20)).collect()
+    }
+    fn pairs(g: &mut Gen, cap: usize) -> Vec<(f64, f64)> {
+        let n = g.usize_in(0, cap);
+        (0..n).map(|_| (g.f64_in(0.0, 5e4), g.f64_in(0.0, 1.0))).collect()
+    }
+    let thetas = g.usize_in(0, 6);
+    let weights = g.usize_in(0, 80);
+    RunState {
+        arch: *g.choose(&ArchKind::ALL),
+        seed: g.rng.next_u64(),
+        rounds: g.usize_in(0, 50),
+        test_idx: idx(g, 40),
+        b_idx: idx(g, 40),
+        pool: idx(g, 60),
+        session_state: g.normal_vec(weights, 1.0),
+        session_rng: Pcg32::from_raw_parts(g.rng.next_u64(), g.rng.next_u64()),
+        steps_executed: g.rng.next_u64(),
+        real_samples_trained: g.rng.next_u64(),
+        rng: Pcg32::from_raw_parts(g.rng.next_u64(), g.rng.next_u64()),
+        theta_grid: (0..thetas).map(|_| g.f64_in(0.0, 1.0)).collect(),
+        cost_obs: pairs(g, 10),
+        profile_obs: (0..thetas).map(|_| pairs(g, 8)).collect(),
+        last_profile: (0..thetas).map(|_| g.f64_in(0.0, 1.0)).collect(),
+        training_spend: g.f64_in(0.0, 1e3),
+        retrain_counter: g.rng.next_u64(),
+        order_counter: g.rng.next_u64(),
+    }
+}
+
+fn random_checkpoint(g: &mut Gen) -> Checkpoint {
+    let meta = CheckpointMeta {
+        dataset: ["fashion-syn", "cifar10-syn", ""][g.usize_in(0, 2)].to_string(),
+        dataset_seed: g.rng.next_u64(),
+        scale_factor: *g.choose(&[1.0, 0.1, 0.05, 0.02]),
+        classes_tag: ["c10", "c100"][g.usize_in(0, 1)].to_string(),
+    };
+    let state = random_run_state(g);
+    if g.bool() {
+        Checkpoint::Run { meta, state }
+    } else {
+        let shadow_orders = (0..g.usize_in(0, 6))
+            .map(|k| OrderRecord {
+                id: if g.bool() {
+                    OrderId::warm(k as u64)
+                } else {
+                    OrderId::new(k as u64)
+                },
+                labels: g.usize_in(0, 5_000) as u64,
+                dollars: g.f64_in(0.0, 200.0),
+            })
+            .collect();
+        Checkpoint::Probe { meta, state: ProbeState { run: state, shadow_orders } }
+    }
+}
+
+#[test]
+fn prop_checkpoint_encode_decode_roundtrip_is_identity() {
+    forall("persist roundtrip", 0xC0DEC, 120, |g| {
+        let ckpt = random_checkpoint(g);
+        let bytes = encode(&ckpt);
+        let back = decode(&bytes).map_err(|e| format!("valid image rejected: {e}"))?;
+        // The encoder is a deterministic function of every field's bits
+        // (floats via to_bits, PRNGs via raw_parts), so re-encode equality
+        // is field-by-field bit identity — including NaN payloads, which
+        // `==` on floats would miss.
+        let re = encode(&back);
+        if re != bytes {
+            return Err(format!(
+                "round-trip not identity: {} vs {} bytes (first diff at {:?})",
+                re.len(),
+                bytes.len(),
+                re.iter().zip(&bytes).position(|(a, b)| a != b)
+            ));
+        }
+        // Spot-check the decoded view agrees on the headline fields too.
+        if back.run_state().rounds != ckpt.run_state().rounds
+            || back.run_state().arch != ckpt.run_state().arch
+            || back.meta() != ckpt.meta()
+        {
+            return Err("decoded state disagrees with the original".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_prefix_truncation_always_errors() {
+    forall("persist truncation", 0x7A11, 80, |g| {
+        let bytes = encode(&random_checkpoint(g));
+        let cut = g.usize_in(0, bytes.len() - 1);
+        match decode(&bytes[..cut]) {
+            Err(_) => Ok(()), // and it must not panic — forall would abort
+            Ok(_) => Err(format!("{cut}-byte prefix of {} decoded Ok", bytes.len())),
+        }
+    });
+}
+
+#[test]
+fn prop_checkpoint_single_byte_corruption_always_errors() {
+    forall("persist corruption", 0xB17F11, 120, |g| {
+        let bytes = encode(&random_checkpoint(g));
+        let mut bad = bytes.clone();
+        let pos = g.usize_in(0, bad.len() - 1);
+        let flip = g.usize_in(1, 255) as u8; // non-zero: the byte changes
+        bad[pos] ^= flip;
+        match decode(&bad) {
+            Err(_) => Ok(()),
+            Ok(back) => {
+                // CRC32 detects every single-byte error, so reaching here
+                // is already a bug; a silently *different* state would be
+                // the catastrophic version of it.
+                let msg = if encode(&back) == bytes {
+                    format!("corrupt byte {pos} (^{flip:#x}) decoded Ok to the original")
+                } else {
+                    format!("corrupt byte {pos} (^{flip:#x}) decoded Ok to DIFFERENT bits")
+                };
+                Err(msg)
+            }
+        }
+    });
+}

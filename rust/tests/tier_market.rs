@@ -193,6 +193,70 @@ fn per_tier_dollars_split_invariantly_and_bill_every_consensus_pass() {
     );
 }
 
+/// A degenerate (single-route) plan must reproduce the *unwrapped*
+/// policy's run bit-for-bit: `low_frac == 0` and `low == high` both
+/// collapse to one order per batch on the expert tier — exactly where a
+/// plain `McalPolicy` on the same market routes everything (the env's
+/// default plan is `single(default_route)`). Pins that wrapping a policy
+/// in [`TieredPolicy`] is free until the plan actually splits.
+#[test]
+fn single_route_tiered_policy_matches_the_unwrapped_policy_bit_for_bit() {
+    let Some(f) = setup() else { return };
+    let (ds, preset) = smoke_dataset("fashion-syn", 67);
+    let run = |plan: Option<RoutePlan>| {
+        let (ledger, market) = market(67, 7, 3, 0);
+        let params = RunParams { seed: 67, ..Default::default() };
+        let driver = LabelingDriver::new(&f.engine, &f.manifest);
+        let report = match plan {
+            Some(p) => driver
+                .run(
+                    &ds,
+                    &market,
+                    ledger.clone(),
+                    ArchKind::Res18,
+                    preset.classes_tag,
+                    params,
+                    TieredPolicy::new(McalPolicy::new(), p),
+                )
+                .unwrap(),
+            None => driver
+                .run(
+                    &ds,
+                    &market,
+                    ledger.clone(),
+                    ArchKind::Res18,
+                    preset.classes_tag,
+                    params,
+                    McalPolicy::new(),
+                )
+                .unwrap(),
+        };
+        full_key(&report, &ledger.label_buckets())
+    };
+
+    let unwrapped = run(None);
+    let (_, m) = market(67, 0, 1, 0);
+    let zero_frac = run(Some(RoutePlan::split(m.cheapest_route(), m.default_route(), 0.0)));
+    let same_route = run(Some(RoutePlan::split(m.default_route(), m.default_route(), 0.7)));
+    assert_eq!(
+        zero_frac, unwrapped,
+        "low_frac = 0 must collapse to the unwrapped policy's expert-only run"
+    );
+    assert_eq!(
+        same_route, unwrapped,
+        "low == high must collapse to the unwrapped policy's expert-only run"
+    );
+    assert!(
+        unwrapped.contains("bucket price_bits"),
+        "key must cover the ledger buckets: {unwrapped:?}"
+    );
+    assert_eq!(
+        unwrapped.matches("bucket price_bits").count(),
+        1,
+        "a single-route run must bill exactly one tier"
+    );
+}
+
 /// The consensus economics, end to end through the market's submit path:
 /// 3-way majority vote on a 30%-error tier produces strictly fewer wrong
 /// labels than single-shot annotation — while billing 3× the passes.
