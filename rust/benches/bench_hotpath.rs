@@ -17,7 +17,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use mcal::annotation::{Ledger, Service, SimService, SimServiceConfig};
-use mcal::dataset::SynthSpec;
+use mcal::dataset::{Dataset, FeatureStore, ShardedStore, SynthSpec};
 use mcal::model::TrainSchedule;
 use mcal::powerlaw::fit_auto;
 use mcal::prng::Pcg32;
@@ -68,7 +68,7 @@ fn main() {
     let engine = Engine::cpu().unwrap();
     let manifest = Manifest::load("artifacts").unwrap();
     let mut report = BenchReport::new("hotpath");
-    let ds = SynthSpec {
+    let spec = SynthSpec {
         name: "bench".into(),
         num_classes: 10,
         per_class: 2000,
@@ -78,9 +78,8 @@ fn main() {
         spread: 0.8,
         noise: 1.2,
         seed: 1,
-    }
-    .generate()
-    .unwrap();
+    };
+    let ds = spec.generate().unwrap();
 
     println!("== L3/runtime hot paths (CPU PJRT, {} samples) ==", ds.len());
 
@@ -162,6 +161,53 @@ fn main() {
                     .unwrap();
             assert_eq!(picks.len(), kk);
         });
+    }
+
+    // --- feature gather: mem vs disk store, cold vs warm (gen 9) ----------
+    // The same 20k-row pool on both backends. "cold" pages 40 shards
+    // through a 2-shard resident cache (random 512-row gathers miss almost
+    // every time), "warm" re-opens the same shard files with a cache wide
+    // enough to hold the whole pool (steady-state all-hit). The spread is
+    // the price of paging; warm-vs-mem is the `Arc`-indirection overhead.
+    {
+        let dir = std::env::temp_dir().join(format!("mcal_bench_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let disk_cold = spec.generate_sharded(&dir, 512, 2).unwrap();
+        let disk_warm = Dataset::from_store(
+            "bench-warm",
+            spec.num_classes,
+            FeatureStore::Sharded(
+                ShardedStore::open(&dir, spec.feat_dim, ds.len(), 512, 64).unwrap(),
+            ),
+            ds.groundtruth_slice().to_vec(),
+        )
+        .unwrap();
+        let mut grng = Pcg32::new(11, 11);
+        let batches: Vec<Vec<usize>> =
+            (0..32).map(|_| grng.sample_indices(ds.len(), 512)).collect();
+        let mut out = vec![0.0f32; 512 * spec.feat_dim];
+        time(&mut report, &engine, "gather 32x512 rows, mem store", 20, || {
+            for idx in &batches {
+                ds.gather_padded(idx, 512, &mut out).unwrap();
+            }
+        });
+        time(&mut report, &engine, "gather 32x512 rows, disk cold (2/40 shards)", 20, || {
+            for idx in &batches {
+                disk_cold.gather_padded(idx, 512, &mut out).unwrap();
+            }
+        });
+        time(&mut report, &engine, "gather 32x512 rows, disk warm (all resident)", 20, || {
+            for idx in &batches {
+                disk_warm.gather_padded(idx, 512, &mut out).unwrap();
+            }
+        });
+        let cs = disk_cold.store_stats().unwrap();
+        let ws = disk_warm.store_stats().unwrap();
+        println!(
+            "store: cold loads={} evictions={} high_water={} | warm loads={} evictions={}",
+            cs.loads, cs.evictions, cs.high_water, ws.loads, ws.evictions
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     // --- selection / ranking ----------------------------------------------

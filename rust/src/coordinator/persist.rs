@@ -11,17 +11,27 @@
 //! capped by the bytes that could actually back it (a corrupt length can
 //! never drive an allocation past the file's own size).
 //!
-//! ## File format (version 1)
+//! ## File format (version 2)
 //!
 //! ```text
 //! offset  size  field
 //! 0       8     magic  b"MCALCKPT"
-//! 8       2     format version (u16 LE) = 1
+//! 8       2     format version (u16 LE) = 2
 //! 10      1     kind: 1 = Run checkpoint, 2 = Probe checkpoint
 //! 11      8     payload length (u64 LE)
 //! 19      n     payload: CheckpointMeta, then RunState [, shadow orders]
 //! 19+n    4     CRC32 (u32 LE) over bytes [0, 19+n) — header included
 //! ```
+//!
+//! Version 2 grows `CheckpointMeta` by a length-prefixed *extension
+//! block* (storage recipe + reference price). The skipping rules that
+//! make the block forward-compatible: a decoder reads the extension
+//! fields it knows and ignores any trailing bytes *inside* the block
+//! (a newer writer appended fields it has not heard of), while bytes
+//! after the block still decode strictly — so unknown future meta
+//! fields ride along without being mistaken for `RunState` payload.
+//! Version-1 files (no block) still decode, defaulting to the
+//! in-memory storage recipe with no recorded reference price.
 //!
 //! Floats are stored as raw IEEE bits (`to_bits`/`from_bits`), PRNG
 //! cursors as their raw `(state, inc)` words
@@ -60,6 +70,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::annotation::{OrderId, OrderRecord};
+use crate::dataset::store::{StoreBackend, StoreRecipe};
 use crate::model::ArchKind;
 use crate::prng::Pcg32;
 use crate::{Error, Result};
@@ -69,7 +80,10 @@ use super::state::{ProbeState, RunState};
 /// First 8 bytes of every checkpoint file.
 pub const MAGIC: [u8; 8] = *b"MCALCKPT";
 /// Current format version; bump on any layout change.
-pub const FORMAT_VERSION: u16 = 1;
+pub const FORMAT_VERSION: u16 = 2;
+/// Oldest format version this build still reads (v1 predates the storage
+/// recipe; its meta decodes with in-memory defaults).
+pub const MIN_FORMAT_VERSION: u16 = 1;
 /// Bytes before the payload: magic + version + kind + payload length.
 const HEADER_LEN: usize = 8 + 2 + 1 + 8;
 /// CRC32 trailer size.
@@ -308,6 +322,15 @@ pub struct CheckpointMeta {
     /// Class-count tag (`c10` / `c100` / …) naming the model set the run
     /// trains; cross-checked against the preset at resume.
     pub classes_tag: String,
+    /// Where the pool's features lived (format v2): backend, store
+    /// directory, shard width. `mcal resume` rebuilds the same store from
+    /// this recipe; version-1 files decode to the in-memory default.
+    pub store: StoreRecipe,
+    /// The service's reference price per label when the run started
+    /// (format v2). Tier-routed resumes cross-check their market's
+    /// default-route price against this so a resume cannot silently
+    /// re-price the run. `None` on version-1 files.
+    pub reference_price: Option<f64>,
 }
 
 /// A decoded checkpoint file: the self-containment meta plus the captured
@@ -351,19 +374,67 @@ impl Checkpoint {
     }
 }
 
+const BACKEND_MEM: u8 = 0;
+const BACKEND_DISK: u8 = 1;
+
 fn encode_meta(e: &mut Enc, m: &CheckpointMeta) {
     e.str(&m.dataset);
     e.u64(m.dataset_seed);
     e.f64(m.scale_factor);
     e.str(&m.classes_tag);
+    // v2 extension block: length-prefixed so an older-format reader of a
+    // *future* version can skip fields it does not know (see module docs).
+    let mut ext = Enc::new();
+    ext.u8(match m.store.backend {
+        StoreBackend::Mem => BACKEND_MEM,
+        StoreBackend::Disk => BACKEND_DISK,
+    });
+    ext.str(&m.store.dir);
+    ext.u64(m.store.shard_rows);
+    match m.reference_price {
+        Some(p) => {
+            ext.u8(1);
+            ext.f64(p);
+        }
+        None => ext.u8(0),
+    }
+    e.u64(ext.buf.len() as u64);
+    e.buf.extend_from_slice(&ext.buf);
 }
 
-fn decode_meta(d: &mut Dec<'_>) -> Result<CheckpointMeta> {
+fn decode_meta(d: &mut Dec<'_>, version: u16) -> Result<CheckpointMeta> {
+    let dataset = d.str()?;
+    let dataset_seed = d.u64()?;
+    let scale_factor = d.f64()?;
+    let classes_tag = d.str()?;
+    let (store, reference_price) = if version >= 2 {
+        let ext_len = d.len(1)?;
+        let mut x = Dec::new(d.take(ext_len)?);
+        let backend = match x.u8()? {
+            BACKEND_MEM => StoreBackend::Mem,
+            BACKEND_DISK => StoreBackend::Disk,
+            other => return Err(perr(format!("unknown store backend {other}"))),
+        };
+        let dir = x.str()?;
+        let shard_rows = x.u64()?;
+        let reference_price = match x.u8()? {
+            0 => None,
+            _ => Some(x.f64()?),
+        };
+        // Forward compatibility: trailing extension bytes belong to meta
+        // fields a newer writer added — skip them, strictly inside the
+        // block, never past it.
+        (StoreRecipe { backend, dir, shard_rows }, reference_price)
+    } else {
+        (StoreRecipe::default(), None)
+    };
     Ok(CheckpointMeta {
-        dataset: d.str()?,
-        dataset_seed: d.u64()?,
-        scale_factor: d.f64()?,
-        classes_tag: d.str()?,
+        dataset,
+        dataset_seed,
+        scale_factor,
+        classes_tag,
+        store,
+        reference_price,
     })
 }
 
@@ -500,9 +571,10 @@ pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
         return Err(perr("not a checkpoint file (bad magic)"));
     }
     let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
-    if version != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         return Err(perr(format!(
-            "format version {version} (this build reads version {FORMAT_VERSION})"
+            "format version {version} (this build reads versions \
+             {MIN_FORMAT_VERSION}..={FORMAT_VERSION})"
         )));
     }
     let kind = bytes[10];
@@ -525,12 +597,12 @@ pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
     let mut d = Dec::new(&body[HEADER_LEN..]);
     let ckpt = match kind {
         KIND_RUN => {
-            let meta = decode_meta(&mut d)?;
+            let meta = decode_meta(&mut d, version)?;
             let state = decode_run_state(&mut d)?;
             Checkpoint::Run { meta, state }
         }
         KIND_PROBE => {
-            let meta = decode_meta(&mut d)?;
+            let meta = decode_meta(&mut d, version)?;
             let run = decode_run_state(&mut d)?;
             let shadow_orders = decode_orders(&mut d)?;
             Checkpoint::Probe { meta, state: ProbeState { run, shadow_orders } }
@@ -867,6 +939,12 @@ mod tests {
             dataset_seed: 29,
             scale_factor: 0.05,
             classes_tag: "c10".into(),
+            store: StoreRecipe {
+                backend: StoreBackend::Disk,
+                dir: "results/store".into(),
+                shard_rows: 512,
+            },
+            reference_price: Some(0.04),
         }
     }
 
@@ -1047,6 +1125,75 @@ mod tests {
         out.extend_from_slice(&crc.to_le_bytes());
         let e = decode(&out).unwrap_err().to_string();
         assert!(e.contains("corrupt length"), "{e}");
+    }
+
+    /// Header + CRC assembly for hand-built payloads.
+    fn assemble(version: u16, kind: u8, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&version.to_le_bytes());
+        out.push(kind);
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(payload);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    #[test]
+    fn version_1_files_decode_with_default_store_recipe() {
+        // A v1 meta is the four core fields with no extension block.
+        let mut payload = Enc::new();
+        payload.str("fashion-syn");
+        payload.u64(29);
+        payload.f64(0.05);
+        payload.str("c10");
+        encode_run_state(&mut payload, &state(2, 3, 5));
+        let out = assemble(1, KIND_RUN, &payload.buf);
+        let ckpt = decode(&out).unwrap();
+        let m = ckpt.meta();
+        assert_eq!(m.dataset, "fashion-syn");
+        assert_eq!(m.dataset_seed, 29);
+        assert_eq!(m.classes_tag, "c10");
+        assert_eq!(m.store, StoreRecipe::default());
+        assert_eq!(m.reference_price, None);
+        assert_states_bit_equal(ckpt.run_state(), &state(2, 3, 5));
+    }
+
+    #[test]
+    fn unknown_meta_extension_fields_are_skipped() {
+        // A future writer appends an extension field this build has never
+        // heard of: known fields decode, the unknown tail is skipped, and
+        // the RunState after the block still decodes strictly.
+        let m = meta();
+        let mut payload = Enc::new();
+        payload.str(&m.dataset);
+        payload.u64(m.dataset_seed);
+        payload.f64(m.scale_factor);
+        payload.str(&m.classes_tag);
+        let mut ext = Enc::new();
+        ext.u8(BACKEND_DISK);
+        ext.str(&m.store.dir);
+        ext.u64(m.store.shard_rows);
+        ext.u8(1);
+        ext.f64(m.reference_price.unwrap());
+        ext.str("a-field-from-the-future");
+        payload.u64(ext.buf.len() as u64);
+        payload.buf.extend_from_slice(&ext.buf);
+        encode_run_state(&mut payload, &state(2, 3, 5));
+        let out = assemble(FORMAT_VERSION, KIND_RUN, &payload.buf);
+        let ckpt = decode(&out).unwrap();
+        assert_eq!(*ckpt.meta(), m);
+        assert_states_bit_equal(ckpt.run_state(), &state(2, 3, 5));
+    }
+
+    #[test]
+    fn future_format_versions_are_rejected() {
+        let good = encode(&Checkpoint::Run { meta: meta(), state: state(2, 3, 5) });
+        let mut bad = good.clone();
+        bad[8..10].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        let e = decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
     }
 
     /// The recovery matrix: a crash at EVERY write/rename boundary, in

@@ -15,12 +15,26 @@
 //! order — a spec generates bit-identical datasets on every machine and
 //! thread, which is what lets fleet lanes regenerate or share them
 //! interchangeably.
+//!
+//! Storage (gen 9): features live behind a [`store::FeatureStore`] — fully
+//! in memory (default) or as disk shards paged through a bounded resident
+//! cache — and both backends serve bit-identical bytes, so everything
+//! above this layer is invariant to where the pool lives. `Dataset` shares
+//! its store and groundtruth via `Arc`; `Clone` copies two pointers and a
+//! name, never a million-sample pool.
 
 pub mod registry;
+pub mod store;
 pub mod synth;
 
 pub use registry::{preset, preset_names, DatasetPreset};
+pub use store::{
+    FeatureRow, FeatureStore, ShardedStore, StoreBackend, StoreConfig, StoreRecipe, StoreStats,
+    DEFAULT_CACHE_SHARDS, DEFAULT_SHARD_ROWS,
+};
 pub use synth::SynthSpec;
+
+use std::sync::Arc;
 
 use crate::{Error, Result};
 
@@ -29,15 +43,19 @@ use crate::{Error, Result};
 /// Groundtruth labels are visible only to the annotation-service simulator
 /// (humans "know" the truth) and to the final evaluation in
 /// [`crate::metrics`]; the coordinator must never read them directly.
+///
+/// `Clone` is cheap: the feature store and groundtruth are `Arc`-shared,
+/// so fleet lanes and experiment sweeps can hand datasets around without
+/// ever duplicating the pool.
 #[derive(Clone)]
 pub struct Dataset {
     pub name: String,
     pub feat_dim: usize,
     pub num_classes: usize,
-    /// Row-major `n x feat_dim` feature matrix.
-    features: Vec<f32>,
-    /// Groundtruth class per sample.
-    groundtruth: Vec<u32>,
+    /// Row-major `n x feat_dim` feature matrix, wherever it lives.
+    store: Arc<FeatureStore>,
+    /// Groundtruth class per sample (always resident: 4 bytes/row).
+    groundtruth: Arc<Vec<u32>>,
 }
 
 impl Dataset {
@@ -54,10 +72,25 @@ impl Dataset {
                 features.len()
             )));
         }
-        if features.len() / feat_dim != groundtruth.len() {
+        Dataset::from_store(
+            name,
+            num_classes,
+            FeatureStore::in_memory(feat_dim, features),
+            groundtruth,
+        )
+    }
+
+    /// Wrap an already-built store (the disk-backed construction path).
+    pub fn from_store(
+        name: impl Into<String>,
+        num_classes: usize,
+        store: FeatureStore,
+        groundtruth: Vec<u32>,
+    ) -> Result<Self> {
+        if store.len() != groundtruth.len() {
             return Err(Error::Dataset(format!(
                 "{} rows vs {} labels",
-                features.len() / feat_dim,
+                store.len(),
                 groundtruth.len()
             )));
         }
@@ -68,10 +101,10 @@ impl Dataset {
         }
         Ok(Dataset {
             name: name.into(),
-            feat_dim,
+            feat_dim: store.feat_dim(),
             num_classes,
-            features,
-            groundtruth,
+            store: Arc::new(store),
+            groundtruth: Arc::new(groundtruth),
         })
     }
 
@@ -85,25 +118,42 @@ impl Dataset {
         self.groundtruth.is_empty()
     }
 
-    /// Feature row for sample `i`.
+    /// Which backend the pool lives on.
+    pub fn store_backend(&self) -> StoreBackend {
+        self.store.backend()
+    }
+
+    /// Resident-cache counters (`None` for in-memory pools).
+    pub fn store_stats(&self) -> Option<StoreStats> {
+        self.store.stats()
+    }
+
+    /// Feature row for sample `i`. Panics on out-of-range `i` or on a
+    /// shard I/O failure (use [`Dataset::try_feature`] on paths that must
+    /// surface storage errors).
     #[inline]
-    pub fn feature(&self, i: usize) -> &[f32] {
-        &self.features[i * self.feat_dim..(i + 1) * self.feat_dim]
+    pub fn feature(&self, i: usize) -> FeatureRow<'_> {
+        self.store.row(i).expect("feature store read failed")
+    }
+
+    /// Fallible feature access: I/O and decode failures on disk-backed
+    /// pools are `Err`, never a panic.
+    #[inline]
+    pub fn try_feature(&self, i: usize) -> Result<FeatureRow<'_>> {
+        self.store.row(i)
     }
 
     /// Gather feature rows for `indices` into `out` (row-major), padding the
     /// tail with zeros up to `batch` rows. Returns number of real rows.
-    pub fn gather_padded(&self, indices: &[usize], batch: usize, out: &mut [f32]) -> usize {
-        assert!(indices.len() <= batch);
-        assert_eq!(out.len(), batch * self.feat_dim);
-        for (row, &i) in indices.iter().enumerate() {
-            out[row * self.feat_dim..(row + 1) * self.feat_dim]
-                .copy_from_slice(self.feature(i));
-        }
-        for row in indices.len()..batch {
-            out[row * self.feat_dim..(row + 1) * self.feat_dim].fill(0.0);
-        }
-        indices.len()
+    /// Disk-backed pools gather per shard run (see
+    /// [`FeatureStore::gather_padded`]).
+    pub fn gather_padded(
+        &self,
+        indices: &[usize],
+        batch: usize,
+        out: &mut [f32],
+    ) -> Result<usize> {
+        self.store.gather_padded(indices, batch, out)
     }
 
     /// Groundtruth access — restricted to the annotation simulator and final
@@ -120,7 +170,7 @@ impl Dataset {
     /// Per-class sample counts (sanity/statistics).
     pub fn class_counts(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.num_classes];
-        for &y in &self.groundtruth {
+        for &y in self.groundtruth.iter() {
             counts[y as usize] += 1;
         }
         counts
@@ -128,18 +178,30 @@ impl Dataset {
 
     /// Restrict to the first `per_class` samples of each class (Fig. 13's
     /// subset-size experiment). Keeps the original ordering otherwise.
+    ///
+    /// Single sequential pass with pre-sized buffers: output sizes come
+    /// from [`Dataset::class_counts`] up front, and the scan stops as soon
+    /// as every class is full — on disk-backed pools each shard is paged
+    /// at most once and only up to the last needed row.
     pub fn subset_per_class(&self, per_class: usize) -> Result<Dataset> {
+        let keep: usize = self
+            .class_counts()
+            .iter()
+            .map(|&c| c.min(per_class))
+            .sum();
+        let mut feats = Vec::with_capacity(keep * self.feat_dim);
+        let mut labels: Vec<u32> = Vec::with_capacity(keep);
         let mut taken = vec![0usize; self.num_classes];
-        let mut feats = Vec::new();
-        let mut labels = Vec::new();
-        for i in 0..self.len() {
-            let y = self.groundtruth[i] as usize;
+        let groundtruth = &self.groundtruth;
+        self.store.for_each_row(|i, row| {
+            let y = groundtruth[i] as usize;
             if taken[y] < per_class {
                 taken[y] += 1;
-                feats.extend_from_slice(self.feature(i));
-                labels.push(self.groundtruth[i]);
+                feats.extend_from_slice(row);
+                labels.push(y as u32);
             }
-        }
+            labels.len() < keep
+        })?;
         Dataset::new(
             format!("{}-pc{per_class}", self.name),
             self.feat_dim,
@@ -165,6 +227,23 @@ mod tests {
         .unwrap()
     }
 
+    /// The same rows as [`tiny`], but served from disk shards.
+    fn tiny_disk(tag: &str, shard_rows: usize) -> (Dataset, std::path::PathBuf) {
+        let dir =
+            std::env::temp_dir().join(format!("mcal_ds_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let data = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        store::write_shards_from_slice(&dir, 2, shard_rows, &data).unwrap();
+        let ds = Dataset::from_store(
+            "t",
+            3,
+            FeatureStore::Sharded(ShardedStore::open(&dir, 2, 4, shard_rows, 2).unwrap()),
+            vec![0, 1, 2, 1],
+        )
+        .unwrap();
+        (ds, dir)
+    }
+
     #[test]
     fn feature_rows() {
         let d = tiny();
@@ -184,7 +263,7 @@ mod tests {
     fn gather_pads_with_zeros() {
         let d = tiny();
         let mut out = vec![9.0f32; 3 * 2];
-        let n = d.gather_padded(&[3, 0], 3, &mut out);
+        let n = d.gather_padded(&[3, 0], 3, &mut out).unwrap();
         assert_eq!(n, 2);
         assert_eq!(out, vec![6.0, 7.0, 0.0, 1.0, 0.0, 0.0]);
     }
@@ -201,5 +280,37 @@ mod tests {
         let s = d.subset_per_class(1).unwrap();
         assert_eq!(s.len(), 3);
         assert_eq!(s.class_counts(), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn clone_shares_the_store() {
+        let d = tiny();
+        let c = d.clone();
+        assert!(Arc::ptr_eq(&d.store, &c.store));
+        assert!(Arc::ptr_eq(&d.groundtruth, &c.groundtruth));
+    }
+
+    #[test]
+    fn disk_backed_dataset_matches_memory() {
+        let mem = tiny();
+        let (disk, dir) = tiny_disk("eq", 2);
+        assert_eq!(disk.store_backend(), StoreBackend::Disk);
+        for i in 0..mem.len() {
+            assert_eq!(mem.feature(i), disk.feature(i));
+            assert_eq!(mem.groundtruth(i), disk.groundtruth(i));
+        }
+        let mut a = vec![1.0f32; 3 * 2];
+        let mut b = vec![2.0f32; 3 * 2];
+        mem.gather_padded(&[3, 0], 3, &mut a).unwrap();
+        disk.gather_padded(&[3, 0], 3, &mut b).unwrap();
+        assert_eq!(a, b);
+        let sub_m = mem.subset_per_class(1).unwrap();
+        let sub_d = disk.subset_per_class(1).unwrap();
+        assert_eq!(sub_m.len(), sub_d.len());
+        for i in 0..sub_m.len() {
+            assert_eq!(sub_m.feature(i), sub_d.feature(i));
+            assert_eq!(sub_m.groundtruth(i), sub_d.groundtruth(i));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,813 @@
+//! Out-of-core feature storage: one read API, two backends.
+//!
+//! [`FeatureStore`] owns the row-major feature matrix behind [`super::Dataset`]
+//! and hides *where* the rows live:
+//!
+//! - [`FeatureStore::InMemory`] — the historical `Vec<f32>` pool, the default.
+//! - [`FeatureStore::Sharded`] — fixed-row-count shard files on disk, paged
+//!   in shard-at-a-time through a bounded resident cache. This is what lets
+//!   million-sample pools (the paper's ImageNet regime) run without assuming
+//!   the pool fits in RAM, completing the out-of-core story the two-level
+//!   k-center path (gen 6) started on the compute side.
+//!
+//! Determinism contract (gen 9): the two backends serve *bit-identical*
+//! feature bytes, so every result downstream of a read — scores, picks,
+//! ledgers, checkpoints — is invariant to the backend and to cache state.
+//! Cache eviction is deterministic (LRU over a fixed capacity) but that is
+//! a perf property; correctness never depends on what happens to be
+//! resident.
+//!
+//! # Shard file format (version 1)
+//!
+//! Little-endian throughout, one file per shard, following the
+//! [`crate::coordinator::persist`] house style (magic + version header,
+//! CRC32 trailer, crash-safe staged writes, defensive decode):
+//!
+//! | offset | size | field |
+//! |-------:|-----:|-------|
+//! | 0      | 8    | magic `MCALSHRD` |
+//! | 8      | 2    | format version (`u16`, currently 1) |
+//! | 10     | 8    | shard index (`u64`) |
+//! | 18     | 8    | nominal rows per shard (`u64`) |
+//! | 26     | 8    | rows in this shard (`u64`) |
+//! | 34     | 8    | total rows in the store (`u64`) |
+//! | 42     | 8    | feature dimension (`u64`) |
+//! | 50     | 4·rows·dim | feature payload (`f32` bit patterns) |
+//! | 50+payload | 4 | CRC32 (IEEE) over all preceding bytes |
+//!
+//! Corruption anywhere — truncation, bit flips, bad lengths — decodes to a
+//! typed [`Error::Persist`], never a panic or an attacker-controlled
+//! allocation; geometry that disagrees with the opening recipe (wrong
+//! `feat_dim`, `total_rows`, …) is a typed [`Error::Dataset`]. Writes stage
+//! at a unique temp name, fsync, then rename, so concurrent lanes
+//! regenerating the same (bit-identical) shard can only race atomic renames
+//! of identical content.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::persist::{crc32, CkptFs, RealFs};
+use crate::{Error, Result};
+
+/// Shard payload magic — first 8 bytes of every shard file.
+pub const SHARD_MAGIC: [u8; 8] = *b"MCALSHRD";
+
+/// Shard format version this build writes (and the only one it reads).
+pub const SHARD_VERSION: u16 = 1;
+
+/// Fixed header length: magic + version + 5 × u64 geometry fields.
+pub const SHARD_HEADER_LEN: usize = 8 + 2 + 8 * 5;
+
+/// CRC32 trailer length.
+pub const SHARD_TRAILER_LEN: usize = 4;
+
+/// Default rows per shard. 512 deliberately matches the artifact chunk
+/// width the runtime gathers at (`eval_bs`) and the two-level k-center
+/// compute shard, so one aligned gather touches exactly one storage shard.
+pub const DEFAULT_SHARD_ROWS: usize = 512;
+
+/// Default resident-cache capacity (shards held in memory at once).
+pub const DEFAULT_CACHE_SHARDS: usize = 8;
+
+/// Staged writes append in chunks of this size (shards are small; one
+/// chunk in practice — kept for parity with the checkpoint writer).
+const WRITE_CHUNK: usize = 64 * 1024;
+
+fn perr(msg: impl Into<String>) -> Error {
+    Error::Persist(msg.into())
+}
+
+fn derr(msg: impl Into<String>) -> Error {
+    Error::Dataset(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Backend selection / recipes
+// ---------------------------------------------------------------------------
+
+/// Which backend a pool uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreBackend {
+    /// Whole pool resident as one `Vec<f32>` (the historical default).
+    Mem,
+    /// Sharded files on disk, paged through the resident cache.
+    Disk,
+}
+
+impl StoreBackend {
+    pub fn parse(s: &str) -> Result<StoreBackend> {
+        match s {
+            "mem" => Ok(StoreBackend::Mem),
+            "disk" => Ok(StoreBackend::Disk),
+            other => Err(Error::Config(format!(
+                "unknown pool store '{other}' (expected mem|disk)"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StoreBackend::Mem => "mem",
+            StoreBackend::Disk => "disk",
+        }
+    }
+}
+
+/// The serializable storage recipe a checkpoint records so `mcal resume`
+/// rebuilds the same store (checkpoint meta format v2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoreRecipe {
+    pub backend: StoreBackend,
+    /// Store root directory (empty for the in-memory backend).
+    pub dir: String,
+    pub shard_rows: u64,
+}
+
+impl Default for StoreRecipe {
+    fn default() -> Self {
+        StoreRecipe {
+            backend: StoreBackend::Mem,
+            dir: String::new(),
+            shard_rows: DEFAULT_SHARD_ROWS as u64,
+        }
+    }
+}
+
+/// Runtime store configuration threaded from the CLI through `Ctx` to
+/// dataset construction.
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    pub backend: StoreBackend,
+    /// Root directory for shard subdirectories (disk backend only).
+    pub dir: PathBuf,
+    pub shard_rows: usize,
+    /// Resident-cache capacity in shards.
+    pub cache_shards: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            backend: StoreBackend::Mem,
+            dir: PathBuf::new(),
+            shard_rows: DEFAULT_SHARD_ROWS,
+            cache_shards: DEFAULT_CACHE_SHARDS,
+        }
+    }
+}
+
+impl StoreConfig {
+    pub fn recipe(&self) -> StoreRecipe {
+        StoreRecipe {
+            backend: self.backend,
+            dir: self.dir.display().to_string(),
+            shard_rows: self.shard_rows as u64,
+        }
+    }
+
+    pub fn from_recipe(r: &StoreRecipe) -> StoreConfig {
+        StoreConfig {
+            backend: r.backend,
+            dir: PathBuf::from(&r.dir),
+            shard_rows: (r.shard_rows as usize).max(1),
+            cache_shards: DEFAULT_CACHE_SHARDS,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard codec
+// ---------------------------------------------------------------------------
+
+/// Decoded contents of one shard file.
+pub struct DecodedShard {
+    pub shard_index: u64,
+    pub shard_rows: u64,
+    pub rows: u64,
+    pub total_rows: u64,
+    pub feat_dim: u64,
+    pub data: Vec<f32>,
+}
+
+/// File name of shard `index` inside a store directory.
+pub fn shard_file_name(index: usize) -> String {
+    format!("shard_{index:05}.shard")
+}
+
+/// Encode one shard to its on-disk byte image (header + payload + CRC).
+pub fn encode_shard(
+    shard_index: usize,
+    shard_rows: usize,
+    total_rows: usize,
+    feat_dim: usize,
+    data: &[f32],
+) -> Vec<u8> {
+    assert_eq!(data.len() % feat_dim, 0, "shard payload not row-aligned");
+    let rows = data.len() / feat_dim;
+    let mut out = Vec::with_capacity(SHARD_HEADER_LEN + data.len() * 4 + SHARD_TRAILER_LEN);
+    out.extend_from_slice(&SHARD_MAGIC);
+    out.extend_from_slice(&SHARD_VERSION.to_le_bytes());
+    out.extend_from_slice(&(shard_index as u64).to_le_bytes());
+    out.extend_from_slice(&(shard_rows as u64).to_le_bytes());
+    out.extend_from_slice(&(rows as u64).to_le_bytes());
+    out.extend_from_slice(&(total_rows as u64).to_le_bytes());
+    out.extend_from_slice(&(feat_dim as u64).to_le_bytes());
+    for &v in data {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+fn read_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+/// Decode and verify one shard file. Every malformed input is a typed
+/// [`Error::Persist`]; no header field can drive an allocation before the
+/// byte length it implies has been checked against the actual file length.
+pub fn decode_shard(bytes: &[u8]) -> Result<DecodedShard> {
+    if bytes.len() < SHARD_HEADER_LEN + SHARD_TRAILER_LEN {
+        return Err(perr(format!("shard truncated: {} bytes", bytes.len())));
+    }
+    if bytes[..8] != SHARD_MAGIC {
+        return Err(perr("bad shard magic"));
+    }
+    let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
+    if version != SHARD_VERSION {
+        return Err(perr(format!(
+            "unsupported shard version {version} (expected {SHARD_VERSION})"
+        )));
+    }
+    let shard_index = read_u64(bytes, 10);
+    let shard_rows = read_u64(bytes, 18);
+    let rows = read_u64(bytes, 26);
+    let total_rows = read_u64(bytes, 34);
+    let feat_dim = read_u64(bytes, 42);
+    let payload = rows
+        .checked_mul(feat_dim)
+        .and_then(|n| n.checked_mul(4))
+        .and_then(|n| n.checked_add((SHARD_HEADER_LEN + SHARD_TRAILER_LEN) as u64))
+        .ok_or_else(|| perr("corrupt length in shard header"))?;
+    if payload != bytes.len() as u64 {
+        return Err(perr(format!(
+            "shard length mismatch: header implies {payload} bytes, file has {}",
+            bytes.len()
+        )));
+    }
+    let body = &bytes[..bytes.len() - SHARD_TRAILER_LEN];
+    let stored = u32::from_le_bytes(bytes[bytes.len() - SHARD_TRAILER_LEN..].try_into().unwrap());
+    if crc32(body) != stored {
+        return Err(perr("shard crc mismatch"));
+    }
+    let n = (rows * feat_dim) as usize;
+    let mut data = Vec::with_capacity(n);
+    for i in 0..n {
+        let off = SHARD_HEADER_LEN + i * 4;
+        data.push(f32::from_bits(u32::from_le_bytes(
+            bytes[off..off + 4].try_into().unwrap(),
+        )));
+    }
+    Ok(DecodedShard { shard_index, shard_rows, rows, total_rows, feat_dim, data })
+}
+
+/// Unique staging name for a crash-safe shard write. Unlike checkpoint
+/// saves (single writer per path), fleet lanes may regenerate the same
+/// dataset concurrently; per-writer staging names mean lanes only ever
+/// race the atomic rename of *identical* final bytes.
+fn stage_path(path: &Path) -> PathBuf {
+    static STAGE_SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = STAGE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut os = path.as_os_str().to_os_string();
+    os.push(format!(".tmp.{}.{n}", std::process::id()));
+    PathBuf::from(os)
+}
+
+/// Crash-safe shard write through a [`CkptFs`]: stage, append chunked,
+/// fsync, atomic rename. The destination is only ever absent, old, or the
+/// complete new shard.
+pub fn write_shard(fs: &mut dyn CkptFs, path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = stage_path(path);
+    fs.create(&tmp)?;
+    for chunk in bytes.chunks(WRITE_CHUNK) {
+        fs.append(chunk)?;
+    }
+    fs.sync_close()?;
+    fs.rename(&tmp, path)
+}
+
+/// Write a full in-memory feature matrix as a sharded store under `dir`
+/// (test fixtures and small conversions; synthesis streams shards without
+/// ever holding the matrix — see [`super::synth::SynthSpec::generate_sharded`]).
+pub fn write_shards_from_slice(
+    dir: &Path,
+    feat_dim: usize,
+    shard_rows: usize,
+    data: &[f32],
+) -> Result<()> {
+    assert!(feat_dim > 0 && shard_rows > 0);
+    assert_eq!(data.len() % feat_dim, 0);
+    std::fs::create_dir_all(dir)
+        .map_err(|e| perr(format!("create store dir {}: {e}", dir.display())))?;
+    let total_rows = data.len() / feat_dim;
+    let mut fs = RealFs::default();
+    for (s, chunk) in data.chunks(shard_rows * feat_dim).enumerate() {
+        let bytes = encode_shard(s, shard_rows, total_rows, feat_dim, chunk);
+        write_shard(&mut fs, &dir.join(shard_file_name(s)), &bytes)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Feature rows
+// ---------------------------------------------------------------------------
+
+enum RowRepr<'a> {
+    /// Borrowed straight out of the in-memory pool.
+    Slice(&'a [f32]),
+    /// A range of a resident shard, kept alive by the `Arc` — the row stays
+    /// valid even if the cache evicts the shard entry.
+    Shard { data: Arc<Vec<f32>>, off: usize, len: usize },
+}
+
+/// One feature row. Dereferences to `&[f32]`; for disk-backed pools it
+/// pins the owning shard resident for its own lifetime (eviction only
+/// drops the cache's reference, never the row's).
+pub struct FeatureRow<'a> {
+    repr: RowRepr<'a>,
+}
+
+impl std::ops::Deref for FeatureRow<'_> {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        match &self.repr {
+            RowRepr::Slice(s) => s,
+            RowRepr::Shard { data, off, len } => &data[*off..*off + *len],
+        }
+    }
+}
+
+impl std::fmt::Debug for FeatureRow<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        (**self).fmt(f)
+    }
+}
+
+impl PartialEq for FeatureRow<'_> {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+impl PartialEq<[f32]> for FeatureRow<'_> {
+    fn eq(&self, other: &[f32]) -> bool {
+        **self == *other
+    }
+}
+
+impl PartialEq<&[f32]> for FeatureRow<'_> {
+    fn eq(&self, other: &&[f32]) -> bool {
+        **self == **other
+    }
+}
+
+impl<const N: usize> PartialEq<[f32; N]> for FeatureRow<'_> {
+    fn eq(&self, other: &[f32; N]) -> bool {
+        **self == other[..]
+    }
+}
+
+impl<const N: usize> PartialEq<&[f32; N]> for FeatureRow<'_> {
+    fn eq(&self, other: &&[f32; N]) -> bool {
+        **self == other[..]
+    }
+}
+
+impl PartialEq<FeatureRow<'_>> for [f32] {
+    fn eq(&self, other: &FeatureRow<'_>) -> bool {
+        *self == **other
+    }
+}
+
+impl PartialEq<FeatureRow<'_>> for &[f32] {
+    fn eq(&self, other: &FeatureRow<'_>) -> bool {
+        **self == **other
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------------
+
+/// Resident-cache counters (perf observability; results never depend on
+/// them). `high_water ≤ capacity` by construction — pinned by the scale
+/// suite so the bound stays honest.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Shard files read from disk (cold misses).
+    pub loads: u64,
+    /// Shards dropped to respect the capacity bound.
+    pub evictions: u64,
+    /// Max shards resident at once.
+    pub high_water: usize,
+    /// Shards resident now.
+    pub resident: usize,
+}
+
+struct ShardCache {
+    cap: usize,
+    /// LRU order: front = coldest, back = most recently used.
+    resident: VecDeque<(usize, Arc<Vec<f32>>)>,
+    stats: StoreStats,
+}
+
+/// Disk-backed half of the store: geometry plus the bounded resident cache.
+pub struct ShardedStore {
+    dir: PathBuf,
+    feat_dim: usize,
+    rows: usize,
+    shard_rows: usize,
+    cache: Mutex<ShardCache>,
+}
+
+impl ShardedStore {
+    /// Open a sharded store (lazily — shards are read on first touch).
+    pub fn open(
+        dir: impl Into<PathBuf>,
+        feat_dim: usize,
+        rows: usize,
+        shard_rows: usize,
+        cache_shards: usize,
+    ) -> Result<ShardedStore> {
+        if feat_dim == 0 || shard_rows == 0 {
+            return Err(derr("sharded store: feat_dim and shard_rows must be > 0"));
+        }
+        Ok(ShardedStore {
+            dir: dir.into(),
+            feat_dim,
+            rows,
+            shard_rows,
+            cache: Mutex::new(ShardCache {
+                cap: cache_shards.max(1),
+                resident: VecDeque::new(),
+                stats: StoreStats::default(),
+            }),
+        })
+    }
+
+    pub fn shard_rows(&self) -> usize {
+        self.shard_rows
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.rows.div_ceil(self.shard_rows)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ShardCache> {
+        // A poisoned lock means another lane panicked mid-read; the cache
+        // holds no partial state (entries are inserted whole), so continue.
+        self.cache.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Rows `[s·shard_rows, min((s+1)·shard_rows, rows))` of shard `s`,
+    /// loading and (deterministically) evicting as needed.
+    fn shard(&self, s: usize) -> Result<Arc<Vec<f32>>> {
+        {
+            let mut c = self.lock();
+            if let Some(pos) = c.resident.iter().position(|(i, _)| *i == s) {
+                let entry = c.resident.remove(pos).unwrap();
+                let arc = entry.1.clone();
+                c.resident.push_back(entry);
+                return Ok(arc);
+            }
+        }
+        // Read outside the lock: concurrent lanes may redundantly read the
+        // same shard, but bytes are immutable so both arrive at the same
+        // content, and the cache stays bounded either way.
+        let path = self.dir.join(shard_file_name(s));
+        let bytes = std::fs::read(&path)
+            .map_err(|e| perr(format!("read shard {}: {e}", path.display())))?;
+        let dec = decode_shard(&bytes)?;
+        let expect_rows = (self.rows - s * self.shard_rows).min(self.shard_rows);
+        if dec.shard_index != s as u64
+            || dec.shard_rows != self.shard_rows as u64
+            || dec.rows != expect_rows as u64
+            || dec.total_rows != self.rows as u64
+            || dec.feat_dim != self.feat_dim as u64
+        {
+            return Err(derr(format!(
+                "shard {} geometry mismatch: file says index={} shard_rows={} rows={} \
+                 total={} dim={}, store expects index={s} shard_rows={} rows={expect_rows} \
+                 total={} dim={}",
+                path.display(),
+                dec.shard_index,
+                dec.shard_rows,
+                dec.rows,
+                dec.total_rows,
+                dec.feat_dim,
+                self.shard_rows,
+                self.rows,
+                self.feat_dim,
+            )));
+        }
+        let arc = Arc::new(dec.data);
+        let mut c = self.lock();
+        if !c.resident.iter().any(|(i, _)| *i == s) {
+            // Evict-then-insert: residency never exceeds the capacity, even
+            // transiently (the scale suite pins the high-water mark).
+            while c.resident.len() >= c.cap {
+                c.resident.pop_front();
+                c.stats.evictions += 1;
+            }
+            c.resident.push_back((s, arc.clone()));
+            c.stats.loads += 1;
+            c.stats.high_water = c.stats.high_water.max(c.resident.len());
+            c.stats.resident = c.resident.len();
+        }
+        Ok(arc)
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.lock().stats
+    }
+}
+
+/// The feature matrix behind a [`super::Dataset`]: same read API
+/// (`len` / `row` / `gather_padded`) whatever the backend.
+pub enum FeatureStore {
+    InMemory { feat_dim: usize, data: Vec<f32> },
+    Sharded(ShardedStore),
+}
+
+impl FeatureStore {
+    pub fn in_memory(feat_dim: usize, data: Vec<f32>) -> FeatureStore {
+        assert!(feat_dim > 0 && data.len() % feat_dim == 0);
+        FeatureStore::InMemory { feat_dim, data }
+    }
+
+    pub fn backend(&self) -> StoreBackend {
+        match self {
+            FeatureStore::InMemory { .. } => StoreBackend::Mem,
+            FeatureStore::Sharded(_) => StoreBackend::Disk,
+        }
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        match self {
+            FeatureStore::InMemory { feat_dim, .. } => *feat_dim,
+            FeatureStore::Sharded(s) => s.feat_dim,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            FeatureStore::InMemory { feat_dim, data } => data.len() / feat_dim,
+            FeatureStore::Sharded(s) => s.rows,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Feature row `i`. Panics on out-of-range `i` (a caller bug, exactly
+    /// as slice indexing did); I/O and decode failures are `Err`.
+    pub fn row(&self, i: usize) -> Result<FeatureRow<'_>> {
+        let d = self.feat_dim();
+        match self {
+            FeatureStore::InMemory { data, .. } => {
+                Ok(FeatureRow { repr: RowRepr::Slice(&data[i * d..(i + 1) * d]) })
+            }
+            FeatureStore::Sharded(s) => {
+                assert!(i < s.rows, "row {i} out of range ({} rows)", s.rows);
+                let shard = s.shard(i / s.shard_rows)?;
+                let off = (i % s.shard_rows) * d;
+                Ok(FeatureRow { repr: RowRepr::Shard { data: shard, off, len: d } })
+            }
+        }
+    }
+
+    /// Gather rows `indices` into `out` (row-major), zero-padding up to
+    /// `batch` rows; returns the real-row count. Disk-backed pools gather
+    /// per shard *run* — one cache probe per run of consecutive indices in
+    /// the same shard, not one per row — so an aligned chunked scan touches
+    /// each shard exactly once.
+    pub fn gather_padded(&self, indices: &[usize], batch: usize, out: &mut [f32]) -> Result<usize> {
+        let d = self.feat_dim();
+        assert!(indices.len() <= batch);
+        assert_eq!(out.len(), batch * d);
+        match self {
+            FeatureStore::InMemory { data, .. } => {
+                for (row, &i) in indices.iter().enumerate() {
+                    out[row * d..(row + 1) * d].copy_from_slice(&data[i * d..(i + 1) * d]);
+                }
+            }
+            FeatureStore::Sharded(s) => {
+                let mut row = 0;
+                while row < indices.len() {
+                    let si = indices[row] / s.shard_rows;
+                    assert!(indices[row] < s.rows, "row {} out of range", indices[row]);
+                    let shard = s.shard(si)?;
+                    while row < indices.len() && indices[row] / s.shard_rows == si {
+                        let off = (indices[row] % s.shard_rows) * d;
+                        out[row * d..(row + 1) * d].copy_from_slice(&shard[off..off + d]);
+                        row += 1;
+                    }
+                }
+            }
+        }
+        for row in indices.len()..batch {
+            out[row * d..(row + 1) * d].fill(0.0);
+        }
+        Ok(indices.len())
+    }
+
+    /// Sequential scan: call `f(i, row)` for rows `0..len` in order until
+    /// `f` returns `false`. Disk-backed pools page each shard exactly once.
+    pub fn for_each_row(&self, mut f: impl FnMut(usize, &[f32]) -> bool) -> Result<()> {
+        let d = self.feat_dim();
+        match self {
+            FeatureStore::InMemory { data, .. } => {
+                for (i, row) in data.chunks_exact(d).enumerate() {
+                    if !f(i, row) {
+                        return Ok(());
+                    }
+                }
+            }
+            FeatureStore::Sharded(s) => {
+                for si in 0..s.n_shards() {
+                    let shard = s.shard(si)?;
+                    for (local, row) in shard.chunks_exact(d).enumerate() {
+                        if !f(si * s.shard_rows + local, row) {
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Cache counters (disk backend; `None` for in-memory pools).
+    pub fn stats(&self) -> Option<StoreStats> {
+        match self {
+            FeatureStore::InMemory { .. } => None,
+            FeatureStore::Sharded(s) => Some(s.stats()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mcal_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn rows(n: usize, d: usize) -> Vec<f32> {
+        (0..n * d).map(|i| (i as f32) * 0.5 - 3.0).collect()
+    }
+
+    #[test]
+    fn shard_codec_roundtrips_bitwise() {
+        let data = vec![1.5f32, -0.0, f32::NAN, f32::INFINITY, 2.0e-38, 7.25];
+        let bytes = encode_shard(3, 2, 100, 2, &data);
+        let dec = decode_shard(&bytes).unwrap();
+        assert_eq!(dec.shard_index, 3);
+        assert_eq!(dec.shard_rows, 2);
+        assert_eq!(dec.rows, 3);
+        assert_eq!(dec.total_rows, 100);
+        assert_eq!(dec.feat_dim, 2);
+        let got: Vec<u32> = dec.data.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn decode_rejects_magic_version_length_and_crc() {
+        let good = encode_shard(0, 4, 4, 2, &rows(4, 2));
+        assert!(decode_shard(&good).is_ok());
+
+        let mut bad = good.clone();
+        bad[0] ^= 0x01;
+        assert!(decode_shard(&bad).unwrap_err().to_string().contains("magic"));
+
+        let mut bad = good.clone();
+        bad[8] = 99;
+        assert!(decode_shard(&bad).unwrap_err().to_string().contains("version"));
+
+        let mut long = good.clone();
+        long.push(0);
+        assert!(decode_shard(&long).unwrap_err().to_string().contains("length"));
+
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 0x40; // trailer byte -> crc mismatch
+        assert!(decode_shard(&bad).unwrap_err().to_string().contains("crc"));
+
+        // A huge row count in the header cannot drive an allocation: the
+        // implied length is checked (overflow-safe) before any payload read.
+        let mut huge = good.clone();
+        huge[26..34].copy_from_slice(&u64::MAX.to_le_bytes());
+        let msg = decode_shard(&huge).unwrap_err().to_string();
+        assert!(msg.contains("length"), "{msg}");
+    }
+
+    #[test]
+    fn sharded_reads_match_memory_bitwise() {
+        let (n, d, sr) = (23, 3, 4);
+        let data = rows(n, d);
+        let dir = tmp_dir("rt");
+        write_shards_from_slice(&dir, d, sr, &data).unwrap();
+        let mem = FeatureStore::in_memory(d, data);
+        let disk = FeatureStore::Sharded(ShardedStore::open(&dir, d, n, sr, 3).unwrap());
+        assert_eq!(disk.len(), n);
+        for i in 0..n {
+            assert_eq!(&*mem.row(i).unwrap(), &*disk.row(i).unwrap());
+        }
+        let idx: Vec<usize> = vec![22, 0, 1, 2, 9, 10, 11, 4];
+        let mut a = vec![9.0; 10 * d];
+        let mut b = vec![7.0; 10 * d];
+        assert_eq!(mem.gather_padded(&idx, 10, &mut a).unwrap(), idx.len());
+        assert_eq!(disk.gather_padded(&idx, 10, &mut b).unwrap(), idx.len());
+        assert_eq!(a, b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cache_bounds_and_eviction_are_deterministic() {
+        let (n, d, sr) = (40, 2, 4); // 10 shards
+        let data = rows(n, d);
+        let dir = tmp_dir("cache");
+        write_shards_from_slice(&dir, d, sr, &data).unwrap();
+        let store = ShardedStore::open(&dir, d, n, sr, 2).unwrap();
+        let fs = FeatureStore::Sharded(store);
+        // Sequential scan: every shard is a cold load, resident stays <= 2.
+        fs.for_each_row(|_, _| true).unwrap();
+        let st = fs.stats().unwrap();
+        assert_eq!(st.loads, 10);
+        assert_eq!(st.evictions, 8);
+        assert_eq!(st.high_water, 2);
+        assert_eq!(st.resident, 2);
+        // Rows of the two resident shards (8, 9) hit without new loads.
+        let _ = fs.row(39).unwrap();
+        let _ = fs.row(33).unwrap();
+        assert_eq!(fs.stats().unwrap().loads, 10);
+        // A row held as a guard survives eviction of its shard.
+        let pinned = fs.row(0).unwrap(); // loads shard 0, evicts one
+        for i in (0..n).step_by(sr) {
+            let _ = fs.row(i).unwrap();
+        }
+        assert_eq!(&*pinned, &*fs.row(0).unwrap());
+        let st = fs.stats().unwrap();
+        assert!(st.high_water <= 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn geometry_mismatch_is_a_dataset_error() {
+        let (n, d, sr) = (8, 2, 4);
+        let dir = tmp_dir("geom");
+        write_shards_from_slice(&dir, d, sr, &rows(n, d)).unwrap();
+        // Open with the wrong feat_dim: decode succeeds, geometry check fires.
+        let store = FeatureStore::Sharded(ShardedStore::open(&dir, 4, 4, sr, 2).unwrap());
+        match store.row(0) {
+            Err(Error::Dataset(msg)) => assert!(msg.contains("geometry"), "{msg}"),
+            other => panic!("expected Dataset error, got {other:?}"),
+        }
+        // Missing shard file: typed persist error.
+        let store = FeatureStore::Sharded(ShardedStore::open(&dir, d, 100, sr, 2).unwrap());
+        match store.row(90) {
+            Err(Error::Persist(msg)) => assert!(msg.contains("read shard"), "{msg}"),
+            other => panic!("expected Persist error, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gather_per_run_touches_each_shard_once() {
+        let (n, d, sr) = (32, 2, 8); // 4 shards
+        let data = rows(n, d);
+        let dir = tmp_dir("runs");
+        write_shards_from_slice(&dir, d, sr, &data).unwrap();
+        let fs = FeatureStore::Sharded(ShardedStore::open(&dir, d, n, sr, 4).unwrap());
+        // One aligned pass in index order: 4 runs, 4 loads.
+        let idx: Vec<usize> = (0..n).collect();
+        let mut out = vec![0.0; n * d];
+        fs.gather_padded(&idx, n, &mut out).unwrap();
+        assert_eq!(fs.stats().unwrap().loads, 4);
+        let mem = FeatureStore::in_memory(d, data);
+        let mut want = vec![0.0; n * d];
+        mem.gather_padded(&idx, n, &mut want).unwrap();
+        assert_eq!(out, want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

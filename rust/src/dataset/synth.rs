@@ -19,7 +19,12 @@
 //! - `per_class` — samples per class, the second complexity dimension the
 //!   paper studies (CIFAR-100 = 600/class vs CIFAR-10 = 6000/class, Fig. 13).
 
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use super::store::{self, FeatureStore, ShardedStore};
 use super::Dataset;
+use crate::coordinator::persist::RealFs;
 use crate::prng::Pcg32;
 use crate::Result;
 
@@ -100,6 +105,126 @@ impl SynthSpec {
         }
 
         Dataset::new(self.name.clone(), d, self.num_classes, feats, labels)
+    }
+
+    /// Generate the dataset straight to disk shards under `dir`, without
+    /// ever materializing the pool: peak feature memory is one row plus
+    /// one shard buffer, O(shard_rows · feat_dim), not O(n · feat_dim).
+    ///
+    /// Bit-identity contract (gen 9): the PRNG draw order is *exactly*
+    /// [`SynthSpec::generate`]'s — per-class means, one global shuffle,
+    /// then one row per raw index — and the global rescale is applied as
+    /// the same separate f32 multiply, so every feature byte on disk
+    /// equals the in-memory byte (`sharded_generation_is_bit_identical`
+    /// pins this). Rows are generated in raw (PRNG) order but live at
+    /// shuffled slots, so pass 1 scatters rows into a sequential spool
+    /// file at their slot offsets and pass 2 re-reads it shard-contiguous,
+    /// writing each shard crash-safely; the spool is deleted afterwards.
+    pub fn generate_sharded(
+        &self,
+        dir: &Path,
+        shard_rows: usize,
+        cache_shards: usize,
+    ) -> Result<Dataset> {
+        let d = self.feat_dim;
+        let mut rng = Pcg32::new(self.seed, 0xDA7A);
+
+        // Class + subcluster means — identical draws to `generate`.
+        let mut means = vec![0.0f32; self.num_classes * self.subclusters * d];
+        for c in 0..self.num_classes {
+            let mut center = vec![0.0f32; d];
+            rng.fill_normal(&mut center, 0.0, self.center_scale);
+            for s in 0..self.subclusters {
+                let row = &mut means[(c * self.subclusters + s) * d..][..d];
+                rng.fill_normal(row, 0.0, self.spread);
+                for (m, &ce) in row.iter_mut().zip(center.iter()) {
+                    *m += ce;
+                }
+            }
+        }
+
+        let n = self.total();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+
+        let c2 = self.center_scale * self.center_scale;
+        let s2 = self.spread * self.spread;
+        let n2 = self.noise * self.noise;
+        let scale = 1.0 / (c2 + s2 + n2).sqrt();
+
+        std::fs::create_dir_all(dir)?;
+        // Writer-unique spool name: concurrent lanes regenerating the same
+        // dataset directory must not truncate each other mid-pass — with
+        // private spools they only ever race the shard writer's atomic
+        // renames of identical bytes.
+        let spool_path = {
+            use std::sync::atomic::{AtomicU64, Ordering};
+            static SPOOL_SEQ: AtomicU64 = AtomicU64::new(0);
+            dir.join(format!(
+                "features.spool.{}.{}",
+                std::process::id(),
+                SPOOL_SEQ.fetch_add(1, Ordering::Relaxed)
+            ))
+        };
+        let mut spool = std::fs::File::options()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&spool_path)?;
+        spool.set_len((n * d * 4) as u64)?;
+
+        // Pass 1: generate rows in PRNG order, scatter to slot offsets.
+        let mut labels = vec![0u32; n];
+        let mut rowbuf = vec![0.0f32; d];
+        let mut rowbytes = vec![0u8; d * 4];
+        for raw in 0..n {
+            let class = raw / self.per_class;
+            let sub = rng.below(self.subclusters as u32) as usize;
+            let mean = &means[(class * self.subclusters + sub) * d..][..d];
+            for (r, &m) in rowbuf.iter_mut().zip(mean.iter()) {
+                // Same two f32 ops as generate(): the raw value first, the
+                // global rescale as a separate multiply.
+                let t = m + self.noise * rng.normal();
+                *r = t * scale;
+            }
+            let slot = order[raw];
+            labels[slot] = class as u32;
+            for (b, &v) in rowbytes.chunks_exact_mut(4).zip(rowbuf.iter()) {
+                b.copy_from_slice(&v.to_bits().to_le_bytes());
+            }
+            spool.seek(SeekFrom::Start((slot * d * 4) as u64))?;
+            spool.write_all(&rowbytes)?;
+        }
+        spool.flush()?;
+
+        // Pass 2: read slot-contiguous ranges back, emit one shard at a
+        // time through the crash-safe writer.
+        let mut fs = RealFs::default();
+        let mut shard_bytes = vec![0u8; shard_rows * d * 4];
+        let mut shard_data = vec![0.0f32; shard_rows * d];
+        for s in 0..n.div_ceil(shard_rows) {
+            let lo = s * shard_rows;
+            let hi = (lo + shard_rows).min(n);
+            let nb = (hi - lo) * d * 4;
+            spool.seek(SeekFrom::Start((lo * d * 4) as u64))?;
+            spool.read_exact(&mut shard_bytes[..nb])?;
+            for (v, b) in shard_data.iter_mut().zip(shard_bytes[..nb].chunks_exact(4)) {
+                *v = f32::from_bits(u32::from_le_bytes(b.try_into().unwrap()));
+            }
+            let bytes =
+                store::encode_shard(s, shard_rows, n, d, &shard_data[..(hi - lo) * d]);
+            store::write_shard(&mut fs, &dir.join(store::shard_file_name(s)), &bytes)?;
+        }
+        drop(spool);
+        std::fs::remove_file(&spool_path)?;
+
+        Dataset::from_store(
+            self.name.clone(),
+            self.num_classes,
+            FeatureStore::Sharded(ShardedStore::open(dir, d, n, shard_rows, cache_shards)?),
+            labels,
+        )
     }
 }
 
@@ -243,6 +368,36 @@ mod tests {
             ratio / ds.len() as f64
         }
         assert!(sep(&easy, 4) < sep(&hard, 4));
+    }
+
+    #[test]
+    fn sharded_generation_is_bit_identical() {
+        let s = spec();
+        let mem = s.generate().unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("mcal_synth_shard_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // 200 rows at 16 rows/shard: 13 shards, partial tail shard.
+        let disk = s.generate_sharded(&dir, 16, 3).unwrap();
+        assert_eq!(mem.len(), disk.len());
+        for i in 0..mem.len() {
+            let a: Vec<u32> = mem.feature(i).iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = disk.feature(i).iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "row {i} bytes diverge");
+            assert_eq!(mem.groundtruth(i), disk.groundtruth(i));
+        }
+        // The bounded cache held, and the spool was cleaned up: only
+        // shard files remain in the store directory.
+        assert!(disk.store_stats().unwrap().high_water <= 3);
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            let name = name.to_string_lossy();
+            assert!(
+                name.starts_with("shard_") && name.ends_with(".shard"),
+                "leftover non-shard file {name}"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use crate::annotation::{
     IngestConfig, Ledger, Service, SimService, SimServiceConfig, TierMarket, TierSpec,
 };
-use crate::dataset::{preset, Dataset, DatasetPreset};
+use crate::dataset::{preset, Dataset, DatasetPreset, StoreBackend, StoreConfig};
 use crate::runtime::{Engine, Manifest};
 use crate::Result;
 
@@ -56,6 +56,11 @@ pub struct Ctx {
     /// applied to every simulated service this context builds. Wall-clock
     /// only: results are bit-identical for every setting.
     pub ingest: IngestConfig,
+    /// Pool-storage knobs (`--pool-store`, `--store-dir`,
+    /// `--store-shard-rows`) applied to every dataset this context
+    /// generates. Both backends serve bit-identical bytes (gen 9), so
+    /// results never depend on where the pool lives.
+    pub store: StoreConfig,
 }
 
 impl Ctx {
@@ -68,6 +73,7 @@ impl Ctx {
             seed,
             jobs: 1,
             ingest: IngestConfig::default(),
+            store: StoreConfig::default(),
         })
     }
 
@@ -81,6 +87,13 @@ impl Ctx {
     /// context will use.
     pub fn with_ingest(mut self, ingest: IngestConfig) -> Ctx {
         self.ingest = ingest;
+        self
+    }
+
+    /// Set the pool-storage knobs every dataset built from this context
+    /// will use.
+    pub fn with_store(mut self, store: StoreConfig) -> Ctx {
+        self.store = store;
         self
     }
 
@@ -121,6 +134,7 @@ impl Ctx {
             scale: self.scale,
             seed: self.seed,
             ingest: self.ingest,
+            store: &self.store,
         }
     }
 }
@@ -134,10 +148,16 @@ pub struct CtxView<'a> {
     pub scale: Scale,
     pub seed: u64,
     pub ingest: IngestConfig,
+    /// Pool-storage knobs (shared reference so the view stays `Copy`).
+    pub store: &'a StoreConfig,
 }
 
 impl CtxView<'_> {
-    /// Generate a preset dataset at the context scale.
+    /// Generate a preset dataset at the context scale, on the context's
+    /// storage backend. Disk-backed pools land in a per-(spec, seed)
+    /// subdirectory of the store root; regeneration is bit-identical, so
+    /// lanes rebuilding the same dataset only ever race atomic renames of
+    /// identical shard bytes.
     pub fn dataset(&self, name: &str) -> Result<(Dataset, DatasetPreset)> {
         let p = preset(name, self.seed)?;
         let spec = if self.scale == Scale::Full {
@@ -145,9 +165,22 @@ impl CtxView<'_> {
         } else {
             p.spec.scaled(self.scale.dataset_factor())
         };
-        let mut ds = spec.generate()?;
+        let mut ds = self.dataset_from_spec(&spec)?;
         ds.name = name.to_string(); // keep the preset name for reports
         Ok((ds, p))
+    }
+
+    /// Generate `spec` on the context's storage backend (the shared tail of
+    /// [`CtxView::dataset`], also used by `mcal resume`, which derives its
+    /// spec from a checkpoint's recorded recipe instead of a preset name).
+    pub fn dataset_from_spec(&self, spec: &crate::dataset::SynthSpec) -> Result<Dataset> {
+        match self.store.backend {
+            StoreBackend::Mem => spec.generate(),
+            StoreBackend::Disk => {
+                let dir = self.store.dir.join(format!("{}-s{}", spec.name, spec.seed));
+                spec.generate_sharded(&dir, self.store.shard_rows, self.store.cache_shards)
+            }
+        }
     }
 
     /// Fresh (ledger, service) pair for one run, with the context's

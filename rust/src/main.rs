@@ -1,7 +1,7 @@
 //! `mcal` — CLI launcher for the MCAL labeling pipeline and the paper's
 //! experiment drivers.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use mcal::annotation::{AnnotationService, IngestConfig, Service, TierSpec};
@@ -11,6 +11,7 @@ use mcal::coordinator::{
     CheckpointMeta, CheckpointPolicy, LabelingDriver, McalPolicy, RoutePlan, RunParams, RunReport,
     TieredPolicy,
 };
+use mcal::dataset::{StoreBackend, StoreConfig};
 use mcal::experiments::common::{Ctx, Scale};
 use mcal::model::ArchKind;
 use mcal::runtime::EnginePool;
@@ -27,6 +28,7 @@ USAGE:
              [--tiers cheap:0.003:0.3:3,expert:0.04] [--tier-low-frac 0.5]
              [--probe-iters 8 (with --arch auto)] [--warm-start | --no-warm-start]
              [--checkpoint-dir DIR [--checkpoint-every N]]
+             [--pool-store mem|disk [--store-dir DIR] [--store-shard-rows N]]
              [--artifacts DIR] [--results DIR]
                                                          --warm-start (default, with --arch
                                                          auto): resume the winning candidate
@@ -71,7 +73,20 @@ USAGE:
                                                          crash never leaves a torn file —
                                                          and checkpointing never changes a
                                                          result bit
+                                                         --pool-store disk: page the pool
+                                                         from fixed-row shard files under
+                                                         --store-dir (default
+                                                         <results>/store) through a bounded
+                                                         resident cache instead of holding
+                                                         it in RAM; --store-shard-rows sets
+                                                         rows per shard (default 512,
+                                                         matching the k-center compute
+                                                         shards). Both backends serve
+                                                         bit-identical bytes — where the
+                                                         pool lives never changes a result
     mcal resume <checkpoint.ckpt> [--service ...] [--jobs N|auto] [--ingest-* ...]
+             [--tiers cheap:0.003:0.3:3,expert:0.04 [--tier-low-frac 0.5]]
+             [--pool-store mem|disk [--store-dir DIR] [--store-shard-rows N]]
              [--checkpoint-dir DIR [--checkpoint-every N]]
                                                          continue a checkpointed run from
                                                          disk: the dataset is regenerated
@@ -85,6 +100,19 @@ USAGE:
                                                          --service/--epsilon/... as the
                                                          original run; pass --checkpoint-dir
                                                          again to keep checkpointing
+                                                         --tiers: re-enter the loop against
+                                                         a multi-tier market (see `run`).
+                                                         The table's reference (priciest)
+                                                         tier must match the checkpoint's
+                                                         recorded reference price exactly —
+                                                         a divergent table would silently
+                                                         re-cost the remaining rounds.
+                                                         The pool store defaults to the
+                                                         recorded recipe; --pool-store /
+                                                         --store-dir / --store-shard-rows
+                                                         override it (both backends are
+                                                         bit-identical, so switching is
+                                                         always safe)
     mcal arch-select <dataset> [--service ...] [--probe-iters 8] [--jobs N|auto]
              [--warm-start | --no-warm-start] [...]      probe every candidate architecture
                                                          (concurrently with --jobs > 1) and
@@ -147,14 +175,34 @@ fn ctx_from(args: &Args) -> mcal::Result<Ctx> {
         chunk_size: args.usize_or("ingest-chunk", 0)?,
         latency: args.duration_ms_or("ingest-latency", 0.0)?,
     };
-    Ok(Ctx::new(
-        args.opt_or("artifacts", "artifacts"),
-        args.opt_or("results", "results"),
-        scale,
-        args.u64_or("seed", 42)?,
-    )?
-    .with_jobs(args.jobs()?)
-    .with_ingest(ingest))
+    let results = args.opt_or("results", "results");
+    let store = store_config(args, results, StoreConfig::default())?;
+    Ok(Ctx::new(args.opt_or("artifacts", "artifacts"), results, scale, args.u64_or("seed", 42)?)?
+        .with_jobs(args.jobs()?)
+        .with_ingest(ingest)
+        .with_store(store))
+}
+
+/// Shared `--pool-store` / `--store-dir` / `--store-shard-rows` parsing.
+/// `base` supplies the defaults — [`StoreConfig::default`] for fresh runs,
+/// the checkpoint's recorded recipe for `resume` (so a resumed run pages
+/// the same shards unless told otherwise). An unset `--store-dir` lands
+/// under the results directory so every run artifact shares one root.
+fn store_config(args: &Args, results: &str, base: StoreConfig) -> mcal::Result<StoreConfig> {
+    let backend = match args.opt("pool-store") {
+        Some(s) => StoreBackend::parse(s)?,
+        None => base.backend,
+    };
+    let dir = match args.opt("store-dir") {
+        Some(d) => PathBuf::from(d),
+        None if base.dir.as_os_str().is_empty() => Path::new(results).join("store"),
+        None => base.dir,
+    };
+    let shard_rows = args.usize_or("store-shard-rows", base.shard_rows)?;
+    if shard_rows == 0 {
+        return Err(mcal::Error::Config("--store-shard-rows must be > 0".into()));
+    }
+    Ok(StoreConfig { backend, dir, shard_rows, cache_shards: base.cache_shards })
 }
 
 /// Intra-run parallelism for the single-run commands (`run`,
@@ -299,6 +347,16 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
 
     let svc = Service::parse(args.opt_or("service", "amazon"))?;
     let params = single_run_params(args, &ctx)?;
+    // The reference price recorded in checkpoint meta (`resume --tiers`
+    // validates its tier table against it): the default — most expensive —
+    // tier under --tiers, the flat service price otherwise.
+    let reference_price = match args.opt("tiers") {
+        Some(spec_list) => TierSpec::parse_list(spec_list)?
+            .iter()
+            .map(|t| t.price_per_label)
+            .fold(f64::NEG_INFINITY, f64::max),
+        None => svc.price_per_label(),
+    };
     let ckpt = checkpoint_policy(
         args,
         CheckpointMeta {
@@ -306,6 +364,8 @@ fn cmd_run(args: &Args) -> mcal::Result<()> {
             dataset_seed: ctx.seed,
             scale_factor: ctx.scale.dataset_factor(),
             classes_tag: preset.classes_tag.to_string(),
+            store: ctx.store.recipe(),
+            reference_price: Some(reference_price),
         },
     )?;
 
@@ -423,10 +483,15 @@ fn cmd_resume(args: &Args) -> mcal::Result<()> {
     let meta = loaded.meta().clone();
 
     // Rebuild the context at the checkpoint's recorded seed. Dataset
-    // geometry comes from the recorded recipe, never from --scale.
+    // geometry comes from the recorded recipe, never from --scale; the
+    // pool store likewise defaults to the recorded recipe, overridable by
+    // the --pool-store family (both backends are bit-identical, so
+    // switching is always safe).
+    let results = args.opt_or("results", "results");
+    let store = store_config(args, results, StoreConfig::from_recipe(&meta.store))?;
     let ctx = Ctx::new(
         args.opt_or("artifacts", "artifacts"),
-        args.opt_or("results", "results"),
+        results,
         Scale::Full,
         meta.dataset_seed,
     )?
@@ -434,7 +499,8 @@ fn cmd_resume(args: &Args) -> mcal::Result<()> {
     .with_ingest(IngestConfig {
         chunk_size: args.usize_or("ingest-chunk", 0)?,
         latency: args.duration_ms_or("ingest-latency", 0.0)?,
-    });
+    })
+    .with_store(store);
     let jobs = single_run_jobs(args, &ctx);
 
     let p = mcal::dataset::preset(&meta.dataset, meta.dataset_seed)?;
@@ -449,13 +515,11 @@ fn cmd_resume(args: &Args) -> mcal::Result<()> {
     } else {
         p.spec.scaled(meta.scale_factor)
     };
-    let mut ds = spec.generate()?;
+    let mut ds = ctx.view().dataset_from_spec(&spec)?;
     ds.name = meta.dataset.clone();
 
-    let svc = Service::parse(args.opt_or("service", "amazon"))?;
     let params = single_run_params(args, &ctx)?;
-    let (ledger, service) = ctx.view().service_with(svc, jobs);
-    let renewed = checkpoint_policy(args, meta)?;
+    let renewed = checkpoint_policy(args, meta.clone())?;
     let pool = EnginePool::new(jobs.saturating_sub(1))?;
     let driver = LabelingDriver::new(&ctx.engine, &ctx.manifest)
         .with_pool(Some(&pool))
@@ -473,8 +537,59 @@ fn cmd_resume(args: &Args) -> mcal::Result<()> {
         state.b_idx.len(),
         state.pool.len()
     );
-    let report = run_mcal_warm(&driver, &ds, &service, ledger, p.classes_tag, params, state)?;
+    // Lines printed after the summary (per-tier usage on the --tiers path).
+    let mut tier_lines: Vec<String> = Vec::new();
+    let report = if let Some(spec_list) = args.opt("tiers") {
+        // Tier-routed resume: re-enter the loop against a multi-tier
+        // market. The checkpointed run's cost model was priced against the
+        // recorded reference price, so the offered table's default
+        // (reference) tier must match it bit-exactly — a divergent table
+        // would silently re-cost every remaining round.
+        let specs = TierSpec::parse_list(spec_list)?;
+        let (ledger, market) = ctx.view().market_with(specs, jobs)?;
+        let recorded = meta.reference_price.ok_or_else(|| {
+            mcal::Error::Persist(
+                "checkpoint records no reference price (format v1 file) — \
+                 resume --tiers needs a checkpoint written by this build"
+                    .into(),
+            )
+        })?;
+        let offered = market.price_per_label(market.default_route());
+        if offered.to_bits() != recorded.to_bits() {
+            return Err(mcal::Error::Config(format!(
+                "--tiers reference price ${offered} diverges from the checkpoint's \
+                 recorded ${recorded} — the resumed cost model would not match the run's"
+            )));
+        }
+        let low_frac = args.f64_or("tier-low-frac", 0.5)?;
+        let plan = if market.tiers() == 1 || low_frac <= 0.0 {
+            RoutePlan::default()
+        } else {
+            RoutePlan::split(market.cheapest_route(), market.default_route(), low_frac)
+        };
+        let resumed_at = state.rounds;
+        let report = driver.run_warm(
+            &ds,
+            &market,
+            ledger,
+            p.classes_tag,
+            params,
+            state,
+            TieredPolicy::new(McalPolicy::resuming(resumed_at), plan),
+        )?;
+        for u in market.tier_usage() {
+            tier_lines.push(format!("tier {}: {} labels ${:.2}", u.name, u.labels, u.dollars));
+        }
+        report
+    } else {
+        let svc = Service::parse(args.opt_or("service", "amazon"))?;
+        let (ledger, service) = ctx.view().service_with(svc, jobs);
+        run_mcal_warm(&driver, &ds, &service, ledger, p.classes_tag, params, state)?
+    };
     println!("{}", report.summary());
+    for line in &tier_lines {
+        println!("{line}");
+    }
     print_warm_start(&report);
     let c = &report.cost;
     println!(
@@ -535,6 +650,8 @@ fn cmd_arch_select(args: &Args) -> mcal::Result<()> {
             dataset_seed: ctx.seed,
             scale_factor: ctx.scale.dataset_factor(),
             classes_tag: preset.classes_tag.to_string(),
+            store: ctx.store.recipe(),
+            reference_price: Some(svc.price_per_label()),
         },
     )?;
     let pool = EnginePool::for_budget(jobs, preset.candidate_archs.len())?;

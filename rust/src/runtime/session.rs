@@ -227,9 +227,17 @@ impl<'e> ModelSession<'e> {
                             return Err(e);
                         }
                     };
-                    let src = ds.feature(indices[local]);
+                    let src = match ds.try_feature(indices[local]) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            // Restore state so the session survives a
+                            // failed shard read.
+                            self.state = Some(state);
+                            return Err(e);
+                        }
+                    };
                     let dst_off = (k * self.train_bs + row) * self.feat_dim;
-                    self.xs_host[dst_off..dst_off + self.feat_dim].copy_from_slice(src);
+                    self.xs_host[dst_off..dst_off + self.feat_dim].copy_from_slice(&src);
                     self.ys_host[k * self.train_bs + row] = label as i32;
                 }
                 self.lrs_host[k] = base_lr * schedule.lr_scale(step, sched_steps);
@@ -343,7 +351,7 @@ impl<'e> ModelSession<'e> {
         })?;
         let mut run = || -> Result<()> {
             for chunk in indices.chunks(self.eval_bs) {
-                let real = ds.gather_padded(chunk, self.eval_bs, &mut self.eval_host);
+                let real = ds.gather_padded(chunk, self.eval_bs, &mut self.eval_host)?;
                 let x = self
                     .engine
                     .buf_f32(&self.eval_host, &[self.eval_bs, self.feat_dim])?;
@@ -372,7 +380,7 @@ impl<'e> ModelSession<'e> {
                 self.eval_bs
             )));
         }
-        ds.gather_padded(indices, self.eval_bs, &mut self.eval_host);
+        ds.gather_padded(indices, self.eval_bs, &mut self.eval_host)?;
         let mut y_host = vec![0i32; self.eval_bs];
         for (i, &y) in labels.iter().enumerate() {
             y_host[i] = y as i32;
@@ -417,7 +425,7 @@ fn score_chunks(
 ) -> Result<()> {
     let mut offset = 0usize;
     for chunk in indices.chunks(eval_bs) {
-        let real = ds.gather_padded(chunk, eval_bs, host);
+        let real = ds.gather_padded(chunk, eval_bs, host)?;
         let x = engine.buf_f32(host, &[eval_bs, feat_dim])?;
         let out = engine.run_b(exe, &[state, &x])?;
         // Tuple output: (logits, margin, entropy, maxprob, pred).

@@ -34,6 +34,16 @@
 //!
 //! Initialization uses (a subsample of) the already-labeled set as existing
 //! centers, so new picks cover regions the labeled set misses.
+//!
+//! Storage alignment (gen 9): the compute shards above are cut at
+//! `chunk_rows` (512 in the shipped manifest), and disk-backed pools
+//! default to the same width per storage shard
+//! ([`crate::dataset::store::DEFAULT_SHARD_ROWS`]). With the two aligned,
+//! gathering one compute shard's features pages exactly one storage shard
+//! — the local greedy never thrashes the resident cache, and peak memory
+//! stays one shard of features on the host plus one on the device. Callers
+//! feed this module plain `&[f32]` slices, so nothing here depends on the
+//! backend; the alignment is a locality contract between the defaults.
 
 use crate::runtime::Engine;
 use crate::{Error, Result};

@@ -71,6 +71,8 @@ fn meta_for(dataset: &str, seed: u64, classes_tag: &str) -> CheckpointMeta {
         dataset_seed: seed,
         scale_factor: 0.05, // smoke_dataset's scale
         classes_tag: classes_tag.to_string(),
+        store: mcal::dataset::StoreRecipe::default(),
+        reference_price: None,
     }
 }
 

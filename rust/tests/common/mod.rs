@@ -28,10 +28,26 @@ pub fn setup() -> Option<Fixture> {
     })
 }
 
+/// Smoke-scale preset dataset. Backend-switchable: with
+/// `MCAL_TEST_POOL_STORE=disk` in the environment the pool is generated
+/// straight to disk shards (a fresh per-(suite, spec, seed) directory
+/// under the system temp dir) and paged through the bounded resident
+/// cache — CI runs every artifact-gated suite a second time this way to
+/// pin the gen-9 contract that results never depend on where the pool
+/// lives. Any other value (or unset) keeps the in-memory default.
 pub fn smoke_dataset(name: &str, seed: u64) -> (Dataset, DatasetPreset) {
     let p = preset(name, seed).unwrap();
     let spec = p.spec.scaled(0.05);
-    let mut ds = spec.generate().unwrap();
+    let mut ds = if std::env::var("MCAL_TEST_POOL_STORE").as_deref() == Ok("disk") {
+        let dir = std::env::temp_dir().join(format!(
+            "mcal_test_store_{}/{}-s{seed}",
+            std::process::id(),
+            spec.name
+        ));
+        spec.generate_sharded(&dir, mcal::dataset::DEFAULT_SHARD_ROWS, 2).unwrap()
+    } else {
+        spec.generate().unwrap()
+    };
     ds.name = name.to_string();
     (ds, p)
 }

@@ -222,7 +222,7 @@ fn prop_gather_padded_partitions_exactly() {
         let mut rng = Pcg32::new(3, 3);
         let idx = rng.sample_indices(n, take);
         let mut out = vec![f32::NAN; batch * ds.feat_dim];
-        let real = ds.gather_padded(&idx, batch, &mut out);
+        let real = ds.gather_padded(&idx, batch, &mut out).map_err(|e| e.to_string())?;
         if real != take {
             return Err("wrong real count".into());
         }
@@ -276,6 +276,7 @@ fn prop_error_profile_bounds_and_coverage() {
 use mcal::annotation::{OrderId, OrderRecord};
 use mcal::coordinator::persist::{decode, encode, Checkpoint, CheckpointMeta};
 use mcal::coordinator::{ProbeState, RunState};
+use mcal::dataset::{StoreBackend, StoreRecipe};
 use mcal::model::ArchKind;
 
 /// A structurally arbitrary `RunState` — not a *valid* one (no dataset
@@ -320,6 +321,12 @@ fn random_checkpoint(g: &mut Gen) -> Checkpoint {
         dataset_seed: g.rng.next_u64(),
         scale_factor: *g.choose(&[1.0, 0.1, 0.05, 0.02]),
         classes_tag: ["c10", "c100"][g.usize_in(0, 1)].to_string(),
+        store: StoreRecipe {
+            backend: *g.choose(&[StoreBackend::Mem, StoreBackend::Disk]),
+            dir: ["", "results/store", "/tmp/pool"][g.usize_in(0, 2)].to_string(),
+            shard_rows: g.usize_in(1, 4096) as u64,
+        },
+        reference_price: if g.bool() { Some(g.f64_in(1e-4, 0.1)) } else { None },
     };
     let state = random_run_state(g);
     if g.bool() {
@@ -404,5 +411,133 @@ fn prop_checkpoint_single_byte_corruption_always_errors() {
                 Err(msg)
             }
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Shard codec properties (dataset::store)
+// ---------------------------------------------------------------------------
+
+use std::path::Path;
+
+use mcal::coordinator::persist::{FaultFs, FaultMode};
+use mcal::dataset::store::{decode_shard, encode_shard, shard_file_name, write_shard};
+
+/// A random shard image with hostile float bit patterns sprinkled in:
+/// NaNs with payloads, signed zeros, infinities, subnormals — the codec
+/// must carry every one of them bit-exactly (gen 9).
+fn random_shard(g: &mut Gen) -> Vec<u8> {
+    let feat_dim = g.usize_in(1, 8);
+    let shard_rows = g.usize_in(1, 16);
+    let rows = g.usize_in(1, shard_rows);
+    let mut data = g.normal_vec(rows * feat_dim, 1.0);
+    let specials = [
+        f32::NAN,
+        f32::from_bits(0x7FC0_1234), // quiet NaN with a payload
+        f32::from_bits(0xFF80_0001), // signaling-NaN bit pattern
+        -0.0,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MIN_POSITIVE / 4.0, // subnormal
+    ];
+    for _ in 0..g.usize_in(0, 6) {
+        let at = g.usize_in(0, data.len() - 1);
+        data[at] = *g.choose(&specials);
+    }
+    let shard_index = g.usize_in(0, 40);
+    let total_rows = shard_index * shard_rows + rows;
+    encode_shard(shard_index, shard_rows, total_rows, feat_dim, &data)
+}
+
+#[test]
+fn prop_shard_roundtrip_is_bitwise_identity() {
+    forall("shard roundtrip", 0x5A4D0, 120, |g| {
+        let bytes = random_shard(g);
+        let back = decode_shard(&bytes).map_err(|e| format!("valid shard rejected: {e}"))?;
+        // Re-encode equality is field-by-field bit identity — floats via
+        // to_bits, so NaN payloads and -0.0 are covered.
+        let re = encode_shard(
+            back.shard_index as usize,
+            back.shard_rows as usize,
+            back.total_rows as usize,
+            back.feat_dim as usize,
+            &back.data,
+        );
+        if re != bytes {
+            return Err(format!(
+                "round-trip not identity: first diff at {:?}",
+                re.iter().zip(&bytes).position(|(a, b)| a != b)
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_every_truncation_and_corruption_errors() {
+    forall("shard corruption", 0x5A4D1, 40, |g| {
+        let bytes = random_shard(g);
+        // Every prefix truncation: a typed error, never a panic (forall
+        // would abort on one) and never an Ok.
+        for cut in 0..bytes.len() {
+            if decode_shard(&bytes[..cut]).is_ok() {
+                return Err(format!("{cut}-byte prefix of {} decoded Ok", bytes.len()));
+            }
+        }
+        // Every single-byte corruption position (one random XOR pattern per
+        // case): CRC32 detects any error burst this short.
+        let flip = g.usize_in(1, 255) as u8;
+        for pos in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[pos] ^= flip;
+            if decode_shard(&bad).is_ok() {
+                return Err(format!("corrupt byte {pos} (^{flip:#x}) decoded Ok"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Crash-safety matrix for [`write_shard`]: a fault at every write/rename
+/// boundary, under every fault mode, must leave the destination either
+/// the old shard or the complete new one — never torn bytes, never absent
+/// once it existed (same contract [`mcal::coordinator::persist::save_bytes`]
+/// pins for checkpoints).
+#[test]
+fn prop_shard_write_crash_leaves_old_or_new_never_torn() {
+    forall("shard crash matrix", 0x5A4D2, 12, |g| {
+        let old = random_shard(g);
+        let new = random_shard(g);
+        let dst = Path::new("store").join(shard_file_name(0));
+
+        // Fault-free session: seed the old shard, then overwrite it — and
+        // count the ops the overwrite needs so the matrix below covers
+        // exactly its crash points.
+        let mut fs = FaultFs::new();
+        write_shard(&mut fs, &dst, &old).map_err(|e| e.to_string())?;
+        let base_ops = fs.ops_used();
+        write_shard(&mut fs, &dst, &new).map_err(|e| e.to_string())?;
+        if fs.read(&dst) != Some(new.as_slice()) {
+            return Err("fault-free overwrite did not land".into());
+        }
+        let write_ops = fs.ops_used() - base_ops;
+
+        for op in 0..write_ops {
+            for mode in [FaultMode::Fail, FaultMode::Torn, FaultMode::Duplicate] {
+                let mut fs = FaultFs::new().crash_at(base_ops + op, mode);
+                write_shard(&mut fs, &dst, &old).map_err(|e| e.to_string())?;
+                if write_shard(&mut fs, &dst, &new).is_ok() {
+                    return Err(format!("crash at op {op} ({mode:?}) reported success"));
+                }
+                match fs.read(&dst) {
+                    Some(b) if b == old.as_slice() || b == new.as_slice() => {}
+                    Some(_) => {
+                        return Err(format!("crash at op {op} ({mode:?}) left torn bytes"))
+                    }
+                    None => return Err(format!("crash at op {op} ({mode:?}) lost the shard")),
+                }
+            }
+        }
+        Ok(())
     });
 }

@@ -1,0 +1,164 @@
+//! Gen-9 acceptance for the sharded feature store, at scale and end to
+//! end.
+//!
+//! Two contracts:
+//!
+//! - **out-of-core synthesis with bounded residency** (engine-free): a
+//!   200k-row pool generated straight to disk shards serves every row
+//!   bit-identically to the in-memory generator, while the resident-shard
+//!   cache's high-water mark never exceeds its capacity — neither during
+//!   a full sequential sweep nor under a random-access gather storm.
+//! - **mem-vs-disk run bit-identity** (artifact-gated): a full MCAL run
+//!   on a disk-backed pool lands on the same bits as the identical run on
+//!   the in-memory pool — error profiles, acquisition trajectory, costs,
+//!   and the order log. This is the end-to-end form of the gen-9 rule
+//!   that results never depend on where the pool lives.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mcal::annotation::{Ledger, SimService, SimServiceConfig};
+use mcal::coordinator::{run_mcal, LabelingDriver, RunParams, RunReport};
+use mcal::dataset::{Dataset, StoreBackend, SynthSpec};
+use mcal::model::ArchKind;
+use mcal::prng::Pcg32;
+
+mod common;
+use common::setup;
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mcal_store_scale_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn sharded_200k_pool_is_bit_identical_with_bounded_residency() {
+    const CACHE: usize = 4;
+    let spec = SynthSpec {
+        name: "store-scale".into(),
+        num_classes: 10,
+        per_class: 20_000,
+        feat_dim: 16,
+        subclusters: 2,
+        center_scale: 1.0,
+        spread: 0.4,
+        noise: 0.3,
+        seed: 9,
+    };
+    let dir = temp_dir("200k");
+    let mem = spec.generate().unwrap();
+    let disk = spec.generate_sharded(&dir, 512, CACHE).unwrap();
+    assert_eq!(mem.len(), 200_000);
+    assert_eq!(disk.len(), mem.len());
+    assert_eq!(disk.store_backend(), StoreBackend::Disk);
+
+    // Sequential sweep: every feature byte and label equal.
+    for i in 0..mem.len() {
+        let a = mem.feature(i);
+        let b = disk.feature(i);
+        assert!(
+            a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "row {i} bytes diverge"
+        );
+        assert_eq!(mem.groundtruth(i), disk.groundtruth(i));
+    }
+
+    // Random-access gather storm across the whole pool: per-shard-run
+    // gathers through the bounded cache must match the resident matrix.
+    let feat = mem.feat_dim;
+    let mut rng = Pcg32::new(7, 7);
+    let mut a = vec![0.0f32; 512 * feat];
+    let mut b = vec![0.0f32; 512 * feat];
+    for _ in 0..64 {
+        let idx = rng.sample_indices(mem.len(), 512);
+        mem.gather_padded(&idx, 512, &mut a).unwrap();
+        disk.gather_padded(&idx, 512, &mut b).unwrap();
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    // 391 shards paged through at most CACHE resident slots: the cache
+    // never exceeded capacity, and paging actually happened.
+    let stats = disk.store_stats().unwrap();
+    assert!(stats.high_water <= CACHE, "high_water {} > cap {CACHE}", stats.high_water);
+    assert!(stats.evictions > 0, "a 200k pool through a {CACHE}-shard cache must evict");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Deterministic key over a run report: every result field bit-compared.
+/// Both runs use the identical ingest config, so the order log (including
+/// the config-shaped residual segment) must match entry for entry.
+fn run_key(r: &RunReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "seed={} arch={} b={} s={} residual={} err_bits={}/{}/{} cost_bits={} \
+         human_only_bits={} stop={:?}",
+        r.seed,
+        r.arch,
+        r.b_size,
+        r.s_size,
+        r.residual_human,
+        r.overall_error.to_bits(),
+        r.machine_error.to_bits(),
+        r.residual_label_error.to_bits(),
+        r.cost.total().to_bits(),
+        r.human_only_cost.to_bits(),
+        r.stop_reason,
+    );
+    for it in &r.iterations {
+        let profile: Vec<u64> = it.eps_profile.iter().map(|e| e.to_bits()).collect();
+        let _ = writeln!(
+            s,
+            "iter={} b={} delta={} ledger_bits={} c_star_bits={:?} stable={} profile={profile:?}",
+            it.iter,
+            it.b_size,
+            it.delta,
+            it.ledger_total.to_bits(),
+            it.c_star.map(f64::to_bits),
+            it.stable,
+        );
+    }
+    for o in &r.orders {
+        let _ =
+            writeln!(s, "order={} labels={} dollars_bits={}", o.id, o.labels, o.dollars.to_bits());
+    }
+    s
+}
+
+#[test]
+fn full_mcal_run_is_bit_identical_mem_vs_disk() {
+    const CACHE: usize = 2;
+    let Some(f) = setup() else { return };
+    let p = mcal::dataset::preset("fashion-syn", 41).unwrap();
+    let spec = p.spec.scaled(0.05);
+    let mut mem = spec.generate().unwrap();
+    mem.name = "fashion-syn".into();
+    let dir = temp_dir("run");
+    let mut disk = spec.generate_sharded(&dir, 512, CACHE).unwrap();
+    disk.name = "fashion-syn".into();
+    assert_eq!(disk.store_backend(), StoreBackend::Disk);
+
+    let run = |ds: &Dataset| -> RunReport {
+        let ledger = Arc::new(Ledger::new());
+        let svc = SimService::new(SimServiceConfig::default().with_seed(41), ledger.clone());
+        let driver = LabelingDriver::new(&f.engine, &f.manifest);
+        let params = RunParams { seed: 41, ..Default::default() };
+        run_mcal(&driver, ds, &svc, ledger, ArchKind::Res18, p.classes_tag, params).unwrap()
+    };
+    let a = run(&mem);
+    let b = run(&disk);
+    assert_eq!(run_key(&a), run_key(&b), "mem and disk runs must land on the same bits");
+
+    // The whole run — training gathers, pool scoring, evaluation — stayed
+    // within the bounded resident cache.
+    let stats = disk.store_stats().unwrap();
+    assert!(stats.high_water <= CACHE, "resident cache exceeded capacity: {}", stats.high_water);
+    let _ = std::fs::remove_dir_all(&dir);
+}
