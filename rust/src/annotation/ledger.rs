@@ -127,6 +127,22 @@ impl Ledger {
         g.exploration += dollars;
     }
 
+    /// Restore training spend a *previous incarnation* of this run already
+    /// paid — the `mcal serve` resume path: a killed daemon's per-job
+    /// ledger dies with the process, but the dollars were spent, so the
+    /// restarted job re-seats them (amount plus retrain count, both
+    /// carried by the checkpoint's `RunState`) before resuming. Adding the
+    /// inherited sum to a fresh ledger's `0.0` reproduces the killed
+    /// run's training accumulator bit-exactly, which is what keeps
+    /// `ledger.total()` — a *decision input* to the C* search — identical
+    /// between an uninterrupted run and a kill+resume at any checkpoint
+    /// (`tests/serve_recover.rs`).
+    pub fn inherit_training(&self, dollars: f64, retrains: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.training += dollars;
+        g.retrains += retrains;
+    }
+
     /// Log one submitted acquisition order (provenance; totals are charged
     /// separately via [`Ledger::charge_labels`]).
     pub fn record_order(&self, id: OrderId, labels: u64, dollars: f64) {
@@ -152,6 +168,71 @@ impl Ledger {
 
     pub fn total(&self) -> f64 {
         self.snapshot().total()
+    }
+}
+
+/// The shared-fleet budget view `mcal serve` answers `ledger` queries
+/// from: a registry of per-job [`Ledger`]s in job-admission order (which
+/// the daemon makes deterministic — jobs register by ascending id), with
+/// cross-job aggregation that inherits the per-job determinism contract.
+/// Each job still charges only its own ledger — the fleet view is pure
+/// aggregation, never a charge path, so attaching it moves no result bit.
+#[derive(Default)]
+pub struct FleetLedger {
+    jobs: Mutex<Vec<(String, std::sync::Arc<Ledger>)>>,
+}
+
+impl FleetLedger {
+    pub fn new() -> Self {
+        FleetLedger::default()
+    }
+
+    /// Register one job's ledger under `tag`. Registration order is the
+    /// aggregation order below, so callers must register deterministically
+    /// (the daemon registers in ascending job id order).
+    pub fn register(&self, tag: impl Into<String>, ledger: std::sync::Arc<Ledger>) {
+        self.jobs.lock().unwrap().push((tag.into(), ledger));
+    }
+
+    /// Per-job `(tag, totals)` in registration order.
+    pub fn per_job(&self) -> Vec<(String, CostBreakdown)> {
+        self.jobs.lock().unwrap().iter().map(|(t, l)| (t.clone(), l.snapshot())).collect()
+    }
+
+    /// Fleet-wide `(price, labels)` buckets: per-job buckets merged by
+    /// exact price bits, in registration-then-first-charge order — the
+    /// same split-invariant integer-count representation each job keeps,
+    /// so the fleet dollar column stays a pure function of what was
+    /// bought across every job.
+    pub fn combined_buckets(&self) -> Vec<(f64, u64)> {
+        let mut merged: Vec<(f64, u64)> = Vec::new();
+        for (_, ledger) in self.jobs.lock().unwrap().iter() {
+            for (price, count) in ledger.label_buckets() {
+                match merged.iter_mut().find(|(p, _)| p.to_bits() == price.to_bits()) {
+                    Some(slot) => slot.1 += count,
+                    None => merged.push((price, count)),
+                }
+            }
+        }
+        merged
+    }
+
+    /// Fleet-wide totals: the per-job breakdowns summed in registration
+    /// order, with the human-dollar column recomputed from
+    /// [`FleetLedger::combined_buckets`] so it stays split-invariant at
+    /// the fleet level too.
+    pub fn snapshot(&self) -> CostBreakdown {
+        let mut out = CostBreakdown::default();
+        for (_, b) in self.per_job() {
+            out.training += b.training;
+            out.exploration += b.exploration;
+            out.retrains += b.retrains;
+        }
+        for (price, count) in self.combined_buckets() {
+            out.human_labeling += count as f64 * price;
+            out.labels_purchased += count;
+        }
+        out
     }
 }
 
@@ -222,6 +303,78 @@ mod tests {
         assert_eq!(s.labels_purchased, 35);
         assert!((s.human_labeling - (15.0 * 0.04 + 20.0 * 0.003)).abs() < 1e-12);
         assert_eq!(mixed.label_buckets(), vec![(0.04, 15), (0.003, 20)]);
+    }
+
+    /// The serve-resume identity: seeding a fresh ledger with an
+    /// inherited training sum reproduces the original accumulator
+    /// bit-exactly (adding one partial sum to 0.0 is exact), so the
+    /// subsequent charge stream lands on the same total bits.
+    #[test]
+    fn inherited_training_matches_uninterrupted_accumulation() {
+        let charges = [0.37, 1.25, 0.003, 2.5, 0.11];
+        let split_at = 3;
+
+        let uninterrupted = Ledger::new();
+        for &c in &charges {
+            uninterrupted.charge_training(c);
+        }
+
+        // The "killed at round `split_at`" incarnation's accumulator.
+        let killed = Ledger::new();
+        for &c in &charges[..split_at] {
+            killed.charge_training(c);
+        }
+        let inherited = killed.snapshot();
+
+        let resumed = Ledger::new();
+        resumed.inherit_training(inherited.training, inherited.retrains);
+        for &c in &charges[split_at..] {
+            resumed.charge_training(c);
+        }
+
+        let a = uninterrupted.snapshot();
+        let b = resumed.snapshot();
+        assert_eq!(a.training.to_bits(), b.training.to_bits());
+        assert_eq!(a.retrains, b.retrains);
+        assert_eq!(uninterrupted.total().to_bits(), resumed.total().to_bits());
+    }
+
+    /// Fleet aggregation is pure: per-job rows in registration order,
+    /// buckets merged by price bits, totals recomputed from the merged
+    /// integer counts.
+    #[test]
+    fn fleet_ledger_aggregates_per_job_and_merges_buckets() {
+        let a = Arc::new(Ledger::new());
+        a.charge_labels(100, 0.04);
+        a.charge_training(2.0);
+        let b = Arc::new(Ledger::new());
+        b.charge_labels(50, 0.04);
+        b.charge_labels(30, 0.003);
+        b.charge_training(1.5);
+
+        let fleet = FleetLedger::new();
+        fleet.register("job_0001", a.clone());
+        fleet.register("job_0002", b.clone());
+
+        let rows = fleet.per_job();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "job_0001");
+        assert_eq!(rows[0].1.labels_purchased, 100);
+        assert_eq!(rows[1].0, "job_0002");
+        assert_eq!(rows[1].1.labels_purchased, 80);
+
+        assert_eq!(fleet.combined_buckets(), vec![(0.04, 150), (0.003, 30)]);
+        let s = fleet.snapshot();
+        assert_eq!(s.labels_purchased, 180);
+        assert_eq!(s.retrains, 2);
+        assert!((s.training - 3.5).abs() < 1e-12);
+        // The fleet dollar column equals 150 × $0.04 + 30 × $0.003 exactly
+        // as the merged-bucket sum computes it — a pure function of the
+        // integer counts, however the jobs interleaved their purchases.
+        assert_eq!(
+            s.human_labeling.to_bits(),
+            (150.0f64 * 0.04 + 30.0f64 * 0.003).to_bits()
+        );
     }
 
     #[test]

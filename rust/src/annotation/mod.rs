@@ -29,7 +29,7 @@ pub mod sim;
 pub use ingest::{
     GatedLabels, IngestConfig, IngestHandle, LabelChunk, LabelOrder, OrderId, TierRoute,
 };
-pub use ledger::{CostBreakdown, Ledger, OrderRecord};
+pub use ledger::{CostBreakdown, FleetLedger, Ledger, OrderRecord};
 pub use market::{TierMarket, TierSpec, TierUsage};
 pub use sim::{SimService, SimServiceConfig};
 

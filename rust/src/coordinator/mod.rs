@@ -49,6 +49,16 @@
 //!   provenance, including warm-start provenance) consumed by the
 //!   experiment drivers and the parallel fleet
 //!   ([`crate::experiments::fleet`]).
+//! - [`serve`]: the always-on half — a daemon owning one engine pool and
+//!   one annotator-fleet budget that accepts labeling *jobs* over a
+//!   line-delimited control socket, schedules them on a bounded run queue
+//!   (Queued → Running → Checkpointed → Done/Failed, each job durable as
+//!   a [`persist::JobMeta`] beside its round checkpoints), and
+//!   auto-resumes every interrupted job on restart through the warm
+//!   path. Gen-10 determinism: a job's result bits are identical whether
+//!   run uninterrupted, killed and resumed at any checkpointed round, or
+//!   co-scheduled beside other jobs on the shared pool
+//!   (`tests/serve_queue.rs`, `tests/serve_recover.rs`).
 //!
 //! To add a new labeling strategy, implement [`Policy`] and hand it to
 //! [`LabelingDriver::run`] — the loop, environment and report plumbing are
@@ -62,6 +72,7 @@ pub mod events;
 pub mod mcal;
 pub mod persist;
 pub mod policy;
+pub mod serve;
 pub mod state;
 pub mod tiered;
 
@@ -71,7 +82,13 @@ pub use budget::{run_budget, BudgetPolicy};
 pub use env::{LabelingEnv, RoutePlan, RunParams};
 pub use events::{IterationRecord, RunReport, StopReason, WarmStartReport};
 pub use mcal::{run_mcal, run_mcal_warm, McalPolicy};
-pub use persist::{Checkpoint, CheckpointMeta, CheckpointPolicy};
+pub use persist::{
+    Checkpoint, CheckpointMeta, CheckpointPolicy, JobDigest, JobMeta, JobPhase, JobSpec,
+};
 pub use policy::{Decision, LabelingDriver, Policy};
+pub use serve::{
+    run_job, serve, JobObserver, JobQueue, JobSnapshot, LedgerSnapshot, Request, Response,
+    ServeConfig,
+};
 pub use state::{ProbeState, RunState};
 pub use tiered::TieredPolicy;

@@ -94,6 +94,10 @@ const WRITE_CHUNK: usize = 64 * 1024;
 
 const KIND_RUN: u8 = 1;
 const KIND_PROBE: u8 = 2;
+/// `mcal serve` job records ([`JobMeta`]) share the container format
+/// (same magic, version, CRC discipline) under their own kind byte, so
+/// neither decoder ever accepts the other's files.
+const KIND_JOB: u8 = 3;
 
 fn perr(msg: impl Into<String>) -> Error {
     Error::Persist(msg.into())
@@ -556,10 +560,11 @@ pub fn encode(ckpt: &Checkpoint) -> Vec<u8> {
     out
 }
 
-/// Decode a checkpoint byte image, defensively: truncation, corruption
-/// (CRC or structural), version mismatch, and unknown kinds all return a
-/// typed error — never a panic, never a silently wrong state.
-pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+/// The container checks every kind shares, in pinned order: size floor,
+/// magic, version range, declared-vs-actual length, CRC over the body.
+/// Returns `(version, kind, payload)` with the header and trailer
+/// stripped.
+fn container(bytes: &[u8]) -> Result<(u16, u8, &[u8])> {
     if bytes.len() < HEADER_LEN + TRAILER_LEN {
         return Err(perr(format!(
             "truncated checkpoint: {} bytes, header + trailer need {}",
@@ -594,7 +599,15 @@ pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
             "CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"
         )));
     }
-    let mut d = Dec::new(&body[HEADER_LEN..]);
+    Ok((version, kind, &body[HEADER_LEN..]))
+}
+
+/// Decode a checkpoint byte image, defensively: truncation, corruption
+/// (CRC or structural), version mismatch, and unknown kinds all return a
+/// typed error — never a panic, never a silently wrong state.
+pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+    let (version, kind, payload) = container(bytes)?;
+    let mut d = Dec::new(payload);
     let ckpt = match kind {
         KIND_RUN => {
             let meta = decode_meta(&mut d, version)?;
@@ -606,6 +619,9 @@ pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
             let run = decode_run_state(&mut d)?;
             let shadow_orders = decode_orders(&mut d)?;
             Checkpoint::Probe { meta, state: ProbeState { run, shadow_orders } }
+        }
+        KIND_JOB => {
+            return Err(perr("kind 3 is a serve job record, not a checkpoint (use decode_job)"))
         }
         other => return Err(perr(format!("unknown checkpoint kind {other}"))),
     };
@@ -927,6 +943,308 @@ impl CheckpointPolicy {
         let ckpt = Checkpoint::Run { meta: self.meta.clone(), state };
         save(&self.round_path(rounds), &ckpt)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Job records (`mcal serve`)
+// ---------------------------------------------------------------------------
+
+/// What one serve job runs: the submit request's payload, persisted
+/// verbatim in the job record so a restarted daemon can re-run the job
+/// without the submitting client. Floats ride the wire and the disk as
+/// raw bits, so a spec round-trips bit-exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Dataset preset name (`fashion-syn`, …).
+    pub dataset: String,
+    /// Architecture name (explicit — serve jobs never arch-select).
+    pub arch: String,
+    /// Run seed; doubles as the dataset generation seed.
+    pub seed: u64,
+    /// ε — the run's overall labeling error bound.
+    pub epsilon: f64,
+    /// Dataset scale factor (`1.0` = the preset's full size).
+    pub scale_factor: f64,
+    /// Flat price per label the job's simulated service charges.
+    pub price: f64,
+    /// Checkpoint cadence in completed plan rounds (0 is treated as 1).
+    pub checkpoint_every: u64,
+}
+
+/// Where a job is in its life cycle:
+/// `Queued → Running → Checkpointed → Done | Failed`. `Checkpointed`
+/// is a sub-state of running ("running, with a resume point on disk") —
+/// on daemon restart both `Running` and `Checkpointed` jobs re-queue,
+/// and admission decides cold-vs-warm by listing the job's round files.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobPhase {
+    /// Submitted, waiting for a run-queue slot.
+    Queued,
+    /// Admitted onto the engine pool, no checkpoint written yet.
+    Running,
+    /// Running, with at least one round checkpoint on disk.
+    Checkpointed,
+    /// Finished successfully (the record carries a [`JobDigest`]).
+    Done,
+    /// Finished with an error (the record carries the message).
+    Failed,
+}
+
+impl JobPhase {
+    /// Wire/status-line name (`queued`, `running`, …).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobPhase::Queued => "queued",
+            JobPhase::Running => "running",
+            JobPhase::Checkpointed => "checkpointed",
+            JobPhase::Done => "done",
+            JobPhase::Failed => "failed",
+        }
+    }
+
+    /// Inverse of [`JobPhase::as_str`].
+    pub fn parse(s: &str) -> Option<JobPhase> {
+        match s {
+            "queued" => Some(JobPhase::Queued),
+            "running" => Some(JobPhase::Running),
+            "checkpointed" => Some(JobPhase::Checkpointed),
+            "done" => Some(JobPhase::Done),
+            "failed" => Some(JobPhase::Failed),
+            _ => None,
+        }
+    }
+
+    /// Whether the job has finished (successfully or not).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobPhase::Done | JobPhase::Failed)
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            JobPhase::Queued => 0,
+            JobPhase::Running => 1,
+            JobPhase::Checkpointed => 2,
+            JobPhase::Done => 3,
+            JobPhase::Failed => 4,
+        }
+    }
+
+    fn from_code(code: u8) -> Result<JobPhase> {
+        match code {
+            0 => Ok(JobPhase::Queued),
+            1 => Ok(JobPhase::Running),
+            2 => Ok(JobPhase::Checkpointed),
+            3 => Ok(JobPhase::Done),
+            4 => Ok(JobPhase::Failed),
+            other => Err(perr(format!("unknown job phase {other}"))),
+        }
+    }
+}
+
+/// The headline result bits of a finished job, embedded in its `Done`
+/// record so `mcal status` can answer without re-reading run artifacts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobDigest {
+    /// |B| — human-labeled training set size.
+    pub b_size: u64,
+    /// |S*| — machine-labeled set size.
+    pub s_size: u64,
+    /// Residual human-labeled samples outside S*.
+    pub residual_human: u64,
+    /// Overall labeling error.
+    pub overall_error: f64,
+    /// Machine-label error over S*.
+    pub machine_error: f64,
+    /// Residual human-label error.
+    pub residual_label_error: f64,
+    /// Total dollars (human + training + exploration).
+    pub cost_total: f64,
+    /// Labels purchased across the run.
+    pub labels_purchased: u64,
+    /// Stop reason, as its debug name.
+    pub stop: String,
+}
+
+impl JobDigest {
+    /// Digest a finished run's report.
+    pub fn of(r: &super::events::RunReport) -> JobDigest {
+        JobDigest {
+            b_size: r.b_size as u64,
+            s_size: r.s_size as u64,
+            residual_human: r.residual_human as u64,
+            overall_error: r.overall_error,
+            machine_error: r.machine_error,
+            residual_label_error: r.residual_label_error,
+            cost_total: r.cost.total(),
+            labels_purchased: r.cost.labels_purchased,
+            stop: format!("{:?}", r.stop_reason),
+        }
+    }
+}
+
+/// One job's durable record — `job.meta` in the job's checkpoint
+/// directory (not a `*.ckpt`, so [`list_checkpoints`] never mistakes it
+/// for a round file). The daemon rewrites it crash-safely at every phase
+/// transition; a restarted daemon rebuilds its whole run queue by
+/// scanning these.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobMeta {
+    /// Job id (unique within a serve root, ascending by submission).
+    pub id: u64,
+    /// What the job runs.
+    pub spec: JobSpec,
+    /// Life-cycle phase at the last durable write.
+    pub phase: JobPhase,
+    /// Completed plan rounds at the last durable write. Invariant: never
+    /// ahead of the newest round checkpoint on disk (the round file is
+    /// written first).
+    pub rounds: u64,
+    /// Failure message (`Failed` records).
+    pub error: Option<String>,
+    /// Headline results (`Done` records).
+    pub digest: Option<JobDigest>,
+}
+
+/// File name of the per-job record inside its checkpoint directory.
+pub const JOB_META_FILE: &str = "job.meta";
+
+/// Encode a job record to its on-disk byte image — the checkpoint
+/// container (magic, version, kind [`KIND_JOB`], length, CRC trailer)
+/// around a job payload. The optional tail (error message, digest) rides
+/// in a v2-style length-prefixed extension block with the same skipping
+/// rules as the checkpoint meta, so future fields can ride along without
+/// breaking this reader.
+pub fn encode_job(job: &JobMeta) -> Vec<u8> {
+    let mut p = Enc::new();
+    p.u64(job.id);
+    p.str(&job.spec.dataset);
+    p.str(&job.spec.arch);
+    p.u64(job.spec.seed);
+    p.f64(job.spec.epsilon);
+    p.f64(job.spec.scale_factor);
+    p.f64(job.spec.price);
+    p.u64(job.spec.checkpoint_every);
+    p.u8(job.phase.code());
+    p.u64(job.rounds);
+    let mut ext = Enc::new();
+    match &job.error {
+        Some(msg) => {
+            ext.u8(1);
+            ext.str(msg);
+        }
+        None => ext.u8(0),
+    }
+    match &job.digest {
+        Some(d) => {
+            ext.u8(1);
+            ext.u64(d.b_size);
+            ext.u64(d.s_size);
+            ext.u64(d.residual_human);
+            ext.f64(d.overall_error);
+            ext.f64(d.machine_error);
+            ext.f64(d.residual_label_error);
+            ext.f64(d.cost_total);
+            ext.u64(d.labels_purchased);
+            ext.str(&d.stop);
+        }
+        None => ext.u8(0),
+    }
+    p.u64(ext.buf.len() as u64);
+    p.buf.extend_from_slice(&ext.buf);
+
+    let mut out = Vec::with_capacity(HEADER_LEN + p.buf.len() + TRAILER_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.push(KIND_JOB);
+    out.extend_from_slice(&(p.buf.len() as u64).to_le_bytes());
+    out.extend_from_slice(&p.buf);
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Decode a job record, with [`decode`]'s defensive contract: truncation,
+/// corruption, version/kind mismatch, and trailing bytes are all typed
+/// errors, never a panic.
+pub fn decode_job(bytes: &[u8]) -> Result<JobMeta> {
+    let (version, kind, payload) = container(bytes)?;
+    if kind != KIND_JOB {
+        return Err(perr(format!("kind {kind} is not a job record")));
+    }
+    if version < 2 {
+        return Err(perr(format!("job records need format version >= 2, got {version}")));
+    }
+    let mut d = Dec::new(payload);
+    let id = d.u64()?;
+    let dataset = d.str()?;
+    let arch = d.str()?;
+    let seed = d.u64()?;
+    let epsilon = d.f64()?;
+    let scale_factor = d.f64()?;
+    let price = d.f64()?;
+    let checkpoint_every = d.u64()?;
+    let phase = JobPhase::from_code(d.u8()?)?;
+    let rounds = d.u64()?;
+    let ext_len = d.len(1)?;
+    let mut x = Dec::new(d.take(ext_len)?);
+    let error = match x.u8()? {
+        0 => None,
+        _ => Some(x.str()?),
+    };
+    let digest = match x.u8()? {
+        0 => None,
+        _ => Some(JobDigest {
+            b_size: x.u64()?,
+            s_size: x.u64()?,
+            residual_human: x.u64()?,
+            overall_error: x.f64()?,
+            machine_error: x.f64()?,
+            residual_label_error: x.f64()?,
+            cost_total: x.f64()?,
+            labels_purchased: x.u64()?,
+            stop: x.str()?,
+        }),
+    };
+    // Trailing bytes inside the extension block belong to future fields —
+    // skipped; trailing bytes after it are corruption.
+    if d.remaining() != 0 {
+        return Err(perr(format!("{} trailing payload bytes after decode", d.remaining())));
+    }
+    Ok(JobMeta {
+        id,
+        spec: JobSpec {
+            dataset,
+            arch,
+            seed,
+            epsilon,
+            scale_factor,
+            price,
+            checkpoint_every,
+        },
+        phase,
+        rounds,
+        error,
+        digest,
+    })
+}
+
+/// Crash-safely write a job record through a [`CkptFs`] (the same
+/// tmp + fsync + rename path checkpoints use, so the [`FaultFs`] crash
+/// matrix covers job records too).
+pub fn save_job(fs: &mut dyn CkptFs, path: &Path, job: &JobMeta) -> Result<()> {
+    save_bytes(fs, path, &encode_job(job))
+}
+
+/// [`save_job`] on the real filesystem.
+pub fn write_job(path: &Path, job: &JobMeta) -> Result<()> {
+    save_job(&mut RealFs::default(), path, job)
+}
+
+/// Read and decode the job record at `path`.
+pub fn load_job(path: &Path) -> Result<JobMeta> {
+    let bytes =
+        std::fs::read(path).map_err(|e| perr(format!("read {}: {e}", path.display())))?;
+    decode_job(&bytes)
 }
 
 #[cfg(test)]
@@ -1293,5 +1611,174 @@ mod tests {
         assert_eq!(listed, vec![path.clone()]);
 
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    // -- job records --------------------------------------------------------
+
+    fn job(phase: JobPhase) -> JobMeta {
+        JobMeta {
+            id: 7,
+            spec: JobSpec {
+                dataset: "fashion-syn".into(),
+                arch: "res18".into(),
+                seed: 29,
+                epsilon: 0.05,
+                scale_factor: 0.02,
+                price: 0.003,
+                checkpoint_every: 2,
+            },
+            phase,
+            rounds: 4,
+            error: None,
+            digest: None,
+        }
+    }
+
+    #[test]
+    fn job_roundtrip_all_phases_and_optional_fields() {
+        for phase in
+            [JobPhase::Queued, JobPhase::Running, JobPhase::Checkpointed, JobPhase::Done, JobPhase::Failed]
+        {
+            let j = job(phase);
+            assert_eq!(decode_job(&encode_job(&j)).unwrap(), j);
+            // Phase names round-trip too (the wire protocol uses them).
+            assert_eq!(JobPhase::parse(phase.as_str()), Some(phase));
+        }
+
+        let mut failed = job(JobPhase::Failed);
+        failed.error = Some("engine exploded: lane 3".into());
+        assert_eq!(decode_job(&encode_job(&failed)).unwrap(), failed);
+
+        let mut done = job(JobPhase::Done);
+        done.digest = Some(JobDigest {
+            b_size: 120,
+            s_size: 800,
+            residual_human: 33,
+            overall_error: 0.031,
+            machine_error: 0.012,
+            residual_label_error: 0.0,
+            cost_total: 4.217,
+            labels_purchased: 153,
+            stop: "Stable".into(),
+        });
+        let bytes = encode_job(&done);
+        assert_eq!(decode_job(&bytes).unwrap(), done);
+        // Encode is canonical: decode → re-encode is byte identity.
+        assert_eq!(encode_job(&decode_job(&bytes).unwrap()), bytes);
+    }
+
+    #[test]
+    fn job_and_checkpoint_decoders_reject_each_other() {
+        let job_bytes = encode_job(&job(JobPhase::Running));
+        let err = decode(&job_bytes).unwrap_err().to_string();
+        assert!(err.contains("job record"), "checkpoint decoder on a job record: {err}");
+
+        let ckpt_bytes = encode(&Checkpoint::Run { meta: meta(), state: state(2, 3, 5) });
+        let err = decode_job(&ckpt_bytes).unwrap_err().to_string();
+        assert!(err.contains("not a job record"), "job decoder on a checkpoint: {err}");
+    }
+
+    #[test]
+    fn job_extension_block_skips_future_fields_but_rejects_outer_trailing() {
+        let j = job(JobPhase::Checkpointed);
+        let bytes = encode_job(&j);
+        let body = &bytes[..bytes.len() - TRAILER_LEN];
+        let payload = &body[HEADER_LEN..];
+
+        // A future writer appends fields inside the extension block: this
+        // reader must skip them (same rule the v2 checkpoint meta pins).
+        let ext_len_off = {
+            // Payload layout: id(8) dataset arch seed(8) eps(8) scale(8)
+            // price(8) every(8) phase(1) rounds(8) ext_len(8) ext...
+            let mut off = 8;
+            off += 8 + j.spec.dataset.len();
+            off += 8 + j.spec.arch.len();
+            off += 8 * 5 + 1 + 8;
+            off
+        };
+        let ext_len =
+            u64::from_le_bytes(payload[ext_len_off..ext_len_off + 8].try_into().unwrap());
+        let mut extended = payload.to_vec();
+        extended[ext_len_off..ext_len_off + 8].copy_from_slice(&(ext_len + 3).to_le_bytes());
+        extended.extend_from_slice(&[0xAA, 0xBB, 0xCC]);
+        let grown = assemble(FORMAT_VERSION, KIND_JOB, &extended);
+        assert_eq!(decode_job(&grown).unwrap(), j, "future ext fields must be skipped");
+
+        // Bytes after the extension block are corruption, not extension.
+        let mut trailing = payload.to_vec();
+        trailing.extend_from_slice(&[0xAA, 0xBB, 0xCC]);
+        let bad = assemble(FORMAT_VERSION, KIND_JOB, &trailing);
+        let err = decode_job(&bad).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+
+        // And version 1 never carried job records.
+        let old = assemble(1, KIND_JOB, payload);
+        let err = decode_job(&old).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+
+        // Unknown phase codes are typed errors.
+        let mut bad_phase = payload.to_vec();
+        bad_phase[ext_len_off - 9] = 9;
+        let err = decode_job(&assemble(FORMAT_VERSION, KIND_JOB, &bad_phase))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown job phase"), "{err}");
+    }
+
+    #[test]
+    fn job_truncation_and_corruption_are_typed_errors() {
+        let mut done = job(JobPhase::Done);
+        done.error = Some("x".into());
+        done.digest = Some(JobDigest {
+            b_size: 1,
+            s_size: 2,
+            residual_human: 3,
+            overall_error: 0.1,
+            machine_error: 0.2,
+            residual_label_error: 0.3,
+            cost_total: 0.4,
+            labels_purchased: 5,
+            stop: "Stable".into(),
+        });
+        let bytes = encode_job(&done);
+        for n in 0..bytes.len() {
+            assert!(decode_job(&bytes[..n]).is_err(), "prefix {n} must not decode");
+        }
+        for i in 0..bytes.len() {
+            let mut flipped = bytes.clone();
+            flipped[i] ^= 0x01;
+            assert!(decode_job(&flipped).is_err(), "flip at byte {i} must not decode");
+        }
+    }
+
+    #[test]
+    fn save_job_crash_matrix_leaves_old_or_new_record() {
+        let dest = Path::new("serve/job_0007").join(JOB_META_FILE);
+        let old = job(JobPhase::Running);
+        let mut new = job(JobPhase::Checkpointed);
+        new.rounds = 6;
+        let (old_bytes, new_bytes) = (encode_job(&old), encode_job(&new));
+
+        let mut fs = FaultFs::new();
+        save_job(&mut fs, &dest, &old).unwrap();
+        let ops_per_save = fs.ops_used();
+
+        for mode in [FaultMode::Fail, FaultMode::Torn, FaultMode::Duplicate] {
+            for crash_op in 0..ops_per_save {
+                let mut fs = FaultFs::new().crash_at(ops_per_save + crash_op, mode);
+                save_job(&mut fs, &dest, &old).unwrap();
+                let crashed = save_job(&mut fs, &dest, &new);
+
+                let on_disk = fs.read(&dest).expect("job record never disappears");
+                let decoded = decode_job(on_disk).expect("job record never torn");
+                assert!(
+                    on_disk == old_bytes.as_slice() || on_disk == new_bytes.as_slice(),
+                    "{mode:?} crash at op {crash_op} tore the record"
+                );
+                if crashed.is_ok() {
+                    assert_eq!(decoded, new, "reported success must mean the new record");
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,1606 @@
+//! `mcal serve` — a long-lived multi-job labeling daemon.
+//!
+//! The daemon owns one engine pool and one annotator-fleet budget and
+//! accepts labeling **jobs** over a line-delimited control socket (TCP on
+//! localhost). Each job is a self-contained MCAL run — dataset preset,
+//! architecture, seed, ε, scale, flat label price — that the daemon
+//! schedules over a bounded run queue, auto-checkpoints every N rounds
+//! through [`LabelingDriver`]'s checkpoint seam, and records durably as a
+//! [`JobMeta`] in the job's checkpoint directory. A killed daemon
+//! restarts by scanning `job_*/job.meta`: every interrupted job re-queues
+//! and resumes from its newest round checkpoint through the existing
+//! `run_warm` path.
+//!
+//! ## Wire protocol
+//!
+//! One request per line, one response per line. A frame is
+//!
+//! ```text
+//! MCAL1 <crc32:8 lowercase hex> <canonical json>\n
+//! ```
+//!
+//! — the persist house style on a socket: a magic, a CRC over the JSON
+//! bytes, and a payload whose every truncation or byte flip is a typed
+//! [`Error`], never a panic (`tests/properties.rs` fuzzes this). The
+//! JSON subset is deliberately tiny — strings, `u64` numbers, arrays,
+//! objects; floats ride as `u64` bits in `*_bits` fields — and the
+//! encoder is canonical (fixed field order, no whitespace), so
+//! encode → decode → re-encode is byte identity.
+//!
+//! ## Determinism contract (gen 10)
+//!
+//! A job's result bits are identical whether it runs uninterrupted, is
+//! killed and resumed from any checkpointed round, or runs beside other
+//! jobs on the shared pool. Two pieces make the resume leg exact where
+//! `mcal resume` is documented to diverge (see `tests/checkpoint_resume.rs`):
+//! the warm re-buy re-purchases the captured T∪B at the same price
+//! (integer label-count buckets — human dollars bit-equal by
+//! construction), and [`run_job`] re-seats the captured training spend
+//! into the fresh ledger via [`Ledger::inherit_training`] before
+//! re-entering the loop — adding the partial sum to 0.0 is exact in f64,
+//! so `ledger.total()` (which feeds the C* search via
+//! [`super::mcal::McalPolicy`]) is bit-equal to the uninterrupted run's
+//! at the resume round, and every decision after it replays identically.
+//! Co-scheduling is free: each job owns its ledger, PRNG streams, and
+//! engine lane; the fleet view ([`FleetLedger`]) is pure aggregation.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write as IoWrite};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::annotation::{FleetLedger, Ledger, SimService, SimServiceConfig, TierSpec};
+use crate::model::ArchKind;
+use crate::runtime::{Engine, EnginePool, Manifest};
+use crate::{Error, Result};
+
+use super::env::{LabelingEnv, RunParams};
+use super::events::{RunReport, StopReason};
+use super::mcal::McalPolicy;
+use super::persist::{
+    self, crc32, Checkpoint, CheckpointMeta, CheckpointPolicy, JobDigest, JobMeta, JobPhase,
+    JobSpec, JOB_META_FILE,
+};
+use super::policy::{Decision, LabelingDriver, Policy};
+use super::state::RunState;
+
+fn cerr(msg: impl Into<String>) -> Error {
+    Error::Coordinator(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Frame codec
+// ---------------------------------------------------------------------------
+
+/// `"MCAL1 "` — the frame magic (note the trailing space).
+const FRAME_MAGIC: &[u8; 6] = b"MCAL1 ";
+/// Magic (6) + crc hex (8) + separating space (1).
+const FRAME_HEADER: usize = 15;
+
+/// Wrap canonical JSON bytes into one wire frame:
+/// `MCAL1 <crc32 hex> <json>\n`. The JSON must not contain a raw newline
+/// (the canonical encoder escapes all control characters, so it never
+/// does).
+pub fn encode_frame(json: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER + json.len() + 1);
+    out.extend_from_slice(FRAME_MAGIC);
+    out.extend_from_slice(format!("{:08x}", crc32(json)).as_bytes());
+    out.push(b' ');
+    out.extend_from_slice(json);
+    out.push(b'\n');
+    out
+}
+
+/// Strip and verify one wire frame, returning the JSON payload bytes.
+/// Defensive by construction: every prefix truncation and every
+/// single-byte corruption of a valid frame lands in one of the typed
+/// error arms below (the CRC32 catches anything the structural checks
+/// miss — it detects every burst ≤ 32 bits).
+pub fn decode_frame(bytes: &[u8]) -> Result<&[u8]> {
+    if bytes.is_empty() || bytes[bytes.len() - 1] != b'\n' {
+        return Err(cerr("unterminated frame (no trailing newline)"));
+    }
+    let body = &bytes[..bytes.len() - 1];
+    if body.contains(&b'\n') {
+        return Err(cerr("embedded newline in frame"));
+    }
+    if body.len() < FRAME_HEADER {
+        return Err(cerr(format!("frame too short: {} bytes", body.len())));
+    }
+    if &body[..FRAME_MAGIC.len()] != FRAME_MAGIC {
+        return Err(cerr("bad frame magic"));
+    }
+    let hex = &body[6..14];
+    let mut want: u32 = 0;
+    for &h in hex {
+        let digit = match h {
+            b'0'..=b'9' => h - b'0',
+            b'a'..=b'f' => h - b'a' + 10,
+            _ => return Err(cerr("corrupt frame checksum (not lowercase hex)")),
+        };
+        want = (want << 4) | digit as u32;
+    }
+    if body[14] != b' ' {
+        return Err(cerr("bad frame layout (missing checksum separator)"));
+    }
+    let payload = &body[FRAME_HEADER..];
+    let got = crc32(payload);
+    if got != want {
+        return Err(cerr(format!("frame checksum mismatch: stored {want:08x}, computed {got:08x}")));
+    }
+    Ok(payload)
+}
+
+// ---------------------------------------------------------------------------
+// Canonical mini-JSON
+// ---------------------------------------------------------------------------
+
+/// The control-socket JSON subset: strings, unsigned integers, arrays,
+/// objects. No floats (they ride as `u64` bits in `*_bits` fields), no
+/// booleans, no null — every value the protocol carries is one of these
+/// four, which keeps the canonical encoder trivially total and the
+/// parser trivially strict.
+#[derive(Clone, Debug, PartialEq)]
+enum Json {
+    Str(String),
+    Num(u64),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Canonical encoding: fields in construction order, no whitespace,
+    /// `"` `\` and all control characters escaped (so the output never
+    /// contains a raw newline — a frame invariant).
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            Json::Str(s) => encode_string(s, out),
+            Json::Num(n) => out.extend_from_slice(n.to_string().as_bytes()),
+            Json::Arr(items) => {
+                out.push(b'[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(b',');
+                    }
+                    v.encode_into(out);
+                }
+                out.push(b']');
+            }
+            Json::Obj(fields) => {
+                out.push(b'{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(b',');
+                    }
+                    encode_string(k, out);
+                    out.push(b':');
+                    v.encode_into(out);
+                }
+                out.push(b'}');
+            }
+        }
+    }
+
+    fn field(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(fields) => fields
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .ok_or_else(|| cerr(format!("missing json field '{key}'"))),
+            _ => Err(cerr(format!("expected json object around field '{key}'"))),
+        }
+    }
+
+    fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(cerr(format!("expected json string, got {other:?}"))),
+        }
+    }
+
+    fn as_num(&self) -> Result<u64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => Err(cerr(format!("expected json number, got {other:?}"))),
+        }
+    }
+
+    fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(items) => Ok(items),
+            other => Err(cerr(format!("expected json array, got {other:?}"))),
+        }
+    }
+}
+
+fn encode_string(s: &str, out: &mut Vec<u8>) {
+    out.push(b'"');
+    for c in s.chars() {
+        match c {
+            '"' => out.extend_from_slice(b"\\\""),
+            '\\' => out.extend_from_slice(b"\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.extend_from_slice(format!("\\u{:04x}", c as u32).as_bytes())
+            }
+            c => {
+                let mut buf = [0u8; 4];
+                out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+            }
+        }
+    }
+    out.push(b'"');
+}
+
+/// Nesting bound: the protocol needs depth 3; anything deeper is either
+/// corruption or an attack, and bounding it keeps the recursive-descent
+/// parser stack-safe on adversarial input.
+const JSON_MAX_DEPTH: usize = 32;
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, byte: u8) -> Result<()> {
+        match self.peek() {
+            Some(c) if c == byte => {
+                self.pos += 1;
+                Ok(())
+            }
+            Some(c) => Err(cerr(format!(
+                "expected '{}' at json offset {}, got 0x{c:02x}",
+                byte as char, self.pos
+            ))),
+            None => Err(cerr("unexpected end of json")),
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > JSON_MAX_DEPTH {
+            return Err(cerr("json nesting too deep"));
+        }
+        match self.peek() {
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(c) if c.is_ascii_digit() => self.number(),
+            Some(c) => Err(cerr(format!("unexpected byte 0x{c:02x} at json offset {}", self.pos))),
+            None => Err(cerr("unexpected end of json")),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let mut n: u64 = 0;
+        let mut any = false;
+        while let Some(c) = self.peek() {
+            if !c.is_ascii_digit() {
+                break;
+            }
+            any = true;
+            n = n
+                .checked_mul(10)
+                .and_then(|n| n.checked_add((c - b'0') as u64))
+                .ok_or_else(|| cerr("json number overflows u64"))?;
+            self.pos += 1;
+        }
+        if !any {
+            return Err(cerr("expected json number"));
+        }
+        Ok(Json::Num(n))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut bytes: Vec<u8> = Vec::new();
+        loop {
+            let c = self.peek().ok_or_else(|| cerr("unterminated json string"))?;
+            self.pos += 1;
+            match c {
+                b'"' => break,
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| cerr("unterminated json escape"))?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => bytes.push(b'"'),
+                        b'\\' => bytes.push(b'\\'),
+                        b'/' => bytes.push(b'/'),
+                        b'n' => bytes.push(b'\n'),
+                        b't' => bytes.push(b'\t'),
+                        b'r' => bytes.push(b'\r'),
+                        b'b' => bytes.push(0x08),
+                        b'f' => bytes.push(0x0C),
+                        b'u' => {
+                            let mut cp: u32 = 0;
+                            for _ in 0..4 {
+                                let h =
+                                    self.peek().ok_or_else(|| cerr("unterminated \\u escape"))?;
+                                self.pos += 1;
+                                let d = match h {
+                                    b'0'..=b'9' => h - b'0',
+                                    b'a'..=b'f' => h - b'a' + 10,
+                                    b'A'..=b'F' => h - b'A' + 10,
+                                    _ => return Err(cerr("bad hex digit in \\u escape")),
+                                };
+                                cp = (cp << 4) | d as u32;
+                            }
+                            if (0xD800..=0xDFFF).contains(&cp) {
+                                return Err(cerr("surrogate \\u escape not supported"));
+                            }
+                            let ch = char::from_u32(cp)
+                                .ok_or_else(|| cerr("invalid \\u code point"))?;
+                            let mut buf = [0u8; 4];
+                            bytes.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                        }
+                        other => {
+                            return Err(cerr(format!("unknown json escape '\\{}'", other as char)))
+                        }
+                    }
+                }
+                c if c < 0x20 => return Err(cerr("raw control character in json string")),
+                c => bytes.push(c),
+            }
+        }
+        String::from_utf8(bytes).map_err(|_| cerr("invalid UTF-8 in json string"))
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                Some(c) => {
+                    return Err(cerr(format!("expected ',' or ']' in array, got 0x{c:02x}")))
+                }
+                None => return Err(cerr("unterminated json array")),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            let value = self.value(depth + 1)?;
+            fields.push((key, value));
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                Some(c) => {
+                    return Err(cerr(format!("expected ',' or '}}' in object, got 0x{c:02x}")))
+                }
+                None => return Err(cerr("unterminated json object")),
+            }
+        }
+    }
+}
+
+/// Strict parse: canonical grammar only (no whitespace), full-input
+/// consumption, bounded depth, checked number arithmetic — corruption is
+/// a typed error, never a panic or an over-allocation.
+fn json_parse(bytes: &[u8]) -> Result<Json> {
+    let mut p = JsonParser { b: bytes, pos: 0 };
+    let v = p.value(0)?;
+    if p.pos != bytes.len() {
+        return Err(cerr(format!("{} trailing bytes after json value", bytes.len() - p.pos)));
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Control messages
+// ---------------------------------------------------------------------------
+
+/// A client → daemon control message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Enqueue one labeling job.
+    Submit {
+        /// What to run.
+        spec: JobSpec,
+    },
+    /// Snapshot every job's state.
+    Status,
+    /// Snapshot the shared-fleet budget (per-job totals + merged
+    /// per-price buckets).
+    Ledger,
+    /// Stop the daemon after the current wave (queued jobs stay durable
+    /// and run on the next start).
+    Shutdown,
+}
+
+/// A daemon → client control message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// The submitted job's id.
+    Submitted {
+        /// Assigned job id.
+        id: u64,
+    },
+    /// One snapshot line per job, ascending id.
+    Status {
+        /// Per-job state, a pure function of the job queue.
+        jobs: Vec<JobSnapshot>,
+    },
+    /// The shared-fleet budget view.
+    Ledger(LedgerSnapshot),
+    /// The request failed; the job queue is unchanged.
+    Error {
+        /// What went wrong.
+        message: String,
+    },
+    /// Shutdown acknowledged.
+    Bye,
+}
+
+/// One job's externally visible state: everything `mcal status` prints.
+/// Deliberately excludes submission timestamps — a snapshot is a pure
+/// function of job state, so two daemons that processed the same
+/// submissions answer bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSnapshot {
+    /// Job id.
+    pub id: u64,
+    /// Dataset preset name.
+    pub dataset: String,
+    /// Architecture name.
+    pub arch: String,
+    /// Life-cycle phase.
+    pub phase: JobPhase,
+    /// Completed plan rounds.
+    pub rounds: u64,
+    /// Tail (≤ 4 values) of the last measured ε_T profile.
+    pub eps_tail: Vec<f64>,
+    /// Failure message; empty when none.
+    pub error: String,
+}
+
+/// The shared-fleet budget view: per-job totals in registration (= job
+/// admission) order, plus the fleet-wide per-price label buckets.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct LedgerSnapshot {
+    /// `(tag, labels purchased, total dollars)` per registered job.
+    pub jobs: Vec<(String, u64, f64)>,
+    /// `(price, labels)` merged across jobs by exact price bits.
+    pub buckets: Vec<(f64, u64)>,
+}
+
+fn tagged(type_name: &str) -> Json {
+    Json::Obj(vec![("type".into(), Json::Str(type_name.into()))])
+}
+
+/// Encode one request as a complete wire frame (newline included).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let json = match req {
+        Request::Submit { spec } => Json::Obj(vec![
+            ("type".into(), Json::Str("submit".into())),
+            ("dataset".into(), Json::Str(spec.dataset.clone())),
+            ("arch".into(), Json::Str(spec.arch.clone())),
+            ("seed".into(), Json::Num(spec.seed)),
+            ("epsilon_bits".into(), Json::Num(spec.epsilon.to_bits())),
+            ("scale_bits".into(), Json::Num(spec.scale_factor.to_bits())),
+            ("price_bits".into(), Json::Num(spec.price.to_bits())),
+            ("every".into(), Json::Num(spec.checkpoint_every)),
+        ]),
+        Request::Status => tagged("status"),
+        Request::Ledger => tagged("ledger"),
+        Request::Shutdown => tagged("shutdown"),
+    };
+    encode_frame(&json.encode())
+}
+
+/// Decode one request frame (the bytes of one line, newline included).
+pub fn decode_request(bytes: &[u8]) -> Result<Request> {
+    let json = json_parse(decode_frame(bytes)?)?;
+    match json.field("type")?.as_str()? {
+        "submit" => Ok(Request::Submit {
+            spec: JobSpec {
+                dataset: json.field("dataset")?.as_str()?.to_string(),
+                arch: json.field("arch")?.as_str()?.to_string(),
+                seed: json.field("seed")?.as_num()?,
+                epsilon: f64::from_bits(json.field("epsilon_bits")?.as_num()?),
+                scale_factor: f64::from_bits(json.field("scale_bits")?.as_num()?),
+                price: f64::from_bits(json.field("price_bits")?.as_num()?),
+                checkpoint_every: json.field("every")?.as_num()?,
+            },
+        }),
+        "status" => Ok(Request::Status),
+        "ledger" => Ok(Request::Ledger),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(cerr(format!("unknown request type '{other}'"))),
+    }
+}
+
+fn snapshot_json(j: &JobSnapshot) -> Json {
+    Json::Obj(vec![
+        ("id".into(), Json::Num(j.id)),
+        ("dataset".into(), Json::Str(j.dataset.clone())),
+        ("arch".into(), Json::Str(j.arch.clone())),
+        ("phase".into(), Json::Str(j.phase.as_str().into())),
+        ("rounds".into(), Json::Num(j.rounds)),
+        (
+            "eps_bits".into(),
+            Json::Arr(j.eps_tail.iter().map(|e| Json::Num(e.to_bits())).collect()),
+        ),
+        ("error".into(), Json::Str(j.error.clone())),
+    ])
+}
+
+fn snapshot_from_json(json: &Json) -> Result<JobSnapshot> {
+    let phase_name = json.field("phase")?.as_str()?.to_string();
+    let phase = JobPhase::parse(&phase_name)
+        .ok_or_else(|| cerr(format!("unknown job phase '{phase_name}'")))?;
+    let eps_tail = json
+        .field("eps_bits")?
+        .as_arr()?
+        .iter()
+        .map(|v| Ok(f64::from_bits(v.as_num()?)))
+        .collect::<Result<Vec<f64>>>()?;
+    Ok(JobSnapshot {
+        id: json.field("id")?.as_num()?,
+        dataset: json.field("dataset")?.as_str()?.to_string(),
+        arch: json.field("arch")?.as_str()?.to_string(),
+        phase,
+        rounds: json.field("rounds")?.as_num()?,
+        eps_tail,
+        error: json.field("error")?.as_str()?.to_string(),
+    })
+}
+
+/// Encode one response as a complete wire frame (newline included).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let json = match resp {
+        Response::Submitted { id } => Json::Obj(vec![
+            ("type".into(), Json::Str("submitted".into())),
+            ("id".into(), Json::Num(*id)),
+        ]),
+        Response::Status { jobs } => Json::Obj(vec![
+            ("type".into(), Json::Str("status".into())),
+            ("jobs".into(), Json::Arr(jobs.iter().map(snapshot_json).collect())),
+        ]),
+        Response::Ledger(snap) => Json::Obj(vec![
+            ("type".into(), Json::Str("ledger".into())),
+            (
+                "jobs".into(),
+                Json::Arr(
+                    snap.jobs
+                        .iter()
+                        .map(|(tag, labels, dollars)| {
+                            Json::Obj(vec![
+                                ("tag".into(), Json::Str(tag.clone())),
+                                ("labels".into(), Json::Num(*labels)),
+                                ("dollars_bits".into(), Json::Num(dollars.to_bits())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "buckets".into(),
+                Json::Arr(
+                    snap.buckets
+                        .iter()
+                        .map(|(price, labels)| {
+                            Json::Obj(vec![
+                                ("price_bits".into(), Json::Num(price.to_bits())),
+                                ("labels".into(), Json::Num(*labels)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        Response::Error { message } => Json::Obj(vec![
+            ("type".into(), Json::Str("error".into())),
+            ("message".into(), Json::Str(message.clone())),
+        ]),
+        Response::Bye => tagged("bye"),
+    };
+    encode_frame(&json.encode())
+}
+
+/// Decode one response frame (the bytes of one line, newline included).
+pub fn decode_response(bytes: &[u8]) -> Result<Response> {
+    let json = json_parse(decode_frame(bytes)?)?;
+    match json.field("type")?.as_str()? {
+        "submitted" => Ok(Response::Submitted { id: json.field("id")?.as_num()? }),
+        "status" => Ok(Response::Status {
+            jobs: json
+                .field("jobs")?
+                .as_arr()?
+                .iter()
+                .map(snapshot_from_json)
+                .collect::<Result<Vec<_>>>()?,
+        }),
+        "ledger" => {
+            let jobs = json
+                .field("jobs")?
+                .as_arr()?
+                .iter()
+                .map(|j| {
+                    Ok((
+                        j.field("tag")?.as_str()?.to_string(),
+                        j.field("labels")?.as_num()?,
+                        f64::from_bits(j.field("dollars_bits")?.as_num()?),
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let buckets = json
+                .field("buckets")?
+                .as_arr()?
+                .iter()
+                .map(|b| {
+                    Ok((
+                        f64::from_bits(b.field("price_bits")?.as_num()?),
+                        b.field("labels")?.as_num()?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Response::Ledger(LedgerSnapshot { jobs, buckets }))
+        }
+        "error" => Ok(Response::Error { message: json.field("message")?.as_str()?.to_string() }),
+        "bye" => Ok(Response::Bye),
+        other => Err(cerr(format!("unknown response type '{other}'"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Job queue (engine-free state machine)
+// ---------------------------------------------------------------------------
+
+/// One queued job's in-memory state. The durable twin is the job's
+/// [`JobMeta`] record; this adds the live ε_T tail and the (simulated or
+/// wall-clock) submission tick, which status snapshots deliberately omit.
+#[derive(Clone, Debug)]
+pub struct JobEntry {
+    /// Job id.
+    pub id: u64,
+    /// What the job runs.
+    pub spec: JobSpec,
+    /// Life-cycle phase.
+    pub phase: JobPhase,
+    /// Completed plan rounds.
+    pub rounds: u64,
+    /// Tail (≤ 4 values) of the last measured ε_T profile.
+    pub eps_tail: Vec<f64>,
+    /// Queue clock tick at submission (scheduling provenance only —
+    /// never part of a snapshot).
+    pub submitted_at: u64,
+    /// Failure message.
+    pub error: Option<String>,
+}
+
+/// The daemon's bounded run queue: FIFO admission by ascending job id,
+/// at most `slots` jobs running at once, with the phase machine
+/// `Queued → Running → Checkpointed → Done | Failed` enforced on every
+/// transition (an illegal transition is a typed error, never silent
+/// state drift). Engine-free by design — `tests/serve_queue.rs` drives
+/// it with a stub policy and a simulated clock.
+pub struct JobQueue {
+    slots: usize,
+    clock: u64,
+    next_id: u64,
+    jobs: BTreeMap<u64, JobEntry>,
+}
+
+impl JobQueue {
+    /// A queue admitting at most `slots` concurrent jobs (must be ≥ 1).
+    pub fn new(slots: usize) -> Result<JobQueue> {
+        if slots == 0 {
+            return Err(cerr("job queue needs at least one run slot"));
+        }
+        Ok(JobQueue { slots, clock: 0, next_id: 1, jobs: BTreeMap::new() })
+    }
+
+    /// Advance the simulated clock (the daemon ticks this with wall
+    /// time; tests tick it explicitly).
+    pub fn advance(&mut self, ticks: u64) {
+        self.clock += ticks;
+    }
+
+    /// Current clock tick.
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Enqueue a job; returns its id (ascending from 1).
+    pub fn submit(&mut self, spec: JobSpec) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.insert(
+            id,
+            JobEntry {
+                id,
+                spec,
+                phase: JobPhase::Queued,
+                rounds: 0,
+                eps_tail: Vec::new(),
+                submitted_at: self.clock,
+                error: None,
+            },
+        );
+        id
+    }
+
+    /// Rebuild one job from its durable record (daemon restart).
+    /// Terminal jobs restore as-is; interrupted ones (`Running` /
+    /// `Checkpointed`) re-queue with their round counter preserved —
+    /// admission then resumes them from their newest round checkpoint.
+    pub fn restore(&mut self, meta: &JobMeta) -> Result<()> {
+        if self.jobs.contains_key(&meta.id) {
+            return Err(cerr(format!("job {} restored twice", meta.id)));
+        }
+        let phase = if meta.phase.is_terminal() { meta.phase } else { JobPhase::Queued };
+        self.jobs.insert(
+            meta.id,
+            JobEntry {
+                id: meta.id,
+                spec: meta.spec.clone(),
+                phase,
+                rounds: meta.rounds,
+                eps_tail: Vec::new(),
+                submitted_at: self.clock,
+                error: meta.error.clone(),
+            },
+        );
+        self.next_id = self.next_id.max(meta.id + 1);
+        Ok(())
+    }
+
+    /// Jobs currently occupying a run slot.
+    pub fn running(&self) -> usize {
+        self.jobs
+            .values()
+            .filter(|j| matches!(j.phase, JobPhase::Running | JobPhase::Checkpointed))
+            .count()
+    }
+
+    /// Admit the oldest queued job if a slot is free: FIFO by ascending
+    /// id, bounded by `slots`. Returns the admitted id, now `Running`.
+    pub fn admit(&mut self) -> Option<u64> {
+        if self.running() >= self.slots {
+            return None;
+        }
+        let id = self.jobs.values().find(|j| j.phase == JobPhase::Queued)?.id;
+        self.jobs.get_mut(&id).expect("entry exists").phase = JobPhase::Running;
+        Some(id)
+    }
+
+    /// Record one completed plan round for a running job. `rounds` must
+    /// be monotone; `checkpointed` marks that the round's state is
+    /// durable on disk (phase moves to `Checkpointed`).
+    pub fn observe_round(
+        &mut self,
+        id: u64,
+        rounds: u64,
+        eps_tail: Vec<f64>,
+        checkpointed: bool,
+    ) -> Result<()> {
+        let entry =
+            self.jobs.get_mut(&id).ok_or_else(|| cerr(format!("observe: unknown job {id}")))?;
+        if !matches!(entry.phase, JobPhase::Running | JobPhase::Checkpointed) {
+            return Err(cerr(format!(
+                "observe: job {id} is {}, not running",
+                entry.phase.as_str()
+            )));
+        }
+        if rounds < entry.rounds {
+            return Err(cerr(format!(
+                "observe: job {id} round counter went backwards ({} -> {rounds})",
+                entry.rounds
+            )));
+        }
+        entry.rounds = rounds;
+        entry.eps_tail = eps_tail;
+        if checkpointed {
+            entry.phase = JobPhase::Checkpointed;
+        }
+        Ok(())
+    }
+
+    /// Mark a running job done (its run slot frees).
+    pub fn finish(&mut self, id: u64) -> Result<()> {
+        let entry =
+            self.jobs.get_mut(&id).ok_or_else(|| cerr(format!("finish: unknown job {id}")))?;
+        if !matches!(entry.phase, JobPhase::Running | JobPhase::Checkpointed) {
+            return Err(cerr(format!(
+                "finish: job {id} is {}, not running",
+                entry.phase.as_str()
+            )));
+        }
+        entry.phase = JobPhase::Done;
+        Ok(())
+    }
+
+    /// Mark a running job failed (its run slot frees).
+    pub fn fail(&mut self, id: u64, message: &str) -> Result<()> {
+        let entry =
+            self.jobs.get_mut(&id).ok_or_else(|| cerr(format!("fail: unknown job {id}")))?;
+        if !matches!(entry.phase, JobPhase::Running | JobPhase::Checkpointed) {
+            return Err(cerr(format!("fail: job {id} is {}, not running", entry.phase.as_str())));
+        }
+        entry.phase = JobPhase::Failed;
+        entry.error = Some(message.to_string());
+        Ok(())
+    }
+
+    /// One snapshot per job, ascending id — a pure function of job state
+    /// (the clock and submission ticks are deliberately excluded).
+    pub fn snapshot(&self) -> Vec<JobSnapshot> {
+        self.jobs
+            .values()
+            .map(|j| JobSnapshot {
+                id: j.id,
+                dataset: j.spec.dataset.clone(),
+                arch: j.spec.arch.clone(),
+                phase: j.phase,
+                rounds: j.rounds,
+                eps_tail: j.eps_tail.clone(),
+                error: j.error.clone().unwrap_or_default(),
+            })
+            .collect()
+    }
+
+    /// The entry for `id`, if present.
+    pub fn get(&self, id: u64) -> Option<&JobEntry> {
+        self.jobs.get(&id)
+    }
+
+    /// Whether every job has reached a terminal phase.
+    pub fn drained(&self) -> bool {
+        self.jobs.values().all(|j| j.phase.is_terminal())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Job execution
+// ---------------------------------------------------------------------------
+
+/// Live per-round feedback from a running job (the daemon's bridge from
+/// the policy loop to the in-memory queue). Must never fail the run —
+/// implementations swallow their own errors.
+pub trait JobObserver: Sync {
+    /// One plan round completed. `checkpointed` marks that the round's
+    /// state (round file, then job record) is durable on disk.
+    fn on_round(&self, rounds: u64, eps_tail: &[f64], checkpointed: bool);
+}
+
+/// Policy wrapper that makes a run *observable*: at every plan call after
+/// the first it knows one more round completed (the driver checkpoints
+/// due rounds *before* the next plan call, so by the time this runs, a
+/// due round's file is already on disk — the job record can never claim
+/// a round the checkpoint dir does not have). It then updates the
+/// durable [`JobMeta`] on due rounds and notifies the observer.
+/// Observation-only with respect to the run itself: `plan` delegates to
+/// the wrapped policy untouched, so wrapping moves no result bit.
+struct ObservedPolicy<'o, P: Policy> {
+    inner: P,
+    start_rounds: u64,
+    plan_calls: u64,
+    ckpt: CheckpointPolicy,
+    job_path: PathBuf,
+    job: JobMeta,
+    observer: Option<&'o dyn JobObserver>,
+    seen_rounds: Arc<AtomicU64>,
+}
+
+impl<P: Policy> Policy for ObservedPolicy<'_, P> {
+    type Output = P::Output;
+
+    fn plan(&mut self, env: &mut LabelingEnv<'_>, profile: &[f64]) -> Result<Decision> {
+        if self.plan_calls >= 1 {
+            let completed = self.start_rounds + self.plan_calls;
+            let tail_start = profile.len().saturating_sub(4);
+            let tail = &profile[tail_start..];
+            let due = self.ckpt.due(completed as usize);
+            if due {
+                // The round checkpoint is already on disk (saved by the
+                // driver loop before this plan call), so recording the
+                // round in the durable job record keeps the invariant
+                // meta.rounds ≤ newest checkpointed round.
+                self.job.phase = JobPhase::Checkpointed;
+                self.job.rounds = completed;
+                persist::write_job(&self.job_path, &self.job)?;
+            }
+            if let Some(obs) = self.observer {
+                obs.on_round(completed, tail, due);
+            }
+            self.seen_rounds.store(completed, Ordering::Relaxed);
+        }
+        self.plan_calls += 1;
+        self.inner.plan(env, profile)
+    }
+
+    fn finalize(self, env: LabelingEnv<'_>, stop: StopReason, t0: Instant) -> Result<Self::Output> {
+        self.inner.finalize(env, stop, t0)
+    }
+
+    fn round_cap(&self, params: &RunParams) -> usize {
+        self.inner.round_cap(params)
+    }
+}
+
+/// The checkpoint directory of job `id` under a serve root.
+pub fn job_dir(root: &Path, id: u64) -> PathBuf {
+    root.join(format!("job_{id:04}"))
+}
+
+/// Newest round checkpoint in `dir`, if any — the resume point for an
+/// interrupted job. Round files are named `round_NNNN.ckpt`, so the
+/// name-sorted listing ends with the newest.
+pub fn latest_round_checkpoint(dir: &Path) -> Result<Option<RunState>> {
+    let round_files: Vec<PathBuf> = persist::list_checkpoints(dir)?
+        .into_iter()
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("round_"))
+        })
+        .collect();
+    let Some(last) = round_files.last() else {
+        return Ok(None);
+    };
+    match persist::load(last)? {
+        Checkpoint::Run { state, .. } => Ok(Some(state)),
+        Checkpoint::Probe { .. } => {
+            Err(cerr(format!("{} is a probe checkpoint, not a round file", last.display())))
+        }
+    }
+}
+
+/// Run one job end to end: regenerate its dataset, build its flat-price
+/// annotation service, and drive MCAL with checkpoints every
+/// `spec.checkpoint_every` rounds — resuming from the newest round
+/// checkpoint if the job's directory has one (the daemon-restart path).
+///
+/// The durable [`JobMeta`] record tracks the run: `Running` before the
+/// loop enters, `Checkpointed` (with the round counter) at every due
+/// round, `Done` + digest or `Failed` + message after. The gen-10 bit
+/// contract hinges on the warm branch: [`Ledger::inherit_training`]
+/// re-seats the captured training spend so the resumed ledger total —
+/// an input of the C* search — is bit-equal to the uninterrupted run's
+/// at the resume round (the module docs spell out why that is exact).
+#[allow(clippy::too_many_arguments)]
+pub fn run_job(
+    engine: &Engine,
+    manifest: &Manifest,
+    pool: Option<&EnginePool>,
+    job_id: u64,
+    spec: &JobSpec,
+    dir: &Path,
+    ledger: Arc<Ledger>,
+    observer: Option<&dyn JobObserver>,
+) -> Result<RunReport> {
+    std::fs::create_dir_all(dir)?;
+    let preset = crate::dataset::preset(&spec.dataset, spec.seed)?;
+    let arch = ArchKind::parse(&spec.arch)
+        .ok_or_else(|| cerr(format!("job {job_id}: bad arch '{}'", spec.arch)))?;
+    let tier = TierSpec::custom(spec.price);
+    tier.validate()?;
+    let ds_spec = if spec.scale_factor == 1.0 {
+        preset.spec.clone()
+    } else {
+        preset.spec.scaled(spec.scale_factor)
+    };
+    let mut ds = ds_spec.generate()?;
+    ds.name = spec.dataset.clone();
+
+    let service = SimService::new(
+        SimServiceConfig::for_tier(tier).with_seed(spec.seed),
+        ledger.clone(),
+    );
+    let params = RunParams { epsilon: spec.epsilon, seed: spec.seed, ..Default::default() };
+    let meta = CheckpointMeta {
+        dataset: spec.dataset.clone(),
+        dataset_seed: spec.seed,
+        scale_factor: spec.scale_factor,
+        classes_tag: preset.classes_tag.to_string(),
+        store: crate::dataset::StoreRecipe::default(),
+        reference_price: Some(spec.price),
+    };
+    let ckpt = CheckpointPolicy::new(dir, spec.checkpoint_every.max(1) as usize, meta)?;
+    let warm = latest_round_checkpoint(dir)?;
+
+    let job_path = dir.join(JOB_META_FILE);
+    let start_rounds = warm.as_ref().map_or(0, |s| s.rounds as u64);
+    let mut job = JobMeta {
+        id: job_id,
+        spec: spec.clone(),
+        phase: JobPhase::Running,
+        rounds: start_rounds,
+        error: None,
+        digest: None,
+    };
+    persist::write_job(&job_path, &job)?;
+
+    let seen_rounds = Arc::new(AtomicU64::new(start_rounds));
+    let driver =
+        LabelingDriver::new(engine, manifest).with_pool(pool).with_checkpoints(Some(ckpt.clone()));
+    let outcome = match warm {
+        Some(state) => {
+            // Re-seat the interrupted run's training charges (and retrain
+            // count) into this fresh ledger: one exact f64 addition of the
+            // captured partial sum, making ledger.total() — a C*-search
+            // input — bit-equal to the never-killed run's at this round.
+            ledger.inherit_training(state.training_spend, state.retrain_counter);
+            let policy = ObservedPolicy {
+                inner: McalPolicy::resuming(state.rounds),
+                start_rounds,
+                plan_calls: 0,
+                ckpt,
+                job_path: job_path.clone(),
+                job: job.clone(),
+                observer,
+                seen_rounds: seen_rounds.clone(),
+            };
+            driver.run_warm(&ds, &service, ledger, preset.classes_tag, params, state, policy)
+        }
+        None => {
+            let policy = ObservedPolicy {
+                inner: McalPolicy::new(),
+                start_rounds,
+                plan_calls: 0,
+                ckpt,
+                job_path: job_path.clone(),
+                job: job.clone(),
+                observer,
+                seen_rounds: seen_rounds.clone(),
+            };
+            driver.run(&ds, &service, ledger, arch, preset.classes_tag, params, policy)
+        }
+    };
+
+    job.rounds = seen_rounds.load(Ordering::Relaxed);
+    match outcome {
+        Ok(report) => {
+            job.phase = JobPhase::Done;
+            job.digest = Some(JobDigest::of(&report));
+            persist::write_job(&job_path, &job)?;
+            Ok(report)
+        }
+        Err(e) => {
+            // Best-effort terminal record — the run's error wins over a
+            // secondary record-write failure.
+            job.phase = JobPhase::Failed;
+            job.error = Some(e.to_string());
+            let _ = persist::write_job(&job_path, &job);
+            Err(e)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Daemon
+// ---------------------------------------------------------------------------
+
+/// File under the serve root holding the daemon's actual listen address
+/// (written after bind, so `--port 0` works: clients discover the
+/// ephemeral port here).
+pub const ADDR_FILE: &str = "serve.addr";
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Root directory: per-job checkpoint dirs (`job_NNNN/`) and the
+    /// address file live here.
+    pub root: PathBuf,
+    /// Bind address, e.g. `127.0.0.1:0` (port 0 = ephemeral).
+    pub addr: String,
+    /// Maximum concurrently running jobs (run-queue slots).
+    pub max_running: usize,
+    /// Total engine-lane budget, leased job-level via
+    /// [`crate::runtime::pool::LaneBudget`].
+    pub jobs: usize,
+}
+
+struct QueueObserver<'q> {
+    queue: &'q Mutex<JobQueue>,
+    id: u64,
+}
+
+impl JobObserver for QueueObserver<'_> {
+    fn on_round(&self, rounds: u64, eps_tail: &[f64], checkpointed: bool) {
+        // Display-state only: a failed update must never fail the run.
+        if let Ok(mut q) = self.queue.lock() {
+            let _ = q.observe_round(self.id, rounds, eps_tail.to_vec(), checkpointed);
+        }
+    }
+}
+
+/// Load every `job_*/job.meta` under the root, ascending by id — the
+/// daemon-restart recovery scan. A corrupt record is a hard error: the
+/// crash-safe writer guarantees old-or-new, so corruption here means
+/// something outside the daemon touched the files.
+pub fn scan_jobs(root: &Path) -> Result<Vec<JobMeta>> {
+    let mut metas = Vec::new();
+    for entry in std::fs::read_dir(root)? {
+        let path = entry?.path();
+        if !path.is_dir() {
+            continue;
+        }
+        let is_job = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.starts_with("job_"));
+        if !is_job {
+            continue;
+        }
+        let meta_path = path.join(JOB_META_FILE);
+        if !meta_path.exists() {
+            continue;
+        }
+        metas.push(persist::load_job(&meta_path)?);
+    }
+    metas.sort_by_key(|m| m.id);
+    Ok(metas)
+}
+
+fn ledger_snapshot(fleet: &FleetLedger) -> LedgerSnapshot {
+    LedgerSnapshot {
+        jobs: fleet
+            .per_job()
+            .into_iter()
+            .map(|(tag, b)| (tag, b.labels_purchased, b.total()))
+            .collect(),
+        buckets: fleet.combined_buckets(),
+    }
+}
+
+fn validate_spec(spec: &JobSpec) -> Result<()> {
+    crate::dataset::preset(&spec.dataset, spec.seed)?;
+    ArchKind::parse(&spec.arch).ok_or_else(|| cerr(format!("bad arch '{}'", spec.arch)))?;
+    TierSpec::custom(spec.price).validate()?;
+    if !(spec.epsilon.is_finite() && spec.epsilon > 0.0 && spec.epsilon < 1.0) {
+        return Err(cerr(format!("bad epsilon {}", spec.epsilon)));
+    }
+    if !(spec.scale_factor.is_finite() && spec.scale_factor > 0.0 && spec.scale_factor <= 1.0) {
+        return Err(cerr(format!("bad scale factor {}", spec.scale_factor)));
+    }
+    Ok(())
+}
+
+fn submit_job(queue: &Mutex<JobQueue>, root: &Path, spec: JobSpec) -> Result<u64> {
+    validate_spec(&spec)?;
+    let mut q = queue.lock().unwrap();
+    let id = q.submit(spec.clone());
+    let dir = job_dir(root, id);
+    std::fs::create_dir_all(&dir)?;
+    persist::write_job(
+        &dir.join(JOB_META_FILE),
+        &JobMeta { id, spec, phase: JobPhase::Queued, rounds: 0, error: None, digest: None },
+    )?;
+    Ok(id)
+}
+
+/// Serve one connection: one request frame per line, one response frame
+/// back, until the client hangs up. Returns `true` when the client asked
+/// the daemon to shut down (the `Bye` reply is already on the wire).
+fn handle_conn(
+    stream: TcpStream,
+    queue: &Mutex<JobQueue>,
+    fleet: &FleetLedger,
+    root: &Path,
+) -> Result<bool> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        line.clear();
+        if reader.read_until(b'\n', &mut line)? == 0 {
+            return Ok(false);
+        }
+        let resp = match decode_request(&line) {
+            Err(e) => Response::Error { message: e.to_string() },
+            Ok(Request::Submit { spec }) => match submit_job(queue, root, spec) {
+                Ok(id) => Response::Submitted { id },
+                Err(e) => Response::Error { message: e.to_string() },
+            },
+            Ok(Request::Status) => Response::Status { jobs: queue.lock().unwrap().snapshot() },
+            Ok(Request::Ledger) => Response::Ledger(ledger_snapshot(fleet)),
+            Ok(Request::Shutdown) => {
+                out.write_all(&encode_response(&Response::Bye))?;
+                return Ok(true);
+            }
+        };
+        out.write_all(&encode_response(&resp))?;
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    queue: &Mutex<JobQueue>,
+    fleet: &FleetLedger,
+    root: &Path,
+    stop: &AtomicBool,
+) -> Result<()> {
+    for conn in listener.incoming() {
+        // One client at a time: requests are snapshots and O(queue)
+        // mutations, so serial handling keeps replies deterministic and
+        // the queue lock uncontended.
+        let served = match conn {
+            Ok(stream) => handle_conn(stream, queue, fleet, root),
+            Err(e) => Err(e.into()),
+        };
+        match served {
+            Ok(true) => {
+                stop.store(true, Ordering::SeqCst);
+                return Ok(());
+            }
+            Ok(false) => {}
+            // A misbehaving client must not take the daemon down.
+            Err(e) => log::warn!("serve: connection error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// The daemon's scheduling loop: admit queued jobs in id order up to the
+/// run-slot bound, run the admitted wave on the shared pool (one job per
+/// scatter task, each with its own ledger registered in admission order),
+/// and repeat until a shutdown request lands. A job failure marks that
+/// job `Failed` and never poisons the wave.
+fn run_loop(
+    engine: &Engine,
+    manifest: &Manifest,
+    pool: &EnginePool,
+    queue: &Mutex<JobQueue>,
+    fleet: &FleetLedger,
+    root: &Path,
+    stop: &AtomicBool,
+) -> Result<()> {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let wave: Vec<(u64, JobSpec)> = {
+            let mut q = queue.lock().unwrap();
+            let mut wave = Vec::new();
+            while let Some(id) = q.admit() {
+                let spec = q.get(id).expect("admitted job exists").spec.clone();
+                wave.push((id, spec));
+            }
+            wave
+        };
+        if wave.is_empty() {
+            std::thread::sleep(Duration::from_millis(50));
+            queue.lock().unwrap().advance(1);
+            continue;
+        }
+        // Per-job ledgers, registered with the fleet in ascending-id
+        // order so ledger snapshots list jobs deterministically.
+        let ledgers: Vec<Arc<Ledger>> = wave
+            .iter()
+            .map(|(id, _)| {
+                let ledger = Arc::new(Ledger::new());
+                fleet.register(format!("job_{id:04}"), ledger.clone());
+                ledger
+            })
+            .collect();
+        let observers: Vec<QueueObserver<'_>> =
+            wave.iter().map(|(id, _)| QueueObserver { queue, id: *id }).collect();
+        let (_, _reports) = pool.scatter(engine, wave.len(), |i, scope| {
+            let (id, spec) = &wave[i];
+            let outcome = run_job(
+                scope.engine,
+                manifest,
+                scope.inner,
+                *id,
+                spec,
+                &job_dir(root, *id),
+                ledgers[i].clone(),
+                Some(&observers[i]),
+            );
+            // Job-level failure is queue state, not a wave error — one
+            // bad job must not poison its co-scheduled neighbours.
+            let mut q = queue.lock().unwrap();
+            match outcome {
+                Ok(_) => {
+                    let _ = q.finish(*id);
+                }
+                Err(e) => {
+                    log::warn!("serve: job {id} failed: {e}");
+                    let _ = q.fail(*id, &e.to_string());
+                }
+            }
+            Ok(())
+        })?;
+    }
+}
+
+/// Run the daemon: bind the control socket (writing the actual address
+/// to [`ADDR_FILE`] under the root), recover every durable job record,
+/// then serve until a shutdown request. Interrupted jobs re-queue and
+/// resume from their newest checkpoint; queued jobs left behind by a
+/// shutdown run on the next start.
+pub fn serve(engine: &Engine, manifest: &Manifest, cfg: &ServeConfig) -> Result<()> {
+    std::fs::create_dir_all(&cfg.root)?;
+    let queue = Mutex::new(JobQueue::new(cfg.max_running)?);
+    let recovered = scan_jobs(&cfg.root)?;
+    {
+        let mut q = queue.lock().unwrap();
+        for meta in &recovered {
+            q.restore(meta)?;
+        }
+    }
+    if !recovered.is_empty() {
+        let interrupted = recovered.iter().filter(|m| !m.phase.is_terminal()).count();
+        log::info!(
+            "serve: recovered {} job record(s), {interrupted} to (re)run",
+            recovered.len()
+        );
+    }
+    let fleet = FleetLedger::new();
+    let budget = crate::runtime::pool::LaneBudget::new(cfg.jobs, cfg.max_running);
+    let pool = budget.pool()?;
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let actual = listener.local_addr()?;
+    std::fs::write(cfg.root.join(ADDR_FILE), format!("{actual}\n"))?;
+    log::info!(
+        "serve: listening on {actual} (slots={}, lanes {}x{})",
+        cfg.max_running,
+        budget.slots,
+        budget.per_job
+    );
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| -> Result<()> {
+        let acceptor = s.spawn(|| accept_loop(&listener, &queue, &fleet, &cfg.root, &stop));
+        let ran = run_loop(engine, manifest, &pool, &queue, &fleet, &cfg.root, &stop);
+        let accepted = acceptor.join().map_err(|_| cerr("serve: accept thread panicked"))?;
+        ran.and(accepted)
+    })
+}
+
+/// One request/response exchange with a running daemon.
+pub fn request(addr: &str, req: &Request) -> Result<Response> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(&encode_request(req))?;
+    let mut reader = BufReader::new(stream);
+    let mut line: Vec<u8> = Vec::new();
+    if reader.read_until(b'\n', &mut line)? == 0 {
+        return Err(cerr("daemon closed the connection without replying"));
+    }
+    decode_response(&line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(seed: u64) -> JobSpec {
+        JobSpec {
+            dataset: "fashion-syn".into(),
+            arch: "res18".into(),
+            seed,
+            epsilon: 0.05,
+            scale_factor: 0.02,
+            price: 0.003,
+            checkpoint_every: 2,
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_error_arms() {
+        let frame = encode_frame(b"{\"type\":\"status\"}");
+        assert_eq!(decode_frame(&frame).unwrap(), b"{\"type\":\"status\"}");
+
+        assert!(decode_frame(b"").unwrap_err().to_string().contains("unterminated"));
+        assert!(decode_frame(b"MCAL1 x").unwrap_err().to_string().contains("unterminated"));
+        assert!(decode_frame(b"MC\n AL\n").unwrap_err().to_string().contains("embedded newline"));
+        assert!(decode_frame(b"MCAL1 abc\n").unwrap_err().to_string().contains("too short"));
+        let mut bad_magic = frame.clone();
+        bad_magic[0] ^= 0x40;
+        assert!(decode_frame(&bad_magic).unwrap_err().to_string().contains("magic"));
+        let mut bad_hex = frame.clone();
+        bad_hex[6] = b'G';
+        assert!(decode_frame(&bad_hex).unwrap_err().to_string().contains("checksum"));
+        let mut bad_sep = frame.clone();
+        bad_sep[14] = b'_';
+        assert!(decode_frame(&bad_sep).unwrap_err().to_string().contains("layout"));
+        let mut flipped = frame.clone();
+        let payload_at = FRAME_HEADER + 2;
+        flipped[payload_at] ^= 0x01;
+        assert!(decode_frame(&flipped).unwrap_err().to_string().contains("mismatch"));
+    }
+
+    #[test]
+    fn json_parser_is_strict_and_total() {
+        // Canonical values round-trip.
+        let v = Json::Obj(vec![
+            ("a".into(), Json::Num(42)),
+            ("b".into(), Json::Arr(vec![Json::Str("x\n\"\\".into()), Json::Num(0)])),
+            ("c".into(), Json::Obj(vec![])),
+        ]);
+        let bytes = v.encode();
+        assert_eq!(json_parse(&bytes).unwrap(), v);
+        assert_eq!(json_parse(&bytes).unwrap().encode(), bytes);
+        // Control characters are escaped, never raw.
+        assert!(!bytes.contains(&b'\n'));
+
+        assert!(json_parse(b"").is_err());
+        assert!(json_parse(b"{\"a\":1}x").unwrap_err().to_string().contains("trailing"));
+        assert!(json_parse(b"{\"a\" :1}").is_err(), "whitespace is non-canonical");
+        assert!(json_parse(b"18446744073709551616").unwrap_err().to_string().contains("overflow"));
+        assert!(json_parse(b"{\"a\":true}").is_err(), "booleans are outside the subset");
+        assert!(json_parse(b"-3").is_err(), "negative numbers are outside the subset");
+        assert!(json_parse(b"\"\\ud800\"").unwrap_err().to_string().contains("surrogate"));
+        assert!(json_parse(b"\"\x01\"").unwrap_err().to_string().contains("control"));
+        assert!(json_parse(b"\"ab").unwrap_err().to_string().contains("unterminated"));
+        let deep = format!("{}1{}", "[".repeat(40), "]".repeat(40));
+        assert!(json_parse(deep.as_bytes()).unwrap_err().to_string().contains("deep"));
+        // \u escapes decode.
+        assert_eq!(json_parse(b"\"\\u0041\\u00e9\"").unwrap(), Json::Str("A\u{e9}".into()));
+    }
+
+    #[test]
+    fn request_codec_roundtrips_and_is_canonical() {
+        let reqs = [
+            Request::Submit { spec: spec(7) },
+            Request::Status,
+            Request::Ledger,
+            Request::Shutdown,
+        ];
+        for req in &reqs {
+            let bytes = encode_request(req);
+            let decoded = decode_request(&bytes).unwrap();
+            assert_eq!(&decoded, req);
+            assert_eq!(encode_request(&decoded), bytes, "re-encode must be byte identity");
+        }
+        // Floats survive bit-exactly (0.1 has no short decimal form).
+        let mut s = spec(1);
+        s.epsilon = 0.1;
+        s.price = f64::from_bits(0x3FB999999999999A);
+        let decoded = decode_request(&encode_request(&Request::Submit { spec: s.clone() })).unwrap();
+        assert_eq!(decoded, Request::Submit { spec: s });
+    }
+
+    #[test]
+    fn response_codec_roundtrips_and_is_canonical() {
+        let resps = [
+            Response::Submitted { id: 3 },
+            Response::Status {
+                jobs: vec![
+                    JobSnapshot {
+                        id: 1,
+                        dataset: "fashion-syn".into(),
+                        arch: "res18".into(),
+                        phase: JobPhase::Checkpointed,
+                        rounds: 4,
+                        eps_tail: vec![0.21, 0.13, 0.09, 0.051],
+                        error: String::new(),
+                    },
+                    JobSnapshot {
+                        id: 2,
+                        dataset: "cifar10-syn".into(),
+                        arch: "cnn18".into(),
+                        phase: JobPhase::Failed,
+                        rounds: 0,
+                        eps_tail: vec![],
+                        error: "bad arch".into(),
+                    },
+                ],
+            },
+            Response::Ledger(LedgerSnapshot {
+                jobs: vec![("job_0001".into(), 153, 4.217), ("job_0002".into(), 0, 0.0)],
+                buckets: vec![(0.003, 120), (0.04, 33)],
+            }),
+            Response::Error { message: "unknown request type 'x'".into() },
+            Response::Bye,
+        ];
+        for resp in &resps {
+            let bytes = encode_response(resp);
+            let decoded = decode_response(&bytes).unwrap();
+            assert_eq!(&decoded, resp);
+            assert_eq!(encode_response(&decoded), bytes, "re-encode must be byte identity");
+        }
+    }
+
+    #[test]
+    fn queue_fifo_bounded_and_phase_checked() {
+        let mut q = JobQueue::new(2).unwrap();
+        assert!(JobQueue::new(0).is_err());
+        let a = q.submit(spec(1));
+        let b = q.submit(spec(2));
+        let c = q.submit(spec(3));
+        assert_eq!((a, b, c), (1, 2, 3));
+
+        // FIFO admission, bounded by the two slots.
+        assert_eq!(q.admit(), Some(a));
+        assert_eq!(q.admit(), Some(b));
+        assert_eq!(q.admit(), None);
+        assert_eq!(q.running(), 2);
+
+        q.observe_round(a, 1, vec![0.2], false).unwrap();
+        q.observe_round(a, 2, vec![0.1], true).unwrap();
+        assert_eq!(q.get(a).unwrap().phase, JobPhase::Checkpointed);
+        assert!(q.observe_round(a, 1, vec![], false).is_err(), "rounds are monotone");
+        assert!(q.observe_round(c, 1, vec![], false).is_err(), "c is queued, not running");
+
+        q.finish(a).unwrap();
+        assert!(q.finish(a).is_err(), "finish is not idempotent");
+        assert_eq!(q.admit(), Some(c), "finishing a frees a slot for c");
+        q.fail(b, "engine exploded").unwrap();
+        q.finish(c).unwrap();
+        assert!(q.drained());
+
+        let snap = q.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap[0].phase, JobPhase::Done);
+        assert_eq!(snap[1].error, "engine exploded");
+        assert_eq!(snap[2].id, 3);
+    }
+
+    #[test]
+    fn queue_snapshots_ignore_the_clock() {
+        let mut q1 = JobQueue::new(1).unwrap();
+        let mut q2 = JobQueue::new(1).unwrap();
+        q1.submit(spec(5));
+        q2.advance(1_000);
+        q2.submit(spec(5));
+        assert_eq!(q1.snapshot(), q2.snapshot(), "snapshots are pure functions of job state");
+        assert_eq!(q1.clock(), 0);
+        assert_eq!(q2.clock(), 1_000);
+    }
+
+    #[test]
+    fn queue_restore_requeues_interrupted_preserving_rounds() {
+        let mut q = JobQueue::new(1).unwrap();
+        let running = JobMeta {
+            id: 4,
+            spec: spec(4),
+            phase: JobPhase::Checkpointed,
+            rounds: 6,
+            error: None,
+            digest: None,
+        };
+        let done = JobMeta {
+            id: 2,
+            spec: spec(2),
+            phase: JobPhase::Done,
+            rounds: 9,
+            error: None,
+            digest: None,
+        };
+        q.restore(&done).unwrap();
+        q.restore(&running).unwrap();
+        assert!(q.restore(&done).is_err(), "duplicate restore must error");
+
+        assert_eq!(q.get(2).unwrap().phase, JobPhase::Done, "terminal jobs restore as-is");
+        assert_eq!(q.get(4).unwrap().phase, JobPhase::Queued, "interrupted jobs re-queue");
+        assert_eq!(q.get(4).unwrap().rounds, 6, "round counter survives the restart");
+        assert_eq!(q.admit(), Some(4), "only the re-queued job is admissible");
+        assert_eq!(q.submit(spec(9)), 5, "ids continue past the restored ones");
+    }
+}

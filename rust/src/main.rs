@@ -6,10 +6,11 @@ use std::process::ExitCode;
 
 use mcal::annotation::{AnnotationService, IngestConfig, Service, TierSpec};
 use mcal::cli::Args;
+use mcal::coordinator::serve::{self, Request, Response, ServeConfig};
 use mcal::coordinator::{
     persist, run_mcal, run_mcal_warm, run_with_arch_selection, ArchSelectConfig, Checkpoint,
-    CheckpointMeta, CheckpointPolicy, LabelingDriver, McalPolicy, RoutePlan, RunParams, RunReport,
-    TieredPolicy,
+    CheckpointMeta, CheckpointPolicy, JobSpec, LabelingDriver, McalPolicy, RoutePlan, RunParams,
+    RunReport, TieredPolicy,
 };
 use mcal::dataset::{StoreBackend, StoreConfig};
 use mcal::experiments::common::{Ctx, Scale};
@@ -119,6 +120,32 @@ USAGE:
                                                          run MCAL on the winner — warm-started
                                                          from its probe by default; stdout is
                                                          byte-identical for any --jobs
+    mcal serve [--serve-root DIR] [--port N] [--max-running 2] [--jobs N|auto]
+             [--artifacts DIR]                           run the always-on labeling daemon:
+                                                         owns one engine pool and one
+                                                         annotator-fleet budget, takes jobs
+                                                         over a line-delimited control socket
+                                                         on localhost (--port 0 = ephemeral;
+                                                         the actual address lands in
+                                                         <serve-root>/serve.addr), runs at
+                                                         most --max-running jobs at once on
+                                                         a --jobs lane budget, checkpoints
+                                                         each under <serve-root>/job_NNNN/,
+                                                         and on restart auto-resumes every
+                                                         interrupted job from its newest
+                                                         checkpoint — result bits identical
+                                                         to a never-killed run
+    mcal submit <dataset> [--arch res18] [--service amazon|satyam|<price>]
+             [--epsilon 0.05] [--seed N] [--scale full|bench|smoke]
+             [--checkpoint-every 1] [--serve-root DIR | --addr HOST:PORT]
+                                                         submit one labeling job to a running
+                                                         daemon; prints the assigned job id
+    mcal status [--ledger] [--shutdown] [--serve-root DIR | --addr HOST:PORT]
+                                                         per-job phase/round/ε-tail snapshot;
+                                                         --ledger adds per-job dollars and
+                                                         fleet-wide price buckets; --shutdown
+                                                         stops the daemon (queued jobs stay
+                                                         durable and run on the next start)
     mcal exp <id> [--scale full|bench|smoke] [--jobs N|auto] [...]
                                                          run a paper experiment driver
                                                          (--jobs: total parallelism budget,
@@ -159,6 +186,9 @@ fn dispatch(args: &Args) -> mcal::Result<()> {
         "info" => cmd_info(args),
         "run" => cmd_run(args),
         "resume" => cmd_resume(args),
+        "serve" => cmd_serve(args),
+        "submit" => cmd_submit(args),
+        "status" => cmd_status(args),
         "arch-select" => cmd_arch_select(args),
         "calib" => cmd_calib(args),
         "exp" => mcal::experiments::dispatch(args),
@@ -601,6 +631,142 @@ fn cmd_resume(args: &Args) -> mcal::Result<()> {
         report.orders.len(),
         report.orders.iter().map(|o| o.labels).sum::<u64>()
     );
+    Ok(())
+}
+
+/// Start the always-on labeling daemon (see `coordinator::serve`). Runs
+/// until a `mcal status --shutdown` request lands; a SIGKILL instead is
+/// safe — every job's progress is durable, and the next start resumes it.
+fn cmd_serve(args: &Args) -> mcal::Result<()> {
+    let root = PathBuf::from(args.opt_or("serve-root", "serve"));
+    let port = args.usize_or("port", 0)?;
+    let max_running = args.usize_or("max-running", 2)?;
+    // Like the single-run commands, serving defaults to a serial lane
+    // budget unless --jobs asks for width (auto = one lane per core).
+    let jobs = if args.opt("jobs").is_some() {
+        match args.jobs()? {
+            0 => mcal::experiments::fleet::default_jobs(),
+            n => n,
+        }
+    } else {
+        1
+    };
+    let engine = mcal::runtime::Engine::cpu()?;
+    let manifest = mcal::runtime::Manifest::load(args.opt_or("artifacts", "artifacts"))?;
+    let cfg = ServeConfig { root, addr: format!("127.0.0.1:{port}"), max_running, jobs };
+    serve::serve(&engine, &manifest, &cfg)
+}
+
+/// Where the daemon listens: an explicit `--addr`, else the address file
+/// the daemon wrote under its `--serve-root`.
+fn serve_addr(args: &Args) -> mcal::Result<String> {
+    if let Some(addr) = args.opt("addr") {
+        return Ok(addr.to_string());
+    }
+    let path = Path::new(args.opt_or("serve-root", "serve")).join(serve::ADDR_FILE);
+    let addr = std::fs::read_to_string(&path).map_err(|e| {
+        mcal::Error::Config(format!(
+            "no daemon address: --addr not given and {} unreadable ({e})",
+            path.display()
+        ))
+    })?;
+    Ok(addr.trim().to_string())
+}
+
+/// Submit one labeling job to a running daemon.
+fn cmd_submit(args: &Args) -> mcal::Result<()> {
+    let dataset = args
+        .positionals
+        .first()
+        .ok_or_else(|| mcal::Error::Config("submit: missing <dataset>".into()))?
+        .clone();
+    let scale = Scale::parse(args.opt_or("scale", "full"))
+        .ok_or_else(|| mcal::Error::Config("bad --scale".into()))?;
+    let svc = Service::parse(args.opt_or("service", "amazon"))?;
+    let spec = JobSpec {
+        dataset,
+        arch: args.opt_or("arch", "res18").to_string(),
+        seed: args.u64_or("seed", 42)?,
+        epsilon: args.f64_or("epsilon", 0.05)?,
+        scale_factor: scale.dataset_factor(),
+        price: svc.price_per_label(),
+        checkpoint_every: args.u64_or("checkpoint-every", 1)?,
+    };
+    match serve::request(&serve_addr(args)?, &Request::Submit { spec })? {
+        Response::Submitted { id } => {
+            println!("submitted job {id:04}");
+            Ok(())
+        }
+        Response::Error { message } => Err(mcal::Error::Config(format!("daemon: {message}"))),
+        other => Err(mcal::Error::Coordinator(format!("unexpected daemon reply {other:?}"))),
+    }
+}
+
+/// Query a running daemon: per-job snapshots, optionally the fleet
+/// ledger (`--ledger`), optionally a shutdown request (`--shutdown`).
+fn cmd_status(args: &Args) -> mcal::Result<()> {
+    let addr = serve_addr(args)?;
+    match serve::request(&addr, &Request::Status)? {
+        Response::Status { jobs } => {
+            if jobs.is_empty() {
+                println!("no jobs");
+            }
+            for j in jobs {
+                let eps = j
+                    .eps_tail
+                    .iter()
+                    .map(|e| format!("{e:.4}"))
+                    .collect::<Vec<_>>()
+                    .join(",");
+                let suffix = if j.error.is_empty() {
+                    String::new()
+                } else {
+                    format!(" error: {}", j.error)
+                };
+                println!(
+                    "job {:04} {} {} {} round {} eps [{eps}]{suffix}",
+                    j.id,
+                    j.dataset,
+                    j.arch,
+                    j.phase.as_str(),
+                    j.rounds
+                );
+            }
+        }
+        Response::Error { message } => {
+            return Err(mcal::Error::Config(format!("daemon: {message}")))
+        }
+        other => {
+            return Err(mcal::Error::Coordinator(format!("unexpected daemon reply {other:?}")))
+        }
+    }
+    if args.flag("ledger") {
+        match serve::request(&addr, &Request::Ledger)? {
+            Response::Ledger(snap) => {
+                for (tag, labels, dollars) in &snap.jobs {
+                    println!("ledger {tag}: {labels} labels ${dollars:.4}");
+                }
+                for (price, labels) in &snap.buckets {
+                    println!("bucket ${price}: {labels} labels");
+                }
+            }
+            other => {
+                return Err(mcal::Error::Coordinator(format!(
+                    "unexpected daemon reply {other:?}"
+                )))
+            }
+        }
+    }
+    if args.flag("shutdown") {
+        match serve::request(&addr, &Request::Shutdown)? {
+            Response::Bye => println!("daemon stopped"),
+            other => {
+                return Err(mcal::Error::Coordinator(format!(
+                    "unexpected daemon reply {other:?}"
+                )))
+            }
+        }
+    }
     Ok(())
 }
 

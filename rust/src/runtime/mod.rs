@@ -17,7 +17,7 @@ pub mod session;
 pub mod sink;
 
 pub use manifest::{Manifest, ModelMeta};
-pub use pool::{EnginePool, TaskReport, WorkerScope};
+pub use pool::{EnginePool, LaneBudget, TaskReport, WorkerScope};
 pub use session::{ChunkScorer, ModelSession, Scores};
 pub use sink::{ScoreKey, ScoreSink, TopK};
 

@@ -99,6 +99,36 @@ pub fn split_jobs(jobs: usize, tasks: usize) -> (usize, usize) {
     (outer, (jobs / outer).max(1))
 }
 
+/// A `--jobs` budget leased out *job-level*: `slots` concurrent jobs
+/// (the serve daemon's run-queue bound), each owning `per_job` engine
+/// lanes through its scatter task's [`WorkerScope::inner`] pool. The
+/// factorization is [`split_jobs`] verbatim — the same budget arithmetic
+/// the experiment fleet uses, so `mcal serve --jobs N --max-running M`
+/// and a fleet sweep of M cells on N lanes build identical pools.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneBudget {
+    /// Concurrent jobs the budget admits (≥ 1).
+    pub slots: usize,
+    /// Engine lanes each admitted job owns (≥ 1).
+    pub per_job: usize,
+}
+
+impl LaneBudget {
+    /// Lease a total `jobs` lane budget across at most `max_running`
+    /// concurrent jobs.
+    pub fn new(jobs: usize, max_running: usize) -> LaneBudget {
+        let (slots, per_job) = split_jobs(jobs, max_running);
+        LaneBudget { slots, per_job }
+    }
+
+    /// The pool realizing this lease: `slots` outer lanes (caller
+    /// included), each with a private nested pool `per_job` wide — the
+    /// [`EnginePool::for_budget`] construction, split at the job level.
+    pub fn pool(&self) -> Result<EnginePool> {
+        EnginePool::with_inner(self.slots - 1, self.per_job - 1)
+    }
+}
+
 /// What one scatter task sees: the lane's engine, the lane's private
 /// nested pool (if the pool was built with one), and the lane id (0 =
 /// caller, 1..=workers). Engines are lane-bound — never smuggle one out.
@@ -499,6 +529,22 @@ mod tests {
                 assert!(o <= tasks);
             }
         }
+    }
+
+    #[test]
+    fn lane_budget_mirrors_split_jobs() {
+        // serve's job-level lease is the fleet's budget arithmetic.
+        for jobs in 0..=16 {
+            for slots in 0..=8 {
+                let lease = LaneBudget::new(jobs, slots);
+                assert_eq!((lease.slots, lease.per_job), split_jobs(jobs, slots));
+                assert!(lease.slots >= 1 && lease.per_job >= 1);
+            }
+        }
+        // --jobs 8 across 2 run slots: 2 concurrent jobs, 4 lanes each.
+        assert_eq!(LaneBudget::new(8, 2), LaneBudget { slots: 2, per_job: 4 });
+        // Default (--jobs absent → 1): strictly serial, still valid.
+        assert_eq!(LaneBudget::new(1, 2), LaneBudget { slots: 1, per_job: 1 });
     }
 
     #[test]

@@ -415,6 +415,87 @@ fn tier_routed_disk_resume_keeps_buckets_ingest_invariant() {
     );
 }
 
+/// PR-10 pin: a resumed run that re-attaches a checkpoint policy on the
+/// SAME directory continues the round numbering from `RunState::rounds`
+/// — its first new file is `round_{r+1:04}.ckpt`, never a restart at
+/// `round_0001` that would overwrite an earlier-round file with
+/// later-round state. (Behavior correct since the gen-8 driver — this
+/// test only pins it against regression.)
+#[test]
+fn resumed_checkpointing_continues_round_numbering_from_snapshot() {
+    let Some(f) = setup() else { return };
+    let dir = temp_dir("renumber");
+    let (ds, preset) = smoke_dataset("fashion-syn", 41);
+    let params = RunParams { seed: 41, ..Default::default() };
+    let meta = meta_for("fashion-syn", 41, preset.classes_tag);
+
+    // Cold run, checkpointing every round.
+    let ledger = Arc::new(Ledger::new());
+    let svc = SimService::new(SimServiceConfig::default().with_seed(41), ledger.clone());
+    let driver = LabelingDriver::new(&f.engine, &f.manifest)
+        .with_checkpoints(Some(CheckpointPolicy::new(&dir, 1, meta.clone()).unwrap()));
+    run_mcal(&driver, &ds, &svc, ledger, ArchKind::Res18, preset.classes_tag, params.clone())
+        .unwrap();
+    let cold_files = persist::list_checkpoints(&dir).unwrap();
+    assert!(cold_files.len() >= 2, "need two rounds to resume mid-run: {cold_files:?}");
+
+    // Resume point: round r's file. Delete everything past it so any
+    // file beyond round r after the resume was provably written by the
+    // resumed run — then its name tells us what round counter it used.
+    let r = cold_files.len() / 2;
+    let Checkpoint::Run { state, .. } = persist::load(&cold_files[r - 1]).unwrap() else {
+        panic!("round file must hold a Run checkpoint")
+    };
+    assert_eq!(state.rounds, r);
+    for file in &cold_files[r..] {
+        std::fs::remove_file(file).unwrap();
+    }
+    let pre_resume: Vec<(PathBuf, Vec<u8>)> = cold_files[..r]
+        .iter()
+        .map(|p| (p.clone(), std::fs::read(p).unwrap()))
+        .collect();
+
+    // Resume with a RENEWED policy on the same directory.
+    let ledger2 = Arc::new(Ledger::new());
+    let svc2 = SimService::new(SimServiceConfig::default().with_seed(41), ledger2.clone());
+    let driver2 = LabelingDriver::new(&f.engine, &f.manifest)
+        .with_checkpoints(Some(CheckpointPolicy::new(&dir, 1, meta).unwrap()));
+    let report =
+        run_mcal_warm(&driver2, &ds, &svc2, ledger2, preset.classes_tag, params, state).unwrap();
+    assert_eq!(
+        report.warm_start.as_ref().map(|w| w.rounds_skipped),
+        Some(r),
+        "resume provenance must carry the snapshot's round offset"
+    );
+
+    let files = persist::list_checkpoints(&dir).unwrap();
+    assert!(
+        files.len() > r,
+        "the resumed run must write at least one new round file past round {r}: {files:?}"
+    );
+    for (i, file) in files.iter().enumerate() {
+        // Contiguous numbering from 1, and each file's round counter
+        // matches its name — a counter restarted at 1 would have left
+        // round_0001 holding round-(r+1) state instead.
+        assert_eq!(
+            file.file_name().unwrap().to_str().unwrap(),
+            format!("round_{:04}.ckpt", i + 1)
+        );
+        let Checkpoint::Run { state, .. } = persist::load(file).unwrap() else {
+            panic!("round file must hold a Run checkpoint")
+        };
+        assert_eq!(state.rounds, i + 1, "file {} holds the wrong round", file.display());
+    }
+    for (path, bytes) in &pre_resume {
+        assert_eq!(
+            &std::fs::read(path).unwrap(),
+            bytes,
+            "pre-resume file {} must keep its exact bytes",
+            path.display()
+        );
+    }
+}
+
 /// Auto-arch selection with a checkpoint policy persists the winning
 /// probe as `probe_<arch>.ckpt` beside the run's round files.
 #[test]

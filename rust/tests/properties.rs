@@ -541,3 +541,236 @@ fn prop_shard_write_crash_leaves_old_or_new_never_torn() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Serve control-plane codec properties (coordinator::serve + job records)
+// ---------------------------------------------------------------------------
+//
+// Same contract the checkpoint codec pins (gen 10): encode → decode →
+// re-encode is byte identity, and every prefix truncation and every
+// single-byte XOR corruption is a typed `Error` — never a panic, never a
+// silent wrong decode.
+
+use mcal::coordinator::persist::{decode_job, encode_job};
+use mcal::coordinator::serve::{
+    decode_frame, decode_request, decode_response, encode_frame, encode_request, encode_response,
+    JobSnapshot, LedgerSnapshot, Request, Response,
+};
+use mcal::coordinator::{JobDigest, JobMeta, JobPhase, JobSpec};
+
+const PHASES: [JobPhase; 5] = [
+    JobPhase::Queued,
+    JobPhase::Running,
+    JobPhase::Checkpointed,
+    JobPhase::Done,
+    JobPhase::Failed,
+];
+
+/// Random short string over a hostile palette: quotes, backslashes, raw
+/// control characters, multi-byte UTF-8 — everything the canonical JSON
+/// string escaper and the binary job codec must carry losslessly.
+fn random_string(g: &mut Gen) -> String {
+    const PALETTE: &[&str] = &[
+        "a", "Z", "0", "-", "_", " ", "\"", "\\", "/", "\n", "\t", "\r", "\u{1}", "\u{1f}", "é",
+        "λ", "日", "𝛆",
+    ];
+    let n = g.usize_in(0, 10);
+    (0..n).map(|_| *g.choose(PALETTE)).collect()
+}
+
+/// Random f64: half plain finite values, half raw bit patterns (NaN
+/// payloads, -0.0, infinities, subnormals). Both wire formats carry f64s
+/// as raw bits, so every pattern must survive bit-exactly.
+fn random_f64_bits(g: &mut Gen) -> f64 {
+    if g.bool() {
+        g.f64_in(-10.0, 1e4)
+    } else {
+        f64::from_bits(g.rng.next_u64())
+    }
+}
+
+fn random_job_spec(g: &mut Gen) -> JobSpec {
+    JobSpec {
+        dataset: random_string(g),
+        arch: random_string(g),
+        seed: g.rng.next_u64(),
+        epsilon: random_f64_bits(g),
+        scale_factor: random_f64_bits(g),
+        price: random_f64_bits(g),
+        checkpoint_every: g.rng.next_u64(),
+    }
+}
+
+fn random_job_meta(g: &mut Gen) -> JobMeta {
+    JobMeta {
+        id: g.rng.next_u64(),
+        spec: random_job_spec(g),
+        phase: *g.choose(&PHASES),
+        rounds: g.rng.next_u64(),
+        error: if g.bool() { Some(random_string(g)) } else { None },
+        digest: if g.bool() {
+            Some(JobDigest {
+                b_size: g.rng.next_u64(),
+                s_size: g.rng.next_u64(),
+                residual_human: g.rng.next_u64(),
+                overall_error: random_f64_bits(g),
+                machine_error: random_f64_bits(g),
+                residual_label_error: random_f64_bits(g),
+                cost_total: random_f64_bits(g),
+                labels_purchased: g.rng.next_u64(),
+                stop: random_string(g),
+            })
+        } else {
+            None
+        },
+    }
+}
+
+fn random_request(g: &mut Gen) -> Request {
+    match g.usize_in(0, 3) {
+        0 => Request::Submit { spec: random_job_spec(g) },
+        1 => Request::Status,
+        2 => Request::Ledger,
+        _ => Request::Shutdown,
+    }
+}
+
+fn random_job_snapshot(g: &mut Gen) -> JobSnapshot {
+    JobSnapshot {
+        id: g.rng.next_u64(),
+        dataset: random_string(g),
+        arch: random_string(g),
+        phase: *g.choose(&PHASES),
+        rounds: g.rng.next_u64(),
+        eps_tail: (0..g.usize_in(0, 4)).map(|_| random_f64_bits(g)).collect(),
+        error: random_string(g),
+    }
+}
+
+fn random_response(g: &mut Gen) -> Response {
+    match g.usize_in(0, 4) {
+        0 => Response::Submitted { id: g.rng.next_u64() },
+        1 => Response::Status {
+            jobs: (0..g.usize_in(0, 3)).map(|_| random_job_snapshot(g)).collect(),
+        },
+        2 => Response::Ledger(LedgerSnapshot {
+            jobs: (0..g.usize_in(0, 3))
+                .map(|_| (random_string(g), g.rng.next_u64(), random_f64_bits(g)))
+                .collect(),
+            buckets: (0..g.usize_in(0, 3))
+                .map(|_| (random_f64_bits(g), g.rng.next_u64()))
+                .collect(),
+        }),
+        3 => Response::Error { message: random_string(g) },
+        _ => Response::Bye,
+    }
+}
+
+/// Exhaustively check a wire image's failure modes: every strict prefix
+/// and every single-byte XOR corruption must hit a typed error in
+/// `decode` (a panic would abort `forall`; an Ok is a silent wrong read).
+fn assert_image_is_total<T>(
+    what: &str,
+    bytes: &[u8],
+    flip: u8,
+    decode: impl Fn(&[u8]) -> mcal::Result<T>,
+) -> std::result::Result<(), String> {
+    for cut in 0..bytes.len() {
+        if decode(&bytes[..cut]).is_ok() {
+            return Err(format!("{what}: {cut}-byte prefix of {} decoded Ok", bytes.len()));
+        }
+    }
+    for pos in 0..bytes.len() {
+        let mut bad = bytes.to_vec();
+        bad[pos] ^= flip;
+        if decode(&bad).is_ok() {
+            return Err(format!("{what}: corrupt byte {pos} (^{flip:#x}) decoded Ok"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_job_record_roundtrip_is_byte_identity() {
+    forall("job record roundtrip", 0x10B0, 120, |g| {
+        let job = random_job_meta(g);
+        let bytes = encode_job(&job);
+        let back = decode_job(&bytes).map_err(|e| format!("valid record rejected: {e}"))?;
+        // Re-encode equality is field-by-field bit identity (floats via
+        // to_bits), which covers NaN payloads that `==` would miss.
+        if encode_job(&back) != bytes {
+            return Err("job record round-trip is not byte identity".into());
+        }
+        if back.id != job.id || back.phase != job.phase || back.rounds != job.rounds {
+            return Err("decoded record disagrees on headline fields".into());
+        }
+        if back.spec.dataset != job.spec.dataset || back.error != job.error {
+            return Err("decoded record mangled a string field".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_job_record_truncation_and_corruption_always_error() {
+    forall("job record corruption", 0x10B1, 30, |g| {
+        let bytes = encode_job(&random_job_meta(g));
+        let flip = g.usize_in(1, 255) as u8;
+        assert_image_is_total("job record", &bytes, flip, |b| decode_job(b))
+    });
+}
+
+#[test]
+fn prop_frame_codec_roundtrip_and_totality() {
+    forall("frame codec", 0xF4A3E, 60, |g| {
+        // Arbitrary payload bytes — the frame layer is content-agnostic;
+        // only a raw newline is excluded (callers never emit one: the
+        // canonical JSON encoder escapes all control characters).
+        let n = g.usize_in(0, 60);
+        let payload: Vec<u8> = (0..n)
+            .map(|_| {
+                let b = g.usize_in(0, 254) as u8;
+                if b == b'\n' {
+                    0xFF
+                } else {
+                    b
+                }
+            })
+            .collect();
+        let frame = encode_frame(&payload);
+        let back = decode_frame(&frame).map_err(|e| format!("valid frame rejected: {e}"))?;
+        if back != payload.as_slice() {
+            return Err("frame round-trip changed the payload".into());
+        }
+        let flip = g.usize_in(1, 255) as u8;
+        assert_image_is_total("frame", &frame, flip, |b| decode_frame(b).map(<[u8]>::to_vec))
+    });
+}
+
+#[test]
+fn prop_request_codec_roundtrip_and_totality() {
+    forall("request codec", 0x5E14, 80, |g| {
+        let req = random_request(g);
+        let bytes = encode_request(&req);
+        let back = decode_request(&bytes).map_err(|e| format!("valid request rejected: {e}"))?;
+        if encode_request(&back) != bytes {
+            return Err(format!("request round-trip is not byte identity: {req:?}"));
+        }
+        let flip = g.usize_in(1, 255) as u8;
+        assert_image_is_total("request", &bytes, flip, |b| decode_request(b))
+    });
+}
+
+#[test]
+fn prop_response_codec_roundtrip_and_totality() {
+    forall("response codec", 0x5E15, 80, |g| {
+        let resp = random_response(g);
+        let bytes = encode_response(&resp);
+        let back = decode_response(&bytes).map_err(|e| format!("valid response rejected: {e}"))?;
+        if encode_response(&back) != bytes {
+            return Err(format!("response round-trip is not byte identity: {resp:?}"));
+        }
+        let flip = g.usize_in(1, 255) as u8;
+        assert_image_is_total("response", &bytes, flip, |b| decode_response(b))
+    });
+}

@@ -1,0 +1,221 @@
+//! Engine-free serve state-machine harness (ISSUE 10 satellite): drives
+//! the daemon's job queue with a stub policy loop and a simulated clock —
+//! no artifacts, no engines, no sockets — pinning FIFO admission, bounded
+//! concurrency, the legal phase machine, and that `status` snapshots are
+//! pure functions of job state (the simulated clock never leaks in).
+
+use mcal::coordinator::serve::{JobQueue, JobSnapshot};
+use mcal::coordinator::{JobMeta, JobPhase, JobSpec};
+
+fn spec(seed: u64) -> JobSpec {
+    JobSpec {
+        dataset: "fashion-syn".into(),
+        arch: "res18".into(),
+        seed,
+        epsilon: 0.05,
+        scale_factor: 0.02,
+        price: 0.003,
+        checkpoint_every: 2,
+    }
+}
+
+/// A stub policy: "job with seed s runs for (s % 3) + 2 rounds, each
+/// round taking one clock tick, checkpointing on its cadence". Purely
+/// deterministic in the job spec — the engine-free stand-in for a real
+/// MCAL run.
+struct StubRun {
+    id: u64,
+    rounds_left: u64,
+    rounds_done: u64,
+    every: u64,
+}
+
+impl StubRun {
+    fn start(id: u64, spec: &JobSpec) -> StubRun {
+        StubRun { id, rounds_left: (spec.seed % 3) + 2, rounds_done: 0, every: spec.checkpoint_every }
+    }
+
+    /// One simulated round; returns false once the run is finished.
+    fn tick(&mut self, q: &mut JobQueue) -> bool {
+        if self.rounds_left == 0 {
+            q.finish(self.id).unwrap();
+            return false;
+        }
+        self.rounds_left -= 1;
+        self.rounds_done += 1;
+        let eps = vec![1.0 / (self.rounds_done as f64 + 1.0)];
+        let ckpt = self.rounds_done % self.every == 0;
+        q.observe_round(self.id, self.rounds_done, eps, ckpt).unwrap();
+        true
+    }
+}
+
+/// Drive the queue to drain with the stub policy, asserting the
+/// concurrency bound at every simulated tick. Returns the admission
+/// order.
+fn drain(q: &mut JobQueue, slots: usize) -> Vec<u64> {
+    let mut admitted = Vec::new();
+    let mut active: Vec<StubRun> = Vec::new();
+    for _ in 0..1_000 {
+        while let Some(id) = q.admit() {
+            admitted.push(id);
+            let spec = q.get(id).expect("admitted job exists").spec.clone();
+            active.push(StubRun::start(id, &spec));
+        }
+        assert!(q.running() <= slots, "concurrency bound violated: {} > {slots}", q.running());
+        if active.is_empty() {
+            break;
+        }
+        q.advance(1);
+        active.retain_mut(|run| run.tick(q));
+    }
+    assert!(q.drained(), "stub runs must drain the queue");
+    admitted
+}
+
+#[test]
+fn fifo_admission_bounded_by_slots() {
+    for slots in 1..=4 {
+        let mut q = JobQueue::new(slots).unwrap();
+        let ids: Vec<u64> = (0..6).map(|s| q.submit(spec(s))).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4, 5, 6], "ids ascend from 1");
+        let admitted = drain(&mut q, slots);
+        assert_eq!(admitted, ids, "admission is FIFO by id regardless of slot count");
+    }
+}
+
+#[test]
+fn late_submissions_queue_behind_running_jobs() {
+    let mut q = JobQueue::new(1).unwrap();
+    let a = q.submit(spec(0));
+    assert_eq!(q.admit(), Some(a));
+    // Submitted while a occupies the only slot.
+    let b = q.submit(spec(1));
+    assert_eq!(q.admit(), None, "no free slot while a runs");
+    q.observe_round(a, 1, vec![0.3], false).unwrap();
+    q.finish(a).unwrap();
+    assert_eq!(q.admit(), Some(b), "b admits once a's slot frees");
+    q.fail(b, "stub failure").unwrap();
+    assert!(q.drained());
+}
+
+#[test]
+fn snapshots_are_pure_functions_of_job_state() {
+    // Same submissions and transitions, wildly different clock histories:
+    // snapshots must be identical — the clock is scheduling provenance,
+    // never observable state.
+    let mut fast = JobQueue::new(2).unwrap();
+    let mut slow = JobQueue::new(2).unwrap();
+    slow.advance(10_000);
+    for s in 0..4 {
+        fast.submit(spec(s));
+        slow.advance(37);
+        slow.submit(spec(s));
+    }
+    let fast_order = drain(&mut fast, 2);
+    slow.advance(999);
+    let slow_order = drain(&mut slow, 2);
+    assert_eq!(fast_order, slow_order);
+    assert_eq!(fast.snapshot(), slow.snapshot(), "snapshot must not depend on the clock");
+    assert_ne!(fast.clock(), slow.clock(), "the clocks really did diverge");
+
+    // And the snapshot is exactly the per-job state the stub produced.
+    let snaps: Vec<JobSnapshot> = fast.snapshot();
+    for snap in &snaps {
+        let expect_rounds = ((snap.id - 1) % 3) + 2;
+        assert_eq!(snap.phase, JobPhase::Done);
+        assert_eq!(snap.rounds, expect_rounds, "job {} ran its stub rounds", snap.id);
+        assert_eq!(snap.eps_tail, vec![1.0 / (expect_rounds as f64 + 1.0)]);
+        assert_eq!(snap.error, "");
+    }
+}
+
+#[test]
+fn phase_machine_rejects_illegal_transitions() {
+    let mut q = JobQueue::new(2).unwrap();
+    let a = q.submit(spec(1));
+    // Not running yet: every running-only transition is a typed error.
+    assert!(q.observe_round(a, 1, vec![], false).is_err());
+    assert!(q.finish(a).is_err());
+    assert!(q.fail(a, "x").is_err());
+    assert!(q.observe_round(99, 1, vec![], false).is_err(), "unknown id");
+
+    assert_eq!(q.admit(), Some(a));
+    q.observe_round(a, 3, vec![0.2], true).unwrap();
+    assert_eq!(q.get(a).unwrap().phase, JobPhase::Checkpointed);
+    assert!(q.observe_round(a, 2, vec![], false).is_err(), "rounds are monotone");
+    q.finish(a).unwrap();
+    // Terminal is terminal.
+    assert!(q.finish(a).is_err());
+    assert!(q.fail(a, "x").is_err());
+    assert!(q.observe_round(a, 4, vec![], false).is_err());
+}
+
+#[test]
+fn restart_restore_requeues_only_interrupted_jobs() {
+    // Simulate the daemon's recovery scan: a mix of durable job records.
+    let durable = [
+        JobMeta {
+            id: 1,
+            spec: spec(1),
+            phase: JobPhase::Done,
+            rounds: 5,
+            error: None,
+            digest: None,
+        },
+        JobMeta {
+            id: 2,
+            spec: spec(2),
+            phase: JobPhase::Checkpointed,
+            rounds: 4,
+            error: None,
+            digest: None,
+        },
+        JobMeta {
+            id: 3,
+            spec: spec(3),
+            phase: JobPhase::Failed,
+            rounds: 0,
+            error: Some("engine exploded".into()),
+            digest: None,
+        },
+        JobMeta {
+            id: 4,
+            spec: spec(4),
+            phase: JobPhase::Running,
+            rounds: 1,
+            error: None,
+            digest: None,
+        },
+        JobMeta {
+            id: 5,
+            spec: spec(5),
+            phase: JobPhase::Queued,
+            rounds: 0,
+            error: None,
+            digest: None,
+        },
+    ];
+    let mut q = JobQueue::new(1).unwrap();
+    for meta in &durable {
+        q.restore(meta).unwrap();
+    }
+    // Terminal jobs keep their state; interrupted and queued ones queue.
+    assert_eq!(q.get(1).unwrap().phase, JobPhase::Done);
+    assert_eq!(q.get(3).unwrap().phase, JobPhase::Failed);
+    assert_eq!(q.snapshot()[2].error, "engine exploded");
+    for id in [2, 4, 5] {
+        assert_eq!(q.get(id).unwrap().phase, JobPhase::Queued, "job {id} re-queues");
+    }
+    assert_eq!(q.get(2).unwrap().rounds, 4, "resume point survives the restart");
+    // Re-admission is FIFO over the re-queued subset.
+    assert_eq!(q.admit(), Some(2));
+    q.finish(2).unwrap();
+    assert_eq!(q.admit(), Some(4));
+    q.finish(4).unwrap();
+    assert_eq!(q.admit(), Some(5));
+    q.finish(5).unwrap();
+    assert!(q.drained());
+    // New submissions continue past the restored id space.
+    assert_eq!(q.submit(spec(9)), 6);
+}

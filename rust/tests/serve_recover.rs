@@ -1,0 +1,408 @@
+//! Kill-anywhere recovery matrix for the serve layer: the gen-10
+//! contract (ISSUE 10 acceptance).
+//!
+//! Pinned here:
+//!
+//! - **resume-at-every-round**: a serve job killed after any checkpointed
+//!   round and re-run through [`mcal::coordinator::run_job`] (the daemon's
+//!   restart path) finishes with headline, cost, per-iteration, and
+//!   order bits identical to the never-killed run — *including*
+//!   `ledger_total` and the C* trajectory, which plain `mcal resume`
+//!   legitimately diverges on (see `checkpoint_resume.rs` scope note):
+//!   `run_job` re-seats the captured training spend through
+//!   `Ledger::inherit_training`, closing the one gap between a resumed
+//!   ledger and a never-killed one;
+//! - **kill-anywhere on the job record**: the daemon's `job.meta` writes
+//!   crash at every `FaultFs` op boundary under every fault mode, and
+//!   whatever record survives (old or new — never torn), the restarted
+//!   job still resumes to the identical report: the record is control
+//!   metadata, the round checkpoints are the resume substance;
+//! - **co-scheduling identity**: a job run beside a second job on one
+//!   shared `EnginePool` produces the same report bits as the job run
+//!   alone — per-job ledgers, seeds, and lanes never couple.
+//!
+//! Artifact-gated: skips when `artifacts/` is absent.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use mcal::annotation::Ledger;
+use mcal::coordinator::persist::{self, FaultFs, FaultMode, JobPhase, JOB_META_FILE};
+use mcal::coordinator::serve::{job_dir, latest_round_checkpoint, run_job};
+use mcal::coordinator::{JobMeta, JobSpec, RunReport};
+use mcal::runtime::EnginePool;
+
+mod common;
+use common::{residual_cut, setup};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mcal_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn smoke_spec(seed: u64) -> JobSpec {
+    JobSpec {
+        dataset: "fashion-syn".into(),
+        arch: "res18".into(),
+        seed,
+        epsilon: 0.05,
+        scale_factor: 0.05, // smoke scale, matching common::smoke_dataset
+        price: 0.003,
+        checkpoint_every: 1,
+    }
+}
+
+/// The full gen-10 comparison between a never-killed run and a run
+/// resumed at round `r`: headline and cost bits equal outright; the
+/// resumed iteration records (which cover only post-resume rounds) align
+/// bit-for-bit — `ledger_total` included — with the cold records at the
+/// same iteration number; the resumed loop's order-log middle segment
+/// matches cold's with identical ids; the residual totals already agree
+/// through `residual_human`.
+fn assert_resumed_matches(cold: &RunReport, warm: &RunReport, r: usize) {
+    // Headline bits.
+    assert_eq!(cold.arch, warm.arch);
+    assert_eq!(cold.seed, warm.seed);
+    assert_eq!(cold.x_total, warm.x_total);
+    assert_eq!(cold.test_size, warm.test_size);
+    assert_eq!(cold.b_size, warm.b_size, "resume at round {r}: |B| drifted");
+    assert_eq!(cold.s_size, warm.s_size);
+    assert_eq!(cold.residual_human, warm.residual_human);
+    assert_eq!(cold.overall_error.to_bits(), warm.overall_error.to_bits());
+    assert_eq!(cold.machine_error.to_bits(), warm.machine_error.to_bits());
+    assert_eq!(cold.residual_label_error.to_bits(), warm.residual_label_error.to_bits());
+    assert_eq!(cold.human_only_cost.to_bits(), warm.human_only_cost.to_bits());
+    assert_eq!(cold.stop_reason, warm.stop_reason, "resume at round {r}: stop reason drifted");
+
+    // Cost bits — the gen-10 keystone: inherit_training makes the
+    // resumed ledger bit-equal, not just labels-equal.
+    assert_eq!(cold.cost.labels_purchased, warm.cost.labels_purchased);
+    assert_eq!(cold.cost.retrains, warm.cost.retrains);
+    assert_eq!(cold.cost.human_labeling.to_bits(), warm.cost.human_labeling.to_bits());
+    assert_eq!(
+        cold.cost.training.to_bits(),
+        warm.cost.training.to_bits(),
+        "resume at round {r}: inherited training must re-seat the exact partial sum"
+    );
+    assert_eq!(cold.cost.exploration.to_bits(), warm.cost.exploration.to_bits());
+    assert_eq!(
+        cold.cost.total().to_bits(),
+        warm.cost.total().to_bits(),
+        "resume at round {r}: ledger totals must be bit-equal"
+    );
+
+    // Warm provenance covers exactly the skipped rounds.
+    let ws = warm.warm_start.as_ref().expect("resumed run must carry warm provenance");
+    assert_eq!(ws.rounds_skipped, r);
+    assert!(cold.warm_start.is_none(), "baseline must be cold");
+
+    // Iteration tail alignment: every resumed record is bit-identical to
+    // the cold record with the same iteration number — ledger feedback
+    // (ledger_total, C*) included.
+    assert_eq!(
+        warm.iterations.len(),
+        cold.iterations.iter().filter(|it| it.iter >= r).count(),
+        "resume at round {r}: post-resume round count drifted"
+    );
+    for it in &warm.iterations {
+        let cold_it = cold
+            .iterations
+            .iter()
+            .find(|c| c.iter == it.iter)
+            .unwrap_or_else(|| panic!("cold run has no iteration {}", it.iter));
+        assert_eq!(cold_it.b_size, it.b_size, "iter {}: |B| drifted", it.iter);
+        assert_eq!(cold_it.delta, it.delta, "iter {}: δ drifted", it.iter);
+        assert_eq!(cold_it.stable, it.stable, "iter {}: stability drifted", it.iter);
+        assert_eq!(
+            cold_it.c_star.map(f64::to_bits),
+            it.c_star.map(f64::to_bits),
+            "iter {}: C* drifted",
+            it.iter
+        );
+        assert_eq!(
+            cold_it.ledger_total.to_bits(),
+            it.ledger_total.to_bits(),
+            "iter {}: ledger_total drifted — inherit_training failed",
+            it.iter
+        );
+        let cold_eps: Vec<u64> = cold_it.eps_profile.iter().map(|e| e.to_bits()).collect();
+        let warm_eps: Vec<u64> = it.eps_profile.iter().map(|e| e.to_bits()).collect();
+        assert_eq!(cold_eps, warm_eps, "iter {}: ε_T profile drifted", it.iter);
+    }
+
+    // Order log: the resumed loop's middle segment (between the warm
+    // re-buy prefix and the residual suffix) must equal the tail of the
+    // cold pre-residual log — same sequential ids, labels, and dollars.
+    let warm_n = warm.orders.iter().filter(|o| o.id.is_warm()).count();
+    assert!(warm_n > 0, "resume at round {r} must re-buy the captured labels");
+    assert!(warm.orders[..warm_n].iter().all(|o| o.id.is_warm()));
+    let cold_cut = residual_cut(cold);
+    let warm_cut = residual_cut(warm);
+    let warm_mid = &warm.orders[warm_n..warm_cut];
+    assert!(cold_cut >= warm_mid.len(), "cold pre-residual log shorter than resumed middle");
+    let cold_tail = &cold.orders[cold_cut - warm_mid.len()..cold_cut];
+    for (c, w) in cold_tail.iter().zip(warm_mid) {
+        assert_eq!(c.id, w.id, "resume at round {r}: order ids must continue the cold counter");
+        assert_eq!(c.labels, w.labels);
+        assert_eq!(c.dollars.to_bits(), w.dollars.to_bits());
+    }
+}
+
+/// Copy round checkpoints `1..=r` from the finished baseline dir into a
+/// fresh job dir, plus the given job record — the disk image a daemon
+/// killed after round `r` leaves behind.
+fn stage_killed_dir(baseline: &Path, dir: &Path, r: usize, meta: &JobMeta) {
+    std::fs::create_dir_all(dir).unwrap();
+    for round in 1..=r {
+        let name = format!("round_{round:04}.ckpt");
+        std::fs::copy(baseline.join(&name), dir.join(&name)).unwrap();
+    }
+    persist::write_job(&dir.join(JOB_META_FILE), meta).unwrap();
+}
+
+#[test]
+fn serve_job_resumes_bit_identically_from_every_checkpointed_round() {
+    let Some(f) = setup() else { return };
+    let root = temp_dir("matrix");
+    let spec = smoke_spec(29);
+
+    // Never-killed baseline, checkpointing every round (the cold path —
+    // its fresh directory holds no round files).
+    let baseline_dir = job_dir(&root, 1);
+    let cold = run_job(
+        &f.engine,
+        &f.manifest,
+        None,
+        1,
+        &spec,
+        &baseline_dir,
+        Arc::new(Ledger::new()),
+        None,
+    )
+    .unwrap();
+    assert!(cold.warm_start.is_none());
+
+    // The baseline leaves a Done record whose digest matches the report.
+    let done = persist::load_job(&baseline_dir.join(JOB_META_FILE)).unwrap();
+    assert_eq!(done.phase, JobPhase::Done);
+    assert_eq!(done.spec, spec);
+    let digest = done.digest.expect("finished job must carry a digest");
+    assert_eq!(digest.overall_error.to_bits(), cold.overall_error.to_bits());
+    assert_eq!(digest.cost_total.to_bits(), cold.cost.total().to_bits());
+    assert_eq!(digest.labels_purchased, cold.cost.labels_purchased);
+
+    let saved = persist::list_checkpoints(&baseline_dir)
+        .unwrap()
+        .iter()
+        .filter(|p| p.file_name().unwrap().to_str().unwrap().starts_with("round_"))
+        .count();
+    assert!(saved >= 2, "smoke run must checkpoint at least two rounds, got {saved}");
+
+    // Kill after every checkpointed round except the last (resuming at
+    // the final round would skip the loop entirely — covered by the
+    // job-record matrix below), restart via run_job, compare bits.
+    for r in 1..saved {
+        let dir = job_dir(&root, 100 + r as u64);
+        let killed = JobMeta {
+            id: 100 + r as u64,
+            spec: spec.clone(),
+            phase: JobPhase::Checkpointed,
+            rounds: r as u64,
+            error: None,
+            digest: None,
+        };
+        stage_killed_dir(&baseline_dir, &dir, r, &killed);
+        let state = latest_round_checkpoint(&dir).unwrap().expect("staged dir has checkpoints");
+        assert_eq!(state.rounds, r, "staged dir must resume at round {r}");
+
+        let warm = run_job(
+            &f.engine,
+            &f.manifest,
+            None,
+            killed.id,
+            &spec,
+            &dir,
+            Arc::new(Ledger::new()),
+            None,
+        )
+        .unwrap();
+        assert_resumed_matches(&cold, &warm, r);
+
+        // The restarted job's record converges back to Done + digest.
+        let after = persist::load_job(&dir.join(JOB_META_FILE)).unwrap();
+        assert_eq!(after.phase, JobPhase::Done);
+        assert_eq!(
+            after.digest.unwrap().cost_total.to_bits(),
+            digest.cost_total.to_bits(),
+            "restarted digest must match the never-killed one"
+        );
+    }
+}
+
+#[test]
+fn job_record_crashes_at_every_boundary_never_change_the_resumed_report() {
+    let Some(f) = setup() else { return };
+    let root = temp_dir("faultmeta");
+    let spec = smoke_spec(31);
+
+    // Baseline (cold) + the resume point: round 1.
+    let baseline_dir = job_dir(&root, 1);
+    let cold = run_job(
+        &f.engine,
+        &f.manifest,
+        None,
+        1,
+        &spec,
+        &baseline_dir,
+        Arc::new(Ledger::new()),
+        None,
+    )
+    .unwrap();
+
+    // The two records a crash interleaves between: the admission-time
+    // Running record (old) and the round-1 Checkpointed record (new).
+    let old = JobMeta {
+        id: 7,
+        spec: spec.clone(),
+        phase: JobPhase::Running,
+        rounds: 0,
+        error: None,
+        digest: None,
+    };
+    let new = JobMeta { phase: JobPhase::Checkpointed, rounds: 1, ..old.clone() };
+
+    // Probe the op count of one record save (create/append*/sync/rename).
+    let meta_path = Path::new("job.meta");
+    let mut probe = FaultFs::new();
+    persist::save_job(&mut probe, meta_path, &old).unwrap();
+    let ops_per_save = probe.ops_used();
+    assert!(ops_per_save >= 4, "a crash-safe save has >= 4 op boundaries, got {ops_per_save}");
+
+    let mut case = 0u64;
+    for mode in [FaultMode::Fail, FaultMode::Torn, FaultMode::Duplicate] {
+        for crash_op in 0..ops_per_save {
+            // Crash the *second* save — the daemon updating an existing
+            // record mid-run — at this boundary.
+            let mut fs = FaultFs::new().crash_at(ops_per_save + crash_op, mode);
+            persist::save_job(&mut fs, meta_path, &old).unwrap();
+            let crashed = persist::save_job(&mut fs, meta_path, &new);
+
+            // Whatever survived is a whole record, old or new.
+            let survivor = fs.read(meta_path).expect("job record never disappears").to_vec();
+            let decoded = persist::decode_job(&survivor)
+                .unwrap_or_else(|e| panic!("{mode:?} crash at op {crash_op} tore the record: {e}"));
+            assert!(
+                decoded == old || decoded == new,
+                "{mode:?} crash at op {crash_op} left a third record: {decoded:?}"
+            );
+            if crashed.is_ok() {
+                assert_eq!(decoded, new, "reported success must mean the new record");
+            }
+
+            // Restart from the crash image: round-1 checkpoint + the
+            // surviving record bytes. The record is control metadata —
+            // either survivor must resume to the identical report.
+            let dir = job_dir(&root, 200 + case);
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::copy(baseline_dir.join("round_0001.ckpt"), dir.join("round_0001.ckpt"))
+                .unwrap();
+            std::fs::write(dir.join(JOB_META_FILE), &survivor).unwrap();
+            let warm = run_job(
+                &f.engine,
+                &f.manifest,
+                None,
+                200 + case,
+                &spec,
+                &dir,
+                Arc::new(Ledger::new()),
+                None,
+            )
+            .unwrap();
+            assert_resumed_matches(&cold, &warm, 1);
+            case += 1;
+        }
+    }
+}
+
+/// Co-scheduling identity: a job run beside a second job on one shared
+/// `EnginePool` produces the same report bits as the job run alone.
+#[test]
+fn co_scheduled_job_matches_solo_run_bit_for_bit() {
+    let Some(f) = setup() else { return };
+    let root = temp_dir("cosched");
+    let spec_a = smoke_spec(29);
+    let spec_b = smoke_spec(43);
+
+    // Job A alone, serial.
+    let solo = run_job(
+        &f.engine,
+        &f.manifest,
+        None,
+        1,
+        &spec_a,
+        &job_dir(&root, 1),
+        Arc::new(Ledger::new()),
+        None,
+    )
+    .unwrap();
+
+    // Jobs A and B side by side on one shared pool — the daemon's wave.
+    let pool = EnginePool::new(1).unwrap();
+    let wave = [(2u64, &spec_a), (3u64, &spec_b)];
+    let ledgers = [Arc::new(Ledger::new()), Arc::new(Ledger::new())];
+    let (reports, _) = pool
+        .scatter(&f.engine, wave.len(), |i, scope| {
+            let (id, spec) = wave[i];
+            run_job(
+                scope.engine,
+                &f.manifest,
+                scope.inner,
+                id,
+                spec,
+                &job_dir(&root, id),
+                ledgers[i].clone(),
+                None,
+            )
+        })
+        .unwrap();
+
+    // A's co-scheduled report is bit-identical to its solo report: both
+    // are cold, so every field — iterations and full order log included —
+    // must match outright.
+    let co = &reports[0];
+    assert_eq!(solo.overall_error.to_bits(), co.overall_error.to_bits());
+    assert_eq!(solo.machine_error.to_bits(), co.machine_error.to_bits());
+    assert_eq!(solo.residual_label_error.to_bits(), co.residual_label_error.to_bits());
+    assert_eq!(solo.b_size, co.b_size);
+    assert_eq!(solo.s_size, co.s_size);
+    assert_eq!(solo.residual_human, co.residual_human);
+    assert_eq!(solo.stop_reason, co.stop_reason);
+    assert_eq!(solo.cost.total().to_bits(), co.cost.total().to_bits());
+    assert_eq!(solo.cost.labels_purchased, co.cost.labels_purchased);
+    assert_eq!(solo.iterations.len(), co.iterations.len());
+    for (a, b) in solo.iterations.iter().zip(&co.iterations) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.ledger_total.to_bits(), b.ledger_total.to_bits());
+        let pa: Vec<u64> = a.eps_profile.iter().map(|e| e.to_bits()).collect();
+        let pb: Vec<u64> = b.eps_profile.iter().map(|e| e.to_bits()).collect();
+        assert_eq!(pa, pb, "iter {}: co-scheduled ε_T drifted", a.iter);
+    }
+    assert_eq!(solo.orders.len(), co.orders.len());
+    for (a, b) in solo.orders.iter().zip(&co.orders) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.dollars.to_bits(), b.dollars.to_bits());
+    }
+
+    // And B is a genuinely different run (different seed), so the
+    // identity above is not vacuous.
+    let b_report = &reports[1];
+    assert_eq!(b_report.seed, 43);
+    assert_ne!(
+        solo.overall_error.to_bits(),
+        b_report.overall_error.to_bits(),
+        "co-scheduled neighbour must be a distinct run"
+    );
+}
